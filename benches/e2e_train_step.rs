@@ -1,0 +1,93 @@
+//! cargo-bench harness for the end-to-end training hot path: per-model
+//! train_step latency through PJRT, the dense_grad saliency pass, and the
+//! pure-rust SRigL mask update — quantifying the L3 overhead the paper's
+//! architecture amortizes over ΔT steps. Skips cleanly if artifacts are
+//! missing (run `make artifacts`).
+
+use srigl::bench::{bench, fmt_time};
+use srigl::dst::{LayerView, SRigL, TopologyUpdater};
+use srigl::runtime::Manifest;
+use srigl::sparsity::Distribution;
+use srigl::tensor::Tensor;
+use srigl::train::{LrSchedule, Method, Session, TrainConfig};
+use srigl::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        println!("skipping e2e bench: run `make artifacts` first");
+        return;
+    }
+    let sess = Session::open().expect("session");
+    println!("{:<12} {:>14} {:>14} {:>16} {:>10}", "model", "train_step", "dense_grad", "mask_update(L3)", "L3 share");
+    for model in ["mlp_tiny", "mlp_proxy", "cnn_proxy", "vit_proxy", "lm_small"] {
+        if sess.man.models.get(model).is_none() {
+            continue;
+        }
+        let cfg = TrainConfig {
+            model: model.into(),
+            method: Method::SRigL { ablation: true, gamma_sal: 0.3 },
+            sparsity: 0.9,
+            distribution: Distribution::Erk,
+            total_steps: 100,
+            delta_t: 10,
+            alpha: 0.3,
+            lr: LrSchedule::Const(0.05),
+            grad_accum: 1,
+            seed: 0,
+            eval_batches: 1,
+            dense_first_layer: false,
+        };
+        let mut tr = sess.trainer(cfg).expect("trainer");
+        // warm the executables
+        tr.step(0).unwrap();
+
+        let mut i = 1usize;
+        let m_step = bench("train_step", 5, Duration::from_millis(100), || {
+            tr.step(i).unwrap();
+            i += 1;
+        });
+        let m_grad = bench("dense_grad", 5, Duration::from_millis(100), || {
+            tr.dense_grads().unwrap();
+        });
+
+        // isolated L3 mask update on a copy of the largest sparse layer
+        let li = (0..tr.sparse_idx.len())
+            .max_by_key(|&l| tr.masks[l].t.numel())
+            .unwrap_or(0);
+        let pi = tr.sparse_idx[li];
+        let shape = tr.entry.params[pi].shape.clone();
+        let mut rng = Rng::new(1);
+        let grad = Tensor::normal(&shape, 1.0, &mut rng);
+        let budget = tr.budgets[li];
+        let m_update = bench("mask_update", 5, Duration::from_millis(50), || {
+            let mut w = tr.params[pi].clone();
+            let mut v = tr.momenta[pi].clone();
+            let mut mask = tr.masks[li].clone();
+            let mut k = tr.ks[li];
+            let mut view = LayerView {
+                w: &mut w,
+                v: &mut v,
+                mask: &mut mask,
+                grad: &grad,
+                k: &mut k,
+                budget,
+            };
+            SRigL::default().update(&mut view, 0.3, &mut rng);
+        });
+
+        // L3 share per delta_t window: (grad + update) / (delta_t*step + grad + update)
+        let dt = 10.0;
+        let overhead = m_grad.median_s() + m_update.median_s();
+        let share = overhead / (dt * m_step.median_s() + overhead);
+        println!(
+            "{:<12} {:>14} {:>14} {:>16} {:>9.1}%",
+            model,
+            fmt_time(m_step.median_s()),
+            fmt_time(m_grad.median_s()),
+            fmt_time(m_update.median_s()),
+            share * 100.0
+        );
+    }
+    println!("\ntarget (DESIGN.md §8): L3 share of the ΔT window < 10%");
+}

@@ -1,0 +1,48 @@
+//! cargo-bench harness for paper Figs. 18-20: threads x batch sweep of
+//! the four representations at 90% sparsity. The testbed has a single
+//! physical core, so thread counts > 1 exercise the coordination path
+//! (scoped-thread splitting) rather than real parallel speedup — recorded
+//! as such in EXPERIMENTS.md.
+
+use srigl::bench::{bench, black_box, fmt_time};
+use srigl::exp::timings::{ablated_frac_for, VIT_FF_D, VIT_FF_N};
+use srigl::inference::LayerBundle;
+use srigl::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let sparsity = 0.9;
+    let bundle = LayerBundle::synth(VIT_FF_N, VIT_FF_D, sparsity, ablated_frac_for(sparsity), 42);
+    let mut rng = Rng::new(7);
+    println!("Figs. 18-20 — 90% sparsity, median seconds per forward");
+    println!(
+        "{:>7} {:>6} {:>12} {:>12} {:>12} {:>12}",
+        "threads", "batch", "dense", "csr", "structured", "condensed"
+    );
+    for &threads in &[1usize, 4, 8] {
+        for &batch in &[1usize, 4, 16, 64] {
+            let x: Vec<f32> = (0..batch * VIT_FF_D).map(|_| rng.normal_f32()).collect();
+            let med: Vec<f64> = bundle
+                .kernels()
+                .iter()
+                .map(|k| {
+                    let mut out = vec![0f32; batch * k.out_width()];
+                    bench(k.name(), 5, Duration::from_millis(25), || {
+                        k.forward(black_box(&x), batch, &mut out, threads);
+                        black_box(&out);
+                    })
+                    .median_s()
+                })
+                .collect();
+            println!(
+                "{:>7} {:>6} {:>12} {:>12} {:>12} {:>12}",
+                threads,
+                batch,
+                fmt_time(med[0]),
+                fmt_time(med[1]),
+                fmt_time(med[2]),
+                fmt_time(med[3])
+            );
+        }
+    }
+}

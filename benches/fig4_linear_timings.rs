@@ -1,0 +1,39 @@
+//! cargo-bench harness for paper Fig. 4: dense vs CSR vs structured vs
+//! condensed on the 768x3072 ViT FF layer, batch 1 (Fig. 4a) and 256
+//! (Fig. 4b substitute). Reports median ± stddev over >= 5 runs, matching
+//! the paper's protocol. (In-tree harness replaces criterion — offline.)
+
+use srigl::bench::{bench, black_box, print_table, Measurement};
+use srigl::exp::timings::{ablated_frac_for, VIT_FF_D, VIT_FF_N};
+use srigl::inference::LayerBundle;
+use srigl::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    for &batch in &[1usize, 256] {
+        println!("\n===== Fig. 4 — batch {batch} =====");
+        for &sparsity in &[0.8, 0.9, 0.95, 0.99] {
+            let bundle =
+                LayerBundle::synth(VIT_FF_N, VIT_FF_D, sparsity, ablated_frac_for(sparsity), 42);
+            let x: Vec<f32> = (0..batch * VIT_FF_D).map(|_| rng.normal_f32()).collect();
+            let ms: Vec<Measurement> = bundle
+                .kernels()
+                .iter()
+                .map(|k| {
+                    let mut out = vec![0f32; batch * k.out_width()];
+                    bench(k.name(), 5, Duration::from_millis(40), || {
+                        k.forward(black_box(&x), batch, &mut out, 1);
+                        black_box(&out);
+                    })
+                })
+                .collect();
+            print_table(
+                &format!("sparsity {:.0}%, batch {batch}", sparsity * 100.0),
+                &ms,
+                Some("dense"),
+            );
+        }
+    }
+    println!("\npaper @90%/batch1: condensed 3.4x dense, 2.5x CSR; @90%/batch256: 1.7x dense, 13x CSR (GPU)");
+}

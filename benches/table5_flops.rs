@@ -1,0 +1,63 @@
+//! cargo-bench harness for paper Table 5 / Fig. 13: FLOPs accounting plus
+//! *achieved* GFLOP/s of each native representation on the Fig. 4 layer —
+//! the roofline context for the §Perf log in EXPERIMENTS.md.
+
+use srigl::bench::{bench, black_box};
+use srigl::exp::timings::{ablated_frac_for, VIT_FF_D, VIT_FF_N};
+use srigl::flops::{cnn_proxy_flops, paper_table5};
+use srigl::inference::{LayerBundle, LinearKernel};
+use srigl::sparsity::distribution::{layer_densities, Distribution, LayerShape};
+use srigl::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    // --- analytic table 5 ---
+    let shapes = vec![
+        LayerShape { name: "conv0".into(), dims: vec![16, 3, 3, 3] },
+        LayerShape { name: "conv1".into(), dims: vec![32, 16, 3, 3] },
+        LayerShape { name: "conv2".into(), dims: vec![64, 32, 3, 3] },
+        LayerShape { name: "fc".into(), dims: vec![10, 64] },
+    ];
+    println!("Table 5 — FLOPs fractions (cnn_proxy ERK vs paper ResNet-50)");
+    println!("{:>9} {:>12} {:>12} {:>14} {:>14}", "sparsity", "train/dense", "infer/dense", "paper train", "paper infer");
+    for (s, p_train, p_inf) in paper_table5() {
+        let densities = if s == 0.0 { vec![1.0; 4] } else { layer_densities(Distribution::Erk, &shapes, s) };
+        let m = cnn_proxy_flops(&[16, 32, 64], 16, 10, &densities);
+        println!(
+            "{:>8.0}% {:>12.3} {:>12.3} {:>14.3} {:>14.3}",
+            s * 100.0,
+            m.train_fraction_of_dense(20),
+            m.inference() / m.inference_dense(),
+            p_train / 3.15,
+            p_inf / 8.20
+        );
+    }
+
+    // --- achieved GFLOP/s per representation (batch 1 and 64) ---
+    let sparsity = 0.9;
+    let bundle = LayerBundle::synth(VIT_FF_N, VIT_FF_D, sparsity, ablated_frac_for(sparsity), 42);
+    let mut rng = Rng::new(7);
+    println!("\nAchieved GFLOP/s on the Fig. 4 layer @ 90% (useful FLOPs = 2*nnz*batch):");
+    for &batch in &[1usize, 64] {
+        let x: Vec<f32> = (0..batch * VIT_FF_D).map(|_| rng.normal_f32()).collect();
+        for k in bundle.kernels() {
+            let useful = match k.name() {
+                "dense" => 2.0 * (VIT_FF_N * VIT_FF_D) as f64,
+                "csr" => 2.0 * bundle.csr.csr.nnz() as f64,
+                "structured" => 2.0 * (bundle.structured.n_active * VIT_FF_D) as f64,
+                _ => 2.0 * bundle.condensed.c.values.len() as f64,
+            } * batch as f64;
+            let mut out = vec![0f32; batch * k.out_width()];
+            let m = bench(k.name(), 5, Duration::from_millis(30), || {
+                k.forward(black_box(&x), batch, &mut out, 1);
+                black_box(&out);
+            });
+            println!(
+                "  batch {batch:>3} {:<11} {:>8.2} GFLOP/s (median {:.1} us)",
+                k.name(),
+                useful / m.median_s() / 1e9,
+                m.median_us()
+            );
+        }
+    }
+}

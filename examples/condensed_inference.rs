@@ -1,0 +1,113 @@
+//! Condensed-representation inference demo (paper §4.4): builds the exact
+//! Fig. 4 layer geometry (ViT-B/16 FF, 768x3072), compares the four
+//! representations for online and batched inference, and then serves a
+//! Poisson request stream through the online-inference server — including
+//! the AOT Pallas condensed kernel via PJRT for cross-checking numerics.
+//!
+//! Run: cargo run --release --example condensed_inference -- [--sparsity 0.9]
+
+use anyhow::Result;
+
+use srigl::bench::{bench5, print_table};
+use srigl::exp::timings::{ablated_frac_for, VIT_FF_D, VIT_FF_N};
+use srigl::inference::server::{serve, ServeConfig, ServeMode};
+use srigl::inference::{LayerBundle, LinearKernel};
+use srigl::runtime::{i32s_to_lit, lit_to_tensor, tensor_to_lit, Manifest, Runtime};
+use srigl::tensor::Tensor;
+use srigl::util::cli::Args;
+use srigl::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let sparsity: f64 = args.parse_or("sparsity", 0.9)?;
+    let bundle = LayerBundle::synth(VIT_FF_N, VIT_FF_D, sparsity, ablated_frac_for(sparsity), 42);
+    println!(
+        "ViT FF layer {VIT_FF_N}x{VIT_FF_D} @ {:.0}% sparsity, k={}, {} / {} neurons active",
+        sparsity * 100.0,
+        bundle.condensed.c.k,
+        bundle.condensed.c.n_active(),
+        VIT_FF_N
+    );
+    println!(
+        "storage: dense {} KiB | csr {} KiB | condensed {} KiB",
+        VIT_FF_N * VIT_FF_D * 4 / 1024,
+        bundle.csr.csr.storage_bytes() / 1024,
+        bundle.condensed.c.storage_bytes() / 1024
+    );
+
+    // --- raw kernel timings, batch 1 and 32 ---
+    let mut rng = Rng::new(7);
+    for batch in [1usize, 32] {
+        let x: Vec<f32> = (0..batch * VIT_FF_D).map(|_| rng.normal_f32()).collect();
+        let ms: Vec<_> = bundle
+            .kernels()
+            .iter()
+            .map(|k| {
+                let mut out = vec![0f32; batch * k.out_width()];
+                bench5(k.name(), || k.forward(&x, batch, &mut out, 1))
+            })
+            .collect();
+        print_table(&format!("batch {batch} (median of 5 runs)"), &ms, Some("dense"));
+    }
+
+    // --- online-inference server ---
+    println!("\nonline-inference server (500 requests, Poisson arrivals):");
+    for kernel in bundle.kernels() {
+        let stats = serve(
+            kernel,
+            &ServeConfig {
+                mode: ServeMode::Online,
+                n_requests: 500,
+                mean_interarrival: std::time::Duration::from_micros(100),
+                threads: 1,
+                seed: 3,
+            },
+        );
+        println!(
+            "  {:<11} p50={:>7.1}us p99={:>7.1}us throughput={:>6.0} req/s",
+            kernel.name(),
+            stats.p50_us,
+            stats.p99_us,
+            stats.throughput_rps
+        );
+    }
+
+    // --- cross-check the AOT Pallas condensed kernel (L1) via PJRT ---
+    let man = Manifest::load_default()?;
+    if let Some(e) = man.condensed.get("cond_vitff_s90_b1") {
+        if (e.k as f64 - (1.0 - sparsity) * VIT_FF_D as f64).abs() < 1.0 {
+            let rt = Runtime::cpu()?;
+            let prog = rt.load(&man.dir.join(&e.file))?;
+            // feed the *same* condensed weights (truncated/padded to n rows)
+            let c = &bundle.condensed.c;
+            let rows = e.n.min(c.n_active());
+            let mut w = vec![0f32; e.n * e.k];
+            let mut idx = vec![0i32; e.n * e.k];
+            for r in 0..rows {
+                for j in 0..e.k {
+                    w[r * e.k + j] = c.values[r * c.k + j];
+                    idx[r * e.k + j] = c.idx[r * c.k + j] as i32;
+                }
+            }
+            let x = Tensor::normal(&[1, e.d], 1.0, &mut Rng::new(9));
+            let out = prog.run(&[
+                tensor_to_lit(&x)?,
+                tensor_to_lit(&Tensor::from_vec(&[e.n, e.k], w))?,
+                i32s_to_lit(&[e.n, e.k], &idx)?,
+            ])?;
+            let xla_out = lit_to_tensor(&out[0], &[1, e.n])?;
+            // native engine on the same inputs
+            let mut native = vec![0f32; bundle.condensed.out_width()];
+            bundle.condensed.forward(&x.data, 1, &mut native, 1);
+            let mut max_err = 0f32;
+            for r in 0..rows {
+                max_err = max_err.max((xla_out.data[r] - (native[r] - bundle.condensed.bias[r])).abs());
+            }
+            println!("\nAOT Pallas kernel vs native engine: max |diff| = {max_err:.2e} over {rows} neurons");
+            anyhow::ensure!(max_err < 1e-3, "XLA/native mismatch");
+        } else {
+            println!("\n(skipping XLA cross-check: artifact k={} != sparsity {:.0}%)", e.k, sparsity * 100.0);
+        }
+    }
+    Ok(())
+}

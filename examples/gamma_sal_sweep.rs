@@ -1,0 +1,69 @@
+//! gamma_sal ablation-threshold sweep (paper Figs. 8/9): trains the same
+//! model at several ablation thresholds and reports accuracy + the final
+//! widths, showing how gamma_sal steers learned structure.
+//!
+//! Run: cargo run --release --example gamma_sal_sweep --
+//!        [--model mlp_proxy] [--sparsity 0.95] [--steps 200]
+
+use anyhow::Result;
+
+use srigl::sparsity::Distribution;
+use srigl::stats::{active_neuron_fraction, LayerTopology};
+use srigl::train::{LrSchedule, Method, Session, TrainConfig};
+use srigl::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let model = args.get_or("model", "mlp_proxy");
+    let sparsity: f64 = args.parse_or("sparsity", 0.95)?;
+    let steps: usize = args.parse_or("steps", 200)?;
+    let gammas: Vec<f64> = args.list_or("gammas", &[0.0, 0.3, 0.5, 0.9])?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+
+    let sess = Session::open()?;
+    println!(
+        "gamma_sal sweep: {model} @ {:.0}% sparsity, {steps} steps (gamma=0 row = ablation off)",
+        sparsity * 100.0
+    );
+    println!("{:>6}  {:>9}  {:>14}  {:>8}  topology", "gamma", "accuracy", "active neurons", "k");
+    for &g in &gammas {
+        let method = if g == 0.0 {
+            Method::SRigL { ablation: false, gamma_sal: 0.0 }
+        } else {
+            Method::SRigL { ablation: true, gamma_sal: g }
+        };
+        let cfg = TrainConfig {
+            model: model.clone(),
+            method,
+            sparsity,
+            distribution: Distribution::Erk,
+            total_steps: steps,
+            delta_t: (steps / 15).max(5),
+            alpha: 0.3,
+            lr: LrSchedule::step_decay(0.1, &[steps / 2, 3 * steps / 4], 0.2),
+            grad_accum: 1,
+            seed,
+            eval_batches: 8,
+            dense_first_layer: false,
+        };
+        let mut tr = sess.trainer(cfg)?;
+        let rep = tr.run()?;
+        let tops: Vec<LayerTopology> = tr
+            .mask_stats()
+            .iter()
+            .map(|(n, c)| LayerTopology::from_counts(n, c))
+            .collect();
+        let widths: Vec<String> =
+            tops.iter().map(|t| format!("{}/{}", t.active_neurons, t.neurons)).collect();
+        println!(
+            "{:>6.2}  {:>8.1}%  {:>13.1}%  {:>8}  [{}]",
+            g,
+            rep.eval_metric * 100.0,
+            active_neuron_fraction(&tops) * 100.0,
+            tops.iter().map(|t| t.fan_in_max).max().unwrap_or(0),
+            widths.join(", ")
+        );
+    }
+    println!("\nExpected shape (paper App. E): accuracy roughly flat in gamma for MLP/CNN\n(min-salient clamp), while higher gamma ablates more neurons and raises k.");
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Quickstart: train a tiny MLP with SRigL, inspect the learned structure,
+//! and run the resulting condensed layer through the native inference
+//! engine — the whole public API in ~80 lines.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use srigl::inference::{CondensedLayer, DenseLayer, LinearKernel};
+use srigl::sparsity::Distribution;
+use srigl::stats::LayerTopology;
+use srigl::train::{LrSchedule, Method, Session, TrainConfig};
+
+fn main() -> Result<()> {
+    // 1) Open a session: PJRT CPU client + AOT artifact manifest.
+    let sess = Session::open()?;
+
+    // 2) Configure SRigL: 90% sparse, ERK layer densities, neuron ablation
+    //    with gamma_sal = 0.3 (the paper's CNN setting).
+    let steps = 300;
+    let cfg = TrainConfig {
+        model: "mlp_tiny".into(),
+        method: Method::SRigL { ablation: true, gamma_sal: 0.3 },
+        sparsity: 0.9,
+        distribution: Distribution::Erk,
+        total_steps: steps,
+        delta_t: 20,
+        alpha: 0.3,
+        lr: LrSchedule::step_decay(0.1, &[150, 225], 0.2),
+        grad_accum: 1,
+        seed: 0,
+        eval_batches: 16,
+        dense_first_layer: false,
+    };
+
+    // 3) Train. Every step executes the AOT-compiled JAX train_step (which
+    //    itself calls the Pallas masked-matmul kernel); every delta_t steps
+    //    the rust SRigL updater evolves the topology.
+    let mut trainer = sess.trainer(cfg)?;
+    println!("training mlp_tiny with SRigL @ 90% sparsity ({steps} steps)...");
+    let report = trainer.run()?;
+    println!(
+        "loss {:.3} -> {:.3} | eval accuracy {:.1}% | sparsity {:.1}% | {:.1} steps/s",
+        report.losses.first().unwrap(),
+        report.losses.last().unwrap(),
+        report.eval_metric * 100.0,
+        report.final_sparsity * 100.0,
+        report.throughput,
+    );
+
+    // 4) Inspect the learned structure: constant fan-in + ablated neurons.
+    for (name, counts) in trainer.mask_stats() {
+        let t = LayerTopology::from_counts(&name, &counts);
+        println!(
+            "  {name}: {}/{} neurons active, constant fan-in {}",
+            t.active_neurons, t.neurons, t.fan_in_max
+        );
+    }
+
+    // 5) Export layer 0 in the condensed representation (Algorithm 1) and
+    //    time it against the dense baseline in the native engine.
+    let cond = trainer.export_condensed(0);
+    println!(
+        "condensed layer 0: {} active neurons x k={} ({} bytes vs {} dense)",
+        cond.n_active(),
+        cond.k,
+        cond.storage_bytes(),
+        cond.n_orig * cond.d * 4,
+    );
+    let dense_w = cond.to_dense();
+    let bias = vec![0f32; cond.n_orig];
+    let mask = cond.to_mask();
+    let dense = DenseLayer::new(&dense_w, bias.clone());
+    let condensed = CondensedLayer::new(&dense_w, &mask, &bias);
+
+    let x: Vec<f32> = (0..cond.d).map(|i| (i as f32 * 0.1).sin()).collect();
+    let mut out_d = vec![0f32; dense.out_width()];
+    let mut out_c = vec![0f32; condensed.out_width()];
+    let t0 = std::time::Instant::now();
+    for _ in 0..5000 {
+        dense.forward(&x, 1, &mut out_d, 1);
+    }
+    let dense_us = t0.elapsed().as_secs_f64() * 1e6 / 5000.0;
+    let t0 = std::time::Instant::now();
+    for _ in 0..5000 {
+        condensed.forward(&x, 1, &mut out_c, 1);
+    }
+    let cond_us = t0.elapsed().as_secs_f64() * 1e6 / 5000.0;
+    println!(
+        "online inference: dense {dense_us:.2}us/call, condensed {cond_us:.2}us/call ({:.1}x)",
+        dense_us / cond_us
+    );
+
+    // numerics agree on the active rows
+    let mut ok = true;
+    for (i, &r) in condensed.c.active.iter().enumerate() {
+        if (out_c[i] - out_d[r as usize]).abs() > 1e-4 {
+            ok = false;
+        }
+    }
+    println!("condensed == dense on active neurons: {}", if ok { "OK" } else { "MISMATCH" });
+    Ok(())
+}

@@ -1,0 +1,158 @@
+"""AOT compiler driver: lower every model program + condensed kernels to
+HLO text and write artifacts/manifest.json for the rust runtime.
+
+Interchange format is HLO *text*, not serialized protos: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.
+
+Run once (``make artifacts``); python never appears on the request path.
+
+Usage:
+  python -m compile.aot [--out-dir ../artifacts] [--models a,b,c|all]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.condensed import (
+    condensed_matmul,
+    condensed_matmul_batched,
+    vmem_bytes,
+)
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+# Default export set: everything the experiment harnesses reference.
+DEFAULT_MODELS = [
+    "mlp_tiny", "mlp_proxy", "cnn_proxy", "cnn_wide", "vit_proxy", "lm_small",
+]
+
+# Condensed-kernel standalone programs. The 768x3072 geometry is the exact
+# ViT-B/16 FF layer benchmarked in Fig. 4 / Appendix I; k = round(d*(1-s)).
+CONDENSED_GEOMS = {
+    "cond_tiny": dict(batch=8, d=32, n=16, k=8),
+    "cond_vitff_s90_b1": dict(batch=1, d=3072, n=768, k=307),
+    "cond_vitff_s90_b32": dict(batch=32, d=3072, n=768, k=307),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPES[dtype])
+
+
+def _model_arg_specs(spec: M.ModelSpec):
+    """Argument ShapeDtypeStructs in the canonical manifest order."""
+    b = spec.batch
+    p = [_spec(ps.shape, "f32") for ps in spec.params]
+    m = [_spec(ps.shape, "f32") for ps in spec.sparse_params]
+    x = _spec((b, *spec.x_shape), spec.x_dtype)
+    y = _spec((b, *spec.y_shape), spec.y_dtype)
+    lr = _spec((), "f32")
+    return p, m, x, y, lr
+
+
+def export_model(spec: M.ModelSpec, out_dir: str) -> dict:
+    p, m, x, y, lr = _model_arg_specs(spec)
+    programs = {
+        "train_step": (M.make_train_step(spec), [*p, *p, *m, x, y, lr]),
+        "dense_grad": (M.make_dense_grad(spec), [*p, *m, x, y]),
+        "eval_logits": (M.make_eval_logits(spec), [*p, *m, x]),
+        "loss_eval": (M.make_loss_eval(spec), [*p, *m, x, y]),
+    }
+    prog_entries = {}
+    for pname, (fn, args) in programs.items():
+        fname = f"{spec.name}.{pname}.hlo.txt"
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        prog_entries[pname] = fname
+        print(f"  {fname}: {len(text)} chars")
+    return {
+        "batch": spec.batch,
+        "task": spec.task,
+        "num_classes": spec.num_classes,
+        "x": {"shape": [spec.batch, *spec.x_shape], "dtype": spec.x_dtype},
+        "y": {"shape": [spec.batch, *spec.y_shape], "dtype": spec.y_dtype},
+        "params": [ps.to_json() for ps in spec.params],
+        "hyper": {
+            "momentum": spec.momentum,
+            "weight_decay": spec.weight_decay,
+            "label_smoothing": spec.label_smoothing,
+        },
+        "param_count": M.param_count(spec),
+        "programs": prog_entries,
+    }
+
+
+def export_condensed(name: str, geom: dict, out_dir: str) -> dict:
+    b, d, n, k = geom["batch"], geom["d"], geom["n"], geom["k"]
+
+    # Batched workloads use the 2-D (batch, neuron) tiled kernel so the
+    # resident activation block stays VMEM-sized (see condensed.py).
+    kernel = condensed_matmul_batched if b > 8 else condensed_matmul
+
+    def fn(x, w, idx):
+        return (kernel(x, w, idx),)
+
+    args = [_spec((b, d), "f32"), _spec((n, k), "f32"), _spec((n, k), "i32")]
+    fname = f"{name}.hlo.txt"
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  {fname}: {len(text)} chars")
+    entry = dict(geom)
+    entry["file"] = fname
+    entry["vmem"] = vmem_bytes(b, d, n, k)
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS),
+                    help="comma-separated model names, or 'all'")
+    ap.add_argument("--out", default=None, help="(legacy, ignored)")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    reg = M.registry()
+    names = list(reg) if args.models == "all" else args.models.split(",")
+
+    manifest = {"version": 1, "models": {}, "condensed": {}}
+    for name in names:
+        spec = reg[name]()
+        print(f"[aot] model {name} ({M.param_count(spec):,} params)")
+        manifest["models"][name] = export_model(spec, out_dir)
+
+    for cname, geom in CONDENSED_GEOMS.items():
+        print(f"[aot] condensed {cname}")
+        manifest["condensed"][cname] = export_condensed(cname, geom, out_dir)
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""L1 Pallas kernel: condensed constant-fan-in sparse matmul (paper Algorithm 1).
+
+The condensed representation stores a sparse weight matrix W (n x d) with
+exactly `k` non-zeros per row (neuron) as two dense (n x k) matrices:
+
+  * ``w``   — the non-zero *values*,
+  * ``idx`` — the *column indices* of those values in the dense W.
+
+The forward pass of a linear layer then becomes (Appendix F, Eq. 31):
+
+  out[b, n] = sum_k  x[b, idx[n, k]] * w[n, k]
+
+i.e. a per-neuron gather followed by a multiply-accumulate. This is the
+paper's compute hot-spot for accelerated inference (Fig. 4).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the kernel grid tiles the
+*neuron* axis; each program holds one (TN x k) value/index tile plus the
+(B x d) activation block in VMEM and performs the gather-MAC on the VPU.
+The CUDA implementation the paper benchmarks assigns a thread block per
+neuron group — the BlockSpec below expresses the same schedule as an
+HBM->VMEM pipeline. ``interpret=True`` is mandatory on this testbed: real
+TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _condensed_kernel(x_ref, w_ref, idx_ref, o_ref):
+    """One grid step: all batch rows x one tile of neurons.
+
+    x_ref:   (B, D)   activations (full block, reused across the grid)
+    w_ref:   (TN, K)  condensed weight values for this neuron tile
+    idx_ref: (TN, K)  column indices into D for this neuron tile
+    o_ref:   (B, TN)  output tile
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    idx = idx_ref[...]
+    # Gather: (B, TN, K) — x[b, idx[n, k]].
+    gathered = jnp.take(x, idx, axis=1)
+    o_ref[...] = jnp.sum(gathered * w[None, :, :], axis=-1)
+
+
+def _pick_tile(n: int, max_tile: int = 128) -> int:
+    """Largest divisor of ``n`` that is <= max_tile (VMEM sizing knob)."""
+    t = min(n, max_tile)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def condensed_matmul(x, w, idx, *, tile_n: int | None = None):
+    """Condensed constant-fan-in sparse matmul via a Pallas kernel.
+
+    Args:
+      x:   (B, D) float activations.
+      w:   (N, K) float condensed weight values.
+      idx: (N, K) int32 column indices, each row's entries in [0, D).
+      tile_n: neuron-tile size; must divide N. Default: largest divisor <=128.
+
+    Returns:
+      (B, N) float outputs, equal to ``x @ dense(W).T``.
+    """
+    b, d = x.shape
+    n, k = w.shape
+    assert idx.shape == (n, k), (idx.shape, (n, k))
+    tn = tile_n if tile_n is not None else _pick_tile(n)
+    assert n % tn == 0, f"tile_n={tn} must divide n={n}"
+    grid = (n // tn,)
+    return pl.pallas_call(
+        _condensed_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((tn, k), lambda i: (i, 0)),
+            pl.BlockSpec((tn, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, tn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=True,
+    )(x, w, idx.astype(jnp.int32))
+
+
+def condensed_linear(x, w, idx, bias=None, *, tile_n: int | None = None):
+    """Condensed linear layer: ``condensed_matmul`` plus optional bias."""
+    out = condensed_matmul(x, w, idx, tile_n=tile_n)
+    if bias is not None:
+        out = out + bias[None, :]
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "tile_n"))
+def condensed_matmul_batched(x, w, idx, *, tile_b: int | None = None,
+                             tile_n: int | None = None):
+    """Batched-inference variant: 2-D grid over (batch, neuron) tiles.
+
+    The single-grid kernel above holds the whole (B, D) activation block
+    resident, which stops scaling once B·D·4 bytes approaches VMEM (the
+    paper's Fig. 4b / Fig. 21 batch-256/2048 regime). This variant tiles
+    the batch axis too, bounding the resident block to (TB, D) and the
+    gather temporary to TB·TN·K — the schedule a TPU would pipeline as a
+    double-buffered HBM→VMEM stream over batch tiles.
+    """
+    b, d = x.shape
+    n, k = w.shape
+    assert idx.shape == (n, k)
+    tb = tile_b if tile_b is not None else _pick_tile(b, 8)
+    tn = tile_n if tile_n is not None else _pick_tile(n)
+    assert b % tb == 0 and n % tn == 0, (b, tb, n, tn)
+    grid = (b // tb, n // tn)
+    return pl.pallas_call(
+        _condensed_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((tn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=True,
+    )(x, w, idx.astype(jnp.int32))
+
+
+def vmem_bytes(b: int, d: int, n: int, k: int, tile_n: int | None = None,
+               elem_bytes: int = 4) -> dict:
+    """Estimate the per-program VMEM footprint of the kernel (DESIGN §Perf).
+
+    Returns a dict with the resident bytes of each block plus the gather
+    temporary; used by EXPERIMENTS.md §Perf to check the tile fits the
+    ~16 MiB VMEM of a TPU core and to size ``tile_n``.
+    """
+    tn = tile_n if tile_n is not None else _pick_tile(n)
+    x_bytes = b * d * elem_bytes
+    w_bytes = tn * k * elem_bytes
+    idx_bytes = tn * k * 4
+    out_bytes = b * tn * elem_bytes
+    gather_bytes = b * tn * k * elem_bytes
+    total = x_bytes + w_bytes + idx_bytes + out_bytes + gather_bytes
+    return {
+        "tile_n": tn,
+        "x": x_bytes,
+        "w": w_bytes,
+        "idx": idx_bytes,
+        "out": out_bytes,
+        "gather_tmp": gather_bytes,
+        "total": total,
+        "fits_16MiB": total <= 16 * 1024 * 1024,
+        # 2 FLOPs (mul+add) per (4B value + 4B index) loaded once per tile;
+        # x is amortized across the neuron grid.
+        "arith_intensity_flops_per_byte": (2 * b * tn * k) / max(total, 1),
+    }

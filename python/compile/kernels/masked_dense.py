@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: masked dense matmul — the DST *training* forward.
+
+During sparse-to-sparse training the topology changes every ΔT steps, so
+the weights are kept dense-shaped with an explicit binary mask (the
+standard masked-dense DST formulation RigL/SRigL use). The forward is
+
+  out = x @ (w * m).T
+
+This kernel tiles the output (neuron) axis like ``condensed.py`` so the
+two share a schedule; it exists so the L2 training graph exercises a
+Pallas kernel end-to-end (spec: L2 calls L1 and both lower into one HLO).
+``interpret=True`` is mandatory on CPU PJRT (no Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_kernel(x_ref, w_ref, m_ref, o_ref):
+    x = x_ref[...]           # (B, D)
+    w = w_ref[...]           # (TN, D)
+    m = m_ref[...]           # (TN, D)
+    o_ref[...] = x @ (w * m).T
+
+
+def _pick_tile(n: int, max_tile: int = 128) -> int:
+    t = min(n, max_tile)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _masked_matmul_fwd_impl(x, w, m):
+    b, d = x.shape
+    n, d2 = w.shape
+    assert d == d2 and m.shape == (n, d)
+    tn = _pick_tile(n)
+    grid = (n // tn,)
+    return pl.pallas_call(
+        _masked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((tn, d), lambda i: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, tn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=True,
+    )(x, w, m)
+
+
+@jax.custom_vjp
+def masked_matmul(x, w, m):
+    """``x @ (w*m).T`` with the neuron axis tiled by a Pallas kernel.
+
+    x: (B, D), w: (N, D), m: (N, D) {0,1}-valued float mask. -> (B, N)
+
+    Interpret-mode Pallas kernels are not reverse-mode differentiable, so
+    the backward pass is expressed in plain jnp (it lowers into the same
+    HLO module): dx = g @ (w*m); dw = (g.T @ x) * m. The mask is a
+    topology constant owned by the L3 coordinator — its cotangent is zero.
+    """
+    return _masked_matmul_fwd_impl(x, w, m)
+
+
+def _mm_fwd(x, w, m):
+    return _masked_matmul_fwd_impl(x, w, m), (x, w, m)
+
+
+def _mm_bwd(res, g):
+    x, w, m = res
+    wm = w * m
+    dx = g @ wm
+    dw = (g.T @ x) * m
+    return dx, dw, jnp.zeros_like(m)
+
+
+masked_matmul.defvjp(_mm_fwd, _mm_bwd)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+pytest (python/tests/test_kernels.py) asserts ``assert_allclose`` between
+these references and the kernels over hypothesis-generated shapes/dtypes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def condensed_matmul_ref(x, w, idx):
+    """out[b, n] = sum_k x[b, idx[n, k]] * w[n, k]  (Appendix F, Eq. 31)."""
+    gathered = jnp.take(x, idx.astype(jnp.int32), axis=1)  # (B, N, K)
+    return jnp.sum(gathered * w[None, :, :], axis=-1)
+
+
+def condensed_to_dense(w, idx, d):
+    """Expand a condensed (values, indices) pair to the dense (N, D) matrix.
+
+    Rows of ``idx`` must not contain duplicate columns (the constant fan-in
+    constraint guarantees this); with duplicates the dense expansion sums.
+    """
+    n, k = w.shape
+    dense = jnp.zeros((n, d), dtype=w.dtype)
+    rows = jnp.repeat(jnp.arange(n), k)
+    return dense.at[rows, idx.reshape(-1)].add(w.reshape(-1))
+
+
+def masked_matmul_ref(x, w, m):
+    """out = x @ (w * m).T — masked dense linear forward."""
+    return x @ (w * m).T

@@ -1,0 +1,444 @@
+"""L2: JAX model zoo + training programs for the SRigL reproduction.
+
+Each model config yields four AOT-exportable programs (flat positional
+signatures; ordering is recorded in artifacts/manifest.json):
+
+  train_step(*params, *momenta, *masks, x, y, lr)
+      -> (*params', *momenta', loss)
+      One masked SGD(+momentum, weight decay, optional label smoothing)
+      step. Sparse params are multiplied by their mask in the forward and
+      re-masked after the update so pruned weights stay exactly zero.
+
+  dense_grad(*params, *masks, x, y) -> (*grads_for_sparse_params)
+      Gradients w.r.t. the *effective* (masked) weights, dL/d(w .* m) — these
+      are dense (non-zero at pruned positions) and drive the RigL/SRigL
+      regrowth criterion (paper Section 3.1 step 1).
+
+  eval_logits(*params, *masks, x) -> (logits,)
+  loss_eval(*params, *masks, x, y) -> (loss,)
+
+The topology (masks) lives in the rust L3 coordinator; masks enter here as
+f32 tensors so the HLO stays static-shaped while connectivity evolves.
+
+The MLP family's forward runs through the L1 Pallas ``masked_matmul``
+kernel so kernel + model lower into a single HLO module; the CNN and
+transformer families use jnp ops (the mask multiply lowers adjacent to
+the matmul/conv, where XLA's compile-time fusion folds it into the op's
+epilogue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.masked_dense import masked_matmul
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ParamSpec:
+    """Metadata for one trainable tensor, mirrored into manifest.json."""
+
+    name: str
+    shape: tuple
+    sparse: bool = False
+    # Axis indexing neurons/filters (always 0 for our layouts); fan_in is the
+    # dense fan-in per neuron = prod(shape[1:]) for sparse params.
+    neuron_axis: int = 0
+    init: str = "zeros"  # zeros | ones | he | normal:<sigma>
+
+    @property
+    def fan_in(self) -> int:
+        out = 1
+        for s in self.shape[1:]:
+            out *= s
+        return out
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "dtype": "f32",
+            "sparse": self.sparse,
+            "neuron_axis": self.neuron_axis,
+            "fan_in": self.fan_in,
+            "init": self.init,
+        }
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    """A fully-described model config: params, shapes, and forward fn."""
+
+    name: str
+    params: list  # [ParamSpec]
+    batch: int
+    x_shape: tuple  # without batch
+    x_dtype: str  # "f32" | "i32"
+    y_shape: tuple  # without batch; () for class label, (T,) for LM targets
+    y_dtype: str
+    num_classes: int
+    forward: Callable  # forward(eff_params: dict, x) -> logits
+    task: str  # "classify" | "lm"
+    label_smoothing: float = 0.0
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+
+    @property
+    def sparse_params(self):
+        return [p for p in self.params if p.sparse]
+
+
+# --------------------------------------------------------------------------
+# Shared pieces
+# --------------------------------------------------------------------------
+
+def _cross_entropy(logits, y, num_classes, smoothing):
+    """Mean softmax cross-entropy; logits (..., C), y integer (...)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, num_classes, dtype=logits.dtype)
+    if smoothing > 0.0:
+        onehot = onehot * (1.0 - smoothing) + smoothing / num_classes
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def apply_masks(params: dict, masks: dict) -> dict:
+    """Effective parameters: sparse weights are elementwise-masked."""
+    return {k: (v * masks[k] if k in masks else v) for k, v in params.items()}
+
+
+def make_loss_fn(spec: ModelSpec):
+    def loss_fn(eff: dict, x, y):
+        logits = spec.forward(eff, x)
+        if spec.task == "lm":
+            c = logits.shape[-1]
+            return _cross_entropy(logits, y, c, spec.label_smoothing)
+        return _cross_entropy(logits, y, spec.num_classes, spec.label_smoothing)
+
+    return loss_fn
+
+
+# --------------------------------------------------------------------------
+# MLP family — forward goes through the L1 Pallas masked kernel
+# --------------------------------------------------------------------------
+
+def build_mlp(name, dims, batch, num_classes, use_pallas=True,
+              label_smoothing=0.0, weight_decay=5e-4):
+    """dims = [in, h1, ..., out]; every weight matrix is sparse."""
+    params = []
+    for i in range(len(dims) - 1):
+        params.append(ParamSpec(f"l{i}.w", (dims[i + 1], dims[i]), sparse=True, init="he"))
+        params.append(ParamSpec(f"l{i}.b", (dims[i + 1],)))
+    n_layers = len(dims) - 1
+
+    def forward(eff, x):
+        h = x
+        for i in range(n_layers):
+            w = eff[f"l{i}.w"]
+            if use_pallas:
+                # Kernel expects (w, m) separately; eff is already masked, so
+                # pass an all-ones mask — the multiply is a no-op but routes
+                # the matmul through the Pallas kernel schedule.
+                h = masked_matmul(h, w, jnp.ones_like(w)) + eff[f"l{i}.b"][None, :]
+            else:
+                h = h @ w.T + eff[f"l{i}.b"][None, :]
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    return ModelSpec(
+        name=name, params=params, batch=batch,
+        x_shape=(dims[0],), x_dtype="f32", y_shape=(), y_dtype="i32",
+        num_classes=num_classes, forward=forward, task="classify",
+        label_smoothing=label_smoothing, weight_decay=weight_decay,
+    )
+
+
+# --------------------------------------------------------------------------
+# CNN family — proxy for ResNet-18/50, WRN-22 experiments
+# --------------------------------------------------------------------------
+
+def build_cnn(name, channels, batch, num_classes, image=16, in_ch=3,
+              label_smoothing=0.1, weight_decay=1e-4):
+    """Small conv net: [conv3x3 -> relu -> pool2]* -> GAP -> fc.
+
+    channels = e.g. (16, 32, 64). Conv weights are sparse with constant
+    fan-in per *filter* (fan-in = in*kh*kw), matching the paper's treatment
+    of convolutions; the classifier fc is sparse too.
+    """
+    params = []
+    prev = in_ch
+    for i, c in enumerate(channels):
+        params.append(ParamSpec(f"conv{i}.w", (c, prev, 3, 3), sparse=True, init="he"))
+        params.append(ParamSpec(f"conv{i}.b", (c,)))
+        prev = c
+    params.append(ParamSpec("fc.w", (num_classes, prev), sparse=True, init="he"))
+    params.append(ParamSpec("fc.b", (num_classes,)))
+    n_conv = len(channels)
+
+    def forward(eff, x):
+        h = x  # (B, C, H, W)
+        for i in range(n_conv):
+            w = eff[f"conv{i}.w"]
+            h = jax.lax.conv_general_dilated(
+                h, w, window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NCHW", "OIHW", "NCHW"))
+            h = h + eff[f"conv{i}.b"][None, :, None, None]
+            h = jax.nn.relu(h)
+            if i < n_conv - 1:  # pool all but last stage
+                h = jax.lax.reduce_window(
+                    h, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+        h = jnp.mean(h, axis=(2, 3))  # global average pool -> (B, C)
+        return h @ eff["fc.w"].T + eff["fc.b"][None, :]
+
+    return ModelSpec(
+        name=name, params=params, batch=batch,
+        x_shape=(in_ch, image, image), x_dtype="f32", y_shape=(), y_dtype="i32",
+        num_classes=num_classes, forward=forward, task="classify",
+        label_smoothing=label_smoothing, weight_decay=weight_decay,
+    )
+
+
+# --------------------------------------------------------------------------
+# Transformer family — ViT-proxy classifier & causal LM
+# --------------------------------------------------------------------------
+
+def _transformer_params(prefix, d, n_layers, sparse_out_proj=True):
+    """Per-block params. Paper (App. D.3): MHA *input* projections stay
+    dense; MHA output projection and both FF matrices are sparse."""
+    ps = []
+    for l in range(n_layers):
+        b = f"{prefix}b{l}."
+        ps += [
+            ParamSpec(b + "ln1.g", (d,), init="ones"),
+            ParamSpec(b + "ln1.b", (d,)),
+            ParamSpec(b + "qkv.w", (3 * d, d), init="he"),  # dense per paper
+            ParamSpec(b + "qkv.b", (3 * d,)),
+            ParamSpec(b + "out.w", (d, d), sparse=sparse_out_proj, init="he"),
+            ParamSpec(b + "out.b", (d,)),
+            ParamSpec(b + "ln2.g", (d,), init="ones"),
+            ParamSpec(b + "ln2.b", (d,)),
+            ParamSpec(b + "ff1.w", (4 * d, d), sparse=True, init="he"),
+            ParamSpec(b + "ff1.b", (4 * d,)),
+            ParamSpec(b + "ff2.w", (d, 4 * d), sparse=True, init="he"),
+            ParamSpec(b + "ff2.b", (d,)),
+        ]
+    return ps
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _block(eff, pfx, h, heads, causal):
+    b, t, d = h.shape
+    hd = d // heads
+    x = _layernorm(h, eff[pfx + "ln1.g"], eff[pfx + "ln1.b"])
+    qkv = x @ eff[pfx + "qkv.w"].T + eff[pfx + "qkv.b"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads_view(z):
+        return z.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads_view(q), heads_view(k), heads_view(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)  # (B, H, T, T)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    z = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    h = h + z @ eff[pfx + "out.w"].T + eff[pfx + "out.b"]
+
+    x = _layernorm(h, eff[pfx + "ln2.g"], eff[pfx + "ln2.b"])
+    x = jax.nn.gelu(x @ eff[pfx + "ff1.w"].T + eff[pfx + "ff1.b"])
+    h = h + x @ eff[pfx + "ff2.w"].T + eff[pfx + "ff2.b"]
+    return h
+
+
+def build_vit(name, d, n_layers, heads, seq, d_in, batch, num_classes,
+              label_smoothing=0.11, weight_decay=0.03):
+    """Encoder classifier on pre-tokenized inputs (B, T, d_in) — the
+    ViT-B/16 proxy for Table 4 / Fig. 9. Patch projection sparse (the
+    paper's best variant), MHA in-proj dense, mean-pool + dense head."""
+    params = [
+        ParamSpec("proj.w", (d, d_in), sparse=True, init="he"),
+        ParamSpec("proj.b", (d,)),
+        ParamSpec("pos", (seq, d), init="normal:0.02"),
+    ]
+    params += _transformer_params("", d, n_layers)
+    params += [
+        ParamSpec("head.w", (num_classes, d), init="he"),
+        ParamSpec("head.b", (num_classes,)),
+    ]
+
+    def forward(eff, x):
+        h = x @ eff["proj.w"].T + eff["proj.b"] + eff["pos"][None]
+        for l in range(n_layers):
+            h = _block(eff, f"b{l}.", h, heads, causal=False)
+        h = jnp.mean(h, axis=1)
+        return h @ eff["head.w"].T + eff["head.b"]
+
+    return ModelSpec(
+        name=name, params=params, batch=batch,
+        x_shape=(seq, d_in), x_dtype="f32", y_shape=(), y_dtype="i32",
+        num_classes=num_classes, forward=forward, task="classify",
+        label_smoothing=label_smoothing, weight_decay=weight_decay,
+    )
+
+
+def build_lm(name, vocab, d, n_layers, heads, seq, batch,
+             weight_decay=0.01):
+    """Decoder-only causal LM — the end-to-end training driver model.
+
+    Sparse FF + attention out-proj + lm head (the 'Sparse FF' setup the
+    paper adopts for transformers); embeddings and positions dense.
+    """
+    params = [
+        ParamSpec("embed", (vocab, d), init="normal:0.02"),
+        ParamSpec("pos", (seq, d), init="normal:0.02"),
+    ]
+    params += _transformer_params("", d, n_layers)
+    params += [
+        ParamSpec("lnf.g", (d,), init="ones"),
+        ParamSpec("lnf.b", (d,)),
+        ParamSpec("lm_head.w", (vocab, d), sparse=True, init="he"),
+    ]
+
+    def forward(eff, x):
+        h = jnp.take(eff["embed"], x, axis=0) + eff["pos"][None]
+        for l in range(n_layers):
+            h = _block(eff, f"b{l}.", h, heads, causal=True)
+        h = _layernorm(h, eff["lnf.g"], eff["lnf.b"])
+        return h @ eff["lm_head.w"].T  # (B, T, V)
+
+    return ModelSpec(
+        name=name, params=params, batch=batch,
+        x_shape=(seq,), x_dtype="i32", y_shape=(seq,), y_dtype="i32",
+        num_classes=vocab, forward=forward, task="lm",
+        label_smoothing=0.0, weight_decay=weight_decay,
+    )
+
+
+# --------------------------------------------------------------------------
+# Program builders (flat signatures for AOT export)
+# --------------------------------------------------------------------------
+
+def _pack(spec, flat):
+    return {p.name: a for p, a in zip(spec.params, flat)}
+
+
+def make_train_step(spec: ModelSpec):
+    loss_fn = make_loss_fn(spec)
+    names = [p.name for p in spec.params]
+    sparse = [p.name for p in spec.sparse_params]
+    mu, wd = spec.momentum, spec.weight_decay
+
+    def train_step(*args):
+        n = len(names)
+        ns = len(sparse)
+        params = _pack(spec, args[:n])
+        momenta = _pack(spec, args[n:2 * n])
+        masks = dict(zip(sparse, args[2 * n:2 * n + ns]))
+        x, y, lr = args[2 * n + ns:2 * n + ns + 3]
+
+        eff = apply_masks(params, masks)
+        loss, grads = jax.value_and_grad(loss_fn)(eff, x, y)
+        new_p, new_m = [], []
+        for name in names:
+            g = grads[name] + wd * params[name]
+            v = mu * momenta[name] + g
+            p = params[name] - lr * v
+            if name in masks:
+                p = p * masks[name]
+                v = v * masks[name]
+            new_p.append(p)
+            new_m.append(v)
+        return tuple(new_p) + tuple(new_m) + (loss,)
+
+    return train_step
+
+
+def make_dense_grad(spec: ModelSpec):
+    loss_fn = make_loss_fn(spec)
+    names = [p.name for p in spec.params]
+    sparse = [p.name for p in spec.sparse_params]
+
+    def dense_grad(*args):
+        n, ns = len(names), len(sparse)
+        params = _pack(spec, args[:n])
+        masks = dict(zip(sparse, args[n:n + ns]))
+        x, y = args[n + ns:n + ns + 2]
+        eff = apply_masks(params, masks)
+        grads = jax.grad(loss_fn)(eff, x, y)
+        return tuple(grads[s] for s in sparse)
+
+    return dense_grad
+
+
+def make_eval_logits(spec: ModelSpec):
+    names = [p.name for p in spec.params]
+    sparse = [p.name for p in spec.sparse_params]
+
+    def eval_logits(*args):
+        n, ns = len(names), len(sparse)
+        params = _pack(spec, args[:n])
+        masks = dict(zip(sparse, args[n:n + ns]))
+        x = args[n + ns]
+        return (spec.forward(apply_masks(params, masks), x),)
+
+    return eval_logits
+
+
+def make_loss_eval(spec: ModelSpec):
+    loss_fn = make_loss_fn(spec)
+    names = [p.name for p in spec.params]
+    sparse = [p.name for p in spec.sparse_params]
+
+    def loss_eval(*args):
+        n, ns = len(names), len(sparse)
+        params = _pack(spec, args[:n])
+        masks = dict(zip(sparse, args[n:n + ns]))
+        x, y = args[n + ns:n + ns + 2]
+        return (loss_fn(apply_masks(params, masks), x, y),)
+
+    return loss_eval
+
+
+# --------------------------------------------------------------------------
+# Model registry — names referenced by rust configs & the Makefile
+# --------------------------------------------------------------------------
+
+def registry() -> dict:
+    """name -> zero-arg builder. Sizes chosen to train in minutes on 1 CPU
+    core while exercising the same code paths as the paper's models."""
+    return {
+        # tiny MLP: integration tests + quickstart
+        "mlp_tiny": lambda: build_mlp("mlp_tiny", [32, 64, 64, 4], batch=32, num_classes=4),
+        # MLP proxy used in several scaled experiments
+        "mlp_proxy": lambda: build_mlp("mlp_proxy", [128, 256, 256, 128, 10], batch=64, num_classes=10),
+        # CNN proxies: ResNet-18/CIFAR-10 (table2), ResNet-50/ImageNet (table1/3), WRN (table9)
+        "cnn_proxy": lambda: build_cnn("cnn_proxy", (16, 32, 64), batch=32, num_classes=10),
+        "cnn_wide": lambda: build_cnn("cnn_wide", (32, 64, 128), batch=32, num_classes=10),
+        # ViT-B/16 proxy (table4 / fig9 / fig12)
+        "vit_proxy": lambda: build_vit("vit_proxy", d=64, n_layers=2, heads=4, seq=16,
+                                       d_in=48, batch=32, num_classes=10),
+        # causal LMs for the end-to-end driver (example: train_lm_srigl)
+        "lm_small": lambda: build_lm("lm_small", vocab=256, d=128, n_layers=2, heads=4,
+                                     seq=64, batch=8),
+        "lm_medium": lambda: build_lm("lm_medium", vocab=512, d=256, n_layers=4, heads=8,
+                                      seq=128, batch=8),
+    }
+
+
+def param_count(spec: ModelSpec) -> int:
+    return sum(math.prod(p.shape) for p in spec.params)

@@ -1,0 +1,78 @@
+"""AOT pipeline consistency: manifest vs registry, HLO artifacts well-formed.
+
+These tests read artifacts/ if present (built by `make artifacts`); the
+export itself is also exercised end-to-end on the tiny model in-process.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+MANIFEST = os.path.join(ART, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+
+
+def test_export_roundtrip_tmpdir(tmp_path):
+    spec = M.registry()["mlp_tiny"]()
+    entry = aot.export_model(spec, str(tmp_path))
+    assert set(entry["programs"]) == {"train_step", "dense_grad", "eval_logits", "loss_eval"}
+    for fname in entry["programs"].values():
+        text = (tmp_path / fname).read_text()
+        assert text.startswith("HloModule"), fname
+        assert "ENTRY" in text
+    # canonical ordering: params, momenta, masks, x, y, lr
+    n, ns = len(spec.params), len(spec.sparse_params)
+    assert entry["param_count"] == M.param_count(spec)
+    assert len(entry["params"]) == n and sum(p["sparse"] for p in entry["params"]) == ns
+
+
+@needs_artifacts
+def test_manifest_matches_registry():
+    with open(MANIFEST) as f:
+        man = json.load(f)
+    reg = M.registry()
+    for name, entry in man["models"].items():
+        spec = reg[name]()
+        assert entry["batch"] == spec.batch
+        assert entry["param_count"] == M.param_count(spec)
+        assert [p["name"] for p in entry["params"]] == [p.name for p in spec.params]
+        for p_json, p in zip(entry["params"], spec.params):
+            assert tuple(p_json["shape"]) == tuple(p.shape)
+            assert p_json["sparse"] == p.sparse
+            assert p_json["fan_in"] == p.fan_in
+        for fname in entry["programs"].values():
+            assert os.path.exists(os.path.join(ART, fname)), fname
+
+
+@needs_artifacts
+def test_condensed_entries_geometry():
+    with open(MANIFEST) as f:
+        man = json.load(f)
+    assert "cond_vitff_s90_b1" in man["condensed"]
+    g = man["condensed"]["cond_vitff_s90_b1"]
+    # Fig. 4 geometry: ViT-B/16 final FF layer, 90% sparse
+    assert (g["d"], g["n"], g["k"]) == (3072, 768, 307)
+    assert g["vmem"]["fits_16MiB"]
+    for entry in man["condensed"].values():
+        assert os.path.exists(os.path.join(ART, entry["file"]))
+
+
+@needs_artifacts
+def test_hlo_text_parseable_headers():
+    """Every artifact is HLO text with an ENTRY computation (the format the
+    xla crate's from_text_file parser accepts — see DESIGN.md)."""
+    with open(MANIFEST) as f:
+        man = json.load(f)
+    files = [f for e in man["models"].values() for f in e["programs"].values()]
+    files += [e["file"] for e in man["condensed"].values()]
+    for fname in files:
+        with open(os.path.join(ART, fname)) as fh:
+            head = fh.read(4096)
+        assert head.startswith("HloModule"), fname

@@ -1,0 +1,172 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes (spec requirement); assert_allclose against
+ref.py is the core correctness signal for the AOT'd hot path.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.condensed import (
+    condensed_matmul,
+    condensed_matmul_batched,
+    vmem_bytes,
+    _pick_tile,
+)
+from compile.kernels.masked_dense import masked_matmul
+
+
+def _rand_condensed(rng, b, d, n, k, dtype):
+    x = rng.normal(size=(b, d)).astype(dtype)
+    w = rng.normal(size=(n, k)).astype(dtype)
+    idx = np.stack([rng.choice(d, size=k, replace=False) for _ in range(n)]).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(w), jnp.asarray(idx)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    d=st.integers(4, 48),
+    n=st.integers(1, 32),
+    data=st.data(),
+)
+def test_condensed_matches_ref_hypothesis(b, d, n, data):
+    k = data.draw(st.integers(1, d))
+    rng = np.random.default_rng(b * 1000 + d * 100 + n * 10 + k)
+    x, w, idx = _rand_condensed(rng, b, d, n, k, np.float32)
+    out = condensed_matmul(x, w, idx)
+    np.testing.assert_allclose(out, ref.condensed_matmul_ref(x, w, idx),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(np.float32, 1e-5), (np.float64, 1e-12)])
+def test_condensed_dtypes(dtype, rtol):
+    if dtype == np.float64:
+        jax.config.update("jax_enable_x64", True)
+    try:
+        rng = np.random.default_rng(7)
+        x, w, idx = _rand_condensed(rng, 4, 32, 16, 8, dtype)
+        out = condensed_matmul(x, w, idx)
+        np.testing.assert_allclose(out, ref.condensed_matmul_ref(x, w, idx),
+                                   rtol=rtol, atol=rtol)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_condensed_equals_dense_matmul():
+    """Condensed form == x @ dense(W).T — Appendix F equivalence."""
+    rng = np.random.default_rng(3)
+    b, d, n, k = 6, 40, 20, 10
+    x, w, idx = _rand_condensed(rng, b, d, n, k, np.float32)
+    dense = ref.condensed_to_dense(w, idx, d)
+    np.testing.assert_allclose(
+        condensed_matmul(x, w, idx), x @ dense.T, rtol=1e-4, atol=1e-5)
+
+
+def test_condensed_tiling_invariance():
+    """Output must not depend on the neuron tile size (pure schedule knob)."""
+    rng = np.random.default_rng(11)
+    b, d, n, k = 4, 32, 24, 6
+    x, w, idx = _rand_condensed(rng, b, d, n, k, np.float32)
+    base = condensed_matmul(x, w, idx, tile_n=24)
+    for tn in (1, 2, 3, 4, 6, 8, 12):
+        np.testing.assert_allclose(
+            condensed_matmul(x, w, idx, tile_n=tn), base, rtol=1e-6)
+
+
+def test_condensed_duplicate_indices_sum():
+    """With repeated indices the kernel must sum contributions (gather does)."""
+    x = jnp.ones((1, 4), jnp.float32)
+    w = jnp.array([[2.0, 3.0]], jnp.float32)
+    idx = jnp.array([[1, 1]], jnp.int32)
+    np.testing.assert_allclose(condensed_matmul(x, w, idx), [[5.0]])
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 8), d=st.integers(2, 40), n=st.integers(1, 32),
+       density=st.floats(0.05, 1.0))
+def test_masked_matches_ref_hypothesis(b, d, n, density):
+    rng = np.random.default_rng(b + d * 7 + n * 13)
+    x = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    m = jnp.asarray((rng.uniform(size=(n, d)) < density).astype(np.float32))
+    np.testing.assert_allclose(
+        masked_matmul(x, w, m), ref.masked_matmul_ref(x, w, m),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_masked_matmul_grad_matches_dense():
+    """custom_vjp backward == autodiff through the plain jnp formulation."""
+    rng = np.random.default_rng(5)
+    b, d, n = 4, 16, 8
+    x = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    m = jnp.asarray((rng.uniform(size=(n, d)) < 0.4).astype(np.float32))
+
+    def loss_kernel(w_):
+        return jnp.sum(jnp.tanh(masked_matmul(x, w_, m)))
+
+    def loss_ref(w_):
+        return jnp.sum(jnp.tanh(ref.masked_matmul_ref(x, w_, m)))
+
+    gk = jax.grad(loss_kernel)(w)
+    gr = jax.grad(loss_ref)(w)
+    np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-5)
+    # pruned positions receive zero gradient through the kernel
+    assert float(jnp.max(jnp.abs(gk * (1 - m)))) == 0.0
+
+
+def test_masked_matmul_dx_grad():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(3, 10)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(5, 10)).astype(np.float32))
+    m = jnp.asarray((rng.uniform(size=(5, 10)) < 0.5).astype(np.float32))
+    gk = jax.grad(lambda x_: jnp.sum(masked_matmul(x_, w, m) ** 2))(x)
+    gr = jax.grad(lambda x_: jnp.sum(ref.masked_matmul_ref(x_, w, m) ** 2))(x)
+    np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bt=st.sampled_from([(4, 2), (8, 4), (6, 3), (8, 1)]),
+    n=st.sampled_from([8, 12, 16]),
+    data=st.data(),
+)
+def test_condensed_batched_matches_single_grid(bt, n, data):
+    b, tb = bt
+    d = data.draw(st.integers(8, 40))
+    k = data.draw(st.integers(1, d))
+    rng = np.random.default_rng(b * 100 + d * 10 + k)
+    x, w, idx = _rand_condensed(rng, b, d, n, k, np.float32)
+    single = condensed_matmul(x, w, idx)
+    batched = condensed_matmul_batched(x, w, idx, tile_b=tb)
+    np.testing.assert_allclose(batched, single, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(batched, ref.condensed_matmul_ref(x, w, idx),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_condensed_batched_tile_invariance():
+    rng = np.random.default_rng(13)
+    x, w, idx = _rand_condensed(rng, 8, 24, 12, 5, np.float32)
+    base = condensed_matmul_batched(x, w, idx, tile_b=8, tile_n=12)
+    for tb in (1, 2, 4):
+        for tn in (2, 3, 6):
+            got = condensed_matmul_batched(x, w, idx, tile_b=tb, tile_n=tn)
+            np.testing.assert_allclose(got, base, rtol=1e-6)
+
+
+def test_pick_tile_divides():
+    for n in range(1, 300):
+        t = _pick_tile(n)
+        assert n % t == 0 and 1 <= t <= 128
+
+
+def test_vmem_estimate_fig4_geometry_fits():
+    """Fig. 4 layer (768x3072, 90% sparse) must fit a 16 MiB VMEM budget."""
+    est = vmem_bytes(b=1, d=3072, n=768, k=307)
+    assert est["fits_16MiB"], est
+    assert est["tile_n"] >= 1 and 768 % est["tile_n"] == 0

@@ -1,0 +1,188 @@
+"""L2 model-zoo correctness: shapes, gradient semantics, training descent."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+def _init_params(spec, rng):
+    out = {}
+    for p in spec.params:
+        if p.init == "zeros":
+            a = np.zeros(p.shape, np.float32)
+        elif p.init == "ones":
+            a = np.ones(p.shape, np.float32)
+        elif p.init == "he":
+            a = rng.normal(size=p.shape).astype(np.float32) * np.sqrt(2.0 / max(p.fan_in, 1))
+        elif p.init.startswith("normal:"):
+            a = rng.normal(size=p.shape).astype(np.float32) * float(p.init.split(":")[1])
+        else:
+            raise ValueError(p.init)
+        out[p.name] = jnp.asarray(a)
+    return out
+
+
+def _rand_masks(spec, rng, density=0.5):
+    masks = {}
+    for p in spec.sparse_params:
+        m = (rng.uniform(size=p.shape) < density).astype(np.float32)
+        masks[p.name] = jnp.asarray(m)
+    return masks
+
+
+def _rand_batch(spec, rng):
+    b = spec.batch
+    if spec.x_dtype == "f32":
+        x = jnp.asarray(rng.normal(size=(b, *spec.x_shape)).astype(np.float32))
+    else:
+        x = jnp.asarray(rng.integers(0, spec.num_classes, size=(b, *spec.x_shape)).astype(np.int32))
+    y = jnp.asarray(rng.integers(0, spec.num_classes, size=(b, *spec.y_shape)).astype(np.int32))
+    return x, y
+
+
+SMALL_MODELS = ["mlp_tiny", "cnn_proxy", "vit_proxy", "lm_small"]
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_forward_shapes(name):
+    spec = M.registry()[name]()
+    rng = np.random.default_rng(0)
+    params = _init_params(spec, rng)
+    masks = _rand_masks(spec, rng)
+    x, _ = _rand_batch(spec, rng)
+    logits = spec.forward(M.apply_masks(params, masks), x)
+    if spec.task == "lm":
+        assert logits.shape == (spec.batch, *spec.x_shape, spec.num_classes)
+    else:
+        assert logits.shape == (spec.batch, spec.num_classes)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+@pytest.mark.parametrize("name", ["mlp_tiny", "cnn_proxy"])
+def test_dense_grad_nonzero_at_pruned(name):
+    """dense_grad is dL/d(w.*m): it must be non-zero at pruned positions —
+    the signal RigL/SRigL regrowth needs (Section 3.1 step 1)."""
+    spec = M.registry()[name]()
+    rng = np.random.default_rng(1)
+    params = _init_params(spec, rng)
+    masks = _rand_masks(spec, rng, density=0.3)
+    x, y = _rand_batch(spec, rng)
+    fn = M.make_dense_grad(spec)
+    flat = [params[p.name] for p in spec.params] + \
+           [masks[p.name] for p in spec.sparse_params] + [x, y]
+    grads = fn(*flat)
+    for g, p in zip(grads, spec.sparse_params):
+        m = np.asarray(masks[p.name])
+        g = np.asarray(g)
+        assert g.shape == p.shape
+        pruned = g[m == 0]
+        assert pruned.size > 0 and np.any(pruned != 0.0), \
+            f"{p.name}: no gradient signal at pruned weights"
+
+
+def test_train_step_masks_enforced_and_loss_finite():
+    spec = M.registry()["mlp_tiny"]()
+    rng = np.random.default_rng(2)
+    params = _init_params(spec, rng)
+    momenta = {p.name: jnp.zeros(p.shape, jnp.float32) for p in spec.params}
+    masks = _rand_masks(spec, rng, density=0.2)
+    # start masked
+    for p in spec.sparse_params:
+        params[p.name] = params[p.name] * masks[p.name]
+    x, y = _rand_batch(spec, rng)
+    fn = M.make_train_step(spec)
+    n = len(spec.params)
+    flat = [params[p.name] for p in spec.params] + \
+           [momenta[p.name] for p in spec.params] + \
+           [masks[p.name] for p in spec.sparse_params] + \
+           [x, y, jnp.float32(0.1)]
+    out = fn(*flat)
+    new_params = out[:n]
+    loss = out[-1]
+    assert np.isfinite(float(loss))
+    for p_new, p in zip(new_params, spec.params):
+        if p.sparse:
+            off = np.asarray(p_new) * (1 - np.asarray(masks[p.name]))
+            assert np.max(np.abs(off)) == 0.0, f"{p.name}: pruned weights moved"
+
+
+@pytest.mark.parametrize("name", ["mlp_tiny", "lm_small"])
+def test_loss_decreases(name):
+    """A few SGD steps on a fixed batch must reduce the loss."""
+    spec = M.registry()[name]()
+    rng = np.random.default_rng(3)
+    params = _init_params(spec, rng)
+    momenta = {p.name: jnp.zeros(p.shape, jnp.float32) for p in spec.params}
+    masks = _rand_masks(spec, rng, density=0.5)
+    for p in spec.sparse_params:
+        params[p.name] = params[p.name] * masks[p.name]
+    x, y = _rand_batch(spec, rng)
+    step = jax.jit(M.make_train_step(spec))
+    n = len(spec.params)
+    flat = [params[p.name] for p in spec.params] + \
+           [momenta[p.name] for p in spec.params] + \
+           [masks[p.name] for p in spec.sparse_params] + \
+           [x, y, jnp.float32(0.05)]
+    losses = []
+    for _ in range(8):
+        out = step(*flat)
+        losses.append(float(out[-1]))
+        flat = list(out[:2 * n]) + flat[2 * n:]
+    assert losses[-1] < losses[0], losses
+
+
+def test_mlp_pallas_forward_equals_plain():
+    """The Pallas-kerneled MLP must equal the plain-jnp formulation."""
+    reg = M.registry()
+    spec_k = reg["mlp_tiny"]()
+    spec_p = M.build_mlp("mlp_plain", [32, 64, 64, 4], batch=32, num_classes=4,
+                         use_pallas=False)
+    rng = np.random.default_rng(4)
+    params = _init_params(spec_k, rng)
+    masks = _rand_masks(spec_k, rng)
+    x, _ = _rand_batch(spec_k, rng)
+    eff = M.apply_masks(params, masks)
+    np.testing.assert_allclose(
+        spec_k.forward(eff, x), spec_p.forward(eff, x), rtol=1e-4, atol=1e-5)
+
+
+def test_numerical_gradient_mlp():
+    """dense_grad vs central finite differences on a few coordinates."""
+    spec = M.registry()["mlp_tiny"]()
+    rng = np.random.default_rng(5)
+    params = _init_params(spec, rng)
+    masks = _rand_masks(spec, rng)
+    x, y = _rand_batch(spec, rng)
+    loss_fn = M.make_loss_fn(spec)
+
+    def loss_of(eff):
+        return float(loss_fn(eff, x, y))
+
+    eff = {k: np.asarray(v).copy() for k, v in M.apply_masks(params, masks).items()}
+    fn = M.make_dense_grad(spec)
+    flat = [params[p.name] for p in spec.params] + \
+           [masks[p.name] for p in spec.sparse_params] + [x, y]
+    grads = dict(zip([p.name for p in spec.sparse_params], fn(*flat)))
+
+    eps = 1e-3
+    name = "l1.w"
+    for (i, j) in [(0, 0), (3, 7), (10, 20)]:
+        e = {k: jnp.asarray(v) for k, v in eff.items()}
+        ep = dict(e); ep[name] = e[name].at[i, j].add(eps)
+        em = dict(e); em[name] = e[name].at[i, j].add(-eps)
+        num = (loss_of(ep) - loss_of(em)) / (2 * eps)
+        ana = float(grads[name][i, j])
+        assert abs(num - ana) < 5e-3 + 0.05 * abs(num), (i, j, num, ana)
+
+
+def test_param_counts():
+    reg = M.registry()
+    assert M.param_count(reg["mlp_tiny"]()) == 6532
+    assert M.param_count(reg["lm_medium"]()) > 3_000_000
+    # every sparse param has neuron axis 0 and positive fan-in
+    for name in SMALL_MODELS:
+        for p in reg[name]().sparse_params:
+            assert p.neuron_axis == 0 and p.fan_in >= 1

@@ -1,0 +1,160 @@
+//! Wall-clock benchmark harness — in-tree replacement for `criterion`
+//! (offline environment).
+//!
+//! Matches the paper's reporting protocol: "the median over a minimum of
+//! 5 runs is shown, while the error bars show the std. dev." (Fig. 4).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-run wall-clock seconds (each run is `iters` inner iterations,
+    /// already divided out).
+    pub runs: Vec<f64>,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn median_s(&self) -> f64 {
+        let mut v = self.runs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            v[n / 2]
+        } else {
+            0.5 * (v[n / 2 - 1] + v[n / 2])
+        }
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        self.runs.iter().sum::<f64>() / self.runs.len().max(1) as f64
+    }
+
+    pub fn stddev_s(&self) -> f64 {
+        let m = self.mean_s();
+        let n = self.runs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        (self.runs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median_s() * 1e6
+    }
+}
+
+/// Benchmark `f`, auto-calibrating the inner iteration count so one run
+/// takes ~`target_run` wall-clock, then timing `runs` runs after one
+/// warmup. Returns per-run seconds normalized per iteration.
+pub fn bench<F: FnMut()>(name: &str, runs: usize, target_run: Duration, mut f: F) -> Measurement {
+    // calibrate
+    let mut iters = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed();
+        if dt >= target_run || iters >= 1 << 20 {
+            break;
+        }
+        if dt < target_run / 16 {
+            iters = iters.saturating_mul(8);
+        } else {
+            let scale = target_run.as_secs_f64() / dt.as_secs_f64().max(1e-9);
+            iters = ((iters as f64 * scale).ceil() as usize).max(iters + 1);
+        }
+    }
+    // warmup
+    for _ in 0..iters {
+        f();
+    }
+    // measure
+    let mut out = Vec::with_capacity(runs);
+    for _ in 0..runs.max(5) {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        out.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    Measurement { name: name.to_string(), runs: out, iters }
+}
+
+/// Convenience wrapper with the paper's protocol: >=5 runs, short target.
+pub fn bench5<F: FnMut()>(name: &str, f: F) -> Measurement {
+    bench(name, 5, Duration::from_millis(50), f)
+}
+
+/// Render a table of measurements with a speedup column vs a baseline row.
+pub fn print_table(title: &str, rows: &[Measurement], baseline: Option<&str>) {
+    println!("\n== {title} ==");
+    let base = baseline
+        .and_then(|b| rows.iter().find(|m| m.name == b))
+        .map(|m| m.median_s());
+    println!("{:<42} {:>12} {:>12} {:>9}", "case", "median", "stddev", "speedup");
+    for m in rows {
+        let med = m.median_s();
+        let speed = base.map(|b| b / med);
+        println!(
+            "{:<42} {:>12} {:>12} {:>9}",
+            m.name,
+            fmt_time(med),
+            fmt_time(m.stddev_s()),
+            speed.map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".into()),
+        );
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if !s.is_finite() {
+        "n/a".into()
+    } else if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.2} us", s * 1e6)
+    }
+}
+
+/// Guard against the optimizer deleting benchmark bodies.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_and_stddev() {
+        let m = Measurement { name: "x".into(), runs: vec![3.0, 1.0, 2.0], iters: 1 };
+        assert_eq!(m.median_s(), 2.0);
+        assert!((m.stddev_s() - 1.0).abs() < 1e-12);
+        let e = Measurement { name: "e".into(), runs: vec![1.0, 2.0], iters: 1 };
+        assert_eq!(e.median_s(), 1.5);
+    }
+
+    #[test]
+    fn bench_runs_at_least_five() {
+        let m = bench("t", 5, Duration::from_micros(100), || {
+            black_box(1 + 1);
+        });
+        assert!(m.runs.len() >= 5);
+        assert!(m.median_s() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+    }
+}

@@ -1,0 +1,54 @@
+//! Gaussian-mixture classification: class means at pairwise separation
+//! `sep` (in noise-sigma units), unit isotropic noise. The MLP-family
+//! workload; difficulty controlled by `sep` and dimension.
+
+use super::{Batch, Dataset, XData};
+use crate::util::rng::Rng;
+
+pub struct GaussianMixture {
+    batch: usize,
+    d: usize,
+    classes: usize,
+    /// Flattened (classes, d) mean matrix, fixed at construction.
+    means: Vec<f32>,
+}
+
+impl GaussianMixture {
+    pub fn new(batch: usize, d: usize, classes: usize, sep: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x6d65616e73);
+        let mut means = vec![0f32; classes * d];
+        for c in 0..classes {
+            // random direction scaled to norm `sep`
+            let mut norm = 0f64;
+            for j in 0..d {
+                let v = rng.normal();
+                means[c * d + j] = v as f32;
+                norm += v * v;
+            }
+            let scale = (sep / norm.sqrt().max(1e-9)) as f32;
+            for j in 0..d {
+                means[c * d + j] *= scale;
+            }
+        }
+        GaussianMixture { batch, d, classes, means }
+    }
+}
+
+impl Dataset for GaussianMixture {
+    fn name(&self) -> &str {
+        "gaussian"
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Batch {
+        let mut x = vec![0f32; self.batch * self.d];
+        let mut y = vec![0i32; self.batch];
+        for b in 0..self.batch {
+            let c = rng.below(self.classes);
+            y[b] = c as i32;
+            for j in 0..self.d {
+                x[b * self.d + j] = self.means[c * self.d + j] + rng.normal_f32();
+            }
+        }
+        Batch { x: XData::F32(x), y }
+    }
+}

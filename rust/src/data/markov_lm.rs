@@ -1,0 +1,71 @@
+//! MarkovLm: sequences from a random sparse Markov chain — the tiny-corpus
+//! stand-in for LM training. Each token has `branching` possible
+//! successors with random (renormalized) probabilities, so the optimal
+//! cross-entropy is about log(branching) nats versus log(vocab) for an
+//! untrained model: the loss curve has real headroom to descend.
+
+use super::{Batch, Dataset, XData};
+use crate::util::rng::Rng;
+
+pub struct MarkovLm {
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    /// (vocab, branching) successor ids and cumulative probabilities.
+    succ: Vec<u32>,
+    cum: Vec<f32>,
+    branching: usize,
+}
+
+impl MarkovLm {
+    pub fn new(batch: usize, seq: usize, vocab: usize, branching: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x6d61726b);
+        let branching = branching.clamp(1, vocab);
+        let mut succ = vec![0u32; vocab * branching];
+        let mut cum = vec![0f32; vocab * branching];
+        for t in 0..vocab {
+            let choices = rng.choose_k(vocab, branching);
+            let mut probs: Vec<f32> = (0..branching).map(|_| rng.uniform_f32() + 0.1).collect();
+            let total: f32 = probs.iter().sum();
+            let mut acc = 0f32;
+            for (i, c) in choices.into_iter().enumerate() {
+                succ[t * branching + i] = c as u32;
+                acc += probs[i] / total;
+                cum[t * branching + i] = acc;
+            }
+            probs.clear();
+        }
+        MarkovLm { batch, seq, vocab, succ, cum, branching }
+    }
+
+    fn step(&self, tok: usize, rng: &mut Rng) -> usize {
+        let u = rng.uniform_f32();
+        let base = tok * self.branching;
+        for i in 0..self.branching {
+            if u <= self.cum[base + i] {
+                return self.succ[base + i] as usize;
+            }
+        }
+        self.succ[base + self.branching - 1] as usize
+    }
+}
+
+impl Dataset for MarkovLm {
+    fn name(&self) -> &str {
+        "markov_lm"
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Batch {
+        let mut x = vec![0i32; self.batch * self.seq];
+        let mut y = vec![0i32; self.batch * self.seq];
+        for b in 0..self.batch {
+            let mut tok = rng.below(self.vocab);
+            for t in 0..self.seq {
+                x[b * self.seq + t] = tok as i32;
+                tok = self.step(tok, rng);
+                y[b * self.seq + t] = tok as i32;
+            }
+        }
+        Batch { x: XData::I32(x), y }
+    }
+}

@@ -1,0 +1,69 @@
+//! SynthImg: class-conditional spatial textures — the CIFAR-10/ImageNet
+//! stand-in for the CNN experiments. Each class is a small set of 2-D
+//! sinusoidal gratings (per-channel phase) + Gaussian pixel noise, so the
+//! decision boundary is a *spatial frequency* pattern a conv net must
+//! learn (pure per-pixel statistics do not separate the classes).
+
+use super::{Batch, Dataset, XData};
+use crate::util::rng::Rng;
+
+pub struct SynthImg {
+    batch: usize,
+    ch: usize,
+    h: usize,
+    w: usize,
+    classes: usize,
+    noise: f32,
+    /// Per class: (fx, fy, per-channel phase offsets).
+    gratings: Vec<(f32, f32, Vec<f32>)>,
+}
+
+impl SynthImg {
+    pub fn new(batch: usize, ch: usize, h: usize, w: usize, classes: usize, noise: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x696d67);
+        let gratings = (0..classes)
+            .map(|c| {
+                // distinct integer frequency pair per class (stable across
+                // noise draws); angle varies with class index.
+                let fx = 1.0 + (c % 4) as f32;
+                let fy = 1.0 + ((c / 4) % 4) as f32 + 0.5 * ((c % 2) as f32);
+                let phases = (0..ch).map(|_| rng.uniform_f32() * std::f32::consts::TAU).collect();
+                (fx, fy, phases)
+            })
+            .collect();
+        SynthImg { batch, ch, h, w, classes, noise, gratings }
+    }
+}
+
+impl Dataset for SynthImg {
+    fn name(&self) -> &str {
+        "synthimg"
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Batch {
+        let (ch, h, w) = (self.ch, self.h, self.w);
+        let mut x = vec![0f32; self.batch * ch * h * w];
+        let mut y = vec![0i32; self.batch];
+        for b in 0..self.batch {
+            let c = rng.below(self.classes);
+            y[b] = c as i32;
+            let (fx, fy, phases) = &self.gratings[c];
+            // random translation: keeps the task shift-invariant
+            let dx = rng.uniform_f32();
+            let dy = rng.uniform_f32();
+            for cc in 0..ch {
+                let phase = phases[cc];
+                for i in 0..h {
+                    for j in 0..w {
+                        let arg = std::f32::consts::TAU
+                            * (fx * (i as f32 / h as f32 + dx) + fy * (j as f32 / w as f32 + dy))
+                            + phase;
+                        let idx = ((b * ch + cc) * h + i) * w + j;
+                        x[idx] = arg.sin() + self.noise * rng.normal_f32();
+                    }
+                }
+            }
+        }
+        Batch { x: XData::F32(x), y }
+    }
+}

@@ -1,0 +1,53 @@
+//! TokenSeq: pre-tokenized sequence classification — the ImageNet-patches
+//! stand-in for the ViT-proxy (Table 4 / Fig. 9). Each class has a fixed
+//! prototype token sequence; samples add per-token Gaussian noise and a
+//! random cyclic shift (so attention, not just pooling, carries signal).
+
+use super::{Batch, Dataset, XData};
+use crate::util::rng::Rng;
+
+pub struct TokenSeq {
+    batch: usize,
+    seq: usize,
+    d: usize,
+    classes: usize,
+    noise: f32,
+    /// (classes, seq, d) prototypes.
+    proto: Vec<f32>,
+}
+
+impl TokenSeq {
+    pub fn new(batch: usize, seq: usize, d: usize, classes: usize, noise: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x746f6b);
+        let mut proto = vec![0f32; classes * seq * d];
+        for v in proto.iter_mut() {
+            *v = rng.normal_f32();
+        }
+        TokenSeq { batch, seq, d, classes, noise, proto }
+    }
+}
+
+impl Dataset for TokenSeq {
+    fn name(&self) -> &str {
+        "tokenseq"
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Batch {
+        let (seq, d) = (self.seq, self.d);
+        let mut x = vec![0f32; self.batch * seq * d];
+        let mut y = vec![0i32; self.batch];
+        for b in 0..self.batch {
+            let c = rng.below(self.classes);
+            y[b] = c as i32;
+            let shift = rng.below(seq);
+            for t in 0..seq {
+                let src = (t + shift) % seq;
+                for j in 0..d {
+                    x[(b * seq + t) * d + j] = self.proto[(c * seq + src) * d + j]
+                        + self.noise * rng.normal_f32();
+                }
+            }
+        }
+        Batch { x: XData::F32(x), y }
+    }
+}

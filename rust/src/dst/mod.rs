@@ -1,0 +1,146 @@
+//! Dynamic Sparse Training topology updaters — the paper's algorithmic
+//! core. `SRigL` implements Section 3.1 (constant fan-in + dynamic neuron
+//! ablation); `RigL`, `SET`, and `StaticSparse` are the baselines the
+//! paper compares against (Table 3); `struct_prune` is the structured
+//! pruning baseline of Table 10.
+
+pub mod rigl;
+pub mod saliency;
+pub mod schedule;
+pub mod set;
+pub mod srigl;
+pub mod static_sparse;
+pub mod struct_prune;
+
+pub use rigl::RigL;
+pub use schedule::UpdateSchedule;
+pub use set::Set;
+pub use srigl::SRigL;
+pub use static_sparse::StaticSparse;
+
+use crate::sparsity::mask::Mask;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Mutable view of one sparse layer during a connectivity update.
+pub struct LayerView<'a> {
+    /// Weights (masked: pruned entries are exactly 0).
+    pub w: &'a mut Tensor,
+    /// SGD momentum buffer; reset to 0 at newly-grown positions (RigL).
+    pub v: &'a mut Tensor,
+    pub mask: &'a mut Mask,
+    /// Dense gradient dL/d(w .* m) from the AOT `dense_grad` program.
+    pub grad: &'a Tensor,
+    /// Current constant fan-in k (SRigL updates this on ablation).
+    pub k: &'a mut usize,
+    /// Fixed non-zero budget for this layer (set at initialization).
+    pub budget: usize,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct UpdateStats {
+    pub pruned: usize,
+    pub grown: usize,
+    /// Neurons ablated *by this update*.
+    pub ablated: usize,
+    /// Active (non-ablated) neurons after the update.
+    pub active_neurons: usize,
+    /// Constant fan-in after the update (0 for unstructured methods).
+    pub k: usize,
+}
+
+/// A sparse-to-sparse DST topology updater.
+pub trait TopologyUpdater {
+    fn name(&self) -> &'static str;
+
+    /// True if this method maintains the constant fan-in structure (and
+    /// should therefore be initialized with constant fan-in masks).
+    fn structured(&self) -> bool;
+
+    /// Run one connectivity update on a layer. `frac` is the cosine-
+    /// annealed drop fraction from `UpdateSchedule::drop_fraction`.
+    fn update(&self, layer: &mut LayerView, frac: f64, rng: &mut Rng) -> UpdateStats;
+}
+
+/// Shared post-edit fixups: zero weights+momentum at pruned positions,
+/// zero momentum (and weight) at grown positions. `grown` positions start
+/// at w=0 exactly as in RigL.
+pub(crate) fn apply_prune_grow(
+    layer: &mut LayerView,
+    pruned: &[usize],
+    grown: &[usize],
+) {
+    for &i in pruned {
+        layer.mask.t.data[i] = 0.0;
+        layer.w.data[i] = 0.0;
+        layer.v.data[i] = 0.0;
+    }
+    for &i in grown {
+        layer.mask.t.data[i] = 1.0;
+        layer.w.data[i] = 0.0;
+        layer.v.data[i] = 0.0;
+    }
+}
+
+/// Active-weight count helper.
+pub(crate) fn active_count(mask: &Mask) -> usize {
+    mask.nnz()
+}
+
+/// Number of prune/grow slots for this update: round(frac * active).
+pub(crate) fn prune_quota(mask: &Mask, frac: f64) -> usize {
+    (frac * active_count(mask) as f64).round() as usize
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Build a random layer (weights, momentum, mask, grads) for updater
+    /// tests. `constant_k` picks constant-fan-in vs per-layer topology.
+    pub struct TestLayer {
+        pub w: Tensor,
+        pub v: Tensor,
+        pub mask: Mask,
+        pub grad: Tensor,
+        pub k: usize,
+        pub budget: usize,
+    }
+
+    impl TestLayer {
+        pub fn new(n: usize, f: usize, k: usize, constant: bool, seed: u64) -> TestLayer {
+            let mut rng = Rng::new(seed);
+            let mask = if constant {
+                Mask::random_constant_fan_in(&[n, f], k, &mut rng)
+            } else {
+                Mask::random_per_layer(&[n, f], n * k, &mut rng)
+            };
+            let mut w = Tensor::normal(&[n, f], 1.0, &mut rng);
+            w.mul_assign(&mask.t);
+            let v = Tensor::zeros(&[n, f]);
+            let grad = Tensor::normal(&[n, f], 1.0, &mut rng);
+            TestLayer { w, v, mask, grad, k, budget: n * k }
+        }
+
+        pub fn view(&mut self) -> LayerView<'_> {
+            LayerView {
+                w: &mut self.w,
+                v: &mut self.v,
+                mask: &mut self.mask,
+                grad: &self.grad,
+                k: &mut self.k,
+                budget: self.budget,
+            }
+        }
+
+        /// Weights at pruned positions must be exactly zero.
+        pub fn assert_consistent(&self) {
+            for (i, &m) in self.mask.t.data.iter().enumerate() {
+                if m == 0.0 {
+                    assert_eq!(self.w.data[i], 0.0, "weight alive at pruned idx {i}");
+                    assert_eq!(self.v.data[i], 0.0, "momentum alive at pruned idx {i}");
+                }
+            }
+        }
+    }
+}

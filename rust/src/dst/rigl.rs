@@ -1,0 +1,131 @@
+//! RigL (Evci et al. 2021): prune smallest-magnitude weights, regrow the
+//! inactive positions with the largest gradient magnitude — unstructured,
+//! layer-wise. This is the baseline SRigL is built from and compared to.
+
+use super::saliency::{bottom_k_by, top_k_by};
+use super::{apply_prune_grow, prune_quota, LayerView, TopologyUpdater, UpdateStats};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RigL;
+
+impl TopologyUpdater for RigL {
+    fn name(&self) -> &'static str {
+        "rigl"
+    }
+
+    fn structured(&self) -> bool {
+        false
+    }
+
+    fn update(&self, layer: &mut LayerView, frac: f64, _rng: &mut Rng) -> UpdateStats {
+        let mask = &layer.mask.t.data;
+        let n_total = mask.len();
+        let mut quota = prune_quota(layer.mask, frac);
+        let inactive: Vec<usize> = (0..n_total).filter(|&i| mask[i] == 0.0).collect();
+        quota = quota.min(inactive.len());
+        if quota == 0 {
+            return UpdateStats {
+                active_neurons: layer.mask.active_neurons(),
+                k: 0,
+                ..Default::default()
+            };
+        }
+
+        // Prune: K smallest |w| among active.
+        let abs_w: Vec<f32> = layer.w.data.iter().map(|v| v.abs()).collect();
+        let active = (0..n_total).filter(|&i| mask[i] != 0.0);
+        let pruned = bottom_k_by(active, &abs_w, quota);
+
+        // Grow: K largest |g| among positions inactive *before* the update
+        // (just-pruned positions are excluded, as in the reference impl).
+        let abs_g: Vec<f32> = layer.grad.data.iter().map(|v| v.abs()).collect();
+        let grown = top_k_by(inactive.into_iter(), &abs_g, quota);
+        debug_assert_eq!(pruned.len(), grown.len());
+
+        apply_prune_grow(layer, &pruned, &grown);
+        UpdateStats {
+            pruned: pruned.len(),
+            grown: grown.len(),
+            ablated: 0,
+            active_neurons: layer.mask.active_neurons(),
+            k: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::TestLayer;
+    use super::*;
+
+    #[test]
+    fn preserves_nnz() {
+        let mut l = TestLayer::new(16, 32, 8, false, 0);
+        let before = l.mask.nnz();
+        let stats = RigL.update(&mut l.view(), 0.3, &mut Rng::new(1));
+        assert_eq!(l.mask.nnz(), before);
+        assert_eq!(stats.pruned, stats.grown);
+        assert_eq!(stats.pruned, (0.3f64 * before as f64).round() as usize);
+        l.assert_consistent();
+    }
+
+    #[test]
+    fn prunes_smallest_weights() {
+        let mut l = TestLayer::new(4, 8, 4, false, 2);
+        // Find the single smallest active |w|; with frac small enough only
+        // it should be pruned.
+        let active_min = l
+            .w
+            .data
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| l.mask.t.data[*i] != 0.0)
+            .min_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        let frac = 1.0 / l.mask.nnz() as f64;
+        RigL.update(&mut l.view(), frac, &mut Rng::new(3));
+        assert_eq!(l.mask.t.data[active_min], 0.0, "smallest weight not pruned");
+    }
+
+    #[test]
+    fn grows_largest_gradients() {
+        let mut l = TestLayer::new(4, 8, 2, false, 4);
+        let inactive_max = l
+            .grad
+            .data
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| l.mask.t.data[*i] == 0.0)
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        let frac = 1.0 / l.mask.nnz() as f64;
+        RigL.update(&mut l.view(), frac, &mut Rng::new(5));
+        assert_eq!(l.mask.t.data[inactive_max], 1.0, "largest-grad position not grown");
+        assert_eq!(l.w.data[inactive_max], 0.0, "grown weight must start at 0");
+    }
+
+    #[test]
+    fn zero_frac_noop() {
+        let mut l = TestLayer::new(8, 8, 4, false, 6);
+        let mask_before = l.mask.t.data.clone();
+        let stats = RigL.update(&mut l.view(), 0.0, &mut Rng::new(7));
+        assert_eq!(l.mask.t.data, mask_before);
+        assert_eq!(stats.pruned, 0);
+    }
+
+    #[test]
+    fn repeated_updates_hold_budget() {
+        let mut l = TestLayer::new(12, 24, 6, false, 8);
+        let budget = l.mask.nnz();
+        let mut rng = Rng::new(9);
+        for step in 0..20 {
+            let frac = 0.3 * (1.0 - step as f64 / 20.0);
+            RigL.update(&mut l.view(), frac, &mut rng);
+            assert_eq!(l.mask.nnz(), budget, "step {step}");
+            l.assert_consistent();
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Saliency selection helpers shared by the topology updaters: top-k /
+//! bottom-k index selection by score over arbitrary candidate subsets.
+
+/// Indices of the `k` largest `scores[i]` among `candidates`.
+/// O(n log n) via sort — layer sizes here are <=10^6 and updates are
+/// amortized over ΔT steps (the paper ignores mask-update FLOPs for the
+/// same reason, App. G).
+pub fn top_k_by(candidates: impl Iterator<Item = usize>, scores: &[f32], k: usize) -> Vec<usize> {
+    let mut v: Vec<usize> = candidates.collect();
+    if k == 0 {
+        return Vec::new();
+    }
+    if v.len() > k {
+        v.select_nth_unstable_by(k - 1, |&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        v.truncate(k);
+    }
+    v.sort_unstable_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    v
+}
+
+/// Indices of the `k` smallest `scores[i]` among `candidates`.
+pub fn bottom_k_by(candidates: impl Iterator<Item = usize>, scores: &[f32], k: usize) -> Vec<usize> {
+    let mut v: Vec<usize> = candidates.collect();
+    if k == 0 {
+        return Vec::new();
+    }
+    if v.len() > k {
+        v.select_nth_unstable_by(k - 1, |&a, &b| {
+            scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        v.truncate(k);
+    }
+    v.sort_unstable_by(|&a, &b| {
+        scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_basic() {
+        let scores = [1.0f32, 5.0, 3.0, 2.0, 4.0];
+        assert_eq!(top_k_by(0..5, &scores, 2), vec![1, 4]);
+        assert_eq!(bottom_k_by(0..5, &scores, 2), vec![0, 3]);
+    }
+
+    #[test]
+    fn k_larger_than_candidates() {
+        let scores = [1.0f32, 2.0];
+        let v = top_k_by(0..2, &scores, 10);
+        assert_eq!(v, vec![1, 0]);
+    }
+
+    #[test]
+    fn subset_candidates() {
+        let scores = [9.0f32, 1.0, 8.0, 2.0, 7.0];
+        let v = top_k_by([1, 3, 4].into_iter(), &scores, 2);
+        assert_eq!(v, vec![4, 3]);
+    }
+
+    #[test]
+    fn zero_k() {
+        let scores = [1.0f32];
+        assert!(top_k_by(0..1, &scores, 0).is_empty());
+        assert!(bottom_k_by(0..1, &scores, 0).is_empty());
+    }
+}

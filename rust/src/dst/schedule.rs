@@ -1,0 +1,82 @@
+//! Topology-update schedule: cosine-annealed drop fraction (Dettmers &
+//! Zettlemoyer 2019), as used by RigL and SRigL (paper App. D.1):
+//! alpha = 0.3, updates every ΔT steps, mask frozen after 75% of training.
+
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateSchedule {
+    /// Mini-batch steps between connectivity updates (ΔT; 100 for
+    /// CIFAR-scale, 800 for the ImageNet runs in the paper).
+    pub delta_t: usize,
+    /// Initial drop fraction alpha (0.3 in the paper).
+    pub alpha: f64,
+    /// Fraction of training after which the mask is frozen (0.75).
+    pub t_end_frac: f64,
+    pub total_steps: usize,
+}
+
+impl UpdateSchedule {
+    pub fn rigl_default(total_steps: usize, delta_t: usize) -> Self {
+        UpdateSchedule { delta_t, alpha: 0.3, t_end_frac: 0.75, total_steps }
+    }
+
+    pub fn t_end(&self) -> usize {
+        (self.t_end_frac * self.total_steps as f64).floor() as usize
+    }
+
+    /// Fraction of active weights to prune+regrow at `step` (cosine decay
+    /// from alpha to 0 at t_end; 0 afterwards).
+    pub fn drop_fraction(&self, step: usize) -> f64 {
+        let t_end = self.t_end();
+        if step >= t_end || t_end == 0 {
+            return 0.0;
+        }
+        self.alpha / 2.0 * (1.0 + (std::f64::consts::PI * step as f64 / t_end as f64).cos())
+    }
+
+    /// True iff a connectivity update runs after this step.
+    pub fn is_update_step(&self, step: usize) -> bool {
+        step > 0 && step % self.delta_t == 0 && step < self.t_end()
+    }
+
+    /// Number of updates over the whole run (for progress reporting).
+    pub fn num_updates(&self) -> usize {
+        if self.delta_t == 0 {
+            return 0;
+        }
+        (1..self.t_end()).filter(|s| s % self.delta_t == 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_decays_to_zero() {
+        let s = UpdateSchedule::rigl_default(1000, 100);
+        assert!((s.drop_fraction(0) - 0.3).abs() < 1e-12);
+        let mid = s.drop_fraction(375); // halfway to t_end=750
+        assert!((mid - 0.15).abs() < 1e-9, "{mid}");
+        assert_eq!(s.drop_fraction(750), 0.0);
+        assert_eq!(s.drop_fraction(999), 0.0);
+        // monotone non-increasing
+        let mut prev = f64::INFINITY;
+        for t in (0..750).step_by(10) {
+            let f = s.drop_fraction(t);
+            assert!(f <= prev + 1e-12);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn update_steps_respect_freeze() {
+        let s = UpdateSchedule::rigl_default(1000, 100);
+        assert!(!s.is_update_step(0));
+        assert!(s.is_update_step(100));
+        assert!(s.is_update_step(700));
+        assert!(!s.is_update_step(750));
+        assert!(!s.is_update_step(800));
+        assert!(!s.is_update_step(101));
+        assert_eq!(s.num_updates(), 7);
+    }
+}

@@ -1,0 +1,77 @@
+//! SET (Mocanu et al. 2018): prune smallest-magnitude weights, regrow
+//! *random* inactive positions. Baseline row in Table 3.
+
+use super::saliency::bottom_k_by;
+use super::{apply_prune_grow, prune_quota, LayerView, TopologyUpdater, UpdateStats};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Set;
+
+impl TopologyUpdater for Set {
+    fn name(&self) -> &'static str {
+        "set"
+    }
+
+    fn structured(&self) -> bool {
+        false
+    }
+
+    fn update(&self, layer: &mut LayerView, frac: f64, rng: &mut Rng) -> UpdateStats {
+        let mask = &layer.mask.t.data;
+        let n_total = mask.len();
+        let inactive: Vec<usize> = (0..n_total).filter(|&i| mask[i] == 0.0).collect();
+        let quota = prune_quota(layer.mask, frac).min(inactive.len());
+        if quota == 0 {
+            return UpdateStats {
+                active_neurons: layer.mask.active_neurons(),
+                ..Default::default()
+            };
+        }
+
+        let abs_w: Vec<f32> = layer.w.data.iter().map(|v| v.abs()).collect();
+        let active = (0..n_total).filter(|&i| mask[i] != 0.0);
+        let pruned = bottom_k_by(active, &abs_w, quota);
+
+        // Random regrowth among previously-inactive positions.
+        let picks = rng.choose_k(inactive.len(), quota);
+        let grown: Vec<usize> = picks.into_iter().map(|p| inactive[p]).collect();
+
+        apply_prune_grow(layer, &pruned, &grown);
+        UpdateStats {
+            pruned: pruned.len(),
+            grown: grown.len(),
+            ablated: 0,
+            active_neurons: layer.mask.active_neurons(),
+            k: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::TestLayer;
+    use super::*;
+
+    #[test]
+    fn preserves_nnz_and_consistency() {
+        let mut l = TestLayer::new(10, 20, 5, false, 0);
+        let nnz = l.mask.nnz();
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            Set.update(&mut l.view(), 0.3, &mut rng);
+            assert_eq!(l.mask.nnz(), nnz);
+            l.assert_consistent();
+        }
+    }
+
+    #[test]
+    fn regrowth_is_random_not_gradient() {
+        // Two different rngs should (overwhelmingly) grow different sets.
+        let mut l1 = TestLayer::new(16, 64, 4, false, 2);
+        let mut l2 = TestLayer::new(16, 64, 4, false, 2);
+        Set.update(&mut l1.view(), 0.3, &mut Rng::new(10));
+        Set.update(&mut l2.view(), 0.3, &mut Rng::new(20));
+        assert_ne!(l1.mask.t.data, l2.mask.t.data);
+    }
+}

@@ -1,0 +1,329 @@
+//! SRigL (paper Section 3.1): RigL with a constant fan-in constraint and
+//! dynamic neuron ablation.
+//!
+//! Per layer, each update performs the paper's steps 1–7:
+//!  1. saliency criteria: |w| of active weights, |g| of pruned weights;
+//!  2. K = round(drop_fraction * active) weights to prune & regrow;
+//!  3. per-neuron salient count — a weight is salient if it survives the
+//!     layer-wide prune (top active-K by |w|) or is a layer-wide regrowth
+//!     candidate (top K by |g| among pruned positions);
+//!  4. ablate neurons with salient < max(1, gamma_sal * k): prune all
+//!     their weights and redistribute them to the surviving neurons;
+//!  5. recompute the constant fan-in k' = budget / n_active;
+//!  6. prune the K smallest-|w| weights layer-wide;
+//!  7. per active neuron, regrow by decreasing |g| until fan-in == k'.
+//!
+//! Invariants maintained (checked by property tests in rust/tests/):
+//!  * every active neuron has exactly k' active weights;
+//!  * ablated neurons have zero fan-in, zero weights, zero momentum;
+//!  * layer nnz == n_active * k' <= budget (never exceeds);
+//!  * ablation is monotone: an ablated neuron never revives.
+
+use super::saliency::{bottom_k_by, top_k_by};
+use super::{LayerView, TopologyUpdater, UpdateStats};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SRigL {
+    /// Enable dynamic neuron ablation (paper's "w/ ablation").
+    pub ablation: bool,
+    /// Minimum fraction of salient weights per neuron, gamma_sal
+    /// (0.3 for CNNs, 0.95 for ViT in the paper).
+    pub gamma_sal: f64,
+}
+
+impl Default for SRigL {
+    fn default() -> Self {
+        SRigL { ablation: true, gamma_sal: 0.3 }
+    }
+}
+
+impl SRigL {
+    pub fn without_ablation() -> Self {
+        SRigL { ablation: false, gamma_sal: 0.0 }
+    }
+}
+
+impl TopologyUpdater for SRigL {
+    fn name(&self) -> &'static str {
+        "srigl"
+    }
+
+    fn structured(&self) -> bool {
+        true
+    }
+
+    fn update(&self, layer: &mut LayerView, frac: f64, _rng: &mut Rng) -> UpdateStats {
+        let (n, f) = (layer.mask.neurons, layer.mask.fan_in);
+        let k_cur = *layer.k;
+        let counts = layer.mask.fan_in_counts();
+        let alive: Vec<usize> = (0..n).filter(|&r| counts[r] > 0).collect();
+        let n_alive = alive.len();
+        if n_alive == 0 || k_cur == 0 {
+            return UpdateStats::default();
+        }
+        let total_active: usize = counts.iter().sum();
+
+        // Step 2: prune/grow quota.
+        let quota = (frac * total_active as f64).round() as usize;
+        if quota == 0 && !self.ablation {
+            return UpdateStats {
+                active_neurons: n_alive,
+                k: k_cur,
+                ..Default::default()
+            };
+        }
+
+        let abs_w: Vec<f32> = layer.w.data.iter().map(|v| v.abs()).collect();
+        let abs_g: Vec<f32> = layer.grad.data.iter().map(|v| v.abs()).collect();
+        let mask_data_snapshot = layer.mask.t.data.clone();
+        let is_active = |i: usize| mask_data_snapshot[i] != 0.0;
+        // Growth candidates live only in non-ablated neurons (step 7 says
+        // "for each active neuron"); ablated rows never revive.
+        let alive_row = {
+            let mut v = vec![false; n];
+            for &r in &alive {
+                v[r] = true;
+            }
+            v
+        };
+
+        // Step 6's prune set, computed up-front because step 3's salient
+        // counts need it: K smallest |w| among active weights.
+        let active_positions = (0..n * f).filter(|&i| is_active(i));
+        let prune_set = bottom_k_by(active_positions, &abs_w, quota);
+        let mut in_prune = vec![false; n * f];
+        for &i in &prune_set {
+            in_prune[i] = true;
+        }
+
+        // Layer-wide regrowth candidates: K largest |g| among pruned
+        // positions of alive neurons.
+        let inactive_positions =
+            (0..n * f).filter(|&i| !is_active(i) && alive_row[i / f]);
+        let grow_set = top_k_by(inactive_positions, &abs_g, quota);
+        let mut in_grow = vec![false; n * f];
+        for &i in &grow_set {
+            in_grow[i] = true;
+        }
+
+        // Step 3: salient weights per neuron = survivors + grow candidates.
+        let mut salient = vec![0usize; n];
+        for r in &alive {
+            let r = *r;
+            for j in 0..f {
+                let i = r * f + j;
+                if (is_active(i) && !in_prune[i]) || in_grow[i] {
+                    salient[r] += 1;
+                }
+            }
+        }
+
+        // Step 4: ablation. Threshold clamps to a minimum of one salient
+        // weight (App. E) so gamma_sal * k < 1 never ablates everything.
+        let mut ablated_now = 0usize;
+        let mut survivors: Vec<usize> = alive.clone();
+        if self.ablation {
+            let tau = (self.gamma_sal * k_cur as f64).max(1.0);
+            survivors = alive.iter().copied().filter(|&r| salient[r] as f64 >= tau).collect();
+            // Layer-collapse guard: keep the most salient neuron alive.
+            if survivors.is_empty() {
+                let best = alive
+                    .iter()
+                    .copied()
+                    .max_by_key(|&r| salient[r])
+                    .expect("alive nonempty");
+                survivors.push(best);
+            }
+            ablated_now = n_alive - survivors.len();
+            let keep: Vec<bool> = {
+                let mut v = vec![false; n];
+                for &r in &survivors {
+                    v[r] = true;
+                }
+                v
+            };
+            for &r in &alive {
+                if !keep[r] {
+                    for j in 0..f {
+                        let i = r * f + j;
+                        layer.mask.t.data[i] = 0.0;
+                        layer.w.data[i] = 0.0;
+                        layer.v.data[i] = 0.0;
+                    }
+                }
+            }
+        }
+
+        // Step 5: new constant fan-in from the fixed layer budget.
+        let k_new = (layer.budget / survivors.len()).clamp(1, f);
+
+        // Step 6: apply the layer-wide magnitude prune (positions in
+        // ablated rows are already gone).
+        for &i in &prune_set {
+            layer.mask.t.data[i] = 0.0;
+            layer.w.data[i] = 0.0;
+            layer.v.data[i] = 0.0;
+        }
+
+        // Step 7: per-neuron adjust to exactly k_new. Regrow by decreasing
+        // |g| (preferring positions not just pruned); over-full neurons
+        // (possible when k_new < k_cur after rounding) prune smallest |w|.
+        let mut pruned_total = prune_set.len();
+        let mut grown_total = 0usize;
+        for &r in &survivors {
+            let row = r * f..(r + 1) * f;
+            let cur: usize = layer.mask.t.data[row.clone()].iter().filter(|v| **v != 0.0).count();
+            if cur < k_new {
+                let need = k_new - cur;
+                // candidates: inactive now, not just pruned (fall back to
+                // just-pruned if the row lacks candidates). Membership via
+                // a boolean row mark, not Vec::contains (§Perf iteration 3).
+                let fresh: Vec<usize> = row
+                    .clone()
+                    .filter(|&i| layer.mask.t.data[i] == 0.0 && !in_prune[i])
+                    .collect();
+                let mut chosen = top_k_by(fresh.iter().copied(), &abs_g, need);
+                if chosen.len() < need {
+                    let mut taken = vec![false; f];
+                    for &i in &chosen {
+                        taken[i - r * f] = true;
+                    }
+                    let extra: Vec<usize> = row
+                        .clone()
+                        .filter(|&i| layer.mask.t.data[i] == 0.0 && !taken[i - r * f])
+                        .collect();
+                    let more = top_k_by(extra.into_iter(), &abs_g, need - chosen.len());
+                    chosen.extend(more);
+                }
+                for i in chosen {
+                    layer.mask.t.data[i] = 1.0;
+                    layer.w.data[i] = 0.0;
+                    layer.v.data[i] = 0.0;
+                    grown_total += 1;
+                }
+            } else if cur > k_new {
+                let excess = cur - k_new;
+                let active_in_row: Vec<usize> =
+                    row.clone().filter(|&i| layer.mask.t.data[i] != 0.0).collect();
+                for i in bottom_k_by(active_in_row.into_iter(), &abs_w, excess) {
+                    layer.mask.t.data[i] = 0.0;
+                    layer.w.data[i] = 0.0;
+                    layer.v.data[i] = 0.0;
+                    pruned_total += 1;
+                }
+            }
+        }
+
+        *layer.k = k_new;
+        debug_assert!(layer.mask.is_constant_fan_in(k_new));
+        UpdateStats {
+            pruned: pruned_total,
+            grown: grown_total,
+            ablated: ablated_now,
+            active_neurons: survivors.len(),
+            k: k_new,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::TestLayer;
+    use super::*;
+
+    #[test]
+    fn maintains_constant_fan_in() {
+        let mut l = TestLayer::new(16, 32, 8, true, 0);
+        let mut rng = Rng::new(1);
+        for step in 0..10 {
+            let frac = 0.3 * (1.0 - step as f64 / 10.0);
+            let stats = SRigL::default().update(&mut l.view(), frac, &mut rng);
+            assert!(l.mask.is_constant_fan_in(stats.k), "step {step}");
+            assert!(l.mask.nnz() <= l.budget);
+            l.assert_consistent();
+        }
+    }
+
+    #[test]
+    fn no_ablation_keeps_all_neurons_and_k() {
+        let mut l = TestLayer::new(12, 24, 6, true, 2);
+        let mut rng = Rng::new(3);
+        for _ in 0..5 {
+            let stats = SRigL::without_ablation().update(&mut l.view(), 0.3, &mut rng);
+            assert_eq!(stats.active_neurons, 12);
+            assert_eq!(stats.k, 6);
+            assert_eq!(l.mask.nnz(), 72);
+            assert!(l.mask.is_constant_fan_in(6));
+        }
+    }
+
+    #[test]
+    fn high_gamma_ablates_and_raises_k() {
+        // gamma_sal = 0.99 with a small drop fraction makes most neurons
+        // fail the salient threshold -> heavy ablation, larger k'.
+        let mut l = TestLayer::new(32, 64, 4, true, 4);
+        let mut rng = Rng::new(5);
+        let stats = SRigL { ablation: true, gamma_sal: 0.99 }.update(&mut l.view(), 0.3, &mut rng);
+        assert!(stats.ablated > 0, "{stats:?}");
+        assert!(stats.k >= 4, "{stats:?}");
+        assert!(l.mask.is_constant_fan_in(stats.k));
+        assert_eq!(l.mask.active_neurons(), stats.active_neurons);
+    }
+
+    #[test]
+    fn ablation_monotone() {
+        let mut l = TestLayer::new(24, 48, 3, true, 6);
+        let mut rng = Rng::new(7);
+        let upd = SRigL { ablation: true, gamma_sal: 0.7 };
+        let mut prev_dead: Vec<usize> = vec![];
+        for _ in 0..8 {
+            upd.update(&mut l.view(), 0.2, &mut rng);
+            let counts = l.mask.fan_in_counts();
+            let dead: Vec<usize> =
+                (0..24).filter(|&r| counts[r] == 0).collect();
+            for d in &prev_dead {
+                assert!(dead.contains(d), "neuron {d} revived");
+            }
+            prev_dead = dead;
+        }
+    }
+
+    #[test]
+    fn layer_collapse_guard() {
+        // gamma so high nothing is salient enough -> one neuron survives.
+        let mut l = TestLayer::new(8, 16, 2, true, 8);
+        let mut rng = Rng::new(9);
+        let stats =
+            SRigL { ablation: true, gamma_sal: 100.0 }.update(&mut l.view(), 0.3, &mut rng);
+        assert_eq!(stats.active_neurons, 1);
+        assert!(l.mask.nnz() >= 1);
+        assert!(l.mask.is_constant_fan_in(stats.k));
+    }
+
+    #[test]
+    fn budget_never_exceeded() {
+        for seed in 0..5 {
+            let mut l = TestLayer::new(20, 40, 5, true, seed);
+            let mut rng = Rng::new(seed + 100);
+            for _ in 0..6 {
+                SRigL { ablation: true, gamma_sal: 0.5 }.update(&mut l.view(), 0.25, &mut rng);
+                assert!(l.mask.nnz() <= l.budget, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn grown_weights_start_zero() {
+        let mut l = TestLayer::new(10, 20, 4, true, 11);
+        let before = l.mask.t.data.clone();
+        let mut rng = Rng::new(12);
+        SRigL::default().update(&mut l.view(), 0.3, &mut rng);
+        for i in 0..before.len() {
+            if before[i] == 0.0 && l.mask.t.data[i] == 1.0 {
+                assert_eq!(l.w.data[i], 0.0);
+                assert_eq!(l.v.data[i], 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Static sparse training: the topology fixed at initialization never
+//! changes ("Static" row in Table 3).
+
+use super::{LayerView, TopologyUpdater, UpdateStats};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StaticSparse {
+    /// Report the constant fan-in structure if initialized that way.
+    pub structured: bool,
+}
+
+impl TopologyUpdater for StaticSparse {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn structured(&self) -> bool {
+        self.structured
+    }
+
+    fn update(&self, layer: &mut LayerView, _frac: f64, _rng: &mut Rng) -> UpdateStats {
+        UpdateStats {
+            pruned: 0,
+            grown: 0,
+            ablated: 0,
+            active_neurons: layer.mask.active_neurons(),
+            k: *layer.k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::TestLayer;
+    use super::*;
+
+    #[test]
+    fn never_changes_mask() {
+        let mut l = TestLayer::new(8, 16, 4, true, 0);
+        let before = l.mask.t.data.clone();
+        let mut rng = Rng::new(1);
+        for _ in 0..5 {
+            StaticSparse { structured: true }.update(&mut l.view(), 0.3, &mut rng);
+        }
+        assert_eq!(l.mask.t.data, before);
+    }
+}

@@ -1,0 +1,91 @@
+//! Structured (neuron-level) magnitude pruning — the classic
+//! prune-then-fine-tune baseline family of Table 10. Whole neurons are
+//! removed by L2 norm of their incoming weights; the result is then
+//! fine-tuned with `StaticSparse`.
+
+use crate::sparsity::mask::Mask;
+use crate::tensor::Tensor;
+
+/// Build a mask that keeps the `keep` neurons with the largest incoming
+/// L2 norm and ablates the rest entirely. Kept neurons stay dense
+/// (structured pruning does not thin surviving neurons).
+pub fn structured_prune_mask(w: &Tensor, keep: usize) -> Mask {
+    let (n, f) = w.neuron_view();
+    let keep = keep.clamp(1, n);
+    let mut norms: Vec<(usize, f64)> = (0..n)
+        .map(|r| {
+            let s: f64 = w.data[r * f..(r + 1) * f]
+                .iter()
+                .map(|v| (*v as f64) * (*v as f64))
+                .sum();
+            (r, s)
+        })
+        .collect();
+    norms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    let mut m = Mask::from_tensor(Tensor::zeros(&w.shape));
+    for &(r, _) in norms.iter().take(keep) {
+        for j in 0..f {
+            m.set(r, j, true);
+        }
+    }
+    m
+}
+
+/// Uniform-magnitude unstructured prune to a target density (the
+/// "Uniform" baseline row of Table 10 at the layer level).
+pub fn magnitude_prune_mask(w: &Tensor, density: f64) -> Mask {
+    let nnz = ((w.numel() as f64 * density).round() as usize).clamp(1, w.numel());
+    let mut order: Vec<usize> = (0..w.numel()).collect();
+    order.sort_by(|&a, &b| {
+        w.data[b]
+            .abs()
+            .partial_cmp(&w.data[a].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut m = Mask::from_tensor(Tensor::zeros(&w.shape));
+    for &i in order.iter().take(nnz) {
+        m.t.data[i] = 1.0;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_high_norm_neurons() {
+        let mut w = Tensor::zeros(&[4, 3]);
+        // neuron norms: 0 -> small, 1 -> big, 2 -> medium, 3 -> tiny
+        w.data = vec![0.1, 0.1, 0.1, 5.0, 5.0, 5.0, 1.0, 1.0, 1.0, 0.01, 0.0, 0.0];
+        let m = structured_prune_mask(&w, 2);
+        let counts = m.fan_in_counts();
+        assert_eq!(counts, vec![0, 3, 3, 0]);
+        assert_eq!(m.active_neurons(), 2);
+    }
+
+    #[test]
+    fn magnitude_prune_density() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::normal(&[16, 16], 1.0, &mut rng);
+        let m = magnitude_prune_mask(&w, 0.25);
+        assert_eq!(m.nnz(), 64);
+        // kept weights dominate dropped ones in magnitude
+        let kept_min = w
+            .data
+            .iter()
+            .zip(&m.t.data)
+            .filter(|(_, m)| **m != 0.0)
+            .map(|(w, _)| w.abs())
+            .fold(f32::INFINITY, f32::min);
+        let dropped_max = w
+            .data
+            .iter()
+            .zip(&m.t.data)
+            .filter(|(_, m)| **m == 0.0)
+            .map(|(w, _)| w.abs())
+            .fold(0.0f32, f32::max);
+        assert!(kept_min >= dropped_max);
+    }
+}

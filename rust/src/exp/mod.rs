@@ -1,0 +1,167 @@
+//! Experiment registry: one harness per paper table/figure (DESIGN.md §5).
+//!
+//! Every harness prints the paper-style rows plus, where meaningful, the
+//! paper's own numbers for shape comparison, and appends a JSON record to
+//! results/<id>.json. All are scaled to this testbed (see DESIGN.md §4);
+//! `--steps`, `--seeds`, etc. rescale them.
+
+pub mod tables;
+pub mod timings;
+pub mod training;
+pub mod variance_fig;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+pub struct ExpInfo {
+    pub id: &'static str,
+    pub paper: &'static str,
+    pub what: &'static str,
+}
+
+pub const EXPERIMENTS: &[ExpInfo] = &[
+    ExpInfo { id: "fig1b", paper: "Fig. 1b", what: "output-norm variance: theory vs Monte-Carlo" },
+    ExpInfo { id: "table1", paper: "Tab. 1 / Fig. 3a", what: "ResNet-50 proxy: accuracy vs sparsity, RigL vs SRigL" },
+    ExpInfo { id: "fig3b", paper: "Fig. 3b", what: "% active neurons after training, RigL vs SRigL" },
+    ExpInfo { id: "table2", paper: "Tab. 2", what: "ResNet-18/CIFAR proxy: 5 seeds, mean±95% CI" },
+    ExpInfo { id: "table3", paper: "Tab. 3", what: "DST method comparison (Static/SET/RigL/SRigL)" },
+    ExpInfo { id: "table4", paper: "Tab. 4", what: "ViT proxy: ablation on/off at 80/90%" },
+    ExpInfo { id: "table5", paper: "Tab. 5", what: "training/inference FLOPs vs sparsity" },
+    ExpInfo { id: "fig4", paper: "Fig. 4", what: "layer timings: dense/CSR/structured/condensed" },
+    ExpInfo { id: "table9", paper: "Tab. 9 / Fig. 5", what: "Wide-ResNet proxy across sparsities" },
+    ExpInfo { id: "fig8", paper: "Fig. 8", what: "gamma_sal sweep (CNN proxy)" },
+    ExpInfo { id: "fig9", paper: "Fig. 9a", what: "gamma_sal sweep (ViT proxy)" },
+    ExpInfo { id: "fig10", paper: "Fig. 10", what: "min salient weights per neuron, per layer" },
+    ExpInfo { id: "fig11", paper: "Fig. 11", what: "layer widths at 99% sparsity vs gamma_sal" },
+    ExpInfo { id: "fig12", paper: "Fig. 12", what: "RigL fan-in variance (transformer)" },
+    ExpInfo { id: "fig13", paper: "Fig. 13", what: "normalized training FLOPs vs sparsity" },
+    ExpInfo { id: "itop", paper: "Figs. 14-17", what: "in-time overparameterization rates" },
+    ExpInfo { id: "fig18", paper: "Figs. 18-20", what: "CPU thread x batch timing sweep" },
+    ExpInfo { id: "fig21", paper: "Fig. 21", what: "batched-inference timing sweep (GPU substitute)" },
+    ExpInfo { id: "fig22", paper: "Fig. 22", what: "condensed vs engineered-CSR online latency" },
+    ExpInfo { id: "table10", paper: "Tab. 10", what: "structured pruning + fine-tune vs SRigL" },
+];
+
+pub fn list() {
+    println!("{:<9} {:<18} {}", "id", "paper", "description");
+    for e in EXPERIMENTS {
+        println!("{:<9} {:<18} {}", e.id, e.paper, e.what);
+    }
+}
+
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig1b" => variance_fig::fig1b(args),
+        "table1" => training::table1(args),
+        "fig3b" => training::fig3b(args),
+        "table2" => training::table2(args),
+        "table3" => training::table3(args),
+        "table4" => training::table4(args),
+        "table5" => tables::table5(args),
+        "fig4" => timings::fig4(args),
+        "table9" => training::table9(args),
+        "fig8" => training::fig8(args),
+        "fig9" => training::fig9(args),
+        "fig10" => tables::fig10(args),
+        "fig11" => training::fig11(args),
+        "fig12" => training::fig12(args),
+        "fig13" => tables::fig13(args),
+        "itop" => training::itop(args),
+        "fig18" => timings::fig18(args),
+        "fig21" => timings::fig21(args),
+        "fig22" => timings::fig22(args),
+        "table10" => training::table10(args),
+        "all" => {
+            for e in EXPERIMENTS {
+                println!("\n################ {} ({}) ################", e.id, e.paper);
+                run(e.id, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; `srigl exp --list`"),
+    }
+}
+
+/// Write a JSON record under results/.
+pub fn record(id: &str, payload: crate::util::json::Json) -> Result<()> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/{id}.json");
+    std::fs::write(&path, payload.to_string())?;
+    println!("[recorded -> {path}]");
+    Ok(())
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique_and_dispatchable() {
+        let mut seen = std::collections::HashSet::new();
+        for e in EXPERIMENTS {
+            assert!(seen.insert(e.id), "duplicate id {}", e.id);
+        }
+        // unknown id errors
+        let args = Args::default();
+        assert!(run("nope", &args).is_err());
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+        assert_eq!(pct(0.5), "50.0%");
+    }
+}

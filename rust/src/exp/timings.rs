@@ -1,0 +1,215 @@
+//! Wall-clock timing harnesses (Fig. 4, Figs. 18-22): the four layer
+//! representations on the paper's exact geometry — the final FF layer of
+//! a ViT-B/16 MLP block, 768 neurons x 3072 features.
+//!
+//! Ablation fractions per sparsity mirror the paper's observation that
+//! SRigL ablates *more* neurons at moderate sparsity than at extreme
+//! sparsity (Fig. 4 note): {80: 40%, 90: 35%, 95: 15%, 99: 5%}.
+
+use anyhow::Result;
+use std::time::Duration;
+
+use super::{record, Table};
+use crate::bench::{bench, black_box, fmt_time, Measurement};
+use crate::inference::server::{serve, ServeConfig, ServeMode};
+use crate::inference::{LayerBundle, LinearKernel};
+use crate::util::cli::Args;
+use crate::util::json::{arr, num, obj, s as js, Json};
+use crate::util::rng::Rng;
+
+pub const VIT_FF_N: usize = 768;
+pub const VIT_FF_D: usize = 3072;
+
+pub fn ablated_frac_for(sparsity: f64) -> f64 {
+    match (sparsity * 100.0).round() as u32 {
+        80 => 0.40,
+        90 => 0.35,
+        95 => 0.15,
+        99 => 0.05,
+        _ => 0.25,
+    }
+}
+
+fn time_kernel(k: &dyn LinearKernel, batch: usize, threads: usize, runs: usize) -> Measurement {
+    let mut rng = Rng::new(7);
+    let x: Vec<f32> = (0..batch * k.in_width()).map(|_| rng.normal_f32()).collect();
+    let mut out = vec![0f32; batch * k.out_width()];
+    bench(k.name(), runs, Duration::from_millis(30), || {
+        k.forward(black_box(&x), batch, &mut out, threads);
+        black_box(&out);
+    })
+}
+
+/// Fig. 4: dense/CSR/structured/condensed at sparsities 80-99%, batch 1
+/// (4a: CPU online) and batch 256 (4b: GPU substitute — see DESIGN.md §4).
+pub fn fig4(args: &Args) -> Result<()> {
+    let sparsities: Vec<f64> = args.list_or("sparsities", &[0.8, 0.9, 0.95, 0.99])?;
+    let batches: Vec<usize> = args.list_or("batches", &[1usize, 256])?;
+    let threads: usize = args.parse_or("threads", 1)?;
+    let runs: usize = args.parse_or("runs", 5)?;
+
+    println!(
+        "Fig. 4 — ViT-B/16 FF layer ({VIT_FF_N}x{VIT_FF_D}), median of >={runs} runs, {threads} thread(s)"
+    );
+    let mut recs = Vec::new();
+    for &batch in &batches {
+        let mut t = Table::new(&["sparsity", "dense", "csr", "structured", "condensed",
+                                 "cond/dense", "cond/csr"]);
+        for &sp in &sparsities {
+            let bundle = LayerBundle::synth(VIT_FF_N, VIT_FF_D, sp, ablated_frac_for(sp), 42);
+            let ms: Vec<Measurement> =
+                bundle.kernels().iter().map(|k| time_kernel(*k, batch, threads, runs)).collect();
+            let med: Vec<f64> = ms.iter().map(|m| m.median_s()).collect();
+            t.row(vec![
+                format!("{:.0}%", sp * 100.0),
+                fmt_time(med[0]),
+                fmt_time(med[1]),
+                fmt_time(med[2]),
+                fmt_time(med[3]),
+                format!("{:.2}x", med[0] / med[3]),
+                format!("{:.2}x", med[1] / med[3]),
+            ]);
+            recs.push(obj(vec![
+                ("batch", num(batch as f64)),
+                ("sparsity", num(sp)),
+                ("dense_s", num(med[0])),
+                ("csr_s", num(med[1])),
+                ("structured_s", num(med[2])),
+                ("condensed_s", num(med[3])),
+            ]));
+        }
+        println!("\n-- batch {batch} --");
+        t.print();
+    }
+    println!("\nPaper reference @90%: online condensed = 3.4x dense, 2.5x CSR (Fig. 4a);\nbatched condensed = 1.7x dense, 13.0x CSR on GPU (Fig. 4b — here substituted\nby the threaded CPU engine; crossover *shape* is the claim under test).");
+    record("fig4", obj(vec![("rows", arr(recs))]))
+}
+
+/// Figs. 18-20: thread x batch sweep (1/4/8 threads, batch 1..64).
+pub fn fig18(args: &Args) -> Result<()> {
+    let sparsity: f64 = args.parse_or("sparsity", 0.9)?;
+    let threads: Vec<usize> = args.list_or("threads", &[1usize, 4, 8])?;
+    let batches: Vec<usize> = args.list_or("batches", &[1usize, 4, 16, 64])?;
+    let runs: usize = args.parse_or("runs", 5)?;
+    let bundle = LayerBundle::synth(VIT_FF_N, VIT_FF_D, sparsity, ablated_frac_for(sparsity), 42);
+
+    println!("Figs. 18-20 — thread x batch sweep @ {:.0}% sparsity", sparsity * 100.0);
+    println!("(testbed has 1 physical core: thread scaling flattens here by construction)");
+    let mut recs = Vec::new();
+    let mut t = Table::new(&["threads", "batch", "dense", "csr", "structured", "condensed"]);
+    for &th in &threads {
+        for &b in &batches {
+            let med: Vec<f64> = bundle
+                .kernels()
+                .iter()
+                .map(|k| time_kernel(*k, b, th, runs).median_s())
+                .collect();
+            t.row(vec![
+                th.to_string(),
+                b.to_string(),
+                fmt_time(med[0]),
+                fmt_time(med[1]),
+                fmt_time(med[2]),
+                fmt_time(med[3]),
+            ]);
+            recs.push(obj(vec![
+                ("threads", num(th as f64)),
+                ("batch", num(b as f64)),
+                ("dense_s", num(med[0])),
+                ("csr_s", num(med[1])),
+                ("structured_s", num(med[2])),
+                ("condensed_s", num(med[3])),
+            ]));
+        }
+    }
+    t.print();
+    record("fig18", obj(vec![("sparsity", num(sparsity)), ("rows", arr(recs))]))
+}
+
+/// Fig. 21: batched inference at batch {1, 256, 2048} (GPU substitute).
+pub fn fig21(args: &Args) -> Result<()> {
+    let sparsities: Vec<f64> = args.list_or("sparsities", &[0.8, 0.9, 0.95, 0.99])?;
+    let batches: Vec<usize> = args.list_or("batches", &[1usize, 256, 2048])?;
+    let runs: usize = args.parse_or("runs", 5)?;
+    println!("Fig. 21 — batch sweep (paper: Titan V CUDA; here: native engine, DESIGN.md §4)");
+    let mut recs = Vec::new();
+    let mut t = Table::new(&["batch", "sparsity", "dense", "csr", "structured", "condensed", "cond/csr"]);
+    for &b in &batches {
+        for &sp in &sparsities {
+            let bundle = LayerBundle::synth(VIT_FF_N, VIT_FF_D, sp, ablated_frac_for(sp), 42);
+            let med: Vec<f64> = bundle
+                .kernels()
+                .iter()
+                .map(|k| time_kernel(*k, b, 1, runs).median_s())
+                .collect();
+            t.row(vec![
+                b.to_string(),
+                format!("{:.0}%", sp * 100.0),
+                fmt_time(med[0]),
+                fmt_time(med[1]),
+                fmt_time(med[2]),
+                fmt_time(med[3]),
+                format!("{:.2}x", med[1] / med[3]),
+            ]);
+            recs.push(obj(vec![
+                ("batch", num(b as f64)),
+                ("sparsity", num(sp)),
+                ("dense_s", num(med[0])),
+                ("csr_s", num(med[1])),
+                ("structured_s", num(med[2])),
+                ("condensed_s", num(med[3])),
+            ]));
+        }
+    }
+    t.print();
+    record("fig21", obj(vec![("rows", arr(recs))]))
+}
+
+/// Fig. 22 / App. K: condensed vs the engineered unstructured baseline
+/// (our CSR at 4 threads stands in for DeepSparse — DESIGN.md §4),
+/// measured end-to-end through the online-inference server.
+pub fn fig22(args: &Args) -> Result<()> {
+    let sparsities: Vec<f64> = args.list_or("sparsities", &[0.8, 0.9, 0.95, 0.99])?;
+    let n_requests: usize = args.parse_or("requests", 200)?;
+    println!("Fig. 22 — online-inference server latency (batch-1 Poisson stream)");
+    let mut recs = Vec::new();
+    let mut t = Table::new(&[
+        "sparsity", "repr", "p50 (us)", "p99 (us)", "throughput (req/s)",
+    ]);
+    for &sp in &sparsities {
+        let bundle = LayerBundle::synth(VIT_FF_N, VIT_FF_D, sp, ablated_frac_for(sp), 42);
+        for (kernel, threads) in [
+            (&bundle.condensed as &dyn LinearKernel, 1usize),
+            (&bundle.csr as &dyn LinearKernel, 4usize), // "engine" baseline
+        ] {
+            let stats = serve(
+                kernel,
+                &ServeConfig {
+                    mode: ServeMode::Online,
+                    n_requests,
+                    mean_interarrival: Duration::ZERO,
+                    threads,
+                    seed: 3,
+                },
+            );
+            t.row(vec![
+                format!("{:.0}%", sp * 100.0),
+                format!("{}@{}t", kernel.name(), threads),
+                format!("{:.1}", stats.p50_us),
+                format!("{:.1}", stats.p99_us),
+                format!("{:.0}", stats.throughput_rps),
+            ]);
+            recs.push(obj(vec![
+                ("sparsity", num(sp)),
+                ("repr", js(kernel.name())),
+                ("threads", num(threads as f64)),
+                ("p50_us", num(stats.p50_us)),
+                ("p99_us", num(stats.p99_us)),
+                ("rps", num(stats.throughput_rps)),
+            ]));
+        }
+    }
+    t.print();
+    println!("\nPaper finding: SRigL-condensed matches the engineered unstructured engine\nwith lower variance; here compare condensed@1t vs csr@4t rows.");
+    record("fig22", obj(vec![("rows", arr(recs))]))
+}

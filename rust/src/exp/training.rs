@@ -1,0 +1,639 @@
+//! Training-based harnesses: every paper table/figure that requires
+//! actually training models with the DST methods. All runs go through the
+//! AOT train_step/dense_grad programs via one shared [`Session`].
+//!
+//! Scale: models and step counts are the DESIGN.md §4 proxies (synthetic
+//! data, hundreds of steps). The claims under test are *relative* —
+//! SRigL ≈ RigL, SRigL-no-ablation < RigL at extreme sparsity, ablation
+//! restores parity — so each harness prints our deltas next to the
+//! paper's.
+
+use anyhow::Result;
+
+use super::{record, Table};
+use crate::dst::struct_prune::structured_prune_mask;
+use crate::flops::cnn_proxy_flops;
+use crate::sparsity::distribution::{layer_densities, Distribution, LayerShape};
+use crate::sparsity::Mask;
+use crate::stats::ablation::LayerTopology;
+use crate::stats::mean_ci95;
+use crate::train::{LrSchedule, Method, Session, TrainConfig, TrainReport, Trainer};
+use crate::util::cli::Args;
+use crate::util::json::{arr, num, obj, s as js, Json};
+
+/// Default step counts per model family (tuned so a full harness run
+/// stays in the minutes range on 1 CPU core; scale with --steps).
+fn default_steps(model: &str) -> usize {
+    match model {
+        "mlp_tiny" | "mlp_proxy" => 300,
+        "cnn_proxy" | "cnn_wide" => 240,
+        "vit_proxy" => 200,
+        _ => 200,
+    }
+}
+
+pub fn base_config(model: &str, method: Method, sparsity: f64, steps: usize, seed: u64) -> TrainConfig {
+    let dist = if model == "vit_proxy" { Distribution::Uniform } else { Distribution::Erk };
+    TrainConfig {
+        model: model.into(),
+        method,
+        sparsity,
+        distribution: dist,
+        total_steps: steps,
+        delta_t: (steps / 15).max(5),
+        alpha: 0.3,
+        lr: if model == "vit_proxy" {
+            LrSchedule::WarmupCosine { max: 0.05, warmup: steps / 10 }
+        } else if method == Method::Dense {
+            // the dense baseline needs a gentler lr at this scale
+            LrSchedule::step_decay(0.02, &[steps / 2, steps * 3 / 4], 0.2)
+        } else if model == "cnn_wide" {
+            // the wide net diverges on some seeds at 0.05 (low sparsity)
+            LrSchedule::step_decay(0.03, &[steps / 2, steps * 3 / 4], 0.2)
+        } else {
+            LrSchedule::step_decay(0.05, &[steps / 2, steps * 3 / 4], 0.2)
+        },
+        grad_accum: 1,
+        seed,
+        eval_batches: 8,
+        dense_first_layer: false,
+    }
+}
+
+fn run_one(sess: &Session, cfg: TrainConfig) -> Result<TrainReport> {
+    let label = format!("{}/{}/{:.0}%/seed{}", cfg.model, cfg.method.label(), cfg.sparsity * 100.0, cfg.seed);
+    eprint!("  [{label}] ...");
+    let mut t = sess.trainer(cfg)?;
+    let rep = t.run()?;
+    eprintln!(
+        " {}={:.3} ({:.1}s, {:.1} steps/s)",
+        rep.eval_kind, rep.eval_metric, rep.wall_s, rep.throughput
+    );
+    Ok(rep)
+}
+
+fn srigl(gamma: f64) -> Method {
+    Method::SRigL { ablation: true, gamma_sal: gamma }
+}
+
+fn srigl_noabl() -> Method {
+    Method::SRigL { ablation: false, gamma_sal: 0.0 }
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 / Fig. 3a — accuracy vs sparsity, RigL vs SRigL, 1x/2x training
+// ---------------------------------------------------------------------------
+
+pub fn table1(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "cnn_proxy");
+    let steps: usize = args.parse_or("steps", default_steps(&model))?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let sparsities: Vec<f64> = args.list_or("sparsities", &[0.8, 0.9, 0.95, 0.99])?;
+    let gamma: f64 = args.parse_or("gamma", 0.3)?;
+    let sess = Session::open()?;
+
+    println!("Table 1 / Fig. 3a — {model} ({steps} steps; 2x column = {} steps)", 2 * steps);
+    let dense = run_one(&sess, base_config(&model, Method::Dense, 0.0, steps, seed))?;
+    let mut t = Table::new(&[
+        "sparsity", "RigL 1x", "SRigL w/o 1x", "SRigL 1x", "SRigL 2x",
+        "paper RigL1x", "paper SRigL1x",
+    ]);
+    // paper Table 1 (ResNet-50/ImageNet top-1)
+    let paper: &[(f64, f64, f64)] =
+        &[(0.8, 74.9, 75.0), (0.9, 72.8, 72.7), (0.95, 69.6, 69.1), (0.99, 51.4, 51.5)];
+    let mut recs = Vec::new();
+    for &sp in &sparsities {
+        let rigl = run_one(&sess, base_config(&model, Method::RigL, sp, steps, seed))?;
+        let noabl = run_one(&sess, base_config(&model, srigl_noabl(), sp, steps, seed))?;
+        let sr = run_one(&sess, base_config(&model, srigl(gamma), sp, steps, seed))?;
+        let sr2 = run_one(&sess, base_config(&model, srigl(gamma), sp, 2 * steps, seed))?;
+        let p = paper.iter().find(|(s, _, _)| (*s - sp).abs() < 1e-9);
+        t.row(vec![
+            format!("{:.0}%", sp * 100.0),
+            format!("{:.3}", rigl.eval_metric),
+            format!("{:.3}", noabl.eval_metric),
+            format!("{:.3}", sr.eval_metric),
+            format!("{:.3}", sr2.eval_metric),
+            p.map(|p| format!("{:.1}", p.1)).unwrap_or_else(|| "-".into()),
+            p.map(|p| format!("{:.1}", p.2)).unwrap_or_else(|| "-".into()),
+        ]);
+        recs.push(obj(vec![
+            ("sparsity", num(sp)),
+            ("rigl", num(rigl.eval_metric)),
+            ("srigl_noabl", num(noabl.eval_metric)),
+            ("srigl", num(sr.eval_metric)),
+            ("srigl_2x", num(sr2.eval_metric)),
+        ]));
+    }
+    t.print();
+    println!("dense {} = {:.3}", dense.eval_kind, dense.eval_metric);
+    record(
+        "table1",
+        obj(vec![("model", js(&model)), ("steps", num(steps as f64)),
+                 ("dense", num(dense.eval_metric)), ("rows", arr(recs))]),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3b — % active neurons after training
+// ---------------------------------------------------------------------------
+
+pub fn fig3b(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "cnn_proxy");
+    let steps: usize = args.parse_or("steps", default_steps(&model))?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let sparsities: Vec<f64> = args.list_or("sparsities", &[0.8, 0.9, 0.95, 0.99])?;
+    let gamma: f64 = args.parse_or("gamma", 0.3)?;
+    let sess = Session::open()?;
+
+    println!("Fig. 3b — % active neurons after training ({model})");
+    let mut t = Table::new(&["sparsity", "RigL active%", "SRigL active%", "paper RigL@95: 89.1%"]);
+    let mut recs = Vec::new();
+    for &sp in &sparsities {
+        let mut fractions = Vec::new();
+        for method in [Method::RigL, srigl(gamma)] {
+            let mut tr = sess.trainer(base_config(&model, method, sp, steps, seed))?;
+            tr.run()?;
+            let tops: Vec<LayerTopology> = tr
+                .mask_stats()
+                .iter()
+                .map(|(name, counts)| LayerTopology::from_counts(name, counts))
+                .collect();
+            fractions.push(crate::stats::active_neuron_fraction(&tops));
+        }
+        t.row(vec![
+            format!("{:.0}%", sp * 100.0),
+            format!("{:.1}%", fractions[0] * 100.0),
+            format!("{:.1}%", fractions[1] * 100.0),
+            String::new(),
+        ]);
+        recs.push(obj(vec![
+            ("sparsity", num(sp)),
+            ("rigl_active", num(fractions[0])),
+            ("srigl_active", num(fractions[1])),
+        ]));
+    }
+    t.print();
+    println!("\nPaper: RigL implicitly ablates neurons as sparsity grows (10.9% of neurons\ngone at 95%); SRigL ablates explicitly via gamma_sal.");
+    record("fig3b", obj(vec![("model", js(&model)), ("rows", arr(recs))]))
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — 5-seed mean ± 95% CI (ResNet-18/CIFAR-10 proxy)
+// ---------------------------------------------------------------------------
+
+pub fn table2(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "cnn_proxy");
+    let steps: usize = args.parse_or("steps", default_steps(&model))?;
+    let seeds: usize = args.parse_or("seeds", 5)?;
+    let sparsities: Vec<f64> = args.list_or("sparsities", &[0.8, 0.9, 0.95, 0.99])?;
+    let gamma: f64 = args.parse_or("gamma", 0.3)?;
+    let sess = Session::open()?;
+
+    println!("Table 2 — {model}, {seeds} seeds, mean ± 95% CI ({steps} steps)");
+    let mut dense_accs = Vec::new();
+    for s in 0..seeds {
+        dense_accs.push(run_one(&sess, base_config(&model, Method::Dense, 0.0, steps, s as u64))?.eval_metric);
+    }
+    let (dm, dci) = mean_ci95(&dense_accs);
+
+    let mut t = Table::new(&["sparsity", "RigL", "SRigL w/o", "SRigL w/ ablation"]);
+    let mut recs = Vec::new();
+    for &sp in &sparsities {
+        let mut cells = vec![format!("{:.0}%", sp * 100.0)];
+        let mut rec = vec![("sparsity", num(sp))];
+        for (key, method) in
+            [("rigl", Method::RigL), ("srigl_noabl", srigl_noabl()), ("srigl", srigl(gamma))]
+        {
+            let accs: Vec<f64> = (0..seeds)
+                .map(|s| run_one(&sess, base_config(&model, method, sp, steps, s as u64)).map(|r| r.eval_metric))
+                .collect::<Result<_>>()?;
+            let (m, ci) = mean_ci95(&accs);
+            cells.push(format!("{:.3} ± {:.3}", m, ci));
+            rec.push((key, num(m)));
+        }
+        t.row(cells);
+        recs.push(obj(rec));
+    }
+    t.print();
+    println!("dense: {:.3} ± {:.3}", dm, dci);
+    println!("\nPaper shape: all three within ~CI of each other except SRigL-w/o at 99%\n(91.5 vs RigL 92.9); ablation restores parity (92.8).");
+    record("table2", obj(vec![("model", js(&model)), ("dense", num(dm)), ("rows", arr(recs))]))
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — DST method comparison
+// ---------------------------------------------------------------------------
+
+pub fn table3(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "cnn_proxy");
+    let steps: usize = args.parse_or("steps", default_steps(&model))?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    // default to the band where methods discriminate at this scale
+    // (80/90% saturate on the proxy task; paper's is 80/90 on ImageNet)
+    let sparsities: Vec<f64> = args.list_or("sparsities", &[0.95, 0.99])?;
+    let gamma: f64 = args.parse_or("gamma", 0.3)?;
+    let sess = Session::open()?;
+
+    println!("Table 3 — DST methods on {model} ({steps} steps)");
+    let methods: Vec<(&str, Method, &str)> = vec![
+        ("Static", Method::Static { structured: false }, "no"),
+        ("SET", Method::Set, "no"),
+        ("RigL", Method::RigL, "no"),
+        ("Static-CFI", Method::Static { structured: true }, "yes"),
+        ("SRigL", srigl(gamma), "yes"),
+    ];
+    // paper Table 3 @80/90 (ResNet-50): Static 70.6/65.8, SET 72.9/69.6,
+    // RigL 74.98/72.81, SRigL 75.01/72.71.
+    let mut t = {
+        let mut h: Vec<String> = vec!["method".into(), "structured".into()];
+        for sp in &sparsities {
+            h.push(format!("{:.0}%", sp * 100.0));
+        }
+        Table::new(&h.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+    };
+    let mut recs = Vec::new();
+    for (name, method, structured) in &methods {
+        let mut cells = vec![name.to_string(), structured.to_string()];
+        let mut rec = vec![("method", js(name))];
+        for &sp in &sparsities {
+            let rep = run_one(&sess, base_config(&model, *method, sp, steps, seed))?;
+            cells.push(format!("{:.3}", rep.eval_metric));
+            rec.push(("acc", num(rep.eval_metric)));
+        }
+        t.row(cells);
+        recs.push(obj(rec));
+    }
+    // SR-STE dense-to-sparse baseline: N:M patterns approximating the
+    // sparsity column (1:4 ≈ 75-80%, 1:8 impossible on our fan-ins that
+    // aren't 8-divisible, so 1:4 only where it applies). Its throughput
+    // column shows the dense-training cost the paper criticizes.
+    {
+        let mut cells = vec!["SR-STE 1:4 (dense)".to_string(), "yes".to_string()];
+        let mut rec = vec![("method", js("sr_ste_1_4"))];
+        for _ in &sparsities {
+            let rep = crate::train::train_srste(
+                &sess,
+                &crate::train::SrSteConfig {
+                    model: model.clone(),
+                    n: 1,
+                    m: 4,
+                    steps,
+                    lr: 0.05,
+                    lambda_w: 2e-4,
+                    momentum: 0.9,
+                    seed,
+                    eval_batches: 8,
+                },
+            )?;
+            eprintln!(
+                "  [{}/sr-ste 1:4] accuracy={:.3} ({:.1} steps/s — dense-cost training)",
+                model, rep.eval_metric, rep.throughput
+            );
+            cells.push(format!("{:.3}", rep.eval_metric));
+            rec.push(("acc", num(rep.eval_metric)));
+        }
+        t.row(cells);
+        recs.push(obj(rec));
+    }
+    t.print();
+    println!("\nPaper ordering @90%: Static 65.8 < SET 69.6 < RigL 72.8 ≈ SRigL 72.7 —\ncheck the same ordering holds above (Static worst, RigL≈SRigL best).");
+    record("table3", obj(vec![("model", js(&model)), ("rows", arr(recs))]))
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 / Fig. 9 — ViT proxy
+// ---------------------------------------------------------------------------
+
+pub fn table4(args: &Args) -> Result<()> {
+    let steps: usize = args.parse_or("steps", default_steps("vit_proxy"))?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let gamma: f64 = args.parse_or("gamma", 0.5)?; // paper uses 0.95 at ViT-B/16 scale (k~100s); our k~6 over-ablates there (see fig9)
+    let sparsities: Vec<f64> = args.list_or("sparsities", &[0.8, 0.9])?;
+    let sess = Session::open()?;
+
+    println!("Table 4 — vit_proxy, gamma_sal={gamma} ({steps} steps)");
+    let dense = run_one(&sess, base_config("vit_proxy", Method::Dense, 0.0, steps, seed))?;
+    let mut t = Table::new(&["sparsity", "RigL", "SRigL w/o", "SRigL w/", "paper(RigL/noabl/abl)"]);
+    let paper = [(0.8, "77.9/73.5/77.5"), (0.9, "76.4/71.3/76.0")];
+    let mut recs = Vec::new();
+    for &sp in &sparsities {
+        let rigl = run_one(&sess, base_config("vit_proxy", Method::RigL, sp, steps, seed))?;
+        let noabl = run_one(&sess, base_config("vit_proxy", srigl_noabl(), sp, steps, seed))?;
+        let sr = run_one(&sess, base_config("vit_proxy", srigl(gamma), sp, steps, seed))?;
+        t.row(vec![
+            format!("{:.0}%", sp * 100.0),
+            format!("{:.3}", rigl.eval_metric),
+            format!("{:.3}", noabl.eval_metric),
+            format!("{:.3}", sr.eval_metric),
+            paper
+                .iter()
+                .find(|(s, _)| (*s - sp).abs() < 1e-9)
+                .map(|(_, v)| v.to_string())
+                .unwrap_or_default(),
+        ]);
+        recs.push(obj(vec![
+            ("sparsity", num(sp)),
+            ("rigl", num(rigl.eval_metric)),
+            ("srigl_noabl", num(noabl.eval_metric)),
+            ("srigl", num(sr.eval_metric)),
+        ]));
+    }
+    t.print();
+    println!("dense = {:.3}", dense.eval_metric);
+    println!("\nPaper shape: SRigL w/o ablation clearly below RigL; high-gamma ablation\nrecovers to within ~0.4 points.");
+    record("table4", obj(vec![("gamma", num(gamma)), ("dense", num(dense.eval_metric)), ("rows", arr(recs))]))
+}
+
+// ---------------------------------------------------------------------------
+// Table 9 / Fig. 5 — wide model across sparsities
+// ---------------------------------------------------------------------------
+
+pub fn table9(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "cnn_wide");
+    let steps: usize = args.parse_or("steps", default_steps(&model))?;
+    let seeds: usize = args.parse_or("seeds", 3)?;
+    let sparsities: Vec<f64> = args.list_or("sparsities", &[0.5, 0.7, 0.9, 0.95, 0.99])?;
+    let gamma: f64 = args.parse_or("gamma", 0.3)?;
+    let sess = Session::open()?;
+
+    println!("Table 9 / Fig. 5 — {model}, {seeds} seeds ({steps} steps)");
+    let mut t = Table::new(&["sparsity", "RigL", "SRigL w/o", "SRigL w/"]);
+    let mut recs = Vec::new();
+    for &sp in &sparsities {
+        let mut cells = vec![format!("{:.0}%", sp * 100.0)];
+        let mut rec = vec![("sparsity", num(sp))];
+        for (key, method) in
+            [("rigl", Method::RigL), ("srigl_noabl", srigl_noabl()), ("srigl", srigl(gamma))]
+        {
+            let accs: Vec<f64> = (0..seeds)
+                .map(|s| run_one(&sess, base_config(&model, method, sp, steps, s as u64)).map(|r| r.eval_metric))
+                .collect::<Result<_>>()?;
+            let (m, ci) = mean_ci95(&accs);
+            cells.push(format!("{m:.3} ± {ci:.3}"));
+            rec.push((key, num(m)));
+        }
+        t.row(cells);
+        recs.push(obj(rec));
+    }
+    t.print();
+    println!("\nPaper shape (WRN-22): parity until ~95%; at 99% w/o ablation drops hard\n(76.9 vs RigL 84.9) and ablation recovers most of it (82.7).");
+    record("table9", obj(vec![("model", js(&model)), ("rows", arr(recs))]))
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8 / Fig. 9a — gamma_sal sweeps
+// ---------------------------------------------------------------------------
+
+fn gamma_sweep(model: &str, sparsities: &[f64], gammas: &[f64], steps: usize, seed: u64) -> Result<Vec<Json>> {
+    let sess = Session::open()?;
+    let mut recs = Vec::new();
+    let mut t = {
+        let mut h = vec!["gamma".to_string()];
+        for sp in sparsities {
+            h.push(format!("{:.0}% w/abl", sp * 100.0));
+        }
+        h.push("no-ablation ref".into());
+        Table::new(&h.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+    };
+    for &g in gammas {
+        let mut cells = vec![format!("{g:.2}")];
+        let mut rec = vec![("gamma", num(g))];
+        for &sp in sparsities {
+            let rep = run_one(&sess, base_config(model, srigl(g), sp, steps, seed))?;
+            cells.push(format!("{:.3}", rep.eval_metric));
+            rec.push(("acc", num(rep.eval_metric)));
+        }
+        let noabl = run_one(&sess, base_config(model, srigl_noabl(), sparsities[0], steps, seed))?;
+        cells.push(format!("{:.3}", noabl.eval_metric));
+        t.row(cells);
+        recs.push(obj(rec));
+    }
+    t.print();
+    Ok(recs)
+}
+
+pub fn fig8(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "cnn_proxy");
+    let steps: usize = args.parse_or("steps", default_steps(&model))?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let gammas: Vec<f64> = args.list_or("gammas", &[0.0, 0.1, 0.3, 0.5, 0.9])?;
+    let sparsities: Vec<f64> = args.list_or("sparsities", &[0.95, 0.99])?;
+    println!("Fig. 8 — gamma_sal sweep on {model} ({steps} steps)");
+    let recs = gamma_sweep(&model, &sparsities, &gammas, steps, seed)?;
+    println!("\nPaper finding: CNNs are largely insensitive to gamma_sal (the min-salient\nclamp of 1 dominates; see `srigl exp fig10`).");
+    record("fig8", obj(vec![("model", js(&model)), ("rows", arr(recs))]))
+}
+
+pub fn fig9(args: &Args) -> Result<()> {
+    let steps: usize = args.parse_or("steps", default_steps("vit_proxy"))?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let gammas: Vec<f64> = args.list_or("gammas", &[0.3, 0.5, 0.9, 0.95])?;
+    let sparsities: Vec<f64> = args.list_or("sparsities", &[0.9])?;
+    println!("Fig. 9a — gamma_sal sweep on vit_proxy ({steps} steps)");
+    let recs = gamma_sweep("vit_proxy", &sparsities, &gammas, steps, seed)?;
+    println!("\nPaper finding: ViT is sensitive to gamma_sal; high thresholds (0.9-0.99) win.");
+    record("fig9", obj(vec![("rows", arr(recs))]))
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 11 — layer widths at 99% sparsity
+// ---------------------------------------------------------------------------
+
+pub fn fig11(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "cnn_proxy");
+    let steps: usize = args.parse_or("steps", default_steps(&model))?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let sparsity: f64 = args.parse_or("sparsity", 0.99)?;
+    let gammas: Vec<f64> = args.list_or("gammas", &[0.0, 0.3, 0.5])?;
+    let sess = Session::open()?;
+
+    println!("Fig. 11 — {model} layer widths after training @ {:.0}%", sparsity * 100.0);
+    let mut t = Table::new(&["layer", "orig width", "gamma=0", "gamma=0.3", "gamma=0.5"]);
+    let mut per_gamma: Vec<Vec<(String, usize, usize)>> = Vec::new();
+    for &g in &gammas {
+        let method = if g == 0.0 { srigl_noabl() } else { srigl(g) };
+        let mut tr = sess.trainer(base_config(&model, method, sparsity, steps, seed))?;
+        tr.run()?;
+        per_gamma.push(
+            tr.mask_stats()
+                .iter()
+                .map(|(name, counts)| {
+                    let top = LayerTopology::from_counts(name, counts);
+                    (name.clone(), top.neurons, top.active_neurons)
+                })
+                .collect(),
+        );
+    }
+    let mut recs = Vec::new();
+    for li in 0..per_gamma[0].len() {
+        let (name, width, _) = per_gamma[0][li].clone();
+        let mut cells = vec![name.clone(), width.to_string()];
+        for gi in 0..gammas.len() {
+            cells.push(per_gamma[gi][li].2.to_string());
+        }
+        t.row(cells);
+        recs.push(obj(vec![
+            ("layer", js(&name)),
+            ("width", num(width as f64)),
+            ("active_g0", num(per_gamma[0][li].2 as f64)),
+        ]));
+    }
+    t.print();
+    println!("\nPaper: without ablation all widths stay full; gamma_sal controls final width.");
+    record("fig11", obj(vec![("sparsity", num(sparsity)), ("rows", arr(recs))]))
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 12 — RigL fan-in variance on the transformer
+// ---------------------------------------------------------------------------
+
+pub fn fig12(args: &Args) -> Result<()> {
+    let steps: usize = args.parse_or("steps", default_steps("vit_proxy"))?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let sparsity: f64 = args.parse_or("sparsity", 0.9)?;
+    let sess = Session::open()?;
+
+    println!("Fig. 12 — RigL sparse fan-in spread, vit_proxy @ {:.0}%", sparsity * 100.0);
+    let mut tr = sess.trainer(base_config("vit_proxy", Method::RigL, sparsity, steps, seed))?;
+    tr.run()?;
+    let mut t = Table::new(&["layer", "mean fan-in", "max fan-in", "max/mean", "stddev"]);
+    let mut recs = Vec::new();
+    for (name, counts) in tr.mask_stats() {
+        let top = LayerTopology::from_counts(&name, &counts);
+        let ratio = if top.fan_in_mean > 0.0 { top.fan_in_max as f64 / top.fan_in_mean } else { 0.0 };
+        t.row(vec![
+            name.clone(),
+            format!("{:.2}", top.fan_in_mean),
+            top.fan_in_max.to_string(),
+            format!("{ratio:.2}x"),
+            format!("{:.2}", top.fan_in_var.sqrt()),
+        ]);
+        recs.push(obj(vec![
+            ("layer", js(&name)),
+            ("mean", num(top.fan_in_mean)),
+            ("max", num(top.fan_in_max as f64)),
+            ("ratio", num(ratio)),
+        ]));
+    }
+    t.print();
+    println!("\nPaper: RigL learns highly unbalanced fan-in on ViT (up to 10x the mean) —\nthe 'max/mean' column is the statistic under test. SRigL forces ratio = 1.");
+    record("fig12", obj(vec![("rows", arr(recs))]))
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 14-17 — ITOP rates
+// ---------------------------------------------------------------------------
+
+pub fn itop(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mlp_proxy");
+    let steps: usize = args.parse_or("steps", default_steps(&model))?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let sparsities: Vec<f64> = args.list_or("sparsities", &[0.8, 0.9])?;
+    let sess = Session::open()?;
+
+    println!("Figs. 14-17 — ITOP rate (explored-parameter fraction) on {model}");
+    let mut t = Table::new(&["sparsity", "method", "density", "final ITOP", "explored/density"]);
+    let mut recs = Vec::new();
+    for &sp in &sparsities {
+        for method in [Method::RigL, srigl(0.3), Method::Set, Method::Static { structured: true }] {
+            let mut tr = sess.trainer(base_config(&model, method, sp, steps, seed))?;
+            tr.run()?;
+            let rate = tr.itop_rate();
+            let density = 1.0 - sp;
+            t.row(vec![
+                format!("{:.0}%", sp * 100.0),
+                method.label(),
+                format!("{density:.2}"),
+                format!("{rate:.3}"),
+                format!("{:.2}x", rate / density),
+            ]);
+            recs.push(obj(vec![
+                ("sparsity", num(sp)),
+                ("method", js(&method.label())),
+                ("itop", num(rate)),
+            ]));
+        }
+    }
+    t.print();
+    println!("\nExpected: DST methods explore several times their density; static stays at 1x.");
+    record("itop", obj(vec![("model", js(&model)), ("rows", arr(recs))]))
+}
+
+// ---------------------------------------------------------------------------
+// Table 10 — structured pruning + fine-tune vs SRigL
+// ---------------------------------------------------------------------------
+
+pub fn table10(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "cnn_proxy");
+    let steps: usize = args.parse_or("steps", default_steps(&model))?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let keep_fracs: Vec<f64> = args.list_or("keep", &[0.5, 0.25])?;
+    let sess = Session::open()?;
+
+    println!("Table 10 — structured prune+finetune vs SRigL at matched inference FLOPs");
+    // 1) dense-train the reference model
+    let mut dense_tr = sess.trainer(base_config(&model, Method::Dense, 0.0, steps, seed))?;
+    let dense_rep = dense_tr.run()?;
+
+    let mut t = Table::new(&["method", "infer FLOPs frac", "accuracy", "epoch-equiv"]);
+    let mut recs = Vec::new();
+    t.row(vec!["dense".into(), "1.000".into(), format!("{:.3}", dense_rep.eval_metric), format!("{steps}")]);
+
+    for &keep in &keep_fracs {
+        // 2) structured prune: keep top-|neuron| fraction per layer, then
+        // fine-tune with static topology for steps/2.
+        let mut ft = sess.trainer(base_config(&model, Method::Static { structured: false }, 0.0, steps / 2, seed))?;
+        // overwrite params with the dense-trained ones + structured masks
+        ft.params = dense_tr.params.clone();
+        for (li, &pi) in ft.sparse_idx.clone().iter().enumerate() {
+            let w = &ft.params[pi];
+            let (n, f) = w.neuron_view();
+            let w2 = crate::tensor::Tensor::from_vec(&[n, f], w.data.clone());
+            let keep_n = ((n as f64 * keep).round() as usize).max(1);
+            let m = structured_prune_mask(&w2, keep_n);
+            // reshape the (n, f) mask back to the param's true shape
+            let mask_t =
+                crate::tensor::Tensor::from_vec(&ft.params[pi].shape.clone(), m.t.data);
+            ft.params[pi].mul_assign(&mask_t);
+            ft.ks[li] = f;
+            ft.masks[li] = Mask::from_tensor(mask_t);
+        }
+        let ft_rep = ft.run()?;
+        // FLOPs fraction of the pruned net: neurons scale ~keep per layer.
+        let shapes: Vec<LayerShape> = ft
+            .sparse_idx
+            .iter()
+            .map(|&i| LayerShape { name: ft.entry.params[i].name.clone(), dims: ft.entry.params[i].shape.clone() })
+            .collect();
+        let dens: Vec<f64> = shapes.iter().map(|_| keep).collect();
+        let m = cnn_proxy_flops(&[16, 32, 64], 16, 10, &dens);
+        let frac = m.inference() / m.inference_dense() * (1.0 / keep).min(1.0).max(keep); // keep fraction both in+out: ~keep^2 interior
+        let _ = frac;
+        let flops_frac = keep; // report the per-layer width fraction
+        t.row(vec![
+            format!("struct-prune+ft (keep {keep:.0}%)", keep = keep * 100.0),
+            format!("{flops_frac:.3}"),
+            format!("{:.3}", ft_rep.eval_metric),
+            format!("{}", steps + steps / 2),
+        ]);
+        recs.push(obj(vec![("method", js("struct_prune")), ("keep", num(keep)), ("acc", num(ft_rep.eval_metric))]));
+
+        // 3) SRigL trained from scratch at the sparsity matching keep².
+        let sp = (1.0 - keep * keep).clamp(0.3, 0.99);
+        let sr = run_one(&sess, base_config(&model, srigl(0.3), sp, steps, seed))?;
+        t.row(vec![
+            format!("SRigL @ {:.0}% (matched)", sp * 100.0),
+            format!("{:.3}", 1.0 - sp),
+            format!("{:.3}", sr.eval_metric),
+            format!("{steps}"),
+        ]);
+        recs.push(obj(vec![("method", js("srigl")), ("sparsity", num(sp)), ("acc", num(sr.eval_metric))]));
+
+        let densities = layer_densities(Distribution::Erk, &shapes, sp);
+        let _ = densities;
+    }
+    t.print();
+    println!("\nPaper shape: SRigL is competitive with structured-pruning pipelines at\nmatched FLOPs with fewer epoch-equivalents (Table 10).");
+    record("table10", obj(vec![("rows", arr(recs))]))
+}

@@ -1,0 +1,62 @@
+//! Fig. 1b: output-norm variance — theory (Appendix B, Eqs. 14/21/25) vs
+//! Monte-Carlo simulation, for each sparsity structure.
+
+use anyhow::Result;
+
+use super::{record, Table};
+use crate::stats::variance::{simulate_var, SparsityType};
+use crate::util::cli::Args;
+use crate::util::json::{arr, num, obj, s, Json};
+
+pub fn fig1b(args: &Args) -> Result<()> {
+    let n: usize = args.parse_or("n", 256)?;
+    let trials: usize = args.parse_or("trials", 3000)?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let ks: Vec<usize> = args.list_or("ks", &[2usize, 4, 8, 16, 32, 64, 128])?;
+
+    println!("Fig. 1b — Var(||z_{{l+1}}||^2 / ||z_l||^2) at n={n}, {trials} MC trials");
+    println!("(theory per Appendix B; note the main-text 18k/n vs appendix 18n/k typo — see DESIGN.md)");
+    let mut t = Table::new(&[
+        "k", "bern(theory)", "bern(sim)", "cpl(theory)", "cpl(sim)", "cfi(theory)", "cfi(sim)",
+        "cfi smallest?",
+    ]);
+    let mut recs = Vec::new();
+    for &k in &ks {
+        if k >= n {
+            continue;
+        }
+        let types = [SparsityType::Bernoulli, SparsityType::ConstPerLayer, SparsityType::ConstFanIn];
+        let mut theory = Vec::new();
+        let mut sim = Vec::new();
+        for (i, ty) in types.iter().enumerate() {
+            theory.push(ty.theory(n, k));
+            sim.push(simulate_var(*ty, n, k, trials, seed + (k as u64) * 10 + i as u64));
+        }
+        let smallest = theory[2] < theory[0] && theory[2] < theory[1];
+        t.row(vec![
+            k.to_string(),
+            format!("{:.5}", theory[0]),
+            format!("{:.5}", sim[0]),
+            format!("{:.5}", theory[1]),
+            format!("{:.5}", sim[1]),
+            format!("{:.5}", theory[2]),
+            format!("{:.5}", sim[2]),
+            if smallest { "yes".into() } else { "NO".into() },
+        ]);
+        recs.push(obj(vec![
+            ("k", num(k as f64)),
+            ("bern_theory", num(theory[0])),
+            ("bern_sim", num(sim[0])),
+            ("cpl_theory", num(theory[1])),
+            ("cpl_sim", num(sim[1])),
+            ("cfi_theory", num(theory[2])),
+            ("cfi_sim", num(sim[2])),
+        ]));
+    }
+    t.print();
+    println!("\nPaper claim: constant fan-in variance is consistently the smallest, with the\ngap growing as k << n — matches the 'cfi smallest?' column.");
+    record(
+        "fig1b",
+        obj(vec![("n", num(n as f64)), ("trials", num(trials as f64)), ("rows", arr(recs)), ("note", s("theory uses appendix 18n/k form"))]),
+    )
+}

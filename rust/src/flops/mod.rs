@@ -1,0 +1,185 @@
+//! FLOPs accounting (paper Table 5, Fig. 13, App. G): inference and
+//! training FLOPs for sparse models, following the paper's methodology —
+//! only conv/linear layers and their activations are counted; add/pool
+//! ops and the amortized mask updates are ignored.
+//!
+//! Training FLOPs per step (Evci et al. 2021 convention): forward (1x) +
+//! input grads (1x) + weight grads (1x) ≈ 3x forward, with RigL/SRigL's
+//! periodic dense-gradient pass amortized over ΔT: the paper folds it in
+//! as (2·s_fwd + s_dense)/ΔT corrections; we expose both terms.
+
+/// One accounted layer: a linear or conv with an activation count.
+#[derive(Clone, Debug)]
+pub struct LayerFlops {
+    pub name: String,
+    /// Dense multiply-accumulates per example (counted as 2 FLOPs each).
+    pub dense_macs: u64,
+    /// Fraction of weights active (1 - layer sparsity).
+    pub density: f64,
+}
+
+impl LayerFlops {
+    pub fn linear(name: &str, in_f: usize, out_f: usize, density: f64) -> LayerFlops {
+        LayerFlops { name: name.into(), dense_macs: (in_f * out_f) as u64, density }
+    }
+
+    /// Conv with SAME padding: macs = out_h*out_w*kh*kw*in_c*out_c.
+    pub fn conv(
+        name: &str,
+        in_c: usize,
+        out_c: usize,
+        kh: usize,
+        kw: usize,
+        out_h: usize,
+        out_w: usize,
+        density: f64,
+    ) -> LayerFlops {
+        LayerFlops {
+            name: name.into(),
+            dense_macs: (out_h * out_w * kh * kw * in_c * out_c) as u64,
+            density,
+        }
+    }
+
+    pub fn sparse_flops(&self) -> f64 {
+        2.0 * self.dense_macs as f64 * self.density
+    }
+
+    pub fn dense_flops(&self) -> f64 {
+        2.0 * self.dense_macs as f64
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelFlops {
+    pub layers: Vec<LayerFlops>,
+}
+
+impl ModelFlops {
+    /// Inference FLOPs per example.
+    pub fn inference(&self) -> f64 {
+        self.layers.iter().map(|l| l.sparse_flops()).sum()
+    }
+
+    pub fn inference_dense(&self) -> f64 {
+        self.layers.iter().map(|l| l.dense_flops()).sum()
+    }
+
+    /// Training FLOPs per example per step: 3x sparse forward plus the
+    /// amortized dense-gradient saliency pass every `delta_t` steps
+    /// (RigL Appendix; the dense backward-for-weights is ~1x dense fwd).
+    pub fn train_step(&self, delta_t: usize) -> f64 {
+        let sparse = self.inference();
+        let dense = self.inference_dense();
+        3.0 * sparse + if delta_t > 0 { dense / delta_t as f64 } else { 0.0 }
+    }
+
+    /// Total training FLOPs for `steps` steps at `batch` examples.
+    pub fn train_total(&self, steps: usize, batch: usize, delta_t: usize) -> f64 {
+        self.train_step(delta_t) * steps as f64 * batch as f64
+    }
+
+    /// Normalized against the dense model (paper Fig. 13 y-axis).
+    pub fn train_fraction_of_dense(&self, delta_t: usize) -> f64 {
+        let dense3 = 3.0 * self.inference_dense();
+        self.train_step(delta_t) / dense3
+    }
+}
+
+/// The paper's ResNet-50 reference numbers (Table 5) for shape checking:
+/// dense inference = 8.2 GFLOPs; we verify our *ratios* against theirs.
+pub const RESNET50_DENSE_INFERENCE_GFLOPS: f64 = 8.2;
+
+/// Table 5 ratios from the paper: sparsity -> (train e18, inference e9),
+/// dense train = 3.15e18.
+pub fn paper_table5() -> Vec<(f64, f64, f64)> {
+    vec![
+        (0.80, 1.13, 3.40),
+        (0.90, 0.77, 1.99),
+        (0.95, 0.40, 1.01),
+        (0.99, 0.09, 0.21),
+        (0.00, 3.15, 8.20),
+    ]
+}
+
+/// Build the FLOPs model of our cnn_proxy (3x16x16 input, SAME convs,
+/// pool/2 after stages 0 and 1, GAP, fc) with per-layer densities.
+pub fn cnn_proxy_flops(channels: &[usize], image: usize, classes: usize, densities: &[f64]) -> ModelFlops {
+    let mut layers = Vec::new();
+    let mut h = image;
+    let mut prev = 3usize;
+    for (i, &c) in channels.iter().enumerate() {
+        layers.push(LayerFlops::conv(
+            &format!("conv{i}"),
+            prev,
+            c,
+            3,
+            3,
+            h,
+            h,
+            densities.get(i).copied().unwrap_or(1.0),
+        ));
+        if i < channels.len() - 1 {
+            h /= 2;
+        }
+        prev = c;
+    }
+    layers.push(LayerFlops::linear(
+        "fc",
+        prev,
+        classes,
+        densities.get(channels.len()).copied().unwrap_or(1.0),
+    ));
+    ModelFlops { layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_flops() {
+        let l = LayerFlops::linear("fc", 3072, 768, 0.1);
+        assert_eq!(l.dense_flops(), 2.0 * 3072.0 * 768.0);
+        assert!((l.sparse_flops() / l.dense_flops() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conv_flops() {
+        let l = LayerFlops::conv("c", 3, 16, 3, 3, 16, 16, 1.0);
+        assert_eq!(l.dense_macs, 16 * 16 * 9 * 3 * 16);
+    }
+
+    #[test]
+    fn train_includes_amortized_dense_pass() {
+        let m = ModelFlops { layers: vec![LayerFlops::linear("l", 100, 100, 0.1)] };
+        let with = m.train_step(100);
+        let without = 3.0 * m.inference();
+        assert!(with > without);
+        assert!((with - without - m.inference_dense() / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparsity_scales_training_flops_like_paper() {
+        // Paper Table 5: 90% sparse training = 0.77/3.15 ≈ 24% of dense.
+        // With uniform density the ratio is ~(3*0.1 + 1/dt)/3; at dt=800
+        // that's ~10%; ERK + dense-ish small layers lift the real model to
+        // ~24%. Here we just check monotonicity + the dense limit.
+        let mk = |d: f64| ModelFlops { layers: vec![LayerFlops::linear("l", 512, 512, d)] };
+        let f90 = mk(0.1).train_fraction_of_dense(100);
+        let f80 = mk(0.2).train_fraction_of_dense(100);
+        let f0 = mk(1.0).train_fraction_of_dense(100);
+        assert!(f90 < f80 && f80 < f0);
+        assert!(f0 > 1.0 && f0 < 1.01); // dense + tiny amortized term
+    }
+
+    #[test]
+    fn cnn_proxy_structure() {
+        let m = cnn_proxy_flops(&[16, 32, 64], 16, 10, &[1.0; 4]);
+        assert_eq!(m.layers.len(), 4);
+        // first conv at 16x16, second at 8x8, third at 4x4
+        assert_eq!(m.layers[0].dense_macs, 16 * 16 * 9 * 3 * 16);
+        assert_eq!(m.layers[1].dense_macs, 8 * 8 * 9 * 16 * 32);
+        assert_eq!(m.layers[2].dense_macs, 4 * 4 * 9 * 32 * 64);
+    }
+}

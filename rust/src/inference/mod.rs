@@ -1,0 +1,532 @@
+//! Native CPU inference engine — the four linear-layer representations the
+//! paper benchmarks against each other (Fig. 4, Appendices I/J/K):
+//!
+//! * [`DenseLayer`]      — dense GEMM baseline;
+//! * [`CsrLayer`]        — unstructured sparse (CSR SpMM) baseline;
+//! * [`StructuredLayer`] — exploits *only* neuron ablation: dense GEMM over
+//!                         the surviving rows;
+//! * [`CondensedLayer`]  — Algorithm 1: exploits ablation *and* constant
+//!                         fan-in via the (n_active × k) value/index
+//!                         gather-MAC.
+//!
+//! All kernels share a threading scheme (`threads` parameter — the paper
+//! sweeps 1/4/8 CPU threads in Figs. 18-20): batch-1 splits the single
+//! output row across threads; batched splits batch rows.
+
+pub mod server;
+
+use crate::sparsity::{Condensed, Csr, Mask};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::util::threadpool::par_rows_mut;
+
+/// A linear layer representation that can run a batched forward pass.
+pub trait LinearKernel: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Output features per example (n for dense/CSR; n_active for the
+    /// structured/condensed compact forms).
+    fn out_width(&self) -> usize;
+    fn in_width(&self) -> usize;
+    /// x: (batch, d) row-major; out: (batch, out_width) row-major,
+    /// preallocated. `threads` >= 1.
+    fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize);
+}
+
+/// Split a single output row into per-thread contiguous chunks (batch-1
+/// fast path; avoids the useless spawn when threads == 1).
+fn par_single_row<F>(out: &mut [f32], threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync, // (start_col, chunk)
+{
+    let n = out.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        f(0, out);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut start = 0usize;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let f = &f;
+            s.spawn(move || f(start, head));
+            start += take;
+            rest = tail;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Dense
+// ---------------------------------------------------------------------------
+
+pub struct DenseLayer {
+    pub n: usize,
+    pub d: usize,
+    /// (n, d) row-major.
+    pub w: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+impl DenseLayer {
+    pub fn new(w: &Tensor, bias: Vec<f32>) -> DenseLayer {
+        let (n, d) = w.neuron_view();
+        assert_eq!(bias.len(), n);
+        DenseLayer { n, d, w: w.data.clone(), bias }
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    // 4-way unrolled accumulators: breaks the FP add dependency chain so
+    // the compiler can keep multiple FMAs in flight (see §Perf).
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+impl LinearKernel for DenseLayer {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn out_width(&self) -> usize {
+        self.n
+    }
+
+    fn in_width(&self) -> usize {
+        self.d
+    }
+
+    fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
+        debug_assert_eq!(x.len(), batch * self.d);
+        debug_assert_eq!(out.len(), batch * self.n);
+        if batch == 1 {
+            par_single_row(out, threads, |start, chunk| {
+                for (i, o) in chunk.iter_mut().enumerate() {
+                    let r = start + i;
+                    *o = dot(&self.w[r * self.d..(r + 1) * self.d], x) + self.bias[r];
+                }
+            });
+        } else {
+            par_rows_mut(out, self.n, threads, |b, row| {
+                let xb = &x[b * self.d..(b + 1) * self.d];
+                for (r, o) in row.iter_mut().enumerate() {
+                    *o = dot(&self.w[r * self.d..(r + 1) * self.d], xb) + self.bias[r];
+                }
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSR (unstructured)
+// ---------------------------------------------------------------------------
+
+pub struct CsrLayer {
+    pub csr: Csr,
+    pub bias: Vec<f32>,
+}
+
+impl CsrLayer {
+    pub fn new(w: &Tensor, bias: Vec<f32>) -> CsrLayer {
+        let csr = Csr::from_dense(w);
+        assert_eq!(bias.len(), csr.rows);
+        // Same once-validated invariant as CondensedLayer (§Perf iter. 2):
+        // column indices in range, so the gather can skip bounds checks.
+        assert!(csr.indices.iter().all(|&j| (j as usize) < csr.cols));
+        CsrLayer { csr, bias }
+    }
+}
+
+impl LinearKernel for CsrLayer {
+    fn name(&self) -> &'static str {
+        "csr"
+    }
+
+    fn out_width(&self) -> usize {
+        self.csr.rows
+    }
+
+    fn in_width(&self) -> usize {
+        self.csr.cols
+    }
+
+    fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
+        let (n, d) = (self.csr.rows, self.csr.cols);
+        debug_assert_eq!(out.len(), batch * n);
+        let row_kernel = |xb: &[f32], r: usize| -> f32 {
+            let lo = self.csr.indptr[r] as usize;
+            let hi = self.csr.indptr[r + 1] as usize;
+            let vals = &self.csr.values[lo..hi];
+            let idx = &self.csr.indices[lo..hi];
+            // 4-way unrolled, bounds-check-free gather (matched to the
+            // condensed kernel so the Fig. 4 comparison is fair — §Perf).
+            let mut acc = [0f32; 4];
+            let mut vi = vals.chunks_exact(4);
+            let mut ii = idx.chunks_exact(4);
+            for (v4, i4) in (&mut vi).zip(&mut ii) {
+                unsafe {
+                    acc[0] += v4[0] * *xb.get_unchecked(i4[0] as usize);
+                    acc[1] += v4[1] * *xb.get_unchecked(i4[1] as usize);
+                    acc[2] += v4[2] * *xb.get_unchecked(i4[2] as usize);
+                    acc[3] += v4[3] * *xb.get_unchecked(i4[3] as usize);
+                }
+            }
+            let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+            for (v, i) in vi.remainder().iter().zip(ii.remainder()) {
+                s += v * unsafe { *xb.get_unchecked(*i as usize) };
+            }
+            s + self.bias[r]
+        };
+        if batch == 1 {
+            par_single_row(out, threads, |start, chunk| {
+                for (i, o) in chunk.iter_mut().enumerate() {
+                    *o = row_kernel(x, start + i);
+                }
+            });
+        } else {
+            par_rows_mut(out, n, threads, |b, row| {
+                let xb = &x[b * d..(b + 1) * d];
+                for (r, o) in row.iter_mut().enumerate() {
+                    *o = row_kernel(xb, r);
+                }
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Structured-only (neuron ablation, dense surviving rows)
+// ---------------------------------------------------------------------------
+
+pub struct StructuredLayer {
+    pub n_active: usize,
+    pub d: usize,
+    /// (n_active, d) packed dense rows of the surviving neurons.
+    pub w: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub active: Vec<u32>,
+}
+
+impl StructuredLayer {
+    /// Pack the surviving rows of a (possibly sparse) weight matrix. The
+    /// rows keep their zeros — structured-only ignores fine-grained
+    /// sparsity by design (paper Fig. 4 "structured").
+    pub fn new(w: &Tensor, mask: &Mask, bias: &[f32]) -> StructuredLayer {
+        let (n, d) = w.neuron_view();
+        assert_eq!(bias.len(), n);
+        let counts = mask.fan_in_counts();
+        let mut packed = Vec::new();
+        let mut pbias = Vec::new();
+        let mut active = Vec::new();
+        for r in 0..n {
+            if counts[r] > 0 {
+                packed.extend_from_slice(&w.data[r * d..(r + 1) * d]);
+                pbias.push(bias[r]);
+                active.push(r as u32);
+            }
+        }
+        StructuredLayer { n_active: active.len(), d, w: packed, bias: pbias, active }
+    }
+}
+
+impl LinearKernel for StructuredLayer {
+    fn name(&self) -> &'static str {
+        "structured"
+    }
+
+    fn out_width(&self) -> usize {
+        self.n_active
+    }
+
+    fn in_width(&self) -> usize {
+        self.d
+    }
+
+    fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
+        debug_assert_eq!(out.len(), batch * self.n_active);
+        if batch == 1 {
+            par_single_row(out, threads, |start, chunk| {
+                for (i, o) in chunk.iter_mut().enumerate() {
+                    let r = start + i;
+                    *o = dot(&self.w[r * self.d..(r + 1) * self.d], x) + self.bias[r];
+                }
+            });
+        } else {
+            par_rows_mut(out, self.n_active, threads, |b, row| {
+                let xb = &x[b * self.d..(b + 1) * self.d];
+                for (r, o) in row.iter_mut().enumerate() {
+                    *o = dot(&self.w[r * self.d..(r + 1) * self.d], xb) + self.bias[r];
+                }
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condensed (Algorithm 1)
+// ---------------------------------------------------------------------------
+
+pub struct CondensedLayer {
+    pub c: Condensed,
+    pub bias: Vec<f32>, // packed to active neurons
+}
+
+impl CondensedLayer {
+    pub fn new(w: &Tensor, mask: &Mask, bias: &[f32]) -> CondensedLayer {
+        let c = Condensed::from_masked(w, mask);
+        // Validate the index invariant once so the forward pass can gather
+        // without per-element bounds checks (§Perf iteration 1).
+        assert!(c.idx.iter().all(|&j| (j as usize) < c.d), "index out of range");
+        let pbias = c.active.iter().map(|&r| bias[r as usize]).collect();
+        CondensedLayer { c, bias: pbias }
+    }
+}
+
+impl LinearKernel for CondensedLayer {
+    fn name(&self) -> &'static str {
+        "condensed"
+    }
+
+    fn out_width(&self) -> usize {
+        self.c.n_active()
+    }
+
+    fn in_width(&self) -> usize {
+        self.c.d
+    }
+
+    fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
+        let k = self.c.k;
+        let n = self.c.n_active();
+        let d = self.c.d;
+        debug_assert_eq!(out.len(), batch * n);
+        let row_kernel = |xb: &[f32], r: usize| -> f32 {
+            let vals = &self.c.values[r * k..(r + 1) * k];
+            let idx = &self.c.idx[r * k..(r + 1) * k];
+            // 4-way unrolled gather-MAC (paper Algorithm 1 inner loop).
+            // Indices are validated once in `new`, so the gather skips
+            // bounds checks; 4 accumulators break the FP dependency chain
+            // (§Perf iteration 1: 2-way safe -> 4-way unchecked).
+            let mut acc = [0f32; 4];
+            let mut vi = vals.chunks_exact(4);
+            let mut ii = idx.chunks_exact(4);
+            for (v4, i4) in (&mut vi).zip(&mut ii) {
+                unsafe {
+                    acc[0] += v4[0] * *xb.get_unchecked(i4[0] as usize);
+                    acc[1] += v4[1] * *xb.get_unchecked(i4[1] as usize);
+                    acc[2] += v4[2] * *xb.get_unchecked(i4[2] as usize);
+                    acc[3] += v4[3] * *xb.get_unchecked(i4[3] as usize);
+                }
+            }
+            let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+            for (v, i) in vi.remainder().iter().zip(ii.remainder()) {
+                s += v * unsafe { *xb.get_unchecked(*i as usize) };
+            }
+            s + self.bias[r]
+        };
+        if batch == 1 {
+            par_single_row(out, threads, |start, chunk| {
+                for (i, o) in chunk.iter_mut().enumerate() {
+                    *o = row_kernel(x, start + i);
+                }
+            });
+        } else {
+            par_rows_mut(out, n, threads, |b, row| {
+                let xb = &x[b * d..(b + 1) * d];
+                for (r, o) in row.iter_mut().enumerate() {
+                    *o = row_kernel(xb, r);
+                }
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Test-layer factory: an SRigL-shaped sparse layer (constant fan-in +
+// a fraction of ablated neurons), used by benches and the exp harnesses.
+// ---------------------------------------------------------------------------
+
+pub struct LayerBundle {
+    pub dense: DenseLayer,
+    /// CSR of the *same* SRigL matrix (pattern = constant fan-in) —
+    /// used by correctness tests; rows are uniform so this flatters CSR.
+    pub csr: CsrLayer,
+    /// CSR of an *unstructured* mask with identical nnz — the paper's
+    /// Fig. 4 "unstructured (CSR)" baseline (timing harnesses use this).
+    pub csr_unstructured: CsrLayer,
+    pub structured: StructuredLayer,
+    pub condensed: CondensedLayer,
+    pub w: Tensor,
+    pub mask: Mask,
+    pub bias: Vec<f32>,
+}
+
+impl LayerBundle {
+    /// `sparsity` sets k = round(d*(1-s)); `ablated_frac` of neurons are
+    /// fully masked (what SRigL's dynamic ablation produces).
+    pub fn synth(n: usize, d: usize, sparsity: f64, ablated_frac: f64, seed: u64) -> LayerBundle {
+        let mut rng = Rng::new(seed);
+        let k = (((1.0 - sparsity) * d as f64).round() as usize).clamp(1, d);
+        let mut mask = Mask::random_constant_fan_in(&[n, d], k, &mut rng);
+        let n_ablate = ((n as f64 * ablated_frac) as usize).min(n.saturating_sub(1));
+        for &r in rng.choose_k(n, n_ablate).iter() {
+            for j in 0..d {
+                mask.set(r, j, false);
+            }
+        }
+        let mut w = Tensor::normal(&[n, d], (2.0 / k as f64).sqrt(), &mut rng);
+        w.mul_assign(&mask.t);
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.01).collect();
+        LayerBundle::build(w, mask, bias)
+    }
+
+    pub fn build(w: Tensor, mask: Mask, bias: Vec<f32>) -> LayerBundle {
+        let dense = DenseLayer::new(&w, bias.clone());
+        let csr = CsrLayer::new(&w, bias.clone());
+        // unstructured twin: same shape and nnz, random positions/values
+        let (n, d) = w.neuron_view();
+        let nnz = mask.nnz();
+        let mut rng = Rng::new(0x5eed ^ nnz as u64);
+        let um = Mask::random_per_layer(&[n, d], nnz, &mut rng);
+        let mut uw = Tensor::normal(&[n, d], 1.0, &mut rng);
+        uw.mul_assign(&um.t);
+        let csr_unstructured = CsrLayer::new(&uw, bias.clone());
+        let structured = StructuredLayer::new(&w, &mask, &bias);
+        let condensed = CondensedLayer::new(&w, &mask, &bias);
+        LayerBundle { dense, csr, csr_unstructured, structured, condensed, w, mask, bias }
+    }
+
+    /// The four Fig. 4 representations (CSR = the unstructured baseline).
+    pub fn kernels(&self) -> Vec<&dyn LinearKernel> {
+        vec![&self.dense, &self.csr_unstructured, &self.structured, &self.condensed]
+    }
+}
+
+/// Gather a compact (active-only) output back into full-width layout —
+/// used when a downstream consumer expects the original width.
+pub fn scatter_compact(compact: &[f32], active: &[u32], n_orig: usize, batch: usize) -> Vec<f32> {
+    let na = active.len();
+    let mut out = vec![0f32; batch * n_orig];
+    for b in 0..batch {
+        for (i, &r) in active.iter().enumerate() {
+            out[b * n_orig + r as usize] = compact[b * na + i];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_forward(w: &Tensor, bias: &[f32], x: &[f32], batch: usize) -> Vec<f32> {
+        let (n, d) = w.neuron_view();
+        let mut out = vec![0f32; batch * n];
+        for b in 0..batch {
+            for r in 0..n {
+                let mut acc = bias[r];
+                for j in 0..d {
+                    acc += w.data[r * d + j] * x[b * d + j];
+                }
+                out[b * n + r] = acc;
+            }
+        }
+        out
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs()), "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn all_representations_agree() {
+        for &(batch, threads) in &[(1usize, 1usize), (1, 4), (7, 1), (7, 3), (16, 8)] {
+            let bundle = LayerBundle::synth(48, 96, 0.9, 0.25, 42);
+            let mut rng = Rng::new(9);
+            let x: Vec<f32> = (0..batch * 96).map(|_| rng.normal_f32()).collect();
+            let expect = naive_forward(&bundle.w, &bundle.bias, &x, batch);
+
+            let mut out_d = vec![0f32; batch * bundle.dense.out_width()];
+            bundle.dense.forward(&x, batch, &mut out_d, threads);
+            assert_close(&out_d, &expect, 1e-4);
+
+            let mut out_c = vec![0f32; batch * bundle.csr.out_width()];
+            bundle.csr.forward(&x, batch, &mut out_c, threads);
+            assert_close(&out_c, &expect, 1e-4);
+
+            // compact outputs scatter back to the dense layout (ablated
+            // rows only carry their bias in the dense result; compare on
+            // active rows).
+            let mut out_s = vec![0f32; batch * bundle.structured.out_width()];
+            bundle.structured.forward(&x, batch, &mut out_s, threads);
+            let mut out_k = vec![0f32; batch * bundle.condensed.out_width()];
+            bundle.condensed.forward(&x, batch, &mut out_k, threads);
+            assert_close(&out_k, &out_s, 1e-4);
+            for b in 0..batch {
+                for (i, &r) in bundle.structured.active.iter().enumerate() {
+                    let e = expect[b * 48 + r as usize];
+                    let g = out_s[b * bundle.structured.n_active + i];
+                    assert!((e - g).abs() < 1e-4 * (1.0 + e.abs()), "b={b} r={r}: {e} vs {g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn condensed_matches_xla_semantics_with_k1() {
+        let bundle = LayerBundle::synth(8, 16, 0.95, 0.0, 1);
+        assert_eq!(bundle.condensed.c.k, 1);
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut out = vec![0f32; 8];
+        bundle.condensed.forward(&x, 1, &mut out, 1);
+        let mut expect = vec![0f32; 8];
+        bundle.dense.forward(&x, 1, &mut expect, 1);
+        assert_close(&out, &expect, 1e-5);
+    }
+
+    #[test]
+    fn scatter_compact_roundtrip() {
+        let compact = vec![1.0, 2.0, 3.0, 4.0]; // batch 2, 2 active
+        let full = scatter_compact(&compact, &[1, 3], 5, 2);
+        assert_eq!(full, vec![0., 1., 0., 2., 0., 0., 3., 0., 4., 0.]);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(3);
+        for len in [0usize, 1, 3, 4, 7, 64, 100] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-4 * (1.0 + naive.abs()));
+        }
+    }
+
+    #[test]
+    fn storage_ordering_fig4() {
+        // condensed < csr < dense bytes at 90% sparsity (memory claim §1).
+        let b = LayerBundle::synth(768, 3072, 0.9, 0.1, 7);
+        let dense_bytes = b.w.numel() * 4;
+        assert!(b.condensed.c.storage_bytes() < b.csr.csr.storage_bytes());
+        assert!(b.csr.csr.storage_bytes() < dense_bytes);
+    }
+}

@@ -1,0 +1,180 @@
+//! Online-inference server: the L3 coordination piece for the paper's
+//! §2 "Online inference" scenario — single-sample, latency-critical
+//! requests served from a queue, plus a dynamic batcher for throughput
+//! mode (the vLLM-router-shaped component of this repo).
+//!
+//! Architecture: a submitter thread enqueues requests at a configured
+//! rate; the worker drains the queue — one-at-a-time in `Online` mode,
+//! up to `max_batch` at once in `Batched` mode — runs the selected layer
+//! representation, and records end-to-end latency per request.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::LinearKernel;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeMode {
+    /// Strict batch-1 service (paper Fig. 4a setting).
+    Online,
+    /// Dynamic batching: coalesce whatever is queued, up to `max_batch`.
+    Batched { max_batch: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub mode: ServeMode,
+    pub n_requests: usize,
+    /// Mean inter-arrival time; exponential distribution (Poisson load).
+    pub mean_interarrival: Duration,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct LatencyStats {
+    pub n: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+struct Request {
+    x: Vec<f32>,
+    t_submit: Instant,
+}
+
+/// Drive `layer` with a synthetic Poisson request stream and return
+/// end-to-end latency statistics.
+pub fn serve(layer: &dyn LinearKernel, cfg: &ServeConfig) -> LatencyStats {
+    let d = layer.in_width();
+    let (tx, rx) = mpsc::channel::<Request>();
+    let mean_gap = cfg.mean_interarrival;
+    let n_req = cfg.n_requests;
+    let seed = cfg.seed;
+
+    let t_start = Instant::now();
+    std::thread::scope(|s| {
+        // Submitter: Poisson arrivals of random feature vectors.
+        s.spawn(move || {
+            let mut rng = Rng::new(seed);
+            for _ in 0..n_req {
+                let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+                let _ = tx.send(Request { x, t_submit: Instant::now() });
+                if mean_gap > Duration::ZERO {
+                    // exponential inter-arrival
+                    let u = rng.uniform().max(1e-12);
+                    let gap = mean_gap.as_secs_f64() * -u.ln();
+                    std::thread::sleep(Duration::from_secs_f64(gap.min(0.01)));
+                }
+            }
+        });
+
+        // Worker: drain + serve.
+        let mut latencies: Vec<f64> = Vec::with_capacity(n_req);
+        let mut batches = 0usize;
+        let mut served = 0usize;
+        let max_batch = match cfg.mode {
+            ServeMode::Online => 1,
+            ServeMode::Batched { max_batch } => max_batch.max(1),
+        };
+        let mut out = vec![0f32; max_batch * layer.out_width()];
+        let mut xbuf = vec![0f32; max_batch * d];
+        while served < n_req {
+            // blocking pop for the first element, then opportunistic drain
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => break,
+            };
+            let mut batch = vec![first];
+            while batch.len() < max_batch {
+                match rx.try_recv() {
+                    Ok(r) => batch.push(r),
+                    Err(_) => break,
+                }
+            }
+            let b = batch.len();
+            for (i, r) in batch.iter().enumerate() {
+                xbuf[i * d..(i + 1) * d].copy_from_slice(&r.x);
+            }
+            layer.forward(&xbuf[..b * d], b, &mut out[..b * layer.out_width()], cfg.threads);
+            let t_done = Instant::now();
+            for r in &batch {
+                latencies.push(t_done.duration_since(r.t_submit).as_secs_f64() * 1e6);
+            }
+            served += b;
+            batches += 1;
+        }
+
+        let wall = t_start.elapsed().as_secs_f64();
+        let mut sorted = latencies.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencyStats {
+            n: latencies.len(),
+            mean_us: latencies.iter().sum::<f64>() / latencies.len().max(1) as f64,
+            p50_us: percentile(&sorted, 50.0),
+            p95_us: percentile(&sorted, 95.0),
+            p99_us: percentile(&sorted, 99.0),
+            max_us: sorted.last().copied().unwrap_or(f64::NAN),
+            throughput_rps: latencies.len() as f64 / wall.max(1e-9),
+            mean_batch: served as f64 / batches.max(1) as f64,
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::LayerBundle;
+
+    #[test]
+    fn online_serves_all_requests() {
+        let bundle = LayerBundle::synth(32, 64, 0.9, 0.2, 0);
+        let cfg = ServeConfig {
+            mode: ServeMode::Online,
+            n_requests: 50,
+            mean_interarrival: Duration::ZERO,
+            threads: 1,
+            seed: 1,
+        };
+        let stats = serve(&bundle.condensed, &cfg);
+        assert_eq!(stats.n, 50);
+        assert!(stats.p50_us > 0.0 && stats.p99_us >= stats.p50_us);
+        assert!((stats.mean_batch - 1.0).abs() < 1e-9, "online must be batch-1");
+    }
+
+    #[test]
+    fn batched_mode_coalesces() {
+        let bundle = LayerBundle::synth(32, 64, 0.9, 0.2, 0);
+        let cfg = ServeConfig {
+            mode: ServeMode::Batched { max_batch: 16 },
+            n_requests: 200,
+            mean_interarrival: Duration::ZERO, // flood -> batches form
+            threads: 1,
+            seed: 2,
+        };
+        let stats = serve(&bundle.dense, &cfg);
+        assert_eq!(stats.n, 200);
+        assert!(stats.mean_batch > 1.0, "flooded queue should batch, got {}", stats.mean_batch);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let sorted: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&sorted, 50.0), 51.0);
+        assert!(percentile(&sorted, 99.0) >= percentile(&sorted, 95.0));
+    }
+}

@@ -1,0 +1,32 @@
+//! # SRigL — Dynamic Sparse Training with Structured Sparsity
+//!
+//! A production-style reproduction of Lasby et al., ICLR 2024, as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: DST topology updaters
+//!   ([`dst`]), the training-loop driver ([`train`]), the PJRT runtime
+//!   that executes AOT-compiled JAX programs ([`runtime`]), the condensed
+//!   sparse inference engine and online-inference server ([`inference`]),
+//!   plus the analysis substrates the paper's evaluation needs
+//!   ([`stats`], [`flops`]) and one harness per paper table/figure
+//!   ([`exp`]).
+//! * **L2** — `python/compile/model.py`: JAX models (MLP/CNN/transformer)
+//!   lowered once to HLO text (`make artifacts`).
+//! * **L1** — `python/compile/kernels/`: Pallas kernels (the condensed
+//!   constant-fan-in matmul of paper Algorithm 1, and the masked training
+//!   matmul), called from L2 so they lower into the same HLO.
+//!
+//! Python never runs on the training or request path.
+
+pub mod bench;
+pub mod data;
+pub mod dst;
+pub mod exp;
+pub mod flops;
+pub mod inference;
+pub mod runtime;
+pub mod sparsity;
+pub mod stats;
+pub mod tensor;
+pub mod train;
+pub mod util;

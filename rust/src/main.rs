@@ -1,0 +1,244 @@
+//! srigl — CLI entrypoint for the SRigL reproduction (L3 coordinator).
+//!
+//! Subcommands:
+//!   exp <id> [flags]     run a paper table/figure harness (exp --list)
+//!   train [flags]        train one configuration and report
+//!   serve [flags]        run the online-inference server benchmark
+//!   check                verify artifacts load and execute
+//!   list                 list models in the artifact manifest
+
+use anyhow::Result;
+
+use srigl::data;
+use srigl::exp;
+use srigl::inference::server::{serve, ServeConfig, ServeMode};
+use srigl::inference::LayerBundle;
+use srigl::runtime::{Manifest, Runtime};
+use srigl::sparsity::Distribution;
+use srigl::train::{LrSchedule, Method, Session, TrainConfig};
+use srigl::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "srigl — Dynamic Sparse Training with Structured Sparsity (ICLR 2024 reproduction)
+
+USAGE:
+  srigl exp <id> [--steps N] [--seeds N] [--sparsities a,b] [--gamma G] ...
+  srigl exp --list
+  srigl train --model cnn_proxy --method srigl --sparsity 0.9 [--steps N]
+              [--gamma 0.3] [--no-ablation] [--dist erk|uniform] [--seed S]
+  srigl serve [--sparsity 0.9] [--requests N] [--batched MAX]
+  srigl check
+  srigl list"
+    );
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("exp") => {
+            if args.has("list") || args.positional.len() < 2 {
+                exp::list();
+                return Ok(());
+            }
+            exp::run(&args.positional[1], &args)
+        }
+        Some("train") => cmd_train(&args),
+        Some("srste") => cmd_srste(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("check") => cmd_check(),
+        Some("list") => cmd_list(),
+        _ => {
+            usage();
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    // --config file.json loads the full config; CLI flags are ignored then.
+    let cfg = if let Some(path) = args.get("config") {
+        srigl::train::config_file::load(std::path::Path::new(path))?
+    } else {
+        let model = args.get_or("model", "cnn_proxy");
+        let steps: usize = args.parse_or("steps", 300)?;
+        let gamma: f64 = args.parse_or("gamma", 0.3)?;
+        let method =
+            Method::parse(&args.get_or("method", "srigl"), !args.has("no-ablation"), gamma)?;
+        let dist: Distribution = args.get_or("dist", "erk").parse()?;
+        TrainConfig {
+            model,
+            method,
+            sparsity: args.parse_or("sparsity", 0.9)?,
+            distribution: dist,
+            total_steps: steps,
+            delta_t: args.parse_or("delta-t", (steps / 15).max(5))?,
+            alpha: args.parse_or("alpha", 0.3)?,
+            lr: LrSchedule::step_decay(
+                args.parse_or("lr", 0.1)?,
+                &[steps / 2, 3 * steps / 4],
+                0.2,
+            ),
+            grad_accum: args.parse_or("grad-accum", 1)?,
+            seed: args.parse_or("seed", 0)?,
+            eval_batches: args.parse_or("eval-batches", 8)?,
+            dense_first_layer: args.has("dense-first-layer"),
+        }
+    };
+    let (model, method, sparsity, steps) =
+        (cfg.model.clone(), cfg.method, cfg.sparsity, cfg.total_steps);
+    let sess = Session::open()?;
+    let mut tr = sess.trainer(cfg)?;
+    if let Some(dir) = args.get("load") {
+        let ck = srigl::train::Checkpoint::load(std::path::Path::new(dir))?;
+        println!("restored checkpoint from {dir} (step {})", ck.step);
+        tr.restore(ck)?;
+    }
+    println!(
+        "training {model} / {} @ {:.0}% sparsity for {steps} steps ({} params)",
+        method.label(),
+        sparsity * 100.0,
+        tr.entry.param_count
+    );
+    let rep = tr.run()?;
+    if let Some(dir) = args.get("save") {
+        tr.checkpoint(steps).save(std::path::Path::new(dir))?;
+        println!("checkpoint saved to {dir}");
+    }
+    let n = rep.losses.len();
+    println!(
+        "loss: first={:.4} mid={:.4} last={:.4}",
+        rep.losses.first().unwrap_or(&f32::NAN),
+        rep.losses.get(n / 2).unwrap_or(&f32::NAN),
+        rep.losses.last().unwrap_or(&f32::NAN)
+    );
+    println!("eval {} = {:.4}", rep.eval_kind, rep.eval_metric);
+    println!(
+        "final sparsity = {:.2}% | ITOP = {:.3} | {:.1}s ({:.2} steps/s)",
+        rep.final_sparsity * 100.0,
+        rep.itop_rate,
+        rep.wall_s,
+        rep.throughput
+    );
+    for (name, counts) in tr.mask_stats() {
+        let top = srigl::stats::LayerTopology::from_counts(&name, &counts);
+        println!(
+            "  {name}: {}/{} neurons active, fan-in mean {:.1} (max {})",
+            top.active_neurons, top.neurons, top.fan_in_mean, top.fan_in_max
+        );
+    }
+    Ok(())
+}
+
+/// SR-STE baseline (Zhou et al. 2021): dense-to-sparse N:M training.
+fn cmd_srste(args: &Args) -> Result<()> {
+    let cfg = srigl::train::SrSteConfig {
+        model: args.get_or("model", "mlp_proxy"),
+        n: args.parse_or("n", 1)?,
+        m: args.parse_or("m", 4)?,
+        steps: args.parse_or("steps", 300)?,
+        lr: args.parse_or("lr", 0.05)?,
+        lambda_w: args.parse_or("lambda", 2e-4)?,
+        momentum: 0.9,
+        seed: args.parse_or("seed", 0)?,
+        eval_batches: args.parse_or("eval-batches", 8)?,
+    };
+    let sess = Session::open()?;
+    println!("SR-STE {}:{} on {} ({} steps; dense shadow weights)", cfg.n, cfg.m, cfg.model, cfg.steps);
+    let rep = srigl::train::train_srste(&sess, &cfg)?;
+    println!(
+        "loss {:.3} -> {:.3} | eval {} = {:.4} | sparsity {:.1}% | {:.2} steps/s (compare `srigl train`)",
+        rep.losses.first().unwrap_or(&f32::NAN),
+        rep.losses.last().unwrap_or(&f32::NAN),
+        rep.eval_kind,
+        rep.eval_metric,
+        rep.final_sparsity * 100.0,
+        rep.throughput
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let sparsity: f64 = args.parse_or("sparsity", 0.9)?;
+    let n_requests: usize = args.parse_or("requests", 500)?;
+    let threads: usize = args.parse_or("threads", 1)?;
+    let mode = match args.get("batched") {
+        Some(v) => ServeMode::Batched { max_batch: v.parse()? },
+        None => ServeMode::Online,
+    };
+    let bundle = LayerBundle::synth(
+        exp::timings::VIT_FF_N,
+        exp::timings::VIT_FF_D,
+        sparsity,
+        exp::timings::ablated_frac_for(sparsity),
+        42,
+    );
+    println!(
+        "online-inference server: ViT FF layer @ {:.0}% sparsity, {n_requests} requests",
+        sparsity * 100.0
+    );
+    for kernel in bundle.kernels() {
+        let stats = serve(
+            kernel,
+            &ServeConfig {
+                mode,
+                n_requests,
+                mean_interarrival: std::time::Duration::from_micros(args.parse_or("gap-us", 0u64)?),
+                threads,
+                seed: 1,
+            },
+        );
+        println!(
+            "  {:<11} p50={:>8.1}us p99={:>8.1}us mean_batch={:.1} throughput={:.0} req/s",
+            kernel.name(),
+            stats.p50_us,
+            stats.p99_us,
+            stats.mean_batch,
+            stats.throughput_rps
+        );
+    }
+    Ok(())
+}
+
+fn cmd_check() -> Result<()> {
+    let man = Manifest::load_default()?;
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    for (name, entry) in &man.models {
+        for prog in entry.programs.keys() {
+            let p = man.program_path(entry, prog)?;
+            rt.load(&p)?;
+        }
+        println!("  model {name}: {} programs compile OK", entry.programs.len());
+    }
+    for (name, c) in &man.condensed {
+        rt.load(&man.dir.join(&c.file))?;
+        println!("  condensed {name}: compiles OK");
+    }
+    println!("artifacts check passed");
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let man = Manifest::load_default()?;
+    println!("{:<12} {:>12} {:>7} {:>6}  task", "model", "params", "sparse", "batch");
+    for (name, e) in &man.models {
+        let ns = e.sparse_indices().len();
+        println!("{:<12} {:>12} {:>7} {:>6}  {}", name, e.param_count, ns, e.batch, e.task);
+    }
+    for (name, c) in &man.condensed {
+        println!("condensed {name}: ({}x{}) k={} batch={}", c.n, c.d, c.k, c.batch);
+    }
+    if let Some(e) = man.models.values().next() {
+        let ds = data::for_model(e, 0);
+        println!("dataset for {}: {}", e.name, ds.name());
+    }
+    Ok(())
+}

@@ -1,0 +1,199 @@
+//! artifacts/manifest.json — the contract between the python AOT compiler
+//! (L2) and the rust runtime (L3): every program's file name plus the
+//! canonical argument ordering (params, momenta, masks, x, y, lr) and the
+//! per-parameter metadata (shape, sparse flag, fan-in, init spec).
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub sparse: bool,
+    pub fan_in: usize,
+    pub init: String,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+#[derive(Clone, Debug)]
+pub struct Hyper {
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub label_smoothing: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub batch: usize,
+    pub task: String, // "classify" | "lm"
+    pub num_classes: usize,
+    pub x: IoSpec,
+    pub y: IoSpec,
+    pub params: Vec<ParamInfo>,
+    pub hyper: Hyper,
+    pub param_count: usize,
+    /// program name -> artifact file name
+    pub programs: BTreeMap<String, String>,
+}
+
+impl ModelEntry {
+    pub fn sparse_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.sparse)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CondensedEntry {
+    pub name: String,
+    pub file: String,
+    pub batch: usize,
+    pub d: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub condensed: BTreeMap<String, CondensedEntry>,
+}
+
+impl Manifest {
+    /// Default artifacts directory: $SRIGL_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SRIGL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> Result<Manifest> {
+        Manifest::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&src).with_context(|| format!("parsing {path:?}"))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root.get("models")?.as_obj()? {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        let mut condensed = BTreeMap::new();
+        for (name, c) in root.get("condensed")?.as_obj()? {
+            condensed.insert(
+                name.clone(),
+                CondensedEntry {
+                    name: name.clone(),
+                    file: c.get("file")?.as_str()?.to_string(),
+                    batch: c.get("batch")?.as_usize()?,
+                    d: c.get("d")?.as_usize()?,
+                    n: c.get("n")?.as_usize()?,
+                    k: c.get("k")?.as_usize()?,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models, condensed })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name:?} not in manifest ({:?})", self.models.keys()))
+    }
+
+    pub fn program_path(&self, entry: &ModelEntry, program: &str) -> Result<PathBuf> {
+        let file = entry
+            .programs
+            .get(program)
+            .ok_or_else(|| anyhow::anyhow!("program {program:?} missing for {}", entry.name))?;
+        Ok(self.dir.join(file))
+    }
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        shape: j.get("shape")?.as_arr()?.iter().map(|v| v.as_usize()).collect::<Result<_>>()?,
+        dtype: j.get("dtype")?.as_str()?.to_string(),
+    })
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelEntry> {
+    let mut params = Vec::new();
+    for p in m.get("params")?.as_arr()? {
+        params.push(ParamInfo {
+            name: p.get("name")?.as_str()?.to_string(),
+            shape: p.get("shape")?.as_arr()?.iter().map(|v| v.as_usize()).collect::<Result<_>>()?,
+            sparse: p.get("sparse")?.as_bool()?,
+            fan_in: p.get("fan_in")?.as_usize()?,
+            init: p.get("init")?.as_str()?.to_string(),
+        });
+    }
+    let h = m.get("hyper")?;
+    let mut programs = BTreeMap::new();
+    for (k, v) in m.get("programs")?.as_obj()? {
+        programs.insert(k.clone(), v.as_str()?.to_string());
+    }
+    Ok(ModelEntry {
+        name: name.to_string(),
+        batch: m.get("batch")?.as_usize()?,
+        task: m.get("task")?.as_str()?.to_string(),
+        num_classes: m.get("num_classes")?.as_usize()?,
+        x: parse_io(m.get("x")?)?,
+        y: parse_io(m.get("y")?)?,
+        params,
+        hyper: Hyper {
+            momentum: h.get("momentum")?.as_f64()?,
+            weight_decay: h.get("weight_decay")?.as_f64()?,
+            label_smoothing: h.get("label_smoothing")?.as_f64()?,
+        },
+        param_count: m.get("param_count")?.as_usize()?,
+        programs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.model("mlp_tiny").unwrap();
+        assert_eq!(e.batch, 32);
+        assert!(e.params.iter().any(|p| p.sparse));
+        assert!(e.programs.contains_key("train_step"));
+        assert!(m.condensed.contains_key("cond_tiny"));
+        // param_count is consistent with shapes
+        let total: usize = e.params.iter().map(|p| p.numel()).sum();
+        assert_eq!(total, e.param_count);
+    }
+}

@@ -1,0 +1,177 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
+//! them on the XLA CPU client. This is the only place the `xla` crate is
+//! touched; everything above works with host [`Tensor`]s.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+//! Programs are compiled once and cached per process.
+
+pub mod manifest;
+
+pub use manifest::{CondensedEntry, Manifest, ModelEntry, ParamInfo};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+
+/// Shared PJRT CPU client. Creating a client is expensive (~100ms) and the
+/// underlying library dislikes multiple clients per process, so hold one.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Program> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+        Ok(Program { exe, name: path.file_name().unwrap().to_string_lossy().into_owned() })
+    }
+
+    /// Load a model program by manifest entry + program name.
+    pub fn load_program(&self, man: &Manifest, entry: &ModelEntry, program: &str) -> Result<Program> {
+        self.load(&man.program_path(entry, program)?)
+    }
+}
+
+/// A compiled executable. All our programs return a tuple (the AOT side
+/// lowers with `return_tuple=True`), so `run` always yields a Vec.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Program {
+    /// Execute with owned or borrowed literals (borrowed lets callers
+    /// reuse cached input literals without a deep copy — §Perf iter. 4).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tensor <-> Literal marshalling
+// ---------------------------------------------------------------------------
+
+pub fn tensor_to_lit(t: &Tensor) -> Result<xla::Literal> {
+    if t.shape.is_empty() {
+        return Ok(xla::Literal::scalar(t.data[0]));
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+pub fn f32s_to_lit(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn i32s_to_lit(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>()?;
+    anyhow::ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "literal size {} != shape {:?}",
+        data.len(),
+        shape
+    );
+    Ok(Tensor::from_vec(shape, data))
+}
+
+pub fn lit_to_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.to_vec::<f32>()?[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).unwrap())
+        } else {
+            eprintln!("skipping: run `make artifacts`");
+            None
+        }
+    }
+
+    #[test]
+    fn condensed_kernel_roundtrip_through_pjrt() {
+        // Execute the AOT'd Pallas condensed kernel (L1) from rust (L3) and
+        // check the numerics against a host-side reference — the full
+        // three-layer stack in one test.
+        let Some(man) = artifacts_ready() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let e = &man.condensed["cond_tiny"];
+        let prog = rt.load(&man.dir.join(&e.file)).unwrap();
+
+        let mut rng = crate::util::rng::Rng::new(0);
+        let x = Tensor::normal(&[e.batch, e.d], 1.0, &mut rng);
+        let w = Tensor::normal(&[e.n, e.k], 1.0, &mut rng);
+        let mut idx = vec![0i32; e.n * e.k];
+        for r in 0..e.n {
+            for (c, j) in rng.choose_k(e.d, e.k).into_iter().enumerate() {
+                idx[r * e.k + c] = j as i32;
+            }
+        }
+
+        let out = prog
+            .run(&[
+                tensor_to_lit(&x).unwrap(),
+                tensor_to_lit(&w).unwrap(),
+                i32s_to_lit(&[e.n, e.k], &idx).unwrap(),
+            ])
+            .unwrap();
+        let got = lit_to_tensor(&out[0], &[e.batch, e.n]).unwrap();
+
+        // host reference: out[b, r] = sum_c x[b, idx[r,c]] * w[r, c]
+        for b in 0..e.batch {
+            for r in 0..e.n {
+                let mut acc = 0f32;
+                for c in 0..e.k {
+                    acc += x.data[b * e.d + idx[r * e.k + c] as usize] * w.data[r * e.k + c];
+                }
+                let gotv = got.data[b * e.n + r];
+                assert!((acc - gotv).abs() < 1e-4 * acc.abs().max(1.0), "({b},{r}): {acc} vs {gotv}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_and_reshape_marshalling() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = tensor_to_lit(&t).unwrap();
+        let back = lit_to_tensor(&lit, &[2, 3]).unwrap();
+        assert_eq!(back.data, t.data);
+        let s = Tensor::from_vec(&[], vec![7.5]);
+        let lit = tensor_to_lit(&s).unwrap();
+        assert_eq!(lit_to_f32(&lit).unwrap(), 7.5);
+    }
+}

@@ -1,0 +1,93 @@
+//! Compressed Sparse Row matrices — the *unstructured* baseline
+//! representation the paper benchmarks the condensed format against
+//! (Fig. 4 "unstructured (CSR)").
+
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// len rows+1; row r occupies indices[indptr[r]..indptr[r+1]].
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn from_dense(t: &Tensor) -> Csr {
+        let (rows, cols) = t.neuron_view();
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = t.data[r * cols + c];
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        for r in 0..self.rows {
+            for i in self.indptr[r] as usize..self.indptr[r + 1] as usize {
+                out.data[r * self.cols + self.indices[i] as usize] += self.values[i];
+            }
+        }
+        out
+    }
+
+    /// Storage bytes: values + indices + indptr.
+    pub fn storage_bytes(&self) -> usize {
+        self.values.len() * 4 + self.indices.len() * 4 + self.indptr.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::mask::Mask;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(0);
+        let m = Mask::random_per_layer(&[20, 30], 111, &mut rng);
+        let mut w = Tensor::normal(&[20, 30], 1.0, &mut rng);
+        w.mul_assign(&m.t);
+        let csr = Csr::from_dense(&w);
+        assert_eq!(csr.nnz(), 111);
+        assert_eq!(csr.to_dense().data, w.data);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let mut w = Tensor::zeros(&[3, 4]);
+        w.data[1 * 4 + 2] = 5.0;
+        let csr = Csr::from_dense(&w);
+        assert_eq!(csr.indptr, vec![0, 0, 1, 1]);
+        assert_eq!(csr.to_dense().data, w.data);
+    }
+
+    #[test]
+    fn indices_sorted_within_rows() {
+        let mut rng = Rng::new(1);
+        let m = Mask::random_per_layer(&[10, 50], 200, &mut rng);
+        let csr = Csr::from_dense(&m.t);
+        for r in 0..csr.rows {
+            let row = &csr.indices[csr.indptr[r] as usize..csr.indptr[r + 1] as usize];
+            assert!(row.windows(2).all(|p| p[0] < p[1]));
+        }
+    }
+}

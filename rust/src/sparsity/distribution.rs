@@ -1,0 +1,185 @@
+//! Per-layer sparsity distributions: uniform and Erdős–Rényi-Kernel (ERK).
+//!
+//! ERK (Mocanu et al. 2018; Evci et al. 2021) allocates density to layer
+//! `l` proportionally to `(sum of dims) / (product of dims)`, i.e. small
+//! layers stay denser. The paper uses ERK for all CNN experiments and
+//! uniform for ViT (App. D.1/D.3). Constant fan-in requires per-layer
+//! densities, which is exactly what these return — unlike N:M sparsity,
+//! which is locked to uniform (paper §2).
+
+/// Shape of one sparse layer for distribution purposes.
+#[derive(Clone, Debug)]
+pub struct LayerShape {
+    pub name: String,
+    /// Full tensor dims, neuron axis first: (n, in) or (out, in, kh, kw).
+    pub dims: Vec<usize>,
+}
+
+impl LayerShape {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// ERK raw scale: (n_out + n_in + kh + kw) / (n_out * n_in * kh * kw).
+    pub fn erk_scale(&self) -> f64 {
+        let sum: usize = self.dims.iter().sum();
+        sum as f64 / self.numel() as f64
+    }
+
+    pub fn neurons(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.dims[1..].iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Distribution {
+    Uniform,
+    Erk,
+}
+
+impl std::str::FromStr for Distribution {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "uniform" => Ok(Distribution::Uniform),
+            "erk" => Ok(Distribution::Erk),
+            other => anyhow::bail!("unknown distribution {other:?} (uniform|erk)"),
+        }
+    }
+}
+
+/// Compute per-layer *densities* (1 - sparsity) for a global sparsity
+/// target. Densities are capped at 1; ERK redistributes the excess via the
+/// standard iterative raise of the global multiplier.
+pub fn layer_densities(
+    dist: Distribution,
+    layers: &[LayerShape],
+    global_sparsity: f64,
+) -> Vec<f64> {
+    assert!((0.0..1.0).contains(&global_sparsity), "sparsity in [0,1)");
+    let density = 1.0 - global_sparsity;
+    match dist {
+        Distribution::Uniform => vec![density; layers.len()],
+        Distribution::Erk => {
+            let total: f64 = layers.iter().map(|l| l.numel() as f64).sum();
+            let budget = density * total;
+            // Layers pinned at density 1.0 (epsilon*scale >= 1).
+            let mut dense_set = vec![false; layers.len()];
+            loop {
+                let mut free_weight = 0.0; // sum over free layers of numel*scale
+                let mut dense_numel = 0.0;
+                for (i, l) in layers.iter().enumerate() {
+                    if dense_set[i] {
+                        dense_numel += l.numel() as f64;
+                    } else {
+                        free_weight += l.numel() as f64 * l.erk_scale();
+                    }
+                }
+                let remaining = budget - dense_numel;
+                assert!(
+                    remaining > 0.0,
+                    "ERK budget exhausted by dense layers (sparsity too low for these shapes)"
+                );
+                let eps = remaining / free_weight;
+                let mut changed = false;
+                for (i, l) in layers.iter().enumerate() {
+                    if !dense_set[i] && eps * l.erk_scale() >= 1.0 {
+                        dense_set[i] = true;
+                        changed = true;
+                    }
+                }
+                if !changed {
+                    return layers
+                        .iter()
+                        .enumerate()
+                        .map(|(i, l)| if dense_set[i] { 1.0 } else { eps * l.erk_scale() })
+                        .collect();
+                }
+            }
+        }
+    }
+}
+
+/// Constant fan-in per layer: k = round(density * fan_in), clamped to
+/// [1, fan_in]. The minimum of 1 mirrors the paper's minimum-salient
+/// clamp (App. E): a layer never loses all connectivity.
+pub fn fan_in_targets(layers: &[LayerShape], densities: &[f64]) -> Vec<usize> {
+    layers
+        .iter()
+        .zip(densities)
+        .map(|(l, d)| ((d * l.fan_in() as f64).round() as usize).clamp(1, l.fan_in()))
+        .collect()
+}
+
+/// Achieved global sparsity for given per-layer fan-ins (reporting).
+pub fn achieved_sparsity(layers: &[LayerShape], ks: &[usize]) -> f64 {
+    let total: usize = layers.iter().map(|l| l.numel()).sum();
+    let nnz: usize = layers.iter().zip(ks).map(|(l, &k)| l.neurons() * k).sum();
+    1.0 - nnz as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<LayerShape> {
+        vec![
+            LayerShape { name: "conv0".into(), dims: vec![16, 3, 3, 3] },
+            LayerShape { name: "conv1".into(), dims: vec![32, 16, 3, 3] },
+            LayerShape { name: "fc".into(), dims: vec![10, 64] },
+        ]
+    }
+
+    #[test]
+    fn uniform_is_flat() {
+        let d = layer_densities(Distribution::Uniform, &shapes(), 0.9);
+        assert!(d.iter().all(|&x| (x - 0.1).abs() < 1e-12));
+    }
+
+    #[test]
+    fn erk_meets_global_budget() {
+        let ls = shapes();
+        for s in [0.5, 0.8, 0.9, 0.95] {
+            let d = layer_densities(Distribution::Erk, &ls, s);
+            let total: f64 = ls.iter().map(|l| l.numel() as f64).sum();
+            let nnz: f64 = ls.iter().zip(&d).map(|(l, &di)| l.numel() as f64 * di).sum();
+            let achieved = 1.0 - nnz / total;
+            assert!((achieved - s).abs() < 1e-9, "s={s} achieved={achieved}");
+            assert!(d.iter().all(|&x| x > 0.0 && x <= 1.0), "{d:?}");
+        }
+    }
+
+    #[test]
+    fn erk_favors_small_layers() {
+        let ls = shapes();
+        let d = layer_densities(Distribution::Erk, &ls, 0.9);
+        // conv0 (432 weights) should be denser than conv1 (4608 weights)
+        assert!(d[0] > d[1], "{d:?}");
+    }
+
+    #[test]
+    fn erk_caps_at_one_high_density() {
+        // At very low sparsity the tiny layer saturates to 1.0.
+        let ls = vec![
+            LayerShape { name: "tiny".into(), dims: vec![4, 4] },
+            LayerShape { name: "big".into(), dims: vec![512, 512] },
+        ];
+        let d = layer_densities(Distribution::Erk, &ls, 0.5);
+        assert!(d[0] <= 1.0 + 1e-12 && d[1] < 1.0);
+    }
+
+    #[test]
+    fn fan_in_targets_clamped() {
+        let ls = shapes();
+        let ks = fan_in_targets(&ls, &[0.001, 0.5, 1.0]);
+        assert_eq!(ks[0], 1); // clamped up
+        assert_eq!(ks[1], 72); // 144 * 0.5
+        assert_eq!(ks[2], 64); // full fan-in
+        let s = achieved_sparsity(&ls, &ks);
+        assert!(s > 0.0 && s < 1.0);
+    }
+}

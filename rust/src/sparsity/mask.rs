@@ -1,0 +1,176 @@
+//! Constant-fan-in mask algebra.
+//!
+//! A mask is stored as an f32 {0,1} `Tensor` (the exact representation the
+//! AOT HLO multiplies into the weights), viewed as `(neurons, fan_in)` with
+//! the neuron axis first. `Mask` wraps it with the structural queries and
+//! invariant checks SRigL needs.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Mask {
+    pub t: Tensor,
+    pub neurons: usize,
+    pub fan_in: usize,
+}
+
+impl Mask {
+    pub fn from_tensor(t: Tensor) -> Mask {
+        let (neurons, fan_in) = t.neuron_view();
+        Mask { t, neurons, fan_in }
+    }
+
+    /// All-active mask (density 1).
+    pub fn dense(shape: &[usize]) -> Mask {
+        Mask::from_tensor(Tensor::ones(shape))
+    }
+
+    /// Random mask with exactly `k` active incoming weights per neuron —
+    /// the constant fan-in initial topology (SRigL).
+    pub fn random_constant_fan_in(shape: &[usize], k: usize, rng: &mut Rng) -> Mask {
+        let mut m = Mask::from_tensor(Tensor::zeros(shape));
+        assert!(k <= m.fan_in, "k={k} > fan_in={}", m.fan_in);
+        for n in 0..m.neurons {
+            for j in rng.choose_k(m.fan_in, k) {
+                m.t.data[n * m.fan_in + j] = 1.0;
+            }
+        }
+        m
+    }
+
+    /// Random mask with exactly `nnz` active weights anywhere in the layer —
+    /// the constant-per-layer initial topology (RigL/SET baselines).
+    pub fn random_per_layer(shape: &[usize], nnz: usize, rng: &mut Rng) -> Mask {
+        let mut m = Mask::from_tensor(Tensor::zeros(shape));
+        assert!(nnz <= m.t.numel());
+        for j in rng.choose_k(m.t.numel(), nnz) {
+            m.t.data[j] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn is_active(&self, neuron: usize, j: usize) -> bool {
+        self.t.data[neuron * self.fan_in + j] != 0.0
+    }
+
+    #[inline]
+    pub fn set(&mut self, neuron: usize, j: usize, on: bool) {
+        self.t.data[neuron * self.fan_in + j] = if on { 1.0 } else { 0.0 };
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.t.count_nonzero()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / self.t.numel() as f64
+    }
+
+    /// Active incoming connections per neuron.
+    pub fn fan_in_counts(&self) -> Vec<usize> {
+        (0..self.neurons)
+            .map(|n| {
+                self.t.data[n * self.fan_in..(n + 1) * self.fan_in]
+                    .iter()
+                    .filter(|v| **v != 0.0)
+                    .count()
+            })
+            .collect()
+    }
+
+    /// Neurons with at least one active weight.
+    pub fn active_neurons(&self) -> usize {
+        self.fan_in_counts().iter().filter(|&&c| c > 0).count()
+    }
+
+    /// True iff every *active* neuron has exactly `k` incoming weights —
+    /// the constant fan-in invariant (ablated neurons are all-zero rows).
+    pub fn is_constant_fan_in(&self, k: usize) -> bool {
+        self.fan_in_counts().iter().all(|&c| c == 0 || c == k)
+    }
+
+    /// Variance of fan-in across active neurons (paper Fig. 12 metric).
+    pub fn fan_in_variance(&self) -> f64 {
+        let counts: Vec<f64> = self
+            .fan_in_counts()
+            .into_iter()
+            .filter(|&c| c > 0)
+            .map(|c| c as f64)
+            .collect();
+        if counts.len() < 2 {
+            return 0.0;
+        }
+        let mean = counts.iter().sum::<f64>() / counts.len() as f64;
+        counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / counts.len() as f64
+    }
+
+    /// Fraction of positions that are currently or were ever active, for
+    /// ITOP tracking — callers fold this into an accumulator mask.
+    pub fn or_into(&self, acc: &mut Tensor) {
+        assert_eq!(acc.shape, self.t.shape);
+        for (a, m) in acc.data.iter_mut().zip(&self.t.data) {
+            if *m != 0.0 {
+                *a = 1.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_fan_in_init() {
+        let mut rng = Rng::new(0);
+        let m = Mask::random_constant_fan_in(&[32, 64], 7, &mut rng);
+        assert!(m.is_constant_fan_in(7));
+        assert_eq!(m.nnz(), 32 * 7);
+        assert_eq!(m.active_neurons(), 32);
+        assert_eq!(m.fan_in_variance(), 0.0);
+    }
+
+    #[test]
+    fn conv_shaped_mask() {
+        let mut rng = Rng::new(1);
+        let m = Mask::random_constant_fan_in(&[8, 4, 3, 3], 5, &mut rng);
+        assert_eq!(m.fan_in, 36);
+        assert!(m.is_constant_fan_in(5));
+    }
+
+    #[test]
+    fn per_layer_init_count() {
+        let mut rng = Rng::new(2);
+        let m = Mask::random_per_layer(&[16, 32], 100, &mut rng);
+        assert_eq!(m.nnz(), 100);
+        // with overwhelming probability NOT constant fan-in
+        assert!(!m.is_constant_fan_in(100 / 16) || m.fan_in_variance() == 0.0);
+    }
+
+    #[test]
+    fn set_get_density() {
+        let mut m = Mask::from_tensor(Tensor::zeros(&[2, 4]));
+        m.set(0, 1, true);
+        m.set(1, 3, true);
+        assert!(m.is_active(0, 1) && m.is_active(1, 3) && !m.is_active(0, 0));
+        assert_eq!(m.nnz(), 2);
+        assert!((m.density() - 0.25).abs() < 1e-12);
+        m.set(0, 1, false);
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn or_into_accumulates() {
+        let mut rng = Rng::new(3);
+        let mut acc = Tensor::zeros(&[8, 8]);
+        let m1 = Mask::random_constant_fan_in(&[8, 8], 2, &mut rng);
+        let m2 = Mask::random_constant_fan_in(&[8, 8], 2, &mut rng);
+        m1.or_into(&mut acc);
+        m2.or_into(&mut acc);
+        let union = acc.count_nonzero();
+        assert!(union >= m1.nnz().max(m2.nnz()));
+        assert!(union <= m1.nnz() + m2.nnz());
+    }
+}

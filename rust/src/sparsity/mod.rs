@@ -1,0 +1,13 @@
+//! Sparsity substrate: per-layer distributions (uniform/ERK), constant
+//! fan-in mask algebra, and the condensed & CSR storage formats.
+
+pub mod condensed;
+pub mod csr;
+pub mod distribution;
+pub mod mask;
+pub mod nm;
+
+pub use condensed::Condensed;
+pub use csr::Csr;
+pub use distribution::{achieved_sparsity, fan_in_targets, layer_densities, Distribution, LayerShape};
+pub use mask::Mask;

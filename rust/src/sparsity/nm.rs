@@ -1,0 +1,88 @@
+//! N:M block sparsity (paper §2): exactly N non-zeros in every contiguous
+//! block of M weights along the fan-in axis. The constant fan-in
+//! constraint SRigL learns is the special case M = full fan-in; this
+//! module provides the general form for the SR-STE baseline and for
+//! comparing representations.
+
+use crate::sparsity::mask::Mask;
+use crate::tensor::Tensor;
+
+/// Top-N-of-M magnitude projection mask: for each neuron row and each
+/// M-wide block, keep the N largest-|w| entries. Requires fan_in % m == 0.
+pub fn nm_mask(w: &Tensor, n: usize, m: usize) -> Mask {
+    let (rows, f) = w.neuron_view();
+    assert!(m >= 1 && n >= 1 && n <= m, "bad N:M = {n}:{m}");
+    assert_eq!(f % m, 0, "fan-in {f} not divisible by M={m}");
+    let mut mask = Mask::from_tensor(Tensor::zeros(&w.shape));
+    let mut idx: Vec<usize> = Vec::with_capacity(m);
+    for r in 0..rows {
+        for b in (0..f).step_by(m) {
+            idx.clear();
+            idx.extend(0..m);
+            idx.sort_by(|&a, &c| {
+                w.data[r * f + b + c]
+                    .abs()
+                    .partial_cmp(&w.data[r * f + b + a].abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            for &j in idx.iter().take(n) {
+                mask.t.data[r * f + b + j] = 1.0;
+            }
+        }
+    }
+    mask
+}
+
+/// Check the N:M invariant.
+pub fn is_nm(mask: &Mask, n: usize, m: usize) -> bool {
+    let f = mask.fan_in;
+    if f % m != 0 {
+        return false;
+    }
+    for r in 0..mask.neurons {
+        for b in (0..f).step_by(m) {
+            let cnt = (0..m).filter(|&j| mask.is_active(r, b + j)).count();
+            if cnt != n {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn projection_keeps_largest() {
+        let w = Tensor::from_vec(&[1, 8], vec![0.1, -0.9, 0.2, 0.05, 3.0, -0.1, 0.0, 2.0]);
+        let m = nm_mask(&w, 2, 4);
+        assert!(is_nm(&m, 2, 4));
+        // block 0: keep -0.9 and 0.2; block 1: keep 3.0 and 2.0
+        assert_eq!(m.t.data, vec![0., 1., 1., 0., 1., 0., 0., 1.]);
+    }
+
+    #[test]
+    fn invariant_detects_violation() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::normal(&[6, 16], 1.0, &mut rng);
+        let mut m = nm_mask(&w, 1, 4);
+        assert!(is_nm(&m, 1, 4));
+        assert_eq!(m.nnz(), 6 * 4);
+        m.set(0, 0, true);
+        m.set(0, 1, true);
+        assert!(!is_nm(&m, 1, 4));
+    }
+
+    #[test]
+    fn two_four_density_is_half() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::normal(&[16, 64], 1.0, &mut rng);
+        let m = nm_mask(&w, 2, 4);
+        assert!((m.density() - 0.5).abs() < 1e-12);
+        // 2:4 is exactly the Ampere-accelerable pattern (paper §2)
+        assert!(is_nm(&m, 2, 4));
+    }
+}

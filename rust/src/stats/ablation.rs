@@ -1,0 +1,110 @@
+//! Topology analytics over trained masks: active-neuron fractions
+//! (Fig. 3b), per-layer widths (Fig. 11), fan-in variance (Fig. 12), and
+//! the minimum-salient-weights clamp report (Fig. 10).
+
+/// Summary of one layer's topology.
+#[derive(Clone, Debug)]
+pub struct LayerTopology {
+    pub name: String,
+    pub neurons: usize,
+    pub active_neurons: usize,
+    pub fan_in_mean: f64,
+    pub fan_in_var: f64,
+    pub fan_in_max: usize,
+    pub nnz: usize,
+}
+
+impl LayerTopology {
+    pub fn from_counts(name: &str, counts: &[usize]) -> LayerTopology {
+        let neurons = counts.len();
+        let alive: Vec<usize> = counts.iter().copied().filter(|&c| c > 0).collect();
+        let nnz: usize = counts.iter().sum();
+        let mean = if alive.is_empty() {
+            0.0
+        } else {
+            alive.iter().sum::<usize>() as f64 / alive.len() as f64
+        };
+        let var = if alive.len() < 2 {
+            0.0
+        } else {
+            alive.iter().map(|&c| (c as f64 - mean).powi(2)).sum::<f64>() / alive.len() as f64
+        };
+        LayerTopology {
+            name: name.to_string(),
+            neurons,
+            active_neurons: alive.len(),
+            fan_in_mean: mean,
+            fan_in_var: var,
+            fan_in_max: alive.iter().copied().max().unwrap_or(0),
+            nnz,
+        }
+    }
+
+    /// Fraction of neurons still active — the Fig. 3b y-axis.
+    pub fn active_fraction(&self) -> f64 {
+        if self.neurons == 0 {
+            0.0
+        } else {
+            self.active_neurons as f64 / self.neurons as f64
+        }
+    }
+}
+
+/// Model-wide active-neuron percentage (Fig. 3b series point).
+pub fn active_neuron_fraction(per_layer: &[LayerTopology]) -> f64 {
+    let total: usize = per_layer.iter().map(|l| l.neurons).sum();
+    let active: usize = per_layer.iter().map(|l| l.active_neurons).sum();
+    if total == 0 {
+        0.0
+    } else {
+        active as f64 / total as f64
+    }
+}
+
+/// Fig. 10: the per-layer minimum-salient-weights threshold
+/// max(1, gamma_sal * k) the SRigL update applies.
+pub fn min_salient_per_neuron(gamma_sal: f64, k: usize) -> f64 {
+    (gamma_sal * k as f64).max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_from_counts() {
+        let t = LayerTopology::from_counts("l", &[3, 3, 0, 3, 0]);
+        assert_eq!(t.neurons, 5);
+        assert_eq!(t.active_neurons, 3);
+        assert_eq!(t.nnz, 9);
+        assert!((t.active_fraction() - 0.6).abs() < 1e-12);
+        assert_eq!(t.fan_in_mean, 3.0);
+        assert_eq!(t.fan_in_var, 0.0);
+        assert_eq!(t.fan_in_max, 3);
+    }
+
+    #[test]
+    fn variance_detects_unbalanced_fan_in() {
+        let uniform = LayerTopology::from_counts("u", &[4; 16]);
+        let skewed = LayerTopology::from_counts("s", &[1, 1, 1, 1, 28]);
+        assert_eq!(uniform.fan_in_var, 0.0);
+        assert!(skewed.fan_in_var > 50.0);
+        assert_eq!(skewed.fan_in_max, 28);
+    }
+
+    #[test]
+    fn model_fraction() {
+        let layers = vec![
+            LayerTopology::from_counts("a", &[1, 1, 0, 0]),
+            LayerTopology::from_counts("b", &[2, 2, 2, 2]),
+        ];
+        assert!((active_neuron_fraction(&layers) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_salient_clamps_to_one() {
+        assert_eq!(min_salient_per_neuron(0.3, 2), 1.0);
+        assert_eq!(min_salient_per_neuron(0.3, 10), 3.0);
+        assert_eq!(min_salient_per_neuron(0.95, 100), 95.0);
+    }
+}

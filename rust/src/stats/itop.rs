@@ -1,0 +1,78 @@
+//! In-Time Over-Parameterization rate (Liu et al. 2021c): the fraction of
+//! all prunable weights that have been active at *some* point during
+//! training. Reproduces paper Figs. 14-17.
+
+use crate::sparsity::Mask;
+use crate::tensor::Tensor;
+
+#[derive(Debug)]
+pub struct ItopTracker {
+    /// Union of every mask seen so far, per layer.
+    acc: Vec<Tensor>,
+    total: usize,
+    /// (step-index series, rate) history appended at each ingest.
+    pub history: Vec<f64>,
+}
+
+impl ItopTracker {
+    pub fn new(masks: &[Mask]) -> ItopTracker {
+        let mut acc = Vec::new();
+        let mut total = 0;
+        for m in masks {
+            total += m.t.numel();
+            let mut a = Tensor::zeros(&m.t.shape);
+            m.or_into(&mut a);
+            acc.push(a);
+        }
+        ItopTracker { acc, total, history: Vec::new() }
+    }
+
+    /// Fold in the current topology (call after every mask update).
+    pub fn ingest(&mut self, masks: &[Mask]) {
+        for (a, m) in self.acc.iter_mut().zip(masks) {
+            m.or_into(a);
+        }
+        self.history.push(self.rate());
+    }
+
+    /// Fraction of prunable parameter positions ever activated.
+    pub fn rate(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let explored: usize = self.acc.iter().map(|a| a.count_nonzero()).sum();
+        explored as f64 / self.total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rate_starts_at_density_and_grows() {
+        let mut rng = Rng::new(0);
+        let m0 = Mask::random_constant_fan_in(&[16, 32], 4, &mut rng);
+        let mut tr = ItopTracker::new(std::slice::from_ref(&m0));
+        let r0 = tr.rate();
+        assert!((r0 - 4.0 / 32.0).abs() < 1e-12);
+        // new random topology explores new positions
+        let m1 = Mask::random_constant_fan_in(&[16, 32], 4, &mut rng);
+        tr.ingest(std::slice::from_ref(&m1));
+        assert!(tr.rate() >= r0);
+        assert_eq!(tr.history.len(), 1);
+    }
+
+    #[test]
+    fn static_topology_flat_rate() {
+        let mut rng = Rng::new(1);
+        let m = Mask::random_constant_fan_in(&[8, 8], 2, &mut rng);
+        let mut tr = ItopTracker::new(std::slice::from_ref(&m));
+        let r = tr.rate();
+        for _ in 0..5 {
+            tr.ingest(std::slice::from_ref(&m));
+        }
+        assert!(tr.history.iter().all(|&h| (h - r).abs() < 1e-12));
+    }
+}

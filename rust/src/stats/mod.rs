@@ -1,0 +1,40 @@
+//! Analysis substrates for the paper's evaluation: output-norm variance
+//! theory + simulation (Fig. 1b), topology analytics (Figs. 3b, 10-12),
+//! and ITOP-rate tracking (Figs. 14-17).
+
+pub mod ablation;
+pub mod itop;
+pub mod variance;
+
+pub use ablation::{active_neuron_fraction, LayerTopology};
+pub use itop::ItopTracker;
+pub use variance::{simulate_var, var_bernoulli, var_const_fan_in, var_const_per_layer, SparsityType};
+
+/// Mean and the half-width of a 95% confidence interval (t≈1.96 normal
+/// approximation) — the format of paper Tables 2 and 9.
+pub fn mean_ci95(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len();
+    if n == 0 {
+        return (f64::NAN, f64::NAN);
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    if n == 1 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+    (mean, 1.96 * (var / n as f64).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ci95_basic() {
+        let (m, ci) = mean_ci95(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!(ci > 0.0 && ci < 2.0);
+        let (m1, ci1) = mean_ci95(&[5.0]);
+        assert_eq!((m1, ci1), (5.0, 0.0));
+    }
+}

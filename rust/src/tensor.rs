@@ -1,0 +1,121 @@
+//! Host-side tensor: a flat `Vec<f32>` plus shape. The L3 coordinator owns
+//! all training state (params/momenta/masks) in this form and marshals it
+//! to/from PJRT literals at each step (cheap memcpy on the CPU client).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Leading-axis size (the neuron axis for all our sparse layouts) and
+    /// the per-neuron fan-in (product of the remaining axes).
+    pub fn neuron_view(&self) -> (usize, usize) {
+        let n = *self.shape.first().unwrap_or(&1);
+        let fan_in = if n == 0 { 0 } else { self.numel() / n };
+        (n, fan_in)
+    }
+
+    /// He-normal init scaled by the *sparse* fan-in (Evci et al. 2022):
+    /// sigma = sqrt(2 / k) where k is the per-neuron active connection
+    /// count under the initial mask.
+    pub fn he_sparse(shape: &[usize], sparse_fan_in: usize, rng: &mut Rng) -> Tensor {
+        let sigma = (2.0 / sparse_fan_in.max(1) as f64).sqrt();
+        let mut t = Tensor::zeros(shape);
+        for v in t.data.iter_mut() {
+            *v = (rng.normal() * sigma) as f32;
+        }
+        t
+    }
+
+    pub fn normal(shape: &[usize], sigma: f64, rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        for v in t.data.iter_mut() {
+            *v = (rng.normal() * sigma) as f32;
+        }
+        t
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// Elementwise multiply (used to re-mask params after topology edits).
+    pub fn mul_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a *= b;
+        }
+    }
+
+    pub fn add_scaled(&mut self, other: &Tensor, s: f32) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|v| **v != 0.0).count()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_views() {
+        let t = Tensor::zeros(&[8, 3, 3, 2]);
+        assert_eq!(t.numel(), 144);
+        assert_eq!(t.neuron_view(), (8, 18));
+    }
+
+    #[test]
+    fn he_sparse_scale() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::he_sparse(&[64, 256], 16, &mut rng);
+        let var: f64 =
+            t.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>() / t.numel() as f64;
+        let expect = 2.0 / 16.0;
+        assert!((var - expect).abs() < 0.02 * expect * 10.0, "var={var} expect={expect}");
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let mut a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let m = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 1.0, 0.0]);
+        a.mul_assign(&m);
+        assert_eq!(a.data, vec![1.0, 0.0, 3.0, 0.0]);
+        assert_eq!(a.count_nonzero(), 2);
+        a.add_scaled(&m, 0.5);
+        assert_eq!(a.data, vec![1.5, 0.0, 3.5, 0.0]);
+        assert_eq!(a.abs_max(), 3.5);
+    }
+}

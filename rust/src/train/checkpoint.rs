@@ -1,0 +1,149 @@
+//! Checkpointing: save/restore full training state (params, momenta,
+//! masks, fan-in constraints, step counter) so long runs survive
+//! restarts and trained models can be shipped to the inference engine.
+//!
+//! Format: a directory with `state.json` (metadata + mask/param index)
+//! and `tensors.bin` (little-endian f32 blobs, offsets in the JSON).
+//! No serde available offline — the JSON side uses util::json.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::sparsity::Mask;
+use crate::tensor::Tensor;
+use crate::util::json::{arr, num, obj, s, Json};
+
+pub struct Checkpoint {
+    pub model: String,
+    pub step: usize,
+    pub params: Vec<Tensor>,
+    pub momenta: Vec<Tensor>,
+    pub masks: Vec<Mask>,
+    pub ks: Vec<usize>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut bin: Vec<u8> = Vec::new();
+        let mut entries = Vec::new();
+        let mut push_tensor = |kind: &str, i: usize, t: &Tensor, bin: &mut Vec<u8>| {
+            let offset = bin.len();
+            for v in &t.data {
+                bin.extend_from_slice(&v.to_le_bytes());
+            }
+            entries.push(obj(vec![
+                ("kind", s(kind)),
+                ("index", num(i as f64)),
+                ("shape", arr(t.shape.iter().map(|&d| num(d as f64)))),
+                ("offset", num(offset as f64)),
+                ("len", num(t.data.len() as f64)),
+            ]));
+        };
+        for (i, t) in self.params.iter().enumerate() {
+            push_tensor("param", i, t, &mut bin);
+        }
+        for (i, t) in self.momenta.iter().enumerate() {
+            push_tensor("momentum", i, t, &mut bin);
+        }
+        for (i, m) in self.masks.iter().enumerate() {
+            push_tensor("mask", i, &m.t, &mut bin);
+        }
+        let meta = obj(vec![
+            ("version", num(1.0)),
+            ("model", s(&self.model)),
+            ("step", num(self.step as f64)),
+            ("ks", arr(self.ks.iter().map(|&k| num(k as f64)))),
+            ("tensors", Json::Arr(entries)),
+        ]);
+        std::fs::File::create(dir.join("tensors.bin"))?.write_all(&bin)?;
+        std::fs::write(dir.join("state.json"), meta.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Checkpoint> {
+        let meta_src = std::fs::read_to_string(dir.join("state.json"))
+            .with_context(|| format!("reading {dir:?}/state.json"))?;
+        let meta = Json::parse(&meta_src)?;
+        if meta.get("version")?.as_usize()? != 1 {
+            bail!("unsupported checkpoint version");
+        }
+        let mut bin = Vec::new();
+        std::fs::File::open(dir.join("tensors.bin"))?.read_to_end(&mut bin)?;
+
+        let mut params = Vec::new();
+        let mut momenta = Vec::new();
+        let mut masks = Vec::new();
+        for e in meta.get("tensors")?.as_arr()? {
+            let shape: Vec<usize> =
+                e.get("shape")?.as_arr()?.iter().map(|v| v.as_usize()).collect::<Result<_>>()?;
+            let offset = e.get("offset")?.as_usize()?;
+            let len = e.get("len")?.as_usize()?;
+            let end = offset + len * 4;
+            if end > bin.len() {
+                bail!("tensor blob out of range");
+            }
+            let mut data = Vec::with_capacity(len);
+            for c in bin[offset..end].chunks_exact(4) {
+                data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            let t = Tensor::from_vec(&shape, data);
+            match e.get("kind")?.as_str()? {
+                "param" => params.push(t),
+                "momentum" => momenta.push(t),
+                "mask" => masks.push(Mask::from_tensor(t)),
+                other => bail!("unknown tensor kind {other:?}"),
+            }
+        }
+        Ok(Checkpoint {
+            model: meta.get("model")?.as_str()?.to_string(),
+            step: meta.get("step")?.as_usize()?,
+            params,
+            momenta,
+            masks,
+            ks: meta.get("ks")?.as_arr()?.iter().map(|v| v.as_usize()).collect::<Result<_>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("srigl_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(0);
+        let ck = Checkpoint {
+            model: "mlp_tiny".into(),
+            step: 123,
+            params: vec![Tensor::normal(&[4, 8], 1.0, &mut rng), Tensor::normal(&[4], 1.0, &mut rng)],
+            momenta: vec![Tensor::zeros(&[4, 8]), Tensor::zeros(&[4])],
+            masks: vec![Mask::random_constant_fan_in(&[4, 8], 3, &mut rng)],
+            ks: vec![3],
+        };
+        let dir = tmpdir("roundtrip");
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.model, "mlp_tiny");
+        assert_eq!(back.step, 123);
+        assert_eq!(back.params.len(), 2);
+        assert_eq!(back.params[0].data, ck.params[0].data);
+        assert_eq!(back.params[0].shape, vec![4, 8]);
+        assert_eq!(back.masks[0].t.data, ck.masks[0].t.data);
+        assert_eq!(back.ks, vec![3]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_missing_fails() {
+        assert!(Checkpoint::load(Path::new("/nonexistent/ckpt")).is_err());
+    }
+}

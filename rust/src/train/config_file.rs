@@ -1,0 +1,152 @@
+//! JSON experiment-config files: the launcher-facing config system.
+//!
+//! ```json
+//! {
+//!   "model": "cnn_proxy", "method": "srigl", "sparsity": 0.9,
+//!   "gamma_sal": 0.3, "ablation": true, "distribution": "erk",
+//!   "steps": 600, "delta_t": 40, "alpha": 0.3,
+//!   "lr": {"kind": "step", "base": 0.05, "drops": [300, 450], "factor": 0.2},
+//!   "grad_accum": 1, "seed": 0, "eval_batches": 8,
+//!   "dense_first_layer": false
+//! }
+//! ```
+//!
+//! `srigl train --config path.json` loads one of these; missing keys fall
+//! back to the defaults below, so minimal configs stay minimal.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use super::{LrSchedule, Method, TrainConfig};
+use crate::sparsity::Distribution;
+use crate::util::json::Json;
+
+pub fn load(path: &Path) -> Result<TrainConfig> {
+    let src = std::fs::read_to_string(path)?;
+    parse(&src)
+}
+
+pub fn parse(src: &str) -> Result<TrainConfig> {
+    let j = Json::parse(src)?;
+    let get_f = |k: &str, d: f64| -> Result<f64> {
+        Ok(match j.opt(k) {
+            Some(v) => v.as_f64()?,
+            None => d,
+        })
+    };
+    let get_u = |k: &str, d: usize| -> Result<usize> {
+        Ok(match j.opt(k) {
+            Some(v) => v.as_usize()?,
+            None => d,
+        })
+    };
+    let get_b = |k: &str, d: bool| -> Result<bool> {
+        Ok(match j.opt(k) {
+            Some(v) => v.as_bool()?,
+            None => d,
+        })
+    };
+    let steps = get_u("steps", 300)?;
+    let method = Method::parse(
+        j.opt("method").map(|v| v.as_str()).transpose()?.unwrap_or("srigl"),
+        get_b("ablation", true)?,
+        get_f("gamma_sal", 0.3)?,
+    )?;
+    let dist: Distribution = j
+        .opt("distribution")
+        .map(|v| v.as_str())
+        .transpose()?
+        .unwrap_or("erk")
+        .parse()?;
+    let lr = match j.opt("lr") {
+        None => LrSchedule::step_decay(0.05, &[steps / 2, 3 * steps / 4], 0.2),
+        Some(Json::Num(v)) => LrSchedule::Const(*v as f32),
+        Some(spec) => {
+            let kind = spec.get("kind")?.as_str()?;
+            match kind {
+                "const" => LrSchedule::Const(spec.get("base")?.as_f64()? as f32),
+                "step" => {
+                    let drops: Vec<usize> = spec
+                        .get("drops")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_usize())
+                        .collect::<Result<_>>()?;
+                    LrSchedule::StepDecay {
+                        base: spec.get("base")?.as_f64()? as f32,
+                        drops,
+                        factor: spec.get("factor")?.as_f64()? as f32,
+                    }
+                }
+                "warmup_cosine" => LrSchedule::WarmupCosine {
+                    max: spec.get("max")?.as_f64()? as f32,
+                    warmup: spec.get("warmup")?.as_usize()?,
+                },
+                other => bail!("unknown lr kind {other:?}"),
+            }
+        }
+    };
+    Ok(TrainConfig {
+        model: j
+            .opt("model")
+            .map(|v| v.as_str())
+            .transpose()?
+            .unwrap_or("cnn_proxy")
+            .to_string(),
+        method,
+        sparsity: get_f("sparsity", 0.9)?,
+        distribution: dist,
+        total_steps: steps,
+        delta_t: get_u("delta_t", (steps / 15).max(5))?,
+        alpha: get_f("alpha", 0.3)?,
+        lr,
+        grad_accum: get_u("grad_accum", 1)?,
+        seed: get_u("seed", 0)? as u64,
+        eval_batches: get_u("eval_batches", 8)?,
+        dense_first_layer: get_b("dense_first_layer", false)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_config_defaults() {
+        let c = parse(r#"{"model": "mlp_tiny"}"#).unwrap();
+        assert_eq!(c.model, "mlp_tiny");
+        assert_eq!(c.total_steps, 300);
+        assert!(matches!(c.method, Method::SRigL { ablation: true, .. }));
+        assert!(matches!(c.lr, LrSchedule::StepDecay { .. }));
+    }
+
+    #[test]
+    fn full_config() {
+        let c = parse(
+            r#"{
+              "model": "vit_proxy", "method": "rigl", "sparsity": 0.95,
+              "distribution": "uniform", "steps": 100, "delta_t": 10,
+              "alpha": 0.2, "lr": {"kind": "warmup_cosine", "max": 0.003, "warmup": 16},
+              "grad_accum": 8, "seed": 7, "dense_first_layer": true
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.model, "vit_proxy");
+        assert!(matches!(c.method, Method::RigL));
+        assert_eq!(c.sparsity, 0.95);
+        assert_eq!(c.grad_accum, 8);
+        assert!(c.dense_first_layer);
+        assert!(matches!(c.lr, LrSchedule::WarmupCosine { warmup: 16, .. }));
+    }
+
+    #[test]
+    fn scalar_lr_is_const() {
+        let c = parse(r#"{"lr": 0.01}"#).unwrap();
+        assert_eq!(c.lr, LrSchedule::Const(0.01));
+    }
+
+    #[test]
+    fn bad_method_rejected() {
+        assert!(parse(r#"{"method": "magic"}"#).is_err());
+    }
+}

@@ -1,0 +1,70 @@
+//! Learning-rate schedules used across the paper's recipes (App. D):
+//! step decay (ResNets), linear warm-up + cosine (ViT), constant.
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    Const(f32),
+    /// Multiply by `factor` at each step in `drops`.
+    StepDecay { base: f32, drops: Vec<usize>, factor: f32 },
+    /// Linear warm-up to `max` over `warmup` steps, then cosine to ~0.
+    WarmupCosine { max: f32, warmup: usize },
+}
+
+impl LrSchedule {
+    pub fn step_decay(base: f32, drops: &[usize], factor: f32) -> LrSchedule {
+        LrSchedule::StepDecay { base, drops: drops.to_vec(), factor }
+    }
+
+    pub fn at(&self, step: usize, total: usize) -> f32 {
+        match self {
+            LrSchedule::Const(v) => *v,
+            LrSchedule::StepDecay { base, drops, factor } => {
+                let n = drops.iter().filter(|&&d| step >= d).count();
+                base * factor.powi(n as i32)
+            }
+            LrSchedule::WarmupCosine { max, warmup } => {
+                if step < *warmup {
+                    max * (step + 1) as f32 / *warmup as f32
+                } else {
+                    let t = (step - warmup) as f32 / (total.saturating_sub(*warmup)).max(1) as f32;
+                    max * 0.5 * (1.0 + (std::f32::consts::PI * t.min(1.0)).cos())
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_decay_drops() {
+        let s = LrSchedule::step_decay(0.1, &[100, 200], 0.1);
+        assert!((s.at(0, 300) - 0.1).abs() < 1e-9);
+        assert!((s.at(150, 300) - 0.01).abs() < 1e-9);
+        assert!((s.at(250, 300) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = LrSchedule::WarmupCosine { max: 0.003, warmup: 10 };
+        assert!(s.at(0, 100) < s.at(9, 100));
+        assert!((s.at(9, 100) - 0.003).abs() < 1e-3 * 0.4);
+        assert!(s.at(99, 100) < 0.0005);
+        // monotone decreasing after warmup
+        let mut prev = f32::INFINITY;
+        for t in 10..100 {
+            let v = s.at(t, 100);
+            assert!(v <= prev + 1e-9);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn const_is_const() {
+        let s = LrSchedule::Const(0.5);
+        assert_eq!(s.at(0, 10), 0.5);
+        assert_eq!(s.at(9, 10), 0.5);
+    }
+}

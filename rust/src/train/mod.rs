@@ -1,0 +1,622 @@
+//! The training-loop driver: owns all state (params / momenta / masks) on
+//! the host, executes the AOT `train_step` each step, and every ΔT steps
+//! pulls dense gradients (`dense_grad`) and runs the configured topology
+//! updater — exactly the loop of paper Section 3.1 / App. D.
+//!
+//! Python is never invoked here; the HLO artifacts are the only compute.
+
+pub mod checkpoint;
+pub mod config_file;
+pub mod lr;
+pub mod srste;
+
+pub use checkpoint::Checkpoint;
+pub use lr::LrSchedule;
+pub use srste::{train_srste, SrSteConfig};
+
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::data::{self, Batch, Dataset, XData};
+use crate::dst::{
+    schedule::UpdateSchedule, LayerView, RigL, SRigL, Set, StaticSparse, TopologyUpdater,
+    UpdateStats,
+};
+use crate::runtime::{
+    self, i32s_to_lit, lit_to_f32, lit_to_tensor, scalar_f32, tensor_to_lit, Manifest, ModelEntry,
+    Program, Runtime,
+};
+use crate::sparsity::{
+    distribution::{fan_in_targets, layer_densities, Distribution, LayerShape},
+    Condensed, Mask,
+};
+use crate::stats::itop::ItopTracker;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Which DST method drives topology (paper Table 3 rows).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    Dense,
+    Static { structured: bool },
+    Set,
+    RigL,
+    SRigL { ablation: bool, gamma_sal: f64 },
+}
+
+impl Method {
+    pub fn parse(name: &str, ablation: bool, gamma_sal: f64) -> Result<Method> {
+        Ok(match name {
+            "dense" => Method::Dense,
+            "static" => Method::Static { structured: false },
+            "static_cfi" => Method::Static { structured: true },
+            "set" => Method::Set,
+            "rigl" => Method::RigL,
+            "srigl" => Method::SRigL { ablation, gamma_sal },
+            other => anyhow::bail!("unknown method {other:?}"),
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Method::Dense => "dense".into(),
+            Method::Static { structured: false } => "static".into(),
+            Method::Static { structured: true } => "static_cfi".into(),
+            Method::Set => "set".into(),
+            Method::RigL => "rigl".into(),
+            Method::SRigL { ablation: true, .. } => "srigl".into(),
+            Method::SRigL { ablation: false, .. } => "srigl_noabl".into(),
+        }
+    }
+
+    fn updater(&self) -> Box<dyn TopologyUpdater> {
+        match *self {
+            Method::Dense => Box::new(StaticSparse { structured: false }),
+            Method::Static { structured } => Box::new(StaticSparse { structured }),
+            Method::Set => Box::new(Set),
+            Method::RigL => Box::new(RigL),
+            Method::SRigL { ablation, gamma_sal } => Box::new(SRigL { ablation, gamma_sal }),
+        }
+    }
+
+    fn structured(&self) -> bool {
+        matches!(self, Method::SRigL { .. } | Method::Static { structured: true })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: String,
+    pub method: Method,
+    /// Global sparsity over the sparse params (0 for dense training).
+    pub sparsity: f64,
+    pub distribution: Distribution,
+    pub total_steps: usize,
+    pub delta_t: usize,
+    pub alpha: f64,
+    pub lr: LrSchedule,
+    /// Mini-batches averaged for the dense-gradient saliency signal
+    /// (the paper uses 8 for ResNet-50, App. D.2).
+    pub grad_accum: usize,
+    pub seed: u64,
+    pub eval_batches: usize,
+    /// Keep the first sparse layer dense (RigL's 99%-sparsity trick).
+    pub dense_first_layer: bool,
+}
+
+impl TrainConfig {
+    pub fn quick(model: &str, method: Method, sparsity: f64, steps: usize, seed: u64) -> Self {
+        TrainConfig {
+            model: model.into(),
+            method,
+            sparsity,
+            distribution: Distribution::Erk,
+            total_steps: steps,
+            delta_t: (steps / 20).max(10),
+            alpha: 0.3,
+            lr: LrSchedule::step_decay(0.1, &[steps / 2, 3 * steps / 4], 0.2),
+            grad_accum: 1,
+            seed,
+            eval_batches: 8,
+            dense_first_layer: false,
+        }
+    }
+}
+
+/// Per-update-step record (drives Figs. 3b, 11, 12, 14-17 harnesses).
+#[derive(Clone, Debug)]
+pub struct UpdateLog {
+    pub step: usize,
+    pub drop_fraction: f64,
+    pub per_layer: Vec<UpdateStats>,
+}
+
+/// Full training result: loss curve, final eval, topology history.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub config_label: String,
+    pub losses: Vec<f32>,
+    pub eval_metric: f64,
+    /// "accuracy" for classifiers, "loss" (lower better) for LMs.
+    pub eval_kind: &'static str,
+    pub updates: Vec<UpdateLog>,
+    pub final_sparsity: f64,
+    pub itop_rate: f64,
+    pub wall_s: f64,
+    /// steps/s over the whole run.
+    pub throughput: f64,
+}
+
+/// Compiled program set for one model, shareable across trainers.
+#[derive(Clone)]
+pub struct ProgramSet {
+    pub train_step: Rc<Program>,
+    pub dense_grad: Rc<Program>,
+    pub eval_logits: Rc<Program>,
+    pub loss_eval: Rc<Program>,
+}
+
+/// A session: one PJRT client + manifest + per-model compile cache. Use
+/// this when running many configs (the exp harnesses) so each model's
+/// programs compile once per process.
+pub struct Session {
+    pub rt: Runtime,
+    pub man: Manifest,
+    cache: RefCell<BTreeMap<String, ProgramSet>>,
+}
+
+impl Session {
+    pub fn open() -> Result<Session> {
+        let man = Manifest::load_default().context("loading manifest")?;
+        let rt = Runtime::cpu()?;
+        Ok(Session { rt, man, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    pub fn programs(&self, model: &str) -> Result<ProgramSet> {
+        if let Some(p) = self.cache.borrow().get(model) {
+            return Ok(p.clone());
+        }
+        let entry = self.man.model(model)?;
+        let set = ProgramSet {
+            train_step: Rc::new(self.rt.load_program(&self.man, entry, "train_step")?),
+            dense_grad: Rc::new(self.rt.load_program(&self.man, entry, "dense_grad")?),
+            eval_logits: Rc::new(self.rt.load_program(&self.man, entry, "eval_logits")?),
+            loss_eval: Rc::new(self.rt.load_program(&self.man, entry, "loss_eval")?),
+        };
+        self.cache.borrow_mut().insert(model.to_string(), set.clone());
+        Ok(set)
+    }
+
+    pub fn trainer(&self, cfg: TrainConfig) -> Result<Trainer> {
+        let programs = self.programs(&cfg.model)?;
+        let entry = self.man.model(&cfg.model)?.clone();
+        Trainer::with_programs(entry, programs, cfg)
+    }
+}
+
+/// The trainer: all state host-side, all compute via PJRT programs.
+pub struct Trainer {
+    pub entry: ModelEntry,
+    pub cfg: TrainConfig,
+    train_step: Rc<Program>,
+    dense_grad: Rc<Program>,
+    eval_logits: Rc<Program>,
+    loss_eval: Rc<Program>,
+    pub params: Vec<Tensor>,
+    pub momenta: Vec<Tensor>,
+    /// Parallel to `sparse_idx`.
+    pub masks: Vec<Mask>,
+    pub ks: Vec<usize>,
+    pub budgets: Vec<usize>,
+    pub sparse_idx: Vec<usize>,
+    dataset: Box<dyn Dataset>,
+    schedule: UpdateSchedule,
+    rng: Rng,
+    itop: ItopTracker,
+    /// Mask literals change only at topology updates (every ΔT steps);
+    /// caching them avoids re-marshalling every step (§Perf iteration 4).
+    mask_lits: RefCell<Option<Rc<Vec<xla::Literal>>>>,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, man: &Manifest, cfg: TrainConfig) -> Result<Trainer> {
+        let entry = man.model(&cfg.model)?.clone();
+        let programs = ProgramSet {
+            train_step: Rc::new(rt.load_program(man, &entry, "train_step")?),
+            dense_grad: Rc::new(rt.load_program(man, &entry, "dense_grad")?),
+            eval_logits: Rc::new(rt.load_program(man, &entry, "eval_logits")?),
+            loss_eval: Rc::new(rt.load_program(man, &entry, "loss_eval")?),
+        };
+        Trainer::with_programs(entry, programs, cfg)
+    }
+
+    pub fn with_programs(entry: ModelEntry, programs: ProgramSet, cfg: TrainConfig) -> Result<Trainer> {
+        let ProgramSet { train_step, dense_grad, eval_logits, loss_eval } = programs;
+        let mut rng = Rng::new(cfg.seed);
+        let sparse_idx = entry.sparse_indices();
+
+        // Per-layer densities + constant fan-in targets over sparse params.
+        let shapes: Vec<LayerShape> = sparse_idx
+            .iter()
+            .map(|&i| LayerShape {
+                name: entry.params[i].name.clone(),
+                dims: entry.params[i].shape.clone(),
+            })
+            .collect();
+        let sparsity = if cfg.method == Method::Dense { 0.0 } else { cfg.sparsity };
+        let densities = if sparsity == 0.0 {
+            vec![1.0; shapes.len()]
+        } else {
+            layer_densities(cfg.distribution, &shapes, sparsity)
+        };
+        let mut ks = fan_in_targets(&shapes, &densities);
+        if cfg.dense_first_layer && !ks.is_empty() {
+            ks[0] = shapes[0].fan_in();
+        }
+
+        // Masks: constant fan-in for structured methods, per-layer uniform
+        // for unstructured ones (RigL/SET/static) — same nnz budget.
+        let structured = cfg.method.structured() || sparsity == 0.0;
+        let mut masks = Vec::new();
+        let mut budgets = Vec::new();
+        for (li, shape) in shapes.iter().enumerate() {
+            let k = ks[li];
+            let nnz = shape.neurons() * k;
+            budgets.push(nnz);
+            let m = if structured || k == shape.fan_in() {
+                Mask::random_constant_fan_in(&shape.dims, k, &mut rng)
+            } else {
+                Mask::random_per_layer(&shape.dims, nnz, &mut rng)
+            };
+            masks.push(m);
+        }
+
+        // Parameter init (sparse weights scaled by sparse fan-in — Evci
+        // et al. 2022; see Tensor::he_sparse).
+        let mut params = Vec::new();
+        let mut momenta = Vec::new();
+        let mut mask_cursor = 0usize;
+        for (i, p) in entry.params.iter().enumerate() {
+            let t = match p.init.as_str() {
+                "zeros" => Tensor::zeros(&p.shape),
+                "ones" => Tensor::ones(&p.shape),
+                "he" => {
+                    let fan = if p.sparse { ks[mask_cursor] } else { p.fan_in };
+                    Tensor::he_sparse(&p.shape, fan, &mut rng)
+                }
+                s if s.starts_with("normal:") => {
+                    let sigma: f64 = s["normal:".len()..].parse().unwrap_or(0.02);
+                    Tensor::normal(&p.shape, sigma, &mut rng)
+                }
+                other => anyhow::bail!("unknown init {other:?}"),
+            };
+            let mut t = t;
+            if p.sparse {
+                t.mul_assign(&masks[mask_cursor].t);
+                mask_cursor += 1;
+            }
+            momenta.push(Tensor::zeros(&p.shape));
+            params.push(t);
+            let _ = i;
+        }
+
+        let dataset = data::for_model(&entry, cfg.seed ^ 0xda7a);
+        let schedule = UpdateSchedule {
+            delta_t: cfg.delta_t,
+            alpha: cfg.alpha,
+            t_end_frac: 0.75,
+            total_steps: cfg.total_steps,
+        };
+        let itop = ItopTracker::new(&masks);
+
+        Ok(Trainer {
+            entry,
+            cfg,
+            train_step,
+            dense_grad,
+            eval_logits,
+            loss_eval,
+            params,
+            momenta,
+            masks,
+            ks,
+            budgets,
+            sparse_idx,
+            dataset,
+            schedule,
+            rng,
+            itop,
+            mask_lits: RefCell::new(None),
+        })
+    }
+
+    fn x_lit(&self, b: &Batch) -> Result<xla::Literal> {
+        match &b.x {
+            XData::F32(v) => runtime::f32s_to_lit(&self.entry.x.shape, v),
+            XData::I32(v) => i32s_to_lit(&self.entry.x.shape, v),
+        }
+    }
+
+    fn y_lit(&self, b: &Batch) -> Result<xla::Literal> {
+        i32s_to_lit(&self.entry.y.shape, &b.y)
+    }
+
+    /// Fresh literals for params (and optionally momenta) — these change
+    /// every step so they are always re-marshalled.
+    fn state_lits(&self, with_momenta: bool) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::new();
+        for p in &self.params {
+            lits.push(tensor_to_lit(p)?);
+        }
+        if with_momenta {
+            for v in &self.momenta {
+                lits.push(tensor_to_lit(v)?);
+            }
+        }
+        Ok(lits)
+    }
+
+    /// Cached mask literals, rebuilt only after topology updates.
+    fn mask_lits(&self) -> Result<Rc<Vec<xla::Literal>>> {
+        if self.mask_lits.borrow().is_none() {
+            let mls: Vec<xla::Literal> = self
+                .masks
+                .iter()
+                .map(|m| tensor_to_lit(&m.t))
+                .collect::<Result<_>>()?;
+            *self.mask_lits.borrow_mut() = Some(Rc::new(mls));
+        }
+        Ok(self.mask_lits.borrow().as_ref().unwrap().clone())
+    }
+
+    fn invalidate_mask_cache(&self) {
+        *self.mask_lits.borrow_mut() = None;
+    }
+
+    /// One optimizer step; returns the loss.
+    pub fn step(&mut self, step_idx: usize) -> Result<f32> {
+        let batch = self.dataset.sample(&mut self.rng);
+        let mut fresh = self.state_lits(true)?;
+        fresh.push(self.x_lit(&batch)?);
+        fresh.push(self.y_lit(&batch)?);
+        fresh.push(scalar_f32(self.cfg.lr.at(step_idx, self.cfg.total_steps)));
+        let masks = self.mask_lits()?;
+        let n_state = self.params.len() * 2;
+        let inputs: Vec<&xla::Literal> = fresh[..n_state]
+            .iter()
+            .chain(masks.iter())
+            .chain(fresh[n_state..].iter())
+            .collect();
+        let out = self.train_step.run(&inputs)?;
+        let n = self.params.len();
+        for i in 0..n {
+            self.params[i] = lit_to_tensor(&out[i], &self.entry.params[i].shape)?;
+            self.momenta[i] = lit_to_tensor(&out[n + i], &self.entry.params[i].shape)?;
+        }
+        lit_to_f32(&out[2 * n])
+    }
+
+    /// Dense gradients dL/d(w.*m) for all sparse params, averaged over
+    /// `grad_accum` fresh batches.
+    pub fn dense_grads(&mut self) -> Result<Vec<Tensor>> {
+        let ns = self.sparse_idx.len();
+        let mut acc: Vec<Tensor> = self
+            .sparse_idx
+            .iter()
+            .map(|&i| Tensor::zeros(&self.entry.params[i].shape))
+            .collect();
+        let reps = self.cfg.grad_accum.max(1);
+        for _ in 0..reps {
+            let batch = self.dataset.sample(&mut self.rng);
+            let mut fresh = self.state_lits(false)?;
+            fresh.push(self.x_lit(&batch)?);
+            fresh.push(self.y_lit(&batch)?);
+            let masks = self.mask_lits()?;
+            let n_state = self.params.len();
+            let inputs: Vec<&xla::Literal> = fresh[..n_state]
+                .iter()
+                .chain(masks.iter())
+                .chain(fresh[n_state..].iter())
+                .collect();
+            let out = self.dense_grad.run(&inputs)?;
+            for j in 0..ns {
+                let g = lit_to_tensor(&out[j], &acc[j].shape)?;
+                acc[j].add_scaled(&g, 1.0 / reps as f32);
+            }
+        }
+        Ok(acc)
+    }
+
+    /// One topology update across all sparse layers.
+    pub fn update_topology(&mut self, step_idx: usize) -> Result<UpdateLog> {
+        let frac = self.schedule.drop_fraction(step_idx);
+        let grads = self.dense_grads()?;
+        let updater = self.cfg.method.updater();
+        let mut per_layer = Vec::new();
+        for (li, &pi) in self.sparse_idx.iter().enumerate() {
+            // dense_first_layer: layer 0 stays dense-static.
+            if self.cfg.dense_first_layer && li == 0 {
+                per_layer.push(UpdateStats {
+                    active_neurons: self.masks[li].active_neurons(),
+                    k: self.ks[li],
+                    ..Default::default()
+                });
+                continue;
+            }
+            let mut view = LayerView {
+                w: &mut self.params[pi],
+                v: &mut self.momenta[pi],
+                mask: &mut self.masks[li],
+                grad: &grads[li],
+                k: &mut self.ks[li],
+                budget: self.budgets[li],
+            };
+            per_layer.push(updater.update(&mut view, frac, &mut self.rng));
+        }
+        self.itop.ingest(&self.masks);
+        self.invalidate_mask_cache();
+        Ok(UpdateLog { step: step_idx, drop_fraction: frac, per_layer })
+    }
+
+    /// Evaluate: classification accuracy or LM loss over fresh batches.
+    pub fn evaluate(&mut self) -> Result<(f64, &'static str)> {
+        let n_batches = self.cfg.eval_batches.max(1);
+        // decorrelated eval stream
+        let mut eval_rng = Rng::new(self.cfg.seed ^ 0xe7a1);
+        let masks = self.mask_lits()?;
+        let n_state = self.params.len();
+        if self.entry.task == "lm" {
+            let mut total = 0f64;
+            for _ in 0..n_batches {
+                let batch = self.dataset.sample(&mut eval_rng);
+                let mut fresh = self.state_lits(false)?;
+                fresh.push(self.x_lit(&batch)?);
+                fresh.push(self.y_lit(&batch)?);
+                let inputs: Vec<&xla::Literal> = fresh[..n_state]
+                    .iter()
+                    .chain(masks.iter())
+                    .chain(fresh[n_state..].iter())
+                    .collect();
+                let out = self.loss_eval.run(&inputs)?;
+                total += lit_to_f32(&out[0])? as f64;
+            }
+            Ok((total / n_batches as f64, "loss"))
+        } else {
+            let classes = self.entry.num_classes;
+            let b = self.entry.batch;
+            let mut correct = 0usize;
+            let mut seen = 0usize;
+            for _ in 0..n_batches {
+                let batch = self.dataset.sample(&mut eval_rng);
+                let mut fresh = self.state_lits(false)?;
+                fresh.push(self.x_lit(&batch)?);
+                let inputs: Vec<&xla::Literal> = fresh[..n_state]
+                    .iter()
+                    .chain(masks.iter())
+                    .chain(fresh[n_state..].iter())
+                    .collect();
+                let out = self.eval_logits.run(&inputs)?;
+                let logits = out[0].to_vec::<f32>()?;
+                for i in 0..b {
+                    let row = &logits[i * classes..(i + 1) * classes];
+                    let pred = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .unwrap()
+                        .0;
+                    if pred == batch.y[i] as usize {
+                        correct += 1;
+                    }
+                    seen += 1;
+                }
+            }
+            Ok((correct as f64 / seen as f64, "accuracy"))
+        }
+    }
+
+    /// Achieved sparsity over the sparse params right now.
+    pub fn current_sparsity(&self) -> f64 {
+        let total: usize = self.sparse_idx.iter().map(|&i| self.entry.params[i].numel()).sum();
+        let nnz: usize = self.masks.iter().map(|m| m.nnz()).sum();
+        if total == 0 {
+            0.0
+        } else {
+            1.0 - nnz as f64 / total as f64
+        }
+    }
+
+    /// Full run: steps + scheduled topology updates + final eval.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let t0 = std::time::Instant::now();
+        let mut losses = Vec::with_capacity(self.cfg.total_steps);
+        let mut updates = Vec::new();
+        for step in 0..self.cfg.total_steps {
+            losses.push(self.step(step)?);
+            if self.cfg.method != Method::Dense && self.schedule.is_update_step(step) {
+                updates.push(self.update_topology(step)?);
+            }
+        }
+        let (eval_metric, eval_kind) = self.evaluate()?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        Ok(TrainReport {
+            config_label: format!(
+                "{}/{}/s{:.0}%",
+                self.entry.name,
+                self.cfg.method.label(),
+                self.cfg.sparsity * 100.0
+            ),
+            losses,
+            eval_metric,
+            eval_kind,
+            updates,
+            final_sparsity: self.current_sparsity(),
+            itop_rate: self.itop.rate(),
+            wall_s,
+            throughput: self.cfg.total_steps as f64 / wall_s.max(1e-9),
+        })
+    }
+
+    /// Export one trained sparse layer in the condensed representation
+    /// (requires constant fan-in — i.e. a structured method).
+    pub fn export_condensed(&self, layer: usize) -> Condensed {
+        let pi = self.sparse_idx[layer];
+        // flatten to (n, fan_in) view
+        let p = &self.params[pi];
+        let (n, f) = p.neuron_view();
+        let w2 = Tensor::from_vec(&[n, f], p.data.clone());
+        let m2 = Mask::from_tensor(Tensor::from_vec(&[n, f], self.masks[layer].t.data.clone()));
+        Condensed::from_masked(&w2, &m2)
+    }
+
+    /// Mask statistics snapshot, per sparse layer: (name, fan-in counts).
+    pub fn mask_stats(&self) -> Vec<(String, Vec<usize>)> {
+        self.sparse_idx
+            .iter()
+            .zip(&self.masks)
+            .map(|(&pi, m)| (self.entry.params[pi].name.clone(), m.fan_in_counts()))
+            .collect()
+    }
+
+    pub fn itop_rate(&self) -> f64 {
+        self.itop.rate()
+    }
+
+    /// Snapshot the full training state for [`Checkpoint::save`].
+    pub fn checkpoint(&self, step: usize) -> Checkpoint {
+        Checkpoint {
+            model: self.entry.name.clone(),
+            step,
+            params: self.params.clone(),
+            momenta: self.momenta.clone(),
+            masks: self.masks.clone(),
+            ks: self.ks.clone(),
+        }
+    }
+
+    /// Restore state from a checkpoint (shapes must match the model).
+    pub fn restore(&mut self, ck: Checkpoint) -> Result<()> {
+        anyhow::ensure!(ck.model == self.entry.name, "checkpoint is for {}", ck.model);
+        anyhow::ensure!(ck.params.len() == self.params.len(), "param count mismatch");
+        anyhow::ensure!(ck.masks.len() == self.masks.len(), "mask count mismatch");
+        for (cur, new) in self.params.iter().zip(&ck.params) {
+            anyhow::ensure!(cur.shape == new.shape, "param shape mismatch");
+        }
+        self.params = ck.params;
+        self.momenta = ck.momenta;
+        self.masks = ck.masks;
+        self.ks = ck.ks;
+        self.invalidate_mask_cache();
+        Ok(())
+    }
+}
+
+/// Convenience: build runtime+manifest once and train one config.
+pub fn train_once(cfg: TrainConfig) -> Result<TrainReport> {
+    let man = Manifest::load_default().context("loading manifest")?;
+    let rt = Runtime::cpu()?;
+    let mut t = Trainer::new(&rt, &man, cfg)?;
+    t.run()
+}

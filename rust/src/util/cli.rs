@@ -1,0 +1,126 @@
+//! Tiny declarative CLI flag parser — in-tree replacement for `clap`
+//! (offline environment). Supports `--flag value`, `--flag=value`, and
+//! boolean `--flag`, plus positional arguments.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Comma-separated list flag, e.g. `--sparsities 0.8,0.9,0.95`.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<T>()
+                        .map_err(|e| anyhow::anyhow!("--{key} item {p:?}: {e}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["exp", "table1", "--seed", "3", "--verbose", "--lr=0.1"]);
+        assert_eq!(a.positional, vec!["exp", "table1"]);
+        assert_eq!(a.get("seed"), Some("3"));
+        assert_eq!(a.get("lr"), Some("0.1"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.parse_or("seed", 0u64).unwrap(), 3);
+        assert_eq!(a.parse_or("missing", 7u64).unwrap(), 7);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["--sparsities", "0.8,0.9, 0.95"]);
+        assert_eq!(a.list_or("sparsities", &[0.5f64]).unwrap(), vec![0.8, 0.9, 0.95]);
+        assert_eq!(a.list_or("other", &[1u32, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn bool_flag_before_flag() {
+        let a = parse(&["--ablate", "--gamma", "0.3"]);
+        assert_eq!(a.get("ablate"), Some("true"));
+        assert_eq!(a.get("gamma"), Some("0.3"));
+    }
+
+    #[test]
+    fn bad_parse_reports_key() {
+        let a = parse(&["--seed", "abc"]);
+        let err = a.parse_or("seed", 0u64).unwrap_err().to_string();
+        assert!(err.contains("seed"), "{err}");
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree substrates replacing unavailable crates (offline environment);
+//! see the note in Cargo.toml and DESIGN.md §4.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod threadpool;

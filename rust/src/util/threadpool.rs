@@ -1,0 +1,111 @@
+//! Scoped data-parallel helpers — in-tree replacement for `rayon`
+//! (offline environment). Used by the inference engine's thread sweeps
+//! (paper Figs. 18-20 run 1/4/8 CPU threads).
+
+/// Run `f(chunk_index, range)` over `n` items split into `threads` nearly
+/// equal contiguous ranges, in parallel via scoped threads. `threads == 1`
+/// runs inline (no spawn overhead — matters for online batch-1 latency).
+pub fn par_ranges<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        f(0, 0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(t, lo..hi));
+        }
+    });
+}
+
+/// Parallel map over disjoint mutable row-chunks of `out` (each of width
+/// `row_width`), the shape of every kernel in the inference engine:
+/// thread t computes rows `range` of the output matrix.
+pub fn par_rows_mut<F>(out: &mut [f32], row_width: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync, // (row index, row slice)
+{
+    if row_width == 0 || out.is_empty() {
+        return;
+    }
+    let n_rows = out.len() / row_width;
+    debug_assert_eq!(out.len(), n_rows * row_width);
+    let threads = threads.max(1).min(n_rows.max(1));
+    if threads == 1 {
+        for (r, row) in out.chunks_mut(row_width).enumerate() {
+            f(r, row);
+        }
+        return;
+    }
+    let chunk_rows = n_rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut row0 = 0usize;
+        while !rest.is_empty() {
+            let take = (chunk_rows * row_width).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let f = &f;
+            let base = row0;
+            s.spawn(move || {
+                for (i, row) in head.chunks_mut(row_width).enumerate() {
+                    f(base + i, row);
+                }
+            });
+            row0 += take / row_width;
+            rest = tail;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_ranges_covers_all() {
+        for threads in [1, 2, 4, 7] {
+            for n in [0usize, 1, 5, 100] {
+                let hits = AtomicUsize::new(0);
+                par_ranges(n, threads, |_, r| {
+                    hits.fetch_add(r.len(), Ordering::Relaxed);
+                });
+                assert_eq!(hits.load(Ordering::Relaxed), n, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_rows_mut_writes_each_row_once() {
+        for threads in [1, 3, 8] {
+            let (rows, width) = (17, 5);
+            let mut out = vec![0.0f32; rows * width];
+            par_rows_mut(&mut out, width, threads, |r, row| {
+                for v in row.iter_mut() {
+                    *v += (r + 1) as f32;
+                }
+            });
+            for r in 0..rows {
+                for c in 0..width {
+                    assert_eq!(out[r * width + c], (r + 1) as f32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_width_ok() {
+        let mut out: Vec<f32> = vec![];
+        par_rows_mut(&mut out, 0, 4, |_, _| panic!("no rows"));
+    }
+}

@@ -1,0 +1,263 @@
+//! Property-based tests over the coordinator invariants (in-tree driver
+//! standing in for proptest — offline environment; see Cargo.toml).
+//!
+//! Each property runs across a randomized case grid seeded deterministically
+//! so failures are reproducible: the failing (seed, case) prints in the
+//! assertion message.
+
+use srigl::dst::{LayerView, RigL, SRigL, Set, TopologyUpdater};
+use srigl::sparsity::distribution::{
+    achieved_sparsity, fan_in_targets, layer_densities, Distribution, LayerShape,
+};
+use srigl::sparsity::{Condensed, Csr, Mask};
+use srigl::tensor::Tensor;
+use srigl::util::json::Json;
+use srigl::util::rng::Rng;
+
+const CASES: u64 = 60;
+
+struct Layer {
+    w: Tensor,
+    v: Tensor,
+    mask: Mask,
+    grad: Tensor,
+    k: usize,
+    budget: usize,
+}
+
+fn rand_layer(rng: &mut Rng, constant: bool) -> Layer {
+    let n = 4 + rng.below(40);
+    let f = 4 + rng.below(60);
+    let k = 1 + rng.below(f.min(16));
+    let mask = if constant {
+        Mask::random_constant_fan_in(&[n, f], k, rng)
+    } else {
+        Mask::random_per_layer(&[n, f], n * k, rng)
+    };
+    let mut w = Tensor::normal(&[n, f], 1.0, rng);
+    w.mul_assign(&mask.t);
+    Layer { w, v: Tensor::zeros(&[n, f]), mask, grad: Tensor::normal(&[n, f], 1.0, rng), k, budget: n * k }
+}
+
+fn view(l: &mut Layer) -> LayerView<'_> {
+    LayerView { w: &mut l.w, v: &mut l.v, mask: &mut l.mask, grad: &l.grad, k: &mut l.k, budget: l.budget }
+}
+
+fn consistent(l: &Layer, ctx: &str) {
+    for (i, &m) in l.mask.t.data.iter().enumerate() {
+        if m == 0.0 {
+            assert_eq!(l.w.data[i], 0.0, "{ctx}: live weight at masked idx {i}");
+            assert_eq!(l.v.data[i], 0.0, "{ctx}: live momentum at masked idx {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_srigl_constant_fan_in_invariant() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let mut l = rand_layer(&mut rng, true);
+        let gamma = rng.uniform();
+        let upd = SRigL { ablation: rng.uniform() < 0.7, gamma_sal: gamma };
+        for step in 0..6 {
+            let frac = rng.uniform() * 0.4;
+            let stats = upd.update(&mut view(&mut l), frac, &mut rng);
+            let ctx = format!("seed {seed} step {step} gamma {gamma:.2}");
+            assert!(l.mask.is_constant_fan_in(stats.k), "{ctx}: fan-in broken");
+            assert!(l.mask.nnz() <= l.budget, "{ctx}: budget exceeded");
+            assert_eq!(l.mask.active_neurons(), stats.active_neurons, "{ctx}");
+            assert!(stats.active_neurons >= 1, "{ctx}: layer collapsed");
+            consistent(&l, &ctx);
+        }
+    }
+}
+
+#[test]
+fn prop_srigl_ablation_monotone() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let mut l = rand_layer(&mut rng, true);
+        let upd = SRigL { ablation: true, gamma_sal: 0.3 + rng.uniform() * 0.6 };
+        let mut dead = std::collections::HashSet::new();
+        for step in 0..6 {
+            // fresh gradient each round (as the trainer provides)
+            l.grad = Tensor::normal(&l.grad.shape.clone(), 1.0, &mut rng);
+            upd.update(&mut view(&mut l), rng.uniform() * 0.4, &mut rng);
+            let counts = l.mask.fan_in_counts();
+            for (r, &c) in counts.iter().enumerate() {
+                if dead.contains(&r) {
+                    assert_eq!(c, 0, "seed {seed} step {step}: neuron {r} revived");
+                }
+                if c == 0 {
+                    dead.insert(r);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rigl_set_preserve_nnz() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2000 + seed);
+        for structured in [false, true] {
+            let mut l = rand_layer(&mut rng, structured);
+            let nnz = l.mask.nnz();
+            let updater: Box<dyn TopologyUpdater> =
+                if seed % 2 == 0 { Box::new(RigL) } else { Box::new(Set) };
+            for step in 0..5 {
+                let frac = rng.uniform() * 0.5;
+                let stats = updater.update(&mut view(&mut l), frac, &mut rng);
+                assert_eq!(l.mask.nnz(), nnz, "seed {seed} step {step}: nnz drift");
+                assert_eq!(stats.pruned, stats.grown, "seed {seed}: prune != grow");
+                consistent(&l, &format!("seed {seed} step {step}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_condensed_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(3000 + seed);
+        let mut l = rand_layer(&mut rng, true);
+        // randomly ablate some neurons to exercise the compact path
+        let n = l.mask.neurons;
+        let n_ablate = rng.below(n / 2 + 1);
+        for r in rng.choose_k(n, n_ablate) {
+            for j in 0..l.mask.fan_in {
+                l.mask.set(r, j, false);
+                l.w.data[r * l.mask.fan_in + j] = 0.0;
+            }
+        }
+        let c = Condensed::from_masked(&l.w, &l.mask);
+        assert_eq!(c.to_dense().data, l.w.data, "seed {seed}: dense roundtrip");
+        assert_eq!(c.to_mask().t.data, l.mask.t.data, "seed {seed}: mask roundtrip");
+        // CSR roundtrip on the same matrix
+        let csr = Csr::from_dense(&l.w);
+        assert_eq!(csr.to_dense().data, l.w.data, "seed {seed}: csr roundtrip");
+        assert_eq!(csr.nnz(), l.mask.nnz(), "seed {seed}: csr nnz");
+    }
+}
+
+#[test]
+fn prop_erk_budget_exact() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4000 + seed);
+        let n_layers = 2 + rng.below(5);
+        let layers: Vec<LayerShape> = (0..n_layers)
+            .map(|i| {
+                let dims = if rng.uniform() < 0.5 {
+                    vec![4 + rng.below(64), 4 + rng.below(64)]
+                } else {
+                    vec![4 + rng.below(32), 2 + rng.below(16), 3, 3]
+                };
+                LayerShape { name: format!("l{i}"), dims }
+            })
+            .collect();
+        let s = 0.5 + rng.uniform() * 0.45;
+        let d = layer_densities(Distribution::Erk, &layers, s);
+        let total: f64 = layers.iter().map(|l| l.numel() as f64).sum();
+        let nnz: f64 = layers.iter().zip(&d).map(|(l, &di)| l.numel() as f64 * di).sum();
+        assert!(
+            ((1.0 - nnz / total) - s).abs() < 1e-9,
+            "seed {seed}: ERK budget off (target {s})"
+        );
+        assert!(d.iter().all(|&x| x > 0.0 && x <= 1.0 + 1e-12), "seed {seed}: {d:?}");
+        // constant fan-in targets stay in range and near the budget
+        let ks = fan_in_targets(&layers, &d);
+        for (l, &k) in layers.iter().zip(&ks) {
+            assert!(k >= 1 && k <= l.fan_in(), "seed {seed}");
+        }
+        let ach = achieved_sparsity(&layers, &ks);
+        assert!((ach - s).abs() < 0.2, "seed {seed}: rounding drift {ach} vs {s}");
+    }
+}
+
+#[test]
+fn prop_engine_kernels_agree() {
+    use srigl::inference::{LayerBundle, LinearKernel};
+    for seed in 0..30 {
+        let mut rng = Rng::new(5000 + seed);
+        let n = 8 + rng.below(64);
+        let d = 8 + rng.below(128);
+        let sparsity = 0.5 + rng.uniform() * 0.49;
+        let ablated = rng.uniform() * 0.4;
+        let bundle = LayerBundle::synth(n, d, sparsity, ablated, seed);
+        let batch = 1 + rng.below(5);
+        let threads = 1 + rng.below(4);
+        let x: Vec<f32> = (0..batch * d).map(|_| rng.normal_f32()).collect();
+
+        let mut dense_out = vec![0f32; batch * n];
+        bundle.dense.forward(&x, batch, &mut dense_out, threads);
+        let mut csr_out = vec![0f32; batch * n];
+        bundle.csr.forward(&x, batch, &mut csr_out, threads);
+        let na = bundle.condensed.out_width();
+        let mut cond_out = vec![0f32; batch * na];
+        bundle.condensed.forward(&x, batch, &mut cond_out, threads);
+
+        for i in 0..batch * n {
+            assert!(
+                (dense_out[i] - csr_out[i]).abs() < 1e-3 * (1.0 + dense_out[i].abs()),
+                "seed {seed} idx {i}: dense vs csr"
+            );
+        }
+        for b in 0..batch {
+            for (i, &r) in bundle.condensed.c.active.iter().enumerate() {
+                let e = dense_out[b * n + r as usize];
+                let g = cond_out[b * na + i];
+                assert!(
+                    (e - g).abs() < 1e-3 * (1.0 + e.abs()),
+                    "seed {seed} b={b} r={r}: dense {e} vs condensed {g}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn rand_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => {
+                let len = rng.below(12);
+                Json::Str((0..len).map(|_| char::from(32 + rng.below(90) as u8)).collect())
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| rand_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), rand_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..CASES {
+        let mut rng = Rng::new(6000 + seed);
+        let v = rand_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e} in {text}"));
+        assert_eq!(back, v, "seed {seed}: {text}");
+    }
+}
+
+#[test]
+fn prop_drop_fraction_bounds() {
+    use srigl::dst::UpdateSchedule;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(7000 + seed);
+        let total = 50 + rng.below(2000);
+        let dt = 1 + rng.below(200);
+        let s = UpdateSchedule::rigl_default(total, dt);
+        for step in (0..total).step_by(7) {
+            let f = s.drop_fraction(step);
+            assert!((0.0..=0.3 + 1e-12).contains(&f), "seed {seed} step {step}: {f}");
+            if step >= s.t_end() {
+                assert_eq!(f, 0.0);
+                assert!(!s.is_update_step(step));
+            }
+        }
+    }
+}
