@@ -1,0 +1,66 @@
+//! Worker-pool serving bench: sweep workers x representation on a 3-layer
+//! sparse model (ViT-FF-shaped trunk), flooding the queue so throughput is
+//! compute-bound. Reports req/s and tail latency per configuration; the
+//! pool should scale with workers on multi-core hosts (on the 1-core
+//! testbed the sweep exercises coordination overhead instead — same caveat
+//! as benches/fig18_thread_sweep.rs).
+
+use std::time::Duration;
+
+use srigl::inference::server::{serve_model, ServeConfig, ServeMode};
+use srigl::inference::{Activation, LayerSpec, Repr, SparseModel};
+
+fn model_for(repr: Repr, sparsity: f64) -> SparseModel {
+    let spec = |n, act| LayerSpec { n, repr, sparsity, ablated_frac: 0.35, activation: act };
+    SparseModel::synth(
+        1024,
+        &[
+            spec(768, Activation::Relu),
+            spec(768, Activation::Relu),
+            spec(256, Activation::Identity),
+        ],
+        42,
+    )
+    .expect("valid stack")
+}
+
+fn main() {
+    let sparsity = 0.9;
+    let n_requests = 1024;
+    let max_batch = 8;
+    println!("model_serve — 3-layer 1024->768->768->256 @ {:.0}% sparsity,", sparsity * 100.0);
+    println!("{n_requests} flooded requests, max_batch={max_batch}, 1 intra-op thread\n");
+    println!(
+        "{:>11} {:>8} {:>10} {:>10} {:>12} {:>9}",
+        "repr", "workers", "p50 (us)", "p99 (us)", "req/s", "scaling"
+    );
+    for repr in Repr::ALL {
+        let model = model_for(repr, sparsity);
+        let mut base = 0.0f64;
+        for workers in [1usize, 2, 4] {
+            let stats = serve_model(
+                &model,
+                &ServeConfig {
+                    mode: ServeMode::Pooled { workers, max_batch },
+                    n_requests,
+                    mean_interarrival: Duration::ZERO,
+                    threads: 1,
+                    seed: 7,
+                },
+            );
+            if workers == 1 {
+                base = stats.throughput_rps;
+            }
+            println!(
+                "{:>11} {:>8} {:>10.1} {:>10.1} {:>12.0} {:>8.2}x",
+                repr.name(),
+                workers,
+                stats.p50_us,
+                stats.p99_us,
+                stats.throughput_rps,
+                stats.throughput_rps / base.max(1e-9)
+            );
+        }
+    }
+    println!("\n(scaling column is throughput relative to the same repr at workers=1)");
+}

@@ -10,8 +10,8 @@ use anyhow::Result;
 
 use srigl::bench::{bench5, print_table};
 use srigl::exp::timings::{ablated_frac_for, VIT_FF_D, VIT_FF_N};
-use srigl::inference::server::{serve, ServeConfig, ServeMode};
-use srigl::inference::{LayerBundle, LinearKernel};
+use srigl::inference::server::{serve, serve_model, ServeConfig, ServeMode};
+use srigl::inference::{Activation, LayerBundle, LayerSpec, LinearKernel, Repr, SparseModel};
 use srigl::runtime::{i32s_to_lit, lit_to_tensor, tensor_to_lit, Manifest, Runtime};
 use srigl::tensor::Tensor;
 use srigl::util::cli::Args;
@@ -72,8 +72,46 @@ fn main() -> Result<()> {
         );
     }
 
+    // --- multi-layer model through the worker-pool server ---
+    let spec = |n, repr, act| LayerSpec {
+        n,
+        repr,
+        sparsity,
+        ablated_frac: ablated_frac_for(sparsity),
+        activation: act,
+    };
+    let model = SparseModel::synth(
+        VIT_FF_D,
+        &[
+            spec(VIT_FF_N, Repr::Condensed, Activation::Relu),
+            spec(VIT_FF_N, Repr::Condensed, Activation::Relu),
+            spec(256, Repr::Condensed, Activation::Identity),
+        ],
+        42,
+    )?;
+    println!("\nworker-pool serving, 3-layer condensed model {}:", model.describe());
+    for workers in [1usize, 4] {
+        let stats = serve_model(
+            &model,
+            &ServeConfig {
+                mode: ServeMode::Pooled { workers, max_batch: 8 },
+                n_requests: 400,
+                mean_interarrival: std::time::Duration::ZERO,
+                threads: 1,
+                seed: 5,
+            },
+        );
+        println!(
+            "  workers={workers}  p50={:>7.1}us p99={:>7.1}us mean_batch={:.1} throughput={:>6.0} req/s",
+            stats.p50_us, stats.p99_us, stats.mean_batch, stats.throughput_rps
+        );
+    }
+
     // --- cross-check the AOT Pallas condensed kernel (L1) via PJRT ---
-    let man = Manifest::load_default()?;
+    let Ok(man) = Manifest::load_default() else {
+        println!("\n(skipping XLA cross-check: no artifacts — run `make artifacts`)");
+        return Ok(());
+    };
     if let Some(e) = man.condensed.get("cond_vitff_s90_b1") {
         if (e.k as f64 - (1.0 - sparsity) * VIT_FF_D as f64).abs() < 1.0 {
             let rt = Runtime::cpu()?;

@@ -13,7 +13,10 @@
 //! sweeps 1/4/8 CPU threads in Figs. 18-20): batch-1 splits the single
 //! output row across threads; batched splits batch rows.
 
+pub mod model;
 pub mod server;
+
+pub use model::{Activation, LayerSpec, ModelLayer, Repr, Scratch, SparseModel};
 
 use crate::sparsity::{Condensed, Csr, Mask};
 use crate::tensor::Tensor;
@@ -30,6 +33,8 @@ pub trait LinearKernel: Send + Sync {
     /// x: (batch, d) row-major; out: (batch, out_width) row-major,
     /// preallocated. `threads` >= 1.
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize);
+    /// Bytes this representation occupies (weights + indices + bias).
+    fn storage_bytes(&self) -> usize;
 }
 
 /// Split a single output row into per-thread contiguous chunks (batch-1
@@ -112,6 +117,10 @@ impl LinearKernel for DenseLayer {
         self.d
     }
 
+    fn storage_bytes(&self) -> usize {
+        (self.w.len() + self.bias.len()) * 4
+    }
+
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
         debug_assert_eq!(x.len(), batch * self.d);
         debug_assert_eq!(out.len(), batch * self.n);
@@ -164,6 +173,10 @@ impl LinearKernel for CsrLayer {
 
     fn in_width(&self) -> usize {
         self.csr.cols
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.csr.storage_bytes() + self.bias.len() * 4
     }
 
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
@@ -258,6 +271,10 @@ impl LinearKernel for StructuredLayer {
         self.d
     }
 
+    fn storage_bytes(&self) -> usize {
+        (self.w.len() + self.bias.len() + self.active.len()) * 4
+    }
+
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
         debug_assert_eq!(out.len(), batch * self.n_active);
         if batch == 1 {
@@ -309,6 +326,10 @@ impl LinearKernel for CondensedLayer {
 
     fn in_width(&self) -> usize {
         self.c.d
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.c.storage_bytes() + self.bias.len() * 4
     }
 
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
@@ -379,20 +400,11 @@ pub struct LayerBundle {
 
 impl LayerBundle {
     /// `sparsity` sets k = round(d*(1-s)); `ablated_frac` of neurons are
-    /// fully masked (what SRigL's dynamic ablation produces).
+    /// fully masked (what SRigL's dynamic ablation produces). The synthesis
+    /// recipe lives in [`model::synth_layer`] (shared with the test suites).
     pub fn synth(n: usize, d: usize, sparsity: f64, ablated_frac: f64, seed: u64) -> LayerBundle {
         let mut rng = Rng::new(seed);
-        let k = (((1.0 - sparsity) * d as f64).round() as usize).clamp(1, d);
-        let mut mask = Mask::random_constant_fan_in(&[n, d], k, &mut rng);
-        let n_ablate = ((n as f64 * ablated_frac) as usize).min(n.saturating_sub(1));
-        for &r in rng.choose_k(n, n_ablate).iter() {
-            for j in 0..d {
-                mask.set(r, j, false);
-            }
-        }
-        let mut w = Tensor::normal(&[n, d], (2.0 / k as f64).sqrt(), &mut rng);
-        w.mul_assign(&mask.t);
-        let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.01).collect();
+        let (w, mask, bias) = model::synth_layer(n, d, sparsity, ablated_frac, &mut rng);
         LayerBundle::build(w, mask, bias)
     }
 

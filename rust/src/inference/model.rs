@@ -1,0 +1,509 @@
+//! Multi-layer sparse model serving: [`SparseModel`] — an owned stack of
+//! [`LinearKernel`] layers with per-layer activations, the forward path the
+//! worker-pool server ([`crate::inference::server`]) drives.
+//!
+//! Each layer may use any of the four representations the paper benchmarks
+//! (dense / CSR / structured / condensed), mixed freely per layer via
+//! [`Repr`]. Compact representations (structured/condensed) emit only the
+//! surviving neurons; between layers the compact output is scattered back
+//! to the layer's full logical width so the next layer sees a fixed-width
+//! input regardless of representation. A fully-ablated neuron is removed
+//! from the network *including its bias* — dense/CSR kernels zero the bias
+//! of ablated rows so all four representations of the same weights are
+//! exactly equivalent end to end (the kernel-equivalence suite pins this).
+//!
+//! The forward pass is double-buffered through a caller-owned [`Scratch`]
+//! (two ping-pong activation buffers plus one compact staging buffer), so
+//! serving performs **no per-request allocation**; each server worker owns
+//! one `Scratch` sized for its `max_batch`.
+//!
+//! Construction paths:
+//! * [`SparseModel::synth`] — random SRigL-shaped stack from [`LayerSpec`]s
+//!   (benches, the `serve-model` subcommand, tests);
+//! * [`SparseModel::from_trained`] — from per-layer (weights, mask, bias)
+//!   triples, e.g. a trained [`crate::train::Trainer`]'s sparse layers via
+//!   `Trainer::export_model`;
+//! * [`SparseModel::from_stack`] — from a `runtime::manifest` stack
+//!   description (`"stacks"` section of artifacts/manifest.json).
+
+use anyhow::Result;
+
+use super::{CondensedLayer, CsrLayer, DenseLayer, LinearKernel, StructuredLayer};
+use crate::runtime::manifest::StackEntry;
+use crate::sparsity::Mask;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Per-layer nonlinearity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Identity,
+}
+
+impl Activation {
+    pub fn apply(self, xs: &mut [f32]) {
+        if self == Activation::Relu {
+            for v in xs.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Activation> {
+        match s {
+            "relu" => Ok(Activation::Relu),
+            "identity" | "none" | "linear" => Ok(Activation::Identity),
+            other => anyhow::bail!("unknown activation {other:?} (relu|identity)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::Identity => "identity",
+        }
+    }
+}
+
+/// Which layer representation to build (paper Fig. 4 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Repr {
+    Dense,
+    Csr,
+    Structured,
+    Condensed,
+}
+
+impl Repr {
+    pub const ALL: [Repr; 4] = [Repr::Dense, Repr::Csr, Repr::Structured, Repr::Condensed];
+
+    pub fn parse(s: &str) -> Result<Repr> {
+        match s {
+            "dense" => Ok(Repr::Dense),
+            "csr" => Ok(Repr::Csr),
+            "structured" => Ok(Repr::Structured),
+            "condensed" => Ok(Repr::Condensed),
+            other => anyhow::bail!("unknown repr {other:?} (dense|csr|structured|condensed)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Repr::Dense => "dense",
+            Repr::Csr => "csr",
+            Repr::Structured => "structured",
+            Repr::Condensed => "condensed",
+        }
+    }
+}
+
+/// One layer of a [`SparseModel`]: a kernel plus scatter metadata mapping
+/// its (possibly compact) output back to the layer's full logical width.
+pub struct ModelLayer {
+    kernel: Box<dyn LinearKernel>,
+    activation: Activation,
+    /// `Some(active-neuron ids)` when the kernel emits compact rows.
+    active: Option<Vec<u32>>,
+    /// Logical output width n, including ablated neurons.
+    full_width: usize,
+}
+
+impl ModelLayer {
+    /// Build one layer from (possibly unmasked) weights + mask + bias in the
+    /// requested representation. Weights are masked internally so every
+    /// representation computes the same function; ablated neurons emit 0
+    /// (their bias is dead weight and is dropped/zeroed).
+    pub fn from_weights(
+        w: &Tensor,
+        mask: &Mask,
+        bias: &[f32],
+        repr: Repr,
+        activation: Activation,
+    ) -> ModelLayer {
+        let (n, _d) = w.neuron_view();
+        assert_eq!(bias.len(), n, "bias len {} != neurons {n}", bias.len());
+        let mut wm = w.clone();
+        wm.mul_assign(&mask.t);
+        let counts = mask.fan_in_counts();
+        let bias_z: Vec<f32> = bias
+            .iter()
+            .enumerate()
+            .map(|(r, &b)| if counts[r] == 0 { 0.0 } else { b })
+            .collect();
+        let (kernel, active): (Box<dyn LinearKernel>, Option<Vec<u32>>) = match repr {
+            Repr::Dense => (Box::new(DenseLayer::new(&wm, bias_z)), None),
+            Repr::Csr => (Box::new(CsrLayer::new(&wm, bias_z)), None),
+            Repr::Structured => {
+                let l = StructuredLayer::new(&wm, mask, bias);
+                let a = l.active.clone();
+                (Box::new(l), Some(a))
+            }
+            Repr::Condensed => {
+                let l = CondensedLayer::new(&wm, mask, bias);
+                let a = l.c.active.clone();
+                (Box::new(l), Some(a))
+            }
+        };
+        // A compact form with no ablated rows is already full-width: skip
+        // the per-request scatter and write the output buffer directly.
+        let active = active.filter(|a| a.len() < n);
+        ModelLayer { kernel, activation, active, full_width: n }
+    }
+
+    pub fn in_width(&self) -> usize {
+        self.kernel.in_width()
+    }
+
+    /// Logical output width (original n, including ablated neurons).
+    pub fn out_full_width(&self) -> usize {
+        self.full_width
+    }
+
+    pub fn kernel(&self) -> &dyn LinearKernel {
+        self.kernel.as_ref()
+    }
+
+    pub fn activation(&self) -> Activation {
+        self.activation
+    }
+}
+
+/// Per-worker workspace for [`SparseModel::forward`]: two ping-pong
+/// activation buffers plus a staging buffer for compact kernel outputs.
+/// Created once per worker via [`SparseModel::make_scratch`].
+pub struct Scratch {
+    pub(crate) a: Vec<f32>,
+    pub(crate) b: Vec<f32>,
+    compact: Vec<f32>,
+    max_batch: usize,
+}
+
+impl Scratch {
+    /// A scratch for driving one bare kernel (single-layer serving).
+    pub(crate) fn single(max_batch: usize, out_width: usize) -> Scratch {
+        let max_batch = max_batch.max(1);
+        Scratch { a: vec![0.0; max_batch * out_width], b: Vec::new(), compact: Vec::new(), max_batch }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+}
+
+/// Spec for one synthesized layer of [`SparseModel::synth`].
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub n: usize,
+    pub repr: Repr,
+    pub sparsity: f64,
+    pub ablated_frac: f64,
+    pub activation: Activation,
+}
+
+/// A stack of sparse linear layers sharing one double-buffered forward.
+pub struct SparseModel {
+    layers: Vec<ModelLayer>,
+    d_in: usize,
+}
+
+impl SparseModel {
+    /// Compose pre-built layers; validates that widths chain (layer i+1's
+    /// fan-in equals layer i's full logical width).
+    pub fn new(layers: Vec<ModelLayer>) -> Result<SparseModel> {
+        anyhow::ensure!(!layers.is_empty(), "model needs at least one layer");
+        for w in layers.windows(2) {
+            anyhow::ensure!(
+                w[1].in_width() == w[0].full_width,
+                "layer width mismatch: {} feeds a layer expecting {}",
+                w[0].full_width,
+                w[1].in_width()
+            );
+        }
+        Ok(SparseModel { d_in: layers[0].in_width(), layers })
+    }
+
+    /// Synthesize an SRigL-shaped stack: constant fan-in masks at the given
+    /// sparsity with a fraction of fully-ablated neurons per layer (what
+    /// SRigL's dynamic ablation produces), He-scaled weights.
+    pub fn synth(d_in: usize, specs: &[LayerSpec], seed: u64) -> Result<SparseModel> {
+        anyhow::ensure!(!specs.is_empty(), "model needs at least one layer spec");
+        anyhow::ensure!(d_in > 0, "input width must be positive");
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::with_capacity(specs.len());
+        let mut d = d_in;
+        for spec in specs {
+            anyhow::ensure!(spec.n > 0, "layer width must be positive");
+            let (w, mask, bias) = synth_layer(spec.n, d, spec.sparsity, spec.ablated_frac, &mut rng);
+            layers.push(ModelLayer::from_weights(&w, &mask, &bias, spec.repr, spec.activation));
+            d = spec.n;
+        }
+        SparseModel::new(layers)
+    }
+
+    /// Build from trained per-layer (weights, mask, bias) triples — the
+    /// `Session`-weights path (`Trainer::export_model`). Hidden layers get
+    /// ReLU, the last layer is linear. MLP-shaped stacks only.
+    pub fn from_trained(layers: &[(Tensor, Mask, Vec<f32>)], repr: Repr) -> Result<SparseModel> {
+        anyhow::ensure!(!layers.is_empty(), "no layers to export");
+        let mut out = Vec::with_capacity(layers.len());
+        for (i, (w, m, b)) in layers.iter().enumerate() {
+            let act =
+                if i + 1 == layers.len() { Activation::Identity } else { Activation::Relu };
+            out.push(ModelLayer::from_weights(w, m, b, repr, act));
+        }
+        SparseModel::new(out)
+    }
+
+    /// Build from a manifest stack description (synthesized weights at the
+    /// described shapes/sparsities — the manifest carries no weight data).
+    pub fn from_stack(entry: &StackEntry) -> Result<SparseModel> {
+        let mut specs = Vec::with_capacity(entry.layers.len());
+        for l in &entry.layers {
+            specs.push(LayerSpec {
+                n: l.n,
+                repr: Repr::parse(&l.repr)?,
+                sparsity: l.sparsity,
+                ablated_frac: l.ablated_frac,
+                activation: Activation::parse(&l.activation)?,
+            });
+        }
+        SparseModel::synth(entry.d_in, &specs, entry.seed)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn in_width(&self) -> usize {
+        self.d_in
+    }
+
+    /// Full logical output width of the last layer.
+    pub fn out_width(&self) -> usize {
+        self.layers.last().map(|l| l.full_width).unwrap_or(0)
+    }
+
+    pub fn layers(&self) -> &[ModelLayer] {
+        &self.layers
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.kernel.storage_bytes()).sum()
+    }
+
+    /// Human-readable topology, e.g. `3072 -[condensed]-> 768(relu) -...`.
+    pub fn describe(&self) -> String {
+        let mut s = format!("{}", self.d_in);
+        for l in &self.layers {
+            s.push_str(&format!(" -[{}]-> {}", l.kernel.name(), l.full_width));
+            if l.activation == Activation::Relu {
+                s.push_str("(relu)");
+            }
+        }
+        s
+    }
+
+    /// Allocate a workspace sized for forwards up to `max_batch` rows.
+    pub fn make_scratch(&self, max_batch: usize) -> Scratch {
+        let max_batch = max_batch.max(1);
+        let maxw = self.layers.iter().map(|l| l.full_width).max().unwrap_or(1).max(1);
+        let maxc = self
+            .layers
+            .iter()
+            .filter(|l| l.active.is_some())
+            .map(|l| l.kernel.out_width())
+            .max()
+            .unwrap_or(0);
+        Scratch {
+            a: vec![0.0; max_batch * maxw],
+            b: vec![0.0; max_batch * maxw],
+            compact: vec![0.0; max_batch * maxc],
+            max_batch,
+        }
+    }
+
+    /// Run the stack on `batch` rows of `x` (row-major, width `in_width`),
+    /// returning the final activations (batch x out_width) inside `s`.
+    /// Allocation-free: ping-pongs between the two scratch buffers, staging
+    /// compact kernel outputs in `s.compact` before scattering them back to
+    /// full width (ablated neurons read 0).
+    pub fn forward<'s>(
+        &self,
+        x: &[f32],
+        batch: usize,
+        s: &'s mut Scratch,
+        threads: usize,
+    ) -> &'s [f32] {
+        assert!(batch >= 1, "batch must be >= 1");
+        assert!(batch <= s.max_batch, "batch {batch} exceeds scratch capacity {}", s.max_batch);
+        assert_eq!(x.len(), batch * self.d_in, "input size mismatch");
+        let Scratch { a, b, compact, .. } = s;
+        let mut out_is_a = true;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let (dst, src_buf): (&mut Vec<f32>, &Vec<f32>) =
+                if out_is_a { (&mut *a, &*b) } else { (&mut *b, &*a) };
+            let src: &[f32] = if i == 0 { x } else { &src_buf[..batch * layer.in_width()] };
+            let w = layer.full_width;
+            match &layer.active {
+                None => {
+                    layer.kernel.forward(src, batch, &mut dst[..batch * w], threads);
+                }
+                Some(active) => {
+                    let na = layer.kernel.out_width();
+                    let c = &mut compact[..batch * na];
+                    layer.kernel.forward(src, batch, c, threads);
+                    let d = &mut dst[..batch * w];
+                    d.fill(0.0);
+                    for bi in 0..batch {
+                        for (j, &r) in active.iter().enumerate() {
+                            d[bi * w + r as usize] = c[bi * na + j];
+                        }
+                    }
+                }
+            }
+            layer.activation.apply(&mut dst[..batch * w]);
+            out_is_a = !out_is_a;
+        }
+        let outw = batch * self.out_width();
+        if out_is_a {
+            &b[..outw]
+        } else {
+            &a[..outw]
+        }
+    }
+}
+
+/// Synthesize one SRigL-shaped layer: a constant-fan-in mask with
+/// `k = round(d*(1-sparsity))`, `ablated_frac` of neurons fully masked,
+/// He-scaled masked weights, small random bias. The single source of the
+/// synthesis recipe — `LayerBundle::synth` and the test suites reuse it.
+pub fn synth_layer(
+    n: usize,
+    d: usize,
+    sparsity: f64,
+    ablated_frac: f64,
+    rng: &mut Rng,
+) -> (Tensor, Mask, Vec<f32>) {
+    let k = (((1.0 - sparsity) * d as f64).round() as usize).clamp(1, d);
+    let mut mask = Mask::random_constant_fan_in(&[n, d], k, rng);
+    let n_ablate = ((n as f64 * ablated_frac) as usize).min(n.saturating_sub(1));
+    for &r in rng.choose_k(n, n_ablate).iter() {
+        for j in 0..d {
+            mask.set(r, j, false);
+        }
+    }
+    let mut w = Tensor::normal(&[n, d], (2.0 / k as f64).sqrt(), rng);
+    w.mul_assign(&mask.t);
+    let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.01).collect();
+    (w, mask, bias)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(n: usize, repr: Repr, act: Activation) -> LayerSpec {
+        LayerSpec { n, repr, sparsity: 0.9, ablated_frac: 0.25, activation: act }
+    }
+
+    fn three_layer(repr: Repr) -> SparseModel {
+        SparseModel::synth(
+            64,
+            &[
+                spec(48, repr, Activation::Relu),
+                spec(32, repr, Activation::Relu),
+                spec(16, repr, Activation::Identity),
+            ],
+            7,
+        )
+        .unwrap()
+    }
+
+    fn forward_vec(model: &SparseModel, x: &[f32], batch: usize) -> Vec<f32> {
+        let mut s = model.make_scratch(batch);
+        model.forward(x, batch, &mut s, 1).to_vec()
+    }
+
+    #[test]
+    fn widths_chain_and_output_shape() {
+        let m = three_layer(Repr::Condensed);
+        assert_eq!(m.depth(), 3);
+        assert_eq!(m.in_width(), 64);
+        assert_eq!(m.out_width(), 16);
+        let mut s = m.make_scratch(4);
+        let x = vec![0.5f32; 4 * 64];
+        let out = m.forward(&x, 4, &mut s, 1);
+        assert_eq!(out.len(), 4 * 16);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn mismatched_widths_rejected() {
+        let (w1, m1, b1) = synth_layer(8, 16, 0.5, 0.0, &mut Rng::new(0));
+        let (w2, m2, b2) = synth_layer(4, 9, 0.5, 0.0, &mut Rng::new(1)); // expects 9, gets 8
+        let l1 = ModelLayer::from_weights(&w1, &m1, &b1, Repr::Dense, Activation::Relu);
+        let l2 = ModelLayer::from_weights(&w2, &m2, &b2, Repr::Dense, Activation::Identity);
+        assert!(SparseModel::new(vec![l1, l2]).is_err());
+    }
+
+    #[test]
+    fn zero_widths_rejected() {
+        let s = spec(8, Repr::Dense, Activation::Identity);
+        assert!(SparseModel::synth(0, &[s.clone()], 1).is_err(), "d_in 0");
+        let z = LayerSpec { n: 0, ..s };
+        assert!(SparseModel::synth(16, &[z], 1).is_err(), "layer width 0");
+    }
+
+    #[test]
+    fn batch_equals_sequential_single_rows() {
+        let m = three_layer(Repr::Condensed);
+        let mut rng = Rng::new(3);
+        let batch = 5;
+        let x: Vec<f32> = (0..batch * 64).map(|_| rng.normal_f32()).collect();
+        let batched = forward_vec(&m, &x, batch);
+        let mut s = m.make_scratch(1);
+        for b in 0..batch {
+            let row = m.forward(&x[b * 64..(b + 1) * 64], 1, &mut s, 1);
+            for (i, (got, want)) in row.iter().zip(&batched[b * 16..(b + 1) * 16]).enumerate() {
+                assert!(
+                    (got - want).abs() < 1e-6 * (1.0 + want.abs()),
+                    "b={b} i={i}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let m = three_layer(Repr::Structured);
+        let mut s = m.make_scratch(2);
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..2 * 64).map(|_| rng.normal_f32()).collect();
+        let first = m.forward(&x, 2, &mut s, 2).to_vec();
+        let second = m.forward(&x, 2, &mut s, 2).to_vec();
+        assert_eq!(first, second, "scratch reuse must not leak state");
+    }
+
+    #[test]
+    fn describe_and_storage() {
+        let m = three_layer(Repr::Condensed);
+        let d = m.describe();
+        assert!(d.starts_with("64"), "{d}");
+        assert!(d.contains("condensed"), "{d}");
+        assert!(m.storage_bytes() > 0);
+    }
+
+    #[test]
+    fn activation_and_repr_parse() {
+        assert_eq!(Activation::parse("relu").unwrap(), Activation::Relu);
+        assert_eq!(Activation::parse("none").unwrap(), Activation::Identity);
+        assert!(Activation::parse("gelu").is_err());
+        for r in Repr::ALL {
+            assert_eq!(Repr::parse(r.name()).unwrap(), r);
+        }
+        assert!(Repr::parse("coo").is_err());
+    }
+}

@@ -1,25 +1,33 @@
 //! Online-inference server: the L3 coordination piece for the paper's
 //! §2 "Online inference" scenario — single-sample, latency-critical
 //! requests served from a queue, plus a dynamic batcher for throughput
-//! mode (the vLLM-router-shaped component of this repo).
+//! mode and a worker pool for multi-core scale-out (the vLLM-router-shaped
+//! component of this repo).
 //!
-//! Architecture: a submitter thread enqueues requests at a configured
-//! rate; the worker drains the queue — one-at-a-time in `Online` mode,
-//! up to `max_batch` at once in `Batched` mode — runs the selected layer
-//! representation, and records end-to-end latency per request.
+//! Architecture: a submitter thread enqueues requests at a configured rate
+//! into a shared [`Injector`] queue; N workers drain it — one-at-a-time in
+//! `Online` mode, up to `max_batch` at once in `Batched` mode, and across
+//! `workers` threads in `Pooled` mode — run the selected target (a single
+//! layer representation or a whole [`SparseModel`] stack) on per-worker
+//! scratch buffers, and record end-to-end latency per request. Per-worker
+//! latency records are merged into one [`LatencyStats`] at the end.
 
-use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use super::LinearKernel;
+use super::model::Scratch;
+use super::{LinearKernel, SparseModel};
 use crate::util::rng::Rng;
+use crate::util::threadpool::Injector;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ServeMode {
-    /// Strict batch-1 service (paper Fig. 4a setting).
+    /// Strict batch-1 service on one worker (paper Fig. 4a setting).
     Online,
-    /// Dynamic batching: coalesce whatever is queued, up to `max_batch`.
+    /// Dynamic batching on one worker: coalesce up to `max_batch`.
     Batched { max_batch: usize },
+    /// Worker pool: `workers` threads share the queue, each coalescing up
+    /// to `max_batch` — the multi-core serving mode.
+    Pooled { workers: usize, max_batch: usize },
 }
 
 #[derive(Clone, Debug)]
@@ -28,8 +36,17 @@ pub struct ServeConfig {
     pub n_requests: usize,
     /// Mean inter-arrival time; exponential distribution (Poisson load).
     pub mean_interarrival: Duration,
+    /// Intra-op threads *per worker* (the kernel `threads` parameter).
     pub threads: usize,
     pub seed: u64,
+}
+
+/// Raw per-worker serving record; merged via [`LatencyStats::from_workers`].
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub latencies_us: Vec<f64>,
+    pub served: usize,
+    pub batches: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -42,6 +59,29 @@ pub struct LatencyStats {
     pub max_us: f64,
     pub throughput_rps: f64,
     pub mean_batch: f64,
+}
+
+impl LatencyStats {
+    /// Merge per-worker records into aggregate statistics. Percentiles are
+    /// exact: computed over the concatenation of all workers' samples.
+    pub fn from_workers(workers: &[WorkerStats], wall_s: f64) -> LatencyStats {
+        let mut sorted: Vec<f64> =
+            workers.iter().flat_map(|w| w.latencies_us.iter().copied()).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let served: usize = workers.iter().map(|w| w.served).sum();
+        let batches: usize = workers.iter().map(|w| w.batches).sum();
+        LatencyStats {
+            n,
+            mean_us: sorted.iter().sum::<f64>() / n.max(1) as f64,
+            p50_us: percentile(&sorted, 50.0),
+            p95_us: percentile(&sorted, 95.0),
+            p99_us: percentile(&sorted, 99.0),
+            max_us: sorted.last().copied().unwrap_or(f64::NAN),
+            throughput_rps: n as f64 / wall_s.max(1e-9),
+            mean_batch: served as f64 / batches.max(1) as f64,
+        }
+    }
 }
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -57,23 +97,79 @@ struct Request {
     t_submit: Instant,
 }
 
-/// Drive `layer` with a synthetic Poisson request stream and return
-/// end-to-end latency statistics.
+/// Anything the serving loop can drive: a whole model stack or (via the
+/// blanket impl on `&dyn LinearKernel`) one bare layer representation.
+pub trait ServeTarget: Sync {
+    fn in_width(&self) -> usize;
+    fn make_scratch(&self, max_batch: usize) -> Scratch;
+    fn infer(&self, x: &[f32], batch: usize, scratch: &mut Scratch, threads: usize);
+}
+
+impl ServeTarget for SparseModel {
+    fn in_width(&self) -> usize {
+        SparseModel::in_width(self)
+    }
+
+    fn make_scratch(&self, max_batch: usize) -> Scratch {
+        SparseModel::make_scratch(self, max_batch)
+    }
+
+    fn infer(&self, x: &[f32], batch: usize, scratch: &mut Scratch, threads: usize) {
+        let _ = self.forward(x, batch, scratch, threads);
+    }
+}
+
+impl<'a> ServeTarget for &'a dyn LinearKernel {
+    fn in_width(&self) -> usize {
+        (**self).in_width()
+    }
+
+    fn make_scratch(&self, max_batch: usize) -> Scratch {
+        Scratch::single(max_batch, self.out_width())
+    }
+
+    fn infer(&self, x: &[f32], batch: usize, scratch: &mut Scratch, threads: usize) {
+        let ow = self.out_width();
+        self.forward(x, batch, &mut scratch.a[..batch * ow], threads);
+    }
+}
+
+/// Drive a single layer representation with a synthetic Poisson request
+/// stream and return end-to-end latency statistics.
 pub fn serve(layer: &dyn LinearKernel, cfg: &ServeConfig) -> LatencyStats {
-    let d = layer.in_width();
-    let (tx, rx) = mpsc::channel::<Request>();
+    serve_target(&layer, cfg)
+}
+
+/// Drive a whole [`SparseModel`] stack through the serving loop.
+pub fn serve_model(model: &SparseModel, cfg: &ServeConfig) -> LatencyStats {
+    serve_target(model, cfg)
+}
+
+/// The serving engine all modes share: `Online` and `Batched` are the
+/// 1-worker special cases of the pool.
+pub fn serve_target<T: ServeTarget>(target: &T, cfg: &ServeConfig) -> LatencyStats {
+    let (workers, max_batch) = match cfg.mode {
+        ServeMode::Online => (1, 1),
+        ServeMode::Batched { max_batch } => (1, max_batch.max(1)),
+        ServeMode::Pooled { workers, max_batch } => (workers.max(1), max_batch.max(1)),
+    };
+    let d = target.in_width();
+    let threads = cfg.threads;
     let mean_gap = cfg.mean_interarrival;
     let n_req = cfg.n_requests;
     let seed = cfg.seed;
+    let injector: Injector<Request> = Injector::new();
 
     let t_start = Instant::now();
-    std::thread::scope(|s| {
+    let worker_stats: Vec<WorkerStats> = std::thread::scope(|s| {
+        let inj = &injector;
+
         // Submitter: Poisson arrivals of random feature vectors.
         s.spawn(move || {
             let mut rng = Rng::new(seed);
             for _ in 0..n_req {
                 let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
-                let _ = tx.send(Request { x, t_submit: Instant::now() });
+                inj.push(Request { x, t_submit: Instant::now() });
                 if mean_gap > Duration::ZERO {
                     // exponential inter-arrival
                     let u = rng.uniform().max(1e-12);
@@ -81,64 +177,69 @@ pub fn serve(layer: &dyn LinearKernel, cfg: &ServeConfig) -> LatencyStats {
                     std::thread::sleep(Duration::from_secs_f64(gap.min(0.01)));
                 }
             }
+            inj.close();
         });
 
-        // Worker: drain + serve.
-        let mut latencies: Vec<f64> = Vec::with_capacity(n_req);
-        let mut batches = 0usize;
-        let mut served = 0usize;
-        let max_batch = match cfg.mode {
-            ServeMode::Online => 1,
-            ServeMode::Batched { max_batch } => max_batch.max(1),
-        };
-        let mut out = vec![0f32; max_batch * layer.out_width()];
-        let mut xbuf = vec![0f32; max_batch * d];
-        while served < n_req {
-            // blocking pop for the first element, then opportunistic drain
-            let first = match rx.recv() {
-                Ok(r) => r,
-                Err(_) => break,
-            };
-            let mut batch = vec![first];
-            while batch.len() < max_batch {
-                match rx.try_recv() {
-                    Ok(r) => batch.push(r),
-                    Err(_) => break,
-                }
-            }
-            let b = batch.len();
-            for (i, r) in batch.iter().enumerate() {
-                xbuf[i * d..(i + 1) * d].copy_from_slice(&r.x);
-            }
-            layer.forward(&xbuf[..b * d], b, &mut out[..b * layer.out_width()], cfg.threads);
-            let t_done = Instant::now();
-            for r in &batch {
-                latencies.push(t_done.duration_since(r.t_submit).as_secs_f64() * 1e6);
-            }
-            served += b;
-            batches += 1;
-        }
-
-        let wall = t_start.elapsed().as_secs_f64();
-        let mut sorted = latencies.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        LatencyStats {
-            n: latencies.len(),
-            mean_us: latencies.iter().sum::<f64>() / latencies.len().max(1) as f64,
-            p50_us: percentile(&sorted, 50.0),
-            p95_us: percentile(&sorted, 95.0),
-            p99_us: percentile(&sorted, 99.0),
-            max_us: sorted.last().copied().unwrap_or(f64::NAN),
-            throughput_rps: latencies.len() as f64 / wall.max(1e-9),
-            mean_batch: served as f64 / batches.max(1) as f64,
-        }
-    })
+        // Workers: pop-batch + forward on private scratch.
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut scratch = target.make_scratch(max_batch);
+                    let mut xbuf = vec![0f32; max_batch * d];
+                    let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
+                    let mut ws = WorkerStats::default();
+                    loop {
+                        batch.clear();
+                        if inj.pop_batch(max_batch, &mut batch) == 0 {
+                            break;
+                        }
+                        let b = batch.len();
+                        for (i, r) in batch.iter().enumerate() {
+                            xbuf[i * d..(i + 1) * d].copy_from_slice(&r.x);
+                        }
+                        target.infer(&xbuf[..b * d], b, &mut scratch, threads);
+                        let t_done = Instant::now();
+                        for r in &batch {
+                            ws.latencies_us
+                                .push(t_done.duration_since(r.t_submit).as_secs_f64() * 1e6);
+                        }
+                        ws.served += b;
+                        ws.batches += 1;
+                    }
+                    ws
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    LatencyStats::from_workers(&worker_stats, t_start.elapsed().as_secs_f64())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::inference::model::{Activation, LayerSpec, Repr};
     use crate::inference::LayerBundle;
+
+    fn model3(repr: Repr) -> SparseModel {
+        let spec = |n, act| LayerSpec {
+            n,
+            repr,
+            sparsity: 0.9,
+            ablated_frac: 0.25,
+            activation: act,
+        };
+        SparseModel::synth(
+            64,
+            &[
+                spec(48, Activation::Relu),
+                spec(32, Activation::Relu),
+                spec(16, Activation::Identity),
+            ],
+            11,
+        )
+        .unwrap()
+    }
 
     #[test]
     fn online_serves_all_requests() {
@@ -172,9 +273,75 @@ mod tests {
     }
 
     #[test]
+    fn pooled_layer_serves_all_requests() {
+        let bundle = LayerBundle::synth(32, 64, 0.9, 0.2, 0);
+        let cfg = ServeConfig {
+            mode: ServeMode::Pooled { workers: 4, max_batch: 8 },
+            n_requests: 300,
+            mean_interarrival: Duration::ZERO,
+            threads: 1,
+            seed: 3,
+        };
+        let stats = serve(&bundle.condensed, &cfg);
+        assert_eq!(stats.n, 300, "pool must serve every request exactly once");
+        assert!(stats.mean_batch >= 1.0);
+        assert!(stats.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn pooled_model_serves_all_requests() {
+        let m = model3(Repr::Condensed);
+        let cfg = ServeConfig {
+            mode: ServeMode::Pooled { workers: 3, max_batch: 4 },
+            n_requests: 120,
+            mean_interarrival: Duration::from_micros(20),
+            threads: 1,
+            seed: 4,
+        };
+        let stats = serve_model(&m, &cfg);
+        assert_eq!(stats.n, 120);
+        assert!(stats.p99_us >= stats.p50_us);
+    }
+
+    #[test]
     fn percentiles_ordered() {
         let sorted: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         assert_eq!(percentile(&sorted, 50.0), 51.0);
         assert!(percentile(&sorted, 99.0) >= percentile(&sorted, 95.0));
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        assert!(percentile(&[], 50.0).is_nan(), "empty slice is NaN");
+        let one = [42.0];
+        assert_eq!(percentile(&one, 0.0), 42.0);
+        assert_eq!(percentile(&one, 50.0), 42.0);
+        assert_eq!(percentile(&one, 100.0), 42.0);
+        let many: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert_eq!(percentile(&many, 0.0), 0.0, "p0 is the minimum");
+        assert_eq!(percentile(&many, 100.0), 100.0, "p100 is the maximum");
+        assert_eq!(percentile(&many, 50.0), 50.0);
+    }
+
+    #[test]
+    fn merged_worker_stats_consistent() {
+        let w1 = WorkerStats { latencies_us: vec![300.0, 100.0, 200.0], served: 3, batches: 2 };
+        let w2 = WorkerStats { latencies_us: vec![400.0], served: 1, batches: 1 };
+        let s = LatencyStats::from_workers(&[w1, w2], 2.0);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.mean_us, 250.0);
+        assert_eq!(s.max_us, 400.0);
+        assert_eq!(s.throughput_rps, 2.0, "n / wall");
+        assert!((s.mean_batch - 4.0 / 3.0).abs() < 1e-12, "served / batches across workers");
+        assert_eq!(s.p50_us, 300.0, "exact percentile over the merged samples");
+        assert!(s.p99_us <= s.max_us && s.p95_us <= s.p99_us);
+    }
+
+    #[test]
+    fn merged_empty_is_nan_but_finite_counts() {
+        let s = LatencyStats::from_workers(&[], 1.0);
+        assert_eq!(s.n, 0);
+        assert!(s.p50_us.is_nan() && s.max_us.is_nan());
+        assert_eq!(s.throughput_rps, 0.0);
     }
 }

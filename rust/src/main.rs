@@ -4,6 +4,7 @@
 //!   exp <id> [flags]     run a paper table/figure harness (exp --list)
 //!   train [flags]        train one configuration and report
 //!   serve [flags]        run the online-inference server benchmark
+//!   serve-model [flags]  serve a multi-layer sparse model via the worker pool
 //!   check                verify artifacts load and execute
 //!   list                 list models in the artifact manifest
 
@@ -11,8 +12,8 @@ use anyhow::Result;
 
 use srigl::data;
 use srigl::exp;
-use srigl::inference::server::{serve, ServeConfig, ServeMode};
-use srigl::inference::LayerBundle;
+use srigl::inference::server::{serve, serve_model, ServeConfig, ServeMode};
+use srigl::inference::{Activation, LayerBundle, LayerSpec, Repr, SparseModel};
 use srigl::runtime::{Manifest, Runtime};
 use srigl::sparsity::Distribution;
 use srigl::train::{LrSchedule, Method, Session, TrainConfig};
@@ -35,6 +36,9 @@ USAGE:
   srigl train --model cnn_proxy --method srigl --sparsity 0.9 [--steps N]
               [--gamma 0.3] [--no-ablation] [--dist erk|uniform] [--seed S]
   srigl serve [--sparsity 0.9] [--requests N] [--batched MAX]
+  srigl serve-model [--dims 3072,768,768,256] [--repr condensed|dense|csr|structured|mixed]
+              [--sparsity 0.9] [--workers 4] [--max-batch 8] [--requests N]
+              [--threads T] [--gap-us G] [--stack NAME]
   srigl check
   srigl list"
     );
@@ -53,6 +57,7 @@ fn run() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("srste") => cmd_srste(&args),
         Some("serve") => cmd_serve(&args),
+        Some("serve-model") => cmd_serve_model(&args),
         Some("check") => cmd_check(),
         Some("list") => cmd_list(),
         _ => {
@@ -202,6 +207,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
             stats.p99_us,
             stats.mean_batch,
             stats.throughput_rps
+        );
+    }
+    Ok(())
+}
+
+/// Serve a multi-layer sparse model through the worker-pool server,
+/// reporting workers=1 vs workers=N so the pool speedup is visible.
+fn cmd_serve_model(args: &Args) -> Result<()> {
+    let n_requests: usize = args.parse_or("requests", 2000)?;
+    let workers: usize = args.parse_or("workers", 4)?;
+    let max_batch: usize = args.parse_or("max-batch", 8)?;
+    let threads: usize = args.parse_or("threads", 1)?;
+    let gap = std::time::Duration::from_micros(args.parse_or("gap-us", 0u64)?);
+
+    let model = if let Some(name) = args.get("stack") {
+        let man = Manifest::load_default()?;
+        SparseModel::from_stack(man.stack(name)?)?
+    } else {
+        let dims: Vec<usize> = args.list_or("dims", &[3072usize, 768, 768, 256])?;
+        anyhow::ensure!(dims.len() >= 2, "--dims needs an input width plus >=1 layer widths");
+        let sparsity: f64 = args.parse_or("sparsity", 0.9)?;
+        let repr_flag = args.get_or("repr", "condensed");
+        let n_layers = dims.len() - 1;
+        let mut specs = Vec::with_capacity(n_layers);
+        for (i, &n) in dims[1..].iter().enumerate() {
+            let repr = if repr_flag == "mixed" {
+                Repr::ALL[i % Repr::ALL.len()]
+            } else {
+                Repr::parse(&repr_flag)?
+            };
+            specs.push(LayerSpec {
+                n,
+                repr,
+                sparsity,
+                ablated_frac: exp::timings::ablated_frac_for(sparsity),
+                activation: if i + 1 == n_layers { Activation::Identity } else { Activation::Relu },
+            });
+        }
+        SparseModel::synth(dims[0], &specs, 42)?
+    };
+
+    println!("serving model: {}", model.describe());
+    println!(
+        "{} layers, {} KiB total, {n_requests} requests, max_batch={max_batch}, {threads} intra-op thread(s)",
+        model.depth(),
+        model.storage_bytes() / 1024
+    );
+    let mut worker_counts = vec![1usize];
+    if workers > 1 {
+        worker_counts.push(workers);
+    }
+    let mut base_rps = 0.0;
+    for &w in &worker_counts {
+        let stats = serve_model(
+            &model,
+            &ServeConfig {
+                mode: ServeMode::Pooled { workers: w, max_batch },
+                n_requests,
+                mean_interarrival: gap,
+                threads,
+                seed: 1,
+            },
+        );
+        let speedup = if base_rps > 0.0 {
+            format!("  ({:.2}x vs 1 worker)", stats.throughput_rps / base_rps)
+        } else {
+            base_rps = stats.throughput_rps;
+            String::new()
+        };
+        println!(
+            "  workers={w:<2} p50={:>8.1}us p99={:>8.1}us mean_batch={:.1} throughput={:.0} req/s{speedup}",
+            stats.p50_us, stats.p99_us, stats.mean_batch, stats.throughput_rps
         );
     }
     Ok(())

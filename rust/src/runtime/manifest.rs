@@ -73,11 +73,36 @@ pub struct CondensedEntry {
     pub k: usize,
 }
 
+/// One layer of a serving-stack description (see [`StackEntry`]).
+#[derive(Clone, Debug)]
+pub struct StackLayerSpec {
+    pub n: usize,
+    /// Representation name: dense | csr | structured | condensed.
+    pub repr: String,
+    pub sparsity: f64,
+    pub ablated_frac: f64,
+    /// Activation name: relu | identity.
+    pub activation: String,
+}
+
+/// A multi-layer serving model described in the manifest's optional
+/// `"stacks"` section — shapes/sparsities only (no weight data); the
+/// inference engine synthesizes weights from `seed`. Consumed by
+/// `inference::SparseModel::from_stack` and the `serve-model` subcommand.
+#[derive(Clone, Debug)]
+pub struct StackEntry {
+    pub name: String,
+    pub d_in: usize,
+    pub seed: u64,
+    pub layers: Vec<StackLayerSpec>,
+}
+
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
     pub models: BTreeMap<String, ModelEntry>,
     pub condensed: BTreeMap<String, CondensedEntry>,
+    pub stacks: BTreeMap<String, StackEntry>,
 }
 
 impl Manifest {
@@ -116,13 +141,26 @@ impl Manifest {
                 },
             );
         }
-        Ok(Manifest { dir: dir.to_path_buf(), models, condensed })
+        // optional section: older manifests have no serving stacks
+        let mut stacks = BTreeMap::new();
+        if let Some(sj) = root.opt("stacks") {
+            for (name, s) in sj.as_obj()? {
+                stacks.insert(name.clone(), parse_stack(name, s)?);
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models, condensed, stacks })
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         self.models
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("model {name:?} not in manifest ({:?})", self.models.keys()))
+    }
+
+    pub fn stack(&self, name: &str) -> Result<&StackEntry> {
+        self.stacks
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("stack {name:?} not in manifest ({:?})", self.stacks.keys()))
     }
 
     pub fn program_path(&self, entry: &ModelEntry, program: &str) -> Result<PathBuf> {
@@ -132,6 +170,29 @@ impl Manifest {
             .ok_or_else(|| anyhow::anyhow!("program {program:?} missing for {}", entry.name))?;
         Ok(self.dir.join(file))
     }
+}
+
+fn parse_stack(name: &str, s: &Json) -> Result<StackEntry> {
+    let mut layers = Vec::new();
+    for l in s.get("layers")?.as_arr()? {
+        layers.push(StackLayerSpec {
+            n: l.get("n")?.as_usize()?,
+            repr: l.get("repr")?.as_str()?.to_string(),
+            sparsity: l.get("sparsity")?.as_f64()?,
+            ablated_frac: l.opt("ablated_frac").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
+            activation: l
+                .opt("activation")
+                .map(|v| v.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_else(|| "relu".to_string()),
+        });
+    }
+    Ok(StackEntry {
+        name: name.to_string(),
+        d_in: s.get("d_in")?.as_usize()?,
+        seed: s.opt("seed").map(|v| v.as_usize()).transpose()?.unwrap_or(0) as u64,
+        layers,
+    })
 }
 
 fn parse_io(j: &Json) -> Result<IoSpec> {
@@ -178,6 +239,34 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelEntry> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parses_stack_description() {
+        let src = r#"{
+            "d_in": 3072, "seed": 7,
+            "layers": [
+                {"n": 768, "repr": "condensed", "sparsity": 0.9, "ablated_frac": 0.35},
+                {"n": 768, "repr": "csr", "sparsity": 0.9},
+                {"n": 256, "repr": "dense", "sparsity": 0.0, "activation": "identity"}
+            ]
+        }"#;
+        let e = parse_stack("vit_ff_stack", &Json::parse(src).unwrap()).unwrap();
+        assert_eq!(e.name, "vit_ff_stack");
+        assert_eq!(e.d_in, 3072);
+        assert_eq!(e.seed, 7);
+        assert_eq!(e.layers.len(), 3);
+        assert_eq!(e.layers[0].repr, "condensed");
+        assert_eq!(e.layers[0].ablated_frac, 0.35);
+        assert_eq!(e.layers[1].ablated_frac, 0.0, "ablated_frac defaults to 0");
+        assert_eq!(e.layers[1].activation, "relu", "activation defaults to relu");
+        assert_eq!(e.layers[2].activation, "identity");
+    }
+
+    #[test]
+    fn stack_missing_fields_error() {
+        let src = r#"{"layers": [{"n": 4, "repr": "dense", "sparsity": 0.5}]}"#;
+        assert!(parse_stack("x", &Json::parse(src).unwrap()).is_err(), "d_in is required");
+    }
 
     #[test]
     fn parses_real_manifest_when_present() {

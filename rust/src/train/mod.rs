@@ -571,6 +571,46 @@ impl Trainer {
         Condensed::from_masked(&w2, &m2)
     }
 
+    /// Export the trained sparse stack as a serving
+    /// [`SparseModel`](crate::inference::SparseModel) in the requested
+    /// representation (MLP-shaped models: each sparse layer's fan-in must
+    /// equal the previous layer's width). Bias params are matched by the
+    /// manifest naming convention `X.w` -> `X.b`; layers without one get
+    /// zero bias.
+    pub fn export_model(
+        &self,
+        repr: crate::inference::Repr,
+    ) -> Result<crate::inference::SparseModel> {
+        let mut triples = Vec::new();
+        for (li, &pi) in self.sparse_idx.iter().enumerate() {
+            let p = &self.params[pi];
+            let (n, f) = p.neuron_view();
+            let w = Tensor::from_vec(&[n, f], p.data.clone());
+            let m = Mask::from_tensor(Tensor::from_vec(&[n, f], self.masks[li].t.data.clone()));
+            let wname = &self.entry.params[pi].name;
+            let bias = match wname.strip_suffix(".w").and_then(|stem| {
+                let bname = format!("{stem}.b");
+                self.entry.params.iter().position(|q| q.name == bname)
+            }) {
+                Some(bi) => {
+                    let b = &self.params[bi].data;
+                    anyhow::ensure!(
+                        b.len() == n,
+                        "bias {} has {} entries but {} has {} neurons",
+                        self.entry.params[bi].name,
+                        b.len(),
+                        wname,
+                        n
+                    );
+                    b.clone()
+                }
+                None => vec![0.0; n],
+            };
+            triples.push((w, m, bias));
+        }
+        crate::inference::SparseModel::from_trained(&triples, repr)
+    }
+
     /// Mask statistics snapshot, per sparse layer: (name, fan-in counts).
     pub fn mask_stats(&self) -> Vec<(String, Vec<usize>)> {
         self.sparse_idx

@@ -1,6 +1,10 @@
 //! Scoped data-parallel helpers — in-tree replacement for `rayon`
 //! (offline environment). Used by the inference engine's thread sweeps
-//! (paper Figs. 18-20 run 1/4/8 CPU threads).
+//! (paper Figs. 18-20 run 1/4/8 CPU threads) — plus the [`Injector`]
+//! work queue feeding the worker-pool inference server.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
 
 /// Run `f(chunk_index, range)` over `n` items split into `threads` nearly
 /// equal contiguous ranges, in parallel via scoped threads. `threads == 1`
@@ -67,6 +71,78 @@ where
     });
 }
 
+// ---------------------------------------------------------------------------
+// Injector queue (worker-pool server)
+// ---------------------------------------------------------------------------
+
+struct InjectorInner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// A multi-producer / multi-consumer FIFO work queue: producers `push`,
+/// workers block in [`Injector::pop_batch`] until items arrive (draining up
+/// to `max` at once — the server's dynamic batching) or the queue is
+/// closed *and* empty. Plain Mutex + Condvar: contention is one lock per
+/// batch, negligible next to a layer forward.
+pub struct Injector<T> {
+    inner: Mutex<InjectorInner<T>>,
+    cv: Condvar,
+}
+
+impl<T> Injector<T> {
+    pub fn new() -> Injector<T> {
+        Injector { inner: Mutex::new(InjectorInner { q: VecDeque::new(), closed: false }), cv: Condvar::new() }
+    }
+
+    /// Enqueue one item. Panics if the queue was closed.
+    pub fn push(&self, item: T) {
+        let mut g = self.inner.lock().unwrap();
+        assert!(!g.closed, "push after close");
+        g.q.push_back(item);
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    /// No more items will arrive; wakes all blocked workers.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Pop 1..=max items into `out`, blocking while the queue is open and
+    /// empty. Returns the number popped; 0 means closed-and-drained.
+    pub fn pop_batch(&self, max: usize, out: &mut Vec<T>) -> usize {
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.q.is_empty() {
+                let take = max.min(g.q.len());
+                out.extend(g.q.drain(..take));
+                return take;
+            }
+            if g.closed {
+                return 0;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Default for Injector<T> {
+    fn default() -> Self {
+        Injector::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,5 +183,67 @@ mod tests {
     fn zero_width_ok() {
         let mut out: Vec<f32> = vec![];
         par_rows_mut(&mut out, 0, 4, |_, _| panic!("no rows"));
+    }
+
+    #[test]
+    fn injector_fifo_and_batching() {
+        let inj: Injector<usize> = Injector::new();
+        for i in 0..10 {
+            inj.push(i);
+        }
+        assert_eq!(inj.len(), 10);
+        let mut out = Vec::new();
+        assert_eq!(inj.pop_batch(4, &mut out), 4);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        out.clear();
+        assert_eq!(inj.pop_batch(100, &mut out), 6);
+        assert_eq!(out, vec![4, 5, 6, 7, 8, 9]);
+        inj.close();
+        out.clear();
+        assert_eq!(inj.pop_batch(4, &mut out), 0);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn injector_close_drains_remaining() {
+        let inj: Injector<u32> = Injector::new();
+        inj.push(1);
+        inj.push(2);
+        inj.close();
+        let mut out = Vec::new();
+        assert_eq!(inj.pop_batch(1, &mut out), 1);
+        assert_eq!(inj.pop_batch(1, &mut out), 1);
+        assert_eq!(inj.pop_batch(1, &mut out), 0);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn injector_multi_worker_consumes_everything_once() {
+        let inj: Injector<usize> = Injector::new();
+        let n = 1000;
+        let sum = AtomicUsize::new(0);
+        let count = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let (inj, sum, count) = (&inj, &sum, &count);
+                s.spawn(move || {
+                    let mut buf = Vec::new();
+                    loop {
+                        buf.clear();
+                        if inj.pop_batch(7, &mut buf) == 0 {
+                            break;
+                        }
+                        count.fetch_add(buf.len(), Ordering::Relaxed);
+                        sum.fetch_add(buf.iter().sum::<usize>(), Ordering::Relaxed);
+                    }
+                });
+            }
+            for i in 0..n {
+                inj.push(i);
+            }
+            inj.close();
+        });
+        assert_eq!(count.load(Ordering::Relaxed), n);
+        assert_eq!(sum.load(Ordering::Relaxed), n * (n - 1) / 2);
     }
 }

@@ -1,0 +1,185 @@
+//! Kernel-equivalence suite: the four linear-layer representations
+//! (dense / CSR / structured / condensed) must compute the same function on
+//! the same masked weights — per layer and through a full [`SparseModel`]
+//! stack — across batch sizes {1, 7, 256} and thread counts {1, 4}.
+//!
+//! Tolerance: 1e-5 relative-ish (`|a-b| <= 1e-5 * (1 + max|a|,|b|)`); the
+//! representations sum identical terms in different orders, so agreement is
+//! limited only by f32 re-association.
+
+use srigl::inference::model::{Activation, LayerSpec, ModelLayer, Repr, SparseModel};
+use srigl::inference::server::{serve_model, ServeConfig, ServeMode};
+use srigl::inference::{LayerBundle, LinearKernel};
+use srigl::sparsity::Mask;
+use srigl::tensor::Tensor;
+use srigl::util::rng::Rng;
+
+const TOL: f32 = 1e-5;
+
+fn assert_close(a: f32, b: f32, ctx: &str) {
+    let tol = TOL * (1.0 + a.abs().max(b.abs()));
+    assert!((a - b).abs() <= tol, "{ctx}: {a} vs {b} (|diff| {} > {tol})", (a - b).abs());
+}
+
+const BATCHES: [usize; 3] = [1, 7, 256];
+const THREADS: [usize; 2] = [1, 4];
+
+/// Random SRigL-shaped geometries: (n, d, sparsity, ablated_frac, seed).
+const GEOMETRIES: [(usize, usize, f64, f64, u64); 3] = [
+    (64, 128, 0.9, 0.25, 1),
+    (96, 48, 0.8, 0.4, 2),
+    (33, 77, 0.95, 0.1, 3),
+];
+
+#[test]
+fn layer_representations_agree() {
+    for &(n, d, sparsity, ablated, seed) in &GEOMETRIES {
+        let bundle = LayerBundle::synth(n, d, sparsity, ablated, seed);
+        let active = &bundle.structured.active;
+        for &batch in &BATCHES {
+            let mut rng = Rng::new(seed ^ 0xbeef);
+            let x: Vec<f32> = (0..batch * d).map(|_| rng.normal_f32()).collect();
+
+            let mut out_dense = vec![0f32; batch * n];
+            bundle.dense.forward(&x, batch, &mut out_dense, 1);
+
+            for &threads in &THREADS {
+                // dense is representation-stable across thread counts
+                let mut out_dt = vec![0f32; batch * n];
+                bundle.dense.forward(&x, batch, &mut out_dt, threads);
+                for i in 0..batch * n {
+                    assert_close(out_dense[i], out_dt[i], &format!("dense t{threads} idx {i}"));
+                }
+
+                // CSR (same constant-fan-in pattern) matches dense everywhere
+                let mut out_csr = vec![0f32; batch * n];
+                bundle.csr.forward(&x, batch, &mut out_csr, threads);
+                for i in 0..batch * n {
+                    assert_close(
+                        out_dense[i],
+                        out_csr[i],
+                        &format!("csr b{batch} t{threads} idx {i}"),
+                    );
+                }
+
+                // compact forms match dense on the surviving neurons
+                let na = bundle.structured.out_width();
+                let mut out_s = vec![0f32; batch * na];
+                bundle.structured.forward(&x, batch, &mut out_s, threads);
+                let mut out_c = vec![0f32; batch * na];
+                bundle.condensed.forward(&x, batch, &mut out_c, threads);
+                for b in 0..batch {
+                    for (j, &r) in active.iter().enumerate() {
+                        let want = out_dense[b * n + r as usize];
+                        let ctx = format!("b{batch} t{threads} row {r}");
+                        assert_close(want, out_s[b * na + j], &format!("structured {ctx}"));
+                        assert_close(want, out_c[b * na + j], &format!("condensed {ctx}"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One layer's (w, mask, bias) with constant fan-in `k` and exactly
+/// `ablate` fully-masked neurons — delegates to the engine's own synthesis
+/// recipe (`inference::model::synth_layer`) so the suite exercises what
+/// the engine ships. The +0.5 nudge makes the fraction floor to `ablate`
+/// exactly despite f64 rounding.
+fn rand_layer(n: usize, d: usize, k: usize, ablate: usize, rng: &mut Rng) -> (Tensor, Mask, Vec<f32>) {
+    srigl::inference::model::synth_layer(
+        n,
+        d,
+        1.0 - k as f64 / d as f64,
+        (ablate as f64 + 0.5) / n as f64,
+        rng,
+    )
+}
+
+/// A whole stack built from the SAME weights in each of the four
+/// representations (and a mixed stack) must produce identical outputs:
+/// the model semantics (ablated neuron => 0, bias included) are
+/// representation-independent.
+#[test]
+fn model_stacks_agree_across_representations() {
+    let dims = [(40usize, 32usize, 5usize, 6usize), (32, 24, 4, 4), (24, 16, 3, 0)];
+    let mut rng = Rng::new(99);
+    let weights: Vec<(Tensor, Mask, Vec<f32>)> =
+        dims.iter().map(|&(d, n, k, abl)| rand_layer(n, d, k, abl, &mut rng)).collect();
+
+    let build = |reprs: [Repr; 3]| -> SparseModel {
+        let layers: Vec<ModelLayer> = weights
+            .iter()
+            .zip(reprs)
+            .enumerate()
+            .map(|(i, ((w, m, b), repr))| {
+                let act = if i == 2 { Activation::Identity } else { Activation::Relu };
+                ModelLayer::from_weights(w, m, b, repr, act)
+            })
+            .collect();
+        SparseModel::new(layers).unwrap()
+    };
+
+    let reference = build([Repr::Dense, Repr::Dense, Repr::Dense]);
+    let variants = [
+        build([Repr::Csr, Repr::Csr, Repr::Csr]),
+        build([Repr::Structured, Repr::Structured, Repr::Structured]),
+        build([Repr::Condensed, Repr::Condensed, Repr::Condensed]),
+        build([Repr::Condensed, Repr::Csr, Repr::Structured]), // mixed per-layer
+    ];
+
+    for &batch in &[1usize, 7, 256] {
+        let mut rng = Rng::new(7 ^ batch as u64);
+        let x: Vec<f32> = (0..batch * 40).map(|_| rng.normal_f32()).collect();
+        let mut sref = reference.make_scratch(batch);
+        let want = reference.forward(&x, batch, &mut sref, 1).to_vec();
+        for &threads in &THREADS {
+            for (vi, v) in variants.iter().enumerate() {
+                let mut s = v.make_scratch(batch);
+                let got = v.forward(&x, batch, &mut s, threads);
+                assert_eq!(got.len(), want.len());
+                for i in 0..want.len() {
+                    assert_close(
+                        want[i],
+                        got[i],
+                        &format!("variant {vi} b{batch} t{threads} idx {i}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The worker pool must serve every request exactly once and stay
+/// consistent when workers and intra-op threads are both > 1.
+#[test]
+fn pooled_serving_is_complete() {
+    let spec = |n, act| LayerSpec {
+        n,
+        repr: Repr::Condensed,
+        sparsity: 0.9,
+        ablated_frac: 0.3,
+        activation: act,
+    };
+    let model = SparseModel::synth(
+        96,
+        &[spec(64, Activation::Relu), spec(48, Activation::Relu), spec(16, Activation::Identity)],
+        21,
+    )
+    .unwrap();
+    for (workers, threads) in [(1usize, 1usize), (4, 1), (2, 4)] {
+        let stats = serve_model(
+            &model,
+            &ServeConfig {
+                mode: ServeMode::Pooled { workers, max_batch: 8 },
+                n_requests: 256,
+                mean_interarrival: std::time::Duration::ZERO,
+                threads,
+                seed: 13,
+            },
+        );
+        assert_eq!(stats.n, 256, "workers={workers} threads={threads}");
+        assert!(stats.mean_batch >= 1.0);
+        assert!(stats.p50_us.is_finite() && stats.p99_us >= stats.p50_us);
+    }
+}

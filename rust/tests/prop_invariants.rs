@@ -141,6 +141,74 @@ fn prop_condensed_roundtrip() {
 }
 
 #[test]
+fn prop_condensed_storage_accounting() {
+    // storage_bytes must be exactly values + indices + active list:
+    // n_active * k * (4 + 4) + n_active * 4 bytes, for any ablation level.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(8000 + seed);
+        let mut l = rand_layer(&mut rng, true);
+        let n = l.mask.neurons;
+        let n_ablate = rng.below(n); // up to n-1 ablated
+        for r in rng.choose_k(n, n_ablate) {
+            for j in 0..l.mask.fan_in {
+                l.mask.set(r, j, false);
+                l.w.data[r * l.mask.fan_in + j] = 0.0;
+            }
+        }
+        let c = Condensed::from_masked(&l.w, &l.mask);
+        let na = c.n_active();
+        assert_eq!(na, n - n_ablate, "seed {seed}");
+        assert_eq!(c.values.len(), na * c.k, "seed {seed}: values shape");
+        assert_eq!(c.idx.len(), na * c.k, "seed {seed}: idx shape");
+        assert_eq!(
+            c.storage_bytes(),
+            na * c.k * 8 + na * 4,
+            "seed {seed}: storage accounting"
+        );
+        // condensed never stores more than the nnz demands
+        assert_eq!(na * c.k, l.mask.nnz(), "seed {seed}: nnz");
+    }
+}
+
+#[test]
+fn condensed_all_rows_ablated() {
+    // Every neuron ablated: the condensed form is empty but still
+    // round-trips to the all-zero matrix/mask and accounts 0 bytes.
+    let n = 12;
+    let d = 20;
+    let w = Tensor::zeros(&[n, d]);
+    let m = Mask::from_tensor(Tensor::zeros(&[n, d]));
+    let c = Condensed::from_masked(&w, &m);
+    assert_eq!(c.n_active(), 0);
+    assert_eq!(c.k, 0);
+    assert_eq!(c.storage_bytes(), 0);
+    assert!(c.active.is_empty() && c.values.is_empty() && c.idx.is_empty());
+    assert_eq!(c.to_dense().data, w.data);
+    assert_eq!(c.to_mask().t.data, m.t.data);
+}
+
+#[test]
+fn condensed_k0_layer_forwards_empty() {
+    // An all-ablated layer must still be constructible and serve a forward
+    // pass (empty output) through the inference engine.
+    use srigl::inference::CondensedLayer;
+    let n = 6;
+    let d = 10;
+    let w = Tensor::zeros(&[n, d]);
+    let m = Mask::from_tensor(Tensor::zeros(&[n, d]));
+    let bias = vec![1.0f32; n];
+    let layer = CondensedLayer::new(&w, &m, &bias);
+    assert_eq!(srigl::inference::LinearKernel::out_width(&layer), 0);
+    for batch in [1usize, 3] {
+        let x = vec![0.5f32; batch * d];
+        let mut out: Vec<f32> = vec![];
+        srigl::inference::LinearKernel::forward(&layer, &x, batch, &mut out, 2);
+        assert!(out.is_empty());
+    }
+    assert_eq!(layer.c.storage_bytes(), 0);
+}
+
+#[test]
 fn prop_erk_budget_exact() {
     for seed in 0..CASES {
         let mut rng = Rng::new(4000 + seed);

@@ -1,0 +1,260 @@
+//! In-tree stub of the `xla` (xla-rs) API surface the L3 runtime uses.
+//!
+//! The environment has no libxla/PJRT shared library, so the client side
+//! ([`PjRtClient`], [`HloModuleProto`], executables) compiles but reports
+//! "backend unavailable" at run time; callers that gate on artifact
+//! presence (all tests, `srigl check`) degrade gracefully. The host-side
+//! [`Literal`] type is fully functional — shape + typed data marshalling
+//! is real so the tensor <-> literal round-trip paths stay testable.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    fn backend() -> Error {
+        Error::new("XLA PJRT backend unavailable: built against the in-tree xla stub (no libxla)")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// ---------------------------------------------------------------------------
+// Literals (fully functional host-side)
+// ---------------------------------------------------------------------------
+
+/// Typed element storage for an array literal.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn make_data(s: &[Self]) -> Data;
+    #[doc(hidden)]
+    fn extract(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn make_data(s: &[Self]) -> Data {
+        Data::F32(s.to_vec())
+    }
+
+    fn extract(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn make_data(s: &[Self]) -> Data {
+        Data::I32(s.to_vec())
+    }
+
+    fn extract(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Repr {
+    Array { dims: Vec<i64>, data: Data },
+    Tuple(Vec<Literal>),
+}
+
+/// A host literal: an n-d array of f32/i32, or a tuple of literals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    repr: Repr,
+}
+
+impl Literal {
+    /// A rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { repr: Repr::Array { dims: vec![], data: Data::F32(vec![v]) } }
+    }
+
+    /// A rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { repr: Repr::Array { dims: vec![data.len() as i64], data: T::make_data(data) } }
+    }
+
+    /// A tuple literal (what our AOT programs return).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { repr: Repr::Tuple(parts) }
+    }
+
+    /// Reinterpret with new dimensions; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match &self.repr {
+            Repr::Array { data, .. } => {
+                let want: i64 = dims.iter().product();
+                if want < 0 || want as usize != data.len() {
+                    return Err(Error::new(format!(
+                        "reshape to {dims:?} ({want} elems) from {} elems",
+                        data.len()
+                    )));
+                }
+                Ok(Literal { repr: Repr::Array { dims: dims.to_vec(), data: data.clone() } })
+            }
+            Repr::Tuple(_) => Err(Error::new("cannot reshape a tuple literal")),
+        }
+    }
+
+    pub fn dims(&self) -> Result<Vec<i64>> {
+        match &self.repr {
+            Repr::Array { dims, .. } => Ok(dims.clone()),
+            Repr::Tuple(_) => Err(Error::new("tuple literal has no dims")),
+        }
+    }
+
+    /// Copy the elements out as `Vec<T>`; errors on element-type mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match &self.repr {
+            Repr::Array { data, .. } => {
+                T::extract(data).ok_or_else(|| Error::new("literal element type mismatch"))
+            }
+            Repr::Tuple(_) => Err(Error::new("cannot to_vec a tuple literal")),
+        }
+    }
+
+    /// Decompose a tuple literal; a non-tuple yields itself as a 1-tuple.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.repr {
+            Repr::Tuple(parts) => Ok(parts),
+            repr => Ok(vec![Literal { repr }]),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT client surface (stubbed: compiles, errors at run time)
+// ---------------------------------------------------------------------------
+
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::backend())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::backend())
+    }
+}
+
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::backend())
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::backend())
+    }
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::backend())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]).reshape(&[2, 3]).unwrap();
+        assert_eq!(l.dims().unwrap(), vec![2, 3]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_scalar_and_tuple() {
+        let s = Literal::scalar(7.5);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+        let t = Literal::tuple(vec![s.clone(), Literal::vec1(&[1i32, 2])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<i32>().unwrap(), vec![1, 2]);
+        // non-tuple decomposes to itself
+        assert_eq!(s.clone().to_tuple().unwrap(), vec![s]);
+    }
+
+    #[test]
+    fn reshape_validates_count() {
+        assert!(Literal::vec1(&[1.0f32, 2.0]).reshape(&[3, 1]).is_err());
+    }
+
+    #[test]
+    fn backend_is_gated() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
