@@ -1,0 +1,135 @@
+//! Socket front-end bench: loopback clients drive the TCP serving stack
+//! end-to-end (frame encode -> kernel forward -> frame decode), sweeping
+//! fixed vs adaptive batching and result-cache hit ratios {0, 0.5, 0.9}.
+//! Client-side latency includes the wire round trip, so numbers here sit
+//! above the in-process `model_serve` bench by the loopback overhead.
+
+use std::sync::Arc;
+
+use srigl::inference::server::{Batching, LatencyStats, WorkerStats};
+use srigl::inference::{frontend, Activation, FrontendConfig, LayerSpec, Repr, SparseModel};
+use srigl::net::Client;
+use srigl::util::rng::Rng;
+
+const N_REQUESTS: usize = 600;
+const CLIENTS: usize = 2;
+
+fn model() -> Arc<SparseModel> {
+    let spec = |n, act| LayerSpec {
+        n,
+        repr: Repr::Condensed,
+        sparsity: 0.9,
+        ablated_frac: 0.35,
+        activation: act,
+    };
+    Arc::new(
+        SparseModel::synth(
+            1024,
+            &[
+                spec(768, Activation::Relu),
+                spec(768, Activation::Relu),
+                spec(256, Activation::Identity),
+            ],
+            42,
+        )
+        .expect("valid stack"),
+    )
+}
+
+/// Drive one configuration with `CLIENTS` loopback client threads, each
+/// drawing inputs from a shared pool sized so roughly `hit_ratio` of
+/// requests repeat an already-served payload.
+fn run(model: &Arc<SparseModel>, batching: Batching, hit_ratio: f64) -> (LatencyStats, String) {
+    let handle = frontend::spawn(
+        Arc::clone(model),
+        "127.0.0.1:0",
+        FrontendConfig {
+            workers: 2,
+            batching,
+            queue_capacity: 1024,
+            cache_capacity: 2048,
+            threads: 1,
+            retry_after_ms: 1,
+        },
+    )
+    .expect("bind loopback");
+    let addr = handle.addr();
+    let d = model.in_width();
+
+    // pool of unique payloads: first use of each is a miss, reuse hits —
+    // total hits ~= N_REQUESTS - pool size
+    let pool_size = ((N_REQUESTS as f64 * (1.0 - hit_ratio)).round() as usize).max(1);
+    let mut rng = Rng::new(7);
+    let pool: Arc<Vec<Vec<f32>>> = Arc::new(
+        (0..pool_size)
+            .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+            .collect(),
+    );
+
+    let per_client = N_REQUESTS / CLIENTS;
+    let t_start = std::time::Instant::now();
+    let client_stats: Vec<WorkerStats> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    let mut client = Client::connect(addr).expect("connect");
+                    let mut ws = WorkerStats::default();
+                    // Cycle the pool (no replacement-sampling): each
+                    // payload's first use is the miss, every revisit a
+                    // hit, so total hits ~= N_REQUESTS - pool size and the
+                    // labeled hit ratio is the actual one. Clients start
+                    // half a pool apart so they never race on the same
+                    // not-yet-cached payload.
+                    let offset = c * pool.len() / CLIENTS;
+                    for i in 0..per_client {
+                        let x = &pool[(offset + i) % pool.len()];
+                        let t0 = std::time::Instant::now();
+                        client.infer_retrying(1, x, 100).expect("infer");
+                        ws.latencies_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                        ws.served += 1;
+                        ws.batches += 1;
+                    }
+                    ws
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client panicked")).collect()
+    });
+
+    let wall_s = t_start.elapsed().as_secs_f64();
+    let server = handle.stop();
+    let lat = LatencyStats::from_workers(&client_stats, wall_s.max(1e-9));
+    let server_line = format!(
+        "hits={:<4} mean_batch={:<4.1} max_fwd={}",
+        server.cache_hits, server.latency.mean_batch, server.max_forward_rows
+    );
+    (lat, server_line)
+}
+
+fn main() {
+    let model = model();
+    println!("frontend — loopback TCP serving, {}", model.describe());
+    println!(
+        "{N_REQUESTS} requests over {CLIENTS} sync clients, 2 workers, cache 2048 entries\n"
+    );
+    println!(
+        "{:<10} {:>9} {:>10} {:>10} {:>10}   server",
+        "batching", "hit-ratio", "p50 (us)", "p99 (us)", "req/s"
+    );
+    for batching in [Batching::Fixed(8), Batching::Adaptive { cap: 8 }] {
+        for hit_ratio in [0.0f64, 0.5, 0.9] {
+            let (lat, server) = run(&model, batching, hit_ratio);
+            let name = match batching {
+                Batching::Fixed(n) => format!("fixed({n})"),
+                Batching::Adaptive { cap } => format!("adapt({cap})"),
+            };
+            println!(
+                "{name:<10} {hit_ratio:>9.1} {:>10.1} {:>10.1} {:>10.0}   {server}",
+                lat.p50_us, lat.p99_us, lat.throughput_rps
+            );
+        }
+    }
+    println!("\n(sync clients: one request in flight each, so req/s is latency-bound;");
+    println!(" higher hit ratios should cut p50 toward the wire round-trip floor)");
+}

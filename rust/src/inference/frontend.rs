@@ -1,0 +1,454 @@
+//! Network serving front-end: turns the worker-pool inference engine into
+//! a real socket server. The ROADMAP's "serving scale-out" block, minus
+//! sharding: async IO ingestion, backpressure, adaptive batching, and a
+//! result cache.
+//!
+//! Data path:
+//!
+//! ```text
+//! TcpListener (blocking accept)
+//!   └─ one reader thread per connection
+//!        ├─ parse length-prefixed request frames (crate::net)
+//!        ├─ FNV-1a hash of the row bytes → LRU result cache: hit answers
+//!        │    immediately without touching the queue
+//!        ├─ miss → Injector::push_bounded: a full queue answers
+//!        │    Busy{retry_after_ms} (backpressure, never unbounded growth)
+//!        └─ per-connection writer (Mutex<TcpStream>) shared with workers
+//!   workers (N threads, shared queue)
+//!        ├─ pop up to AdaptiveBatcher::next_batch(queue depth) requests
+//!        ├─ greedily pack popped requests into ≤ cap-row forwards on a
+//!        │    per-worker Scratch (allocation-free)
+//!        └─ route each result back through the owning connection's writer
+//! ```
+//!
+//! Responses carry the request id, so a pipelined connection may see them
+//! out of submission order (cache hits overtake queued work). The
+//! synchronous [`crate::net::Client`] keeps one request in flight and never
+//! observes this.
+//!
+//! Known limitation (documented, not fixed here): a worker blocks while
+//! writing to a slow client's socket, stalling the rest of its batch —
+//! per-connection egress queues are future work alongside sharding.
+
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::server::{AdaptiveBatcher, Batching, LatencyStats, WorkerStats};
+use super::SparseModel;
+use crate::net::{fnv1a_f32, read_request, write_response, ResponseBody, ResponseFrame};
+use crate::util::lru::LruCache;
+use crate::util::threadpool::{Injector, QueueFull};
+
+#[derive(Clone, Copy, Debug)]
+pub struct FrontendConfig {
+    /// Pool workers draining the queue. `0` is allowed and means ingestion
+    /// only — nothing drains, so the bounded queue fills deterministically
+    /// (used by the backpressure tests).
+    pub workers: usize,
+    /// Batch-limit policy per pop; `Batching::cap()` also bounds the rows
+    /// a single request may carry.
+    pub batching: Batching,
+    /// Bounded request-queue capacity (requests, not rows).
+    pub queue_capacity: usize,
+    /// Result-cache entries; `0` disables caching.
+    pub cache_capacity: usize,
+    /// Intra-op threads per worker (the kernel `threads` parameter).
+    pub threads: usize,
+    /// Backoff hint sent with `Busy` rejections.
+    pub retry_after_ms: u32,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> FrontendConfig {
+        FrontendConfig {
+            workers: 4,
+            batching: Batching::Adaptive { cap: 8 },
+            queue_capacity: 1024,
+            cache_capacity: 1024,
+            threads: 1,
+            retry_after_ms: 2,
+        }
+    }
+}
+
+/// End-of-run accounting returned by [`FrontendHandle::stop`].
+#[derive(Clone, Debug)]
+pub struct FrontendStats {
+    /// Latency/throughput over the queue-served (compute) requests.
+    pub latency: LatencyStats,
+    /// Requests answered by the worker pool.
+    pub served: usize,
+    /// Requests answered straight from the result cache.
+    pub cache_hits: usize,
+    /// Requests rejected with `Busy` (bounded queue full).
+    pub rejected: usize,
+    /// Malformed requests answered with `Error`.
+    pub bad_requests: usize,
+    /// Connections accepted over the run.
+    pub connections: usize,
+    /// Smallest / largest packed forward (rows) any worker ran — under a
+    /// trickle these collapse to 1/1; under a flood the max approaches the
+    /// batching cap (how the adaptive batcher shows up in the numbers).
+    pub min_forward_rows: usize,
+    pub max_forward_rows: usize,
+}
+
+/// One enqueued request: features plus the route back to its connection.
+struct Job {
+    id: u64,
+    rows: usize,
+    x: Vec<f32>,
+    hash: u64,
+    writer: Arc<Mutex<TcpStream>>,
+    t_submit: Instant,
+}
+
+/// Counts reader threads so shutdown can wait for them without collecting
+/// an unbounded Vec of join handles (connections come and go).
+struct ReaderGate {
+    n: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl ReaderGate {
+    fn new() -> ReaderGate {
+        ReaderGate { n: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    fn enter(gate: &Arc<ReaderGate>) -> ReaderTicket {
+        *gate.n.lock().unwrap() += 1;
+        ReaderTicket(Arc::clone(gate))
+    }
+
+    fn wait_idle(&self) {
+        let mut g = self.n.lock().unwrap();
+        while *g > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Drop guard: decrements the gate even if a reader panics.
+struct ReaderTicket(Arc<ReaderGate>);
+
+impl Drop for ReaderTicket {
+    fn drop(&mut self) {
+        *self.0.n.lock().unwrap() -= 1;
+        self.0.cv.notify_all();
+    }
+}
+
+struct Shared {
+    model: Arc<SparseModel>,
+    injector: Injector<Job>,
+    /// hash -> (input bits, output); input kept to defeat hash collisions.
+    cache: Option<Mutex<LruCache<u64, (Vec<f32>, Vec<f32>)>>>,
+    batcher: AdaptiveBatcher,
+    cfg: FrontendConfig,
+    shutdown: AtomicBool,
+    cache_hits: AtomicUsize,
+    rejected: AtomicUsize,
+    bad_requests: AtomicUsize,
+    connections: AtomicUsize,
+    /// Live connection streams (clones) so shutdown can unblock readers.
+    conns: Mutex<std::collections::HashMap<u64, TcpStream>>,
+    next_conn_id: AtomicUsize,
+    gate: Arc<ReaderGate>,
+}
+
+/// Running front-end: keep it to keep serving; [`FrontendHandle::stop`]
+/// drains and returns stats.
+pub struct FrontendHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    join: Option<JoinHandle<FrontendStats>>,
+}
+
+impl FrontendHandle {
+    /// The bound address (resolves port 0 to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, hang up on clients, drain the queue, and return the
+    /// run's statistics.
+    pub fn stop(mut self) -> FrontendStats {
+        self.shutdown_and_join()
+            .expect("handle already joined")
+            .expect("frontend thread panicked")
+    }
+
+    /// Serve until the process dies (the `serve-model --listen` path).
+    pub fn run_forever(mut self) -> FrontendStats {
+        self.join.take().expect("handle not yet joined").join().expect("frontend thread panicked")
+    }
+
+    fn shutdown_and_join(&mut self) -> Option<std::thread::Result<FrontendStats>> {
+        let join = self.join.take()?;
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let mut addr = self.addr;
+        if addr.ip().is_unspecified() {
+            addr.set_ip(match addr.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(addr);
+        Some(join.join())
+    }
+}
+
+/// Dropping an unjoined handle (early `?` return in the caller) must not
+/// leak the acceptor, the worker threads, and the bound port for the rest
+/// of the process: run the same shutdown sequence as
+/// [`FrontendHandle::stop`], discarding the stats (and swallowing a
+/// thread panic — we may already be unwinding).
+impl Drop for FrontendHandle {
+    fn drop(&mut self) {
+        let _ = self.shutdown_and_join();
+    }
+}
+
+/// Bind `addr` (e.g. `"127.0.0.1:0"`) and serve `model` until
+/// [`FrontendHandle::stop`].
+pub fn spawn(model: Arc<SparseModel>, addr: &str, cfg: FrontendConfig) -> Result<FrontendHandle> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let bound = listener.local_addr().context("resolving bound address")?;
+    let cap = cfg.batching.cap();
+    let shared = Arc::new(Shared {
+        model,
+        injector: Injector::with_capacity(cfg.queue_capacity),
+        cache: (cfg.cache_capacity > 0).then(|| Mutex::new(LruCache::new(cfg.cache_capacity))),
+        batcher: AdaptiveBatcher::new(cap),
+        cfg,
+        shutdown: AtomicBool::new(false),
+        cache_hits: AtomicUsize::new(0),
+        rejected: AtomicUsize::new(0),
+        bad_requests: AtomicUsize::new(0),
+        connections: AtomicUsize::new(0),
+        conns: Mutex::new(std::collections::HashMap::new()),
+        next_conn_id: AtomicUsize::new(0),
+        gate: Arc::new(ReaderGate::new()),
+    });
+    let thread_shared = Arc::clone(&shared);
+    let join = std::thread::Builder::new()
+        .name("srigl-frontend".into())
+        .spawn(move || serve_loop(listener, thread_shared))
+        .context("spawning front-end thread")?;
+    Ok(FrontendHandle { addr: bound, shared, join: Some(join) })
+}
+
+/// Acceptor body: runs on the dedicated front-end thread until shutdown,
+/// then tears down readers -> queue -> workers in dependency order.
+fn serve_loop(listener: TcpListener, shared: Arc<Shared>) -> FrontendStats {
+    let t_start = Instant::now();
+    let worker_handles: Vec<JoinHandle<(WorkerStats, usize, usize)>> = (0..shared.cfg.workers)
+        .map(|w| {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("srigl-worker-{w}"))
+                .spawn(move || worker_loop(&shared))
+                .expect("spawning pool worker")
+        })
+        .collect();
+
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                // Transient accept error (EMFILE under connection flood):
+                // back off instead of spinning a core while the workers
+                // are trying to drain jobs and free fds.
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break; // the wake-up connection from stop()
+        }
+        shared.connections.fetch_add(1, Ordering::Relaxed);
+        let conn_id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed) as u64;
+        let Ok(registry_clone) = stream.try_clone() else { continue };
+        shared.conns.lock().unwrap().insert(conn_id, registry_clone);
+        let ticket = ReaderGate::enter(&shared.gate);
+        let reader_shared = Arc::clone(&shared);
+        let spawned = std::thread::Builder::new()
+            .name(format!("srigl-conn-{conn_id}"))
+            .spawn(move || {
+                let _ticket = ticket; // decrements the gate on exit/panic
+                reader_loop(stream, &reader_shared);
+                reader_shared.conns.lock().unwrap().remove(&conn_id);
+            });
+        if spawned.is_err() {
+            shared.conns.lock().unwrap().remove(&conn_id);
+        }
+    }
+
+    // Teardown: hang up on every live connection so readers unblock...
+    for (_, c) in shared.conns.lock().unwrap().iter() {
+        let _ = c.shutdown(Shutdown::Both);
+    }
+    shared.gate.wait_idle();
+    // ...then close the queue (readers are gone, nobody can push) and let
+    // the workers drain what is left.
+    shared.injector.close();
+    let mut worker_stats = Vec::with_capacity(worker_handles.len());
+    let (mut min_rows, mut max_rows) = (usize::MAX, 0usize);
+    for h in worker_handles {
+        let (ws, lo, hi) = h.join().expect("pool worker panicked");
+        min_rows = min_rows.min(lo);
+        max_rows = max_rows.max(hi);
+        worker_stats.push(ws);
+    }
+    let served = worker_stats.iter().map(|w| w.served).sum();
+    FrontendStats {
+        latency: LatencyStats::from_workers(&worker_stats, t_start.elapsed().as_secs_f64()),
+        served,
+        cache_hits: shared.cache_hits.load(Ordering::Relaxed),
+        rejected: shared.rejected.load(Ordering::Relaxed),
+        bad_requests: shared.bad_requests.load(Ordering::Relaxed),
+        connections: shared.connections.load(Ordering::Relaxed),
+        min_forward_rows: if max_rows == 0 { 0 } else { min_rows },
+        max_forward_rows: max_rows,
+    }
+}
+
+fn respond(writer: &Mutex<TcpStream>, id: u64, body: ResponseBody) {
+    // Write errors mean the client hung up; the reader will notice EOF.
+    let mut w = writer.lock().unwrap();
+    let _ = write_response(&mut *w, &ResponseFrame { id, body });
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Per-connection ingestion: parse frames, consult the cache, enqueue or
+/// reject. Exits on EOF, a framing error, or socket shutdown.
+fn reader_loop(stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_nodelay(true);
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let mut rd = std::io::BufReader::new(stream);
+    let d = shared.model.in_width();
+    let cap = shared.cfg.batching.cap();
+    while let Ok(Some(req)) = read_request(&mut rd) {
+        let rows = req.rows as usize;
+        if rows == 0 || rows > cap || req.payload.len() != rows * d {
+            shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let msg = format!(
+                "bad request: rows={rows} payload={} (need 1..={cap} rows of width {d})",
+                req.payload.len()
+            );
+            respond(&writer, req.id, ResponseBody::Error(msg));
+            continue;
+        }
+        let hash = fnv1a_f32(&req.payload);
+        if let Some(cache) = &shared.cache {
+            let mut c = cache.lock().unwrap();
+            if let Some((input, output)) = c.get(&hash) {
+                if bits_eq(input, &req.payload) {
+                    let body =
+                        ResponseBody::Output { rows: req.rows, data: output.clone() };
+                    drop(c);
+                    shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    respond(&writer, req.id, body);
+                    continue;
+                }
+                // FNV collision: fall through and recompute (the insert
+                // below will overwrite the colliding entry).
+            }
+        }
+        let job = Job {
+            id: req.id,
+            rows,
+            x: req.payload,
+            hash,
+            writer: Arc::clone(&writer),
+            t_submit: Instant::now(),
+        };
+        if let Err(QueueFull(job)) = shared.injector.push_bounded(job) {
+            shared.rejected.fetch_add(1, Ordering::Relaxed);
+            respond(
+                &job.writer,
+                job.id,
+                ResponseBody::Busy { retry_after_ms: shared.cfg.retry_after_ms },
+            );
+        }
+    }
+}
+
+/// Pool worker: adaptive pop, greedy row-packing, forward, route results.
+/// Returns (stats, min packed rows, max packed rows).
+fn worker_loop(shared: &Shared) -> (WorkerStats, usize, usize) {
+    let model = &shared.model;
+    let d = model.in_width();
+    let ow = model.out_width();
+    let cap = shared.cfg.batching.cap();
+    let threads = shared.cfg.threads;
+    let mut scratch = model.make_scratch(cap);
+    let mut xbuf = vec![0f32; cap * d];
+    let mut jobs: Vec<Job> = Vec::with_capacity(cap);
+    let mut ws = WorkerStats::default();
+    let (mut min_rows, mut max_rows) = (usize::MAX, 0usize);
+    loop {
+        jobs.clear();
+        let want = match shared.cfg.batching {
+            Batching::Fixed(n) => n.max(1),
+            Batching::Adaptive { .. } => shared.batcher.next_batch(shared.injector.len()),
+        };
+        if shared.injector.pop_batch(want, &mut jobs) == 0 {
+            break;
+        }
+        while !jobs.is_empty() {
+            // pack leading jobs while their rows fit one forward (every
+            // job has rows <= cap, enforced at ingress, so take >= 1)
+            let mut rows = 0usize;
+            let mut take = 0usize;
+            while take < jobs.len() && rows + jobs[take].rows <= cap {
+                rows += jobs[take].rows;
+                take += 1;
+            }
+            let mut off = 0usize;
+            for job in &jobs[..take] {
+                xbuf[off * d..(off + job.rows) * d].copy_from_slice(&job.x);
+                off += job.rows;
+            }
+            let out = model.forward(&xbuf[..rows * d], rows, &mut scratch, threads);
+            let t_done = Instant::now();
+            min_rows = min_rows.min(rows);
+            max_rows = max_rows.max(rows);
+            ws.batches += 1;
+            ws.served += take;
+            let mut off = 0usize;
+            for job in jobs.drain(..take) {
+                let data = out[off * ow..(off + job.rows) * ow].to_vec();
+                off += job.rows;
+                ws.latencies_us
+                    .push(t_done.duration_since(job.t_submit).as_secs_f64() * 1e6);
+                // Insert BEFORE responding: once a client holds the answer
+                // it may resend the same payload, which must then hit.
+                if let Some(cache) = &shared.cache {
+                    cache.lock().unwrap().insert(job.hash, (job.x, data.clone()));
+                }
+                respond(
+                    &job.writer,
+                    job.id,
+                    ResponseBody::Output { rows: job.rows as u32, data },
+                );
+            }
+        }
+    }
+    (ws, min_rows, max_rows)
+}

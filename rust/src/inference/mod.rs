@@ -13,9 +13,11 @@
 //! sweeps 1/4/8 CPU threads in Figs. 18-20): batch-1 splits the single
 //! output row across threads; batched splits batch rows.
 
+pub mod frontend;
 pub mod model;
 pub mod server;
 
+pub use frontend::{FrontendConfig, FrontendHandle, FrontendStats};
 pub use model::{Activation, LayerSpec, ModelLayer, Repr, Scratch, SparseModel};
 
 use crate::sparsity::{Condensed, Csr, Mask};

@@ -325,6 +325,15 @@ impl SparseModel {
         }
     }
 
+    /// One-shot forward that allocates its own scratch and returns an owned
+    /// result — for tests, examples, and cross-checking served outputs
+    /// against the direct path. Hot paths should hold a [`Scratch`] and
+    /// call [`SparseModel::forward`] instead.
+    pub fn forward_vec(&self, x: &[f32], batch: usize, threads: usize) -> Vec<f32> {
+        let mut s = self.make_scratch(batch);
+        self.forward(x, batch, &mut s, threads).to_vec()
+    }
+
     /// Run the stack on `batch` rows of `x` (row-major, width `in_width`),
     /// returning the final activations (batch x out_width) inside `s`.
     /// Allocation-free: ping-pongs between the two scratch buffers, staging
@@ -423,8 +432,7 @@ mod tests {
     }
 
     fn forward_vec(model: &SparseModel, x: &[f32], batch: usize) -> Vec<f32> {
-        let mut s = model.make_scratch(batch);
-        model.forward(x, batch, &mut s, 1).to_vec()
+        model.forward_vec(x, batch, 1)
     }
 
     #[test]

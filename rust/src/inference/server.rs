@@ -12,6 +12,7 @@
 //! scratch buffers, and record end-to-end latency per request. Per-worker
 //! latency records are merged into one [`LatencyStats`] at the end.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use super::model::Scratch;
@@ -28,6 +29,75 @@ pub enum ServeMode {
     /// Worker pool: `workers` threads share the queue, each coalescing up
     /// to `max_batch` — the multi-core serving mode.
     Pooled { workers: usize, max_batch: usize },
+    /// Worker pool with adaptive batching: each pop's batch limit follows
+    /// an EWMA of observed queue depth (capped at `cap`), so a trickle is
+    /// served batch-1 for latency and a flood coalesces for throughput.
+    Adaptive { workers: usize, cap: usize },
+}
+
+/// How a worker picks its per-pop batch limit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Batching {
+    /// Always pop up to `n` requests (the PR-1 behaviour).
+    Fixed(usize),
+    /// Pop up to `AdaptiveBatcher::next_batch(queue depth)`, never more
+    /// than `cap` (which also sizes the per-worker scratch).
+    Adaptive { cap: usize },
+}
+
+impl Batching {
+    /// Upper bound on any batch this policy can produce — what scratch
+    /// buffers must be sized for.
+    pub fn cap(self) -> usize {
+        match self {
+            Batching::Fixed(n) => n.max(1),
+            Batching::Adaptive { cap } => cap.max(1),
+        }
+    }
+}
+
+/// Shared adaptive batch-size controller: an exponentially weighted moving
+/// average of the queue depth observed at each pop. Workers call
+/// [`AdaptiveBatcher::next_batch`] with the current depth and get back the
+/// batch limit to use for that pop, `ceil(ewma)` clamped to `[1, cap]`.
+/// The EWMA is stored as f64 bits in an atomic so the controller is shared
+/// lock-free across workers; the update is racy by design (a lost update
+/// just means one pop sees a slightly stale depth estimate).
+pub struct AdaptiveBatcher {
+    cap: usize,
+    alpha: f64,
+    ewma_bits: AtomicU64,
+}
+
+impl AdaptiveBatcher {
+    /// Default smoothing: new depth observations carry 25% weight.
+    pub const DEFAULT_ALPHA: f64 = 0.25;
+
+    pub fn new(cap: usize) -> AdaptiveBatcher {
+        AdaptiveBatcher::with_alpha(cap, Self::DEFAULT_ALPHA)
+    }
+
+    pub fn with_alpha(cap: usize, alpha: f64) -> AdaptiveBatcher {
+        AdaptiveBatcher {
+            cap: cap.max(1),
+            alpha: alpha.clamp(0.01, 1.0),
+            ewma_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Fold one queue-depth observation into the EWMA and return the batch
+    /// limit for this pop.
+    pub fn next_batch(&self, depth: usize) -> usize {
+        let prev = f64::from_bits(self.ewma_bits.load(Ordering::Relaxed));
+        let e = (1.0 - self.alpha) * prev + self.alpha * depth as f64;
+        self.ewma_bits.store(e.to_bits(), Ordering::Relaxed);
+        (e.ceil() as usize).clamp(1, self.cap)
+    }
+
+    /// Current depth estimate (diagnostics).
+    pub fn ewma(&self) -> f64 {
+        f64::from_bits(self.ewma_bits.load(Ordering::Relaxed))
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -148,11 +218,18 @@ pub fn serve_model(model: &SparseModel, cfg: &ServeConfig) -> LatencyStats {
 /// The serving engine all modes share: `Online` and `Batched` are the
 /// 1-worker special cases of the pool.
 pub fn serve_target<T: ServeTarget>(target: &T, cfg: &ServeConfig) -> LatencyStats {
-    let (workers, max_batch) = match cfg.mode {
-        ServeMode::Online => (1, 1),
-        ServeMode::Batched { max_batch } => (1, max_batch.max(1)),
-        ServeMode::Pooled { workers, max_batch } => (workers.max(1), max_batch.max(1)),
+    let (workers, batching) = match cfg.mode {
+        ServeMode::Online => (1, Batching::Fixed(1)),
+        ServeMode::Batched { max_batch } => (1, Batching::Fixed(max_batch.max(1))),
+        ServeMode::Pooled { workers, max_batch } => {
+            (workers.max(1), Batching::Fixed(max_batch.max(1)))
+        }
+        ServeMode::Adaptive { workers, cap } => {
+            (workers.max(1), Batching::Adaptive { cap: cap.max(1) })
+        }
     };
+    let max_batch = batching.cap();
+    let batcher = AdaptiveBatcher::new(max_batch);
     let d = target.in_width();
     let threads = cfg.threads;
     let mean_gap = cfg.mean_interarrival;
@@ -181,6 +258,7 @@ pub fn serve_target<T: ServeTarget>(target: &T, cfg: &ServeConfig) -> LatencySta
         });
 
         // Workers: pop-batch + forward on private scratch.
+        let batcher = &batcher;
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 s.spawn(move || {
@@ -190,7 +268,11 @@ pub fn serve_target<T: ServeTarget>(target: &T, cfg: &ServeConfig) -> LatencySta
                     let mut ws = WorkerStats::default();
                     loop {
                         batch.clear();
-                        if inj.pop_batch(max_batch, &mut batch) == 0 {
+                        let want = match batching {
+                            Batching::Fixed(n) => n,
+                            Batching::Adaptive { .. } => batcher.next_batch(inj.len()),
+                        };
+                        if inj.pop_batch(want, &mut batch) == 0 {
                             break;
                         }
                         let b = batch.len();
@@ -304,6 +386,49 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_mode_serves_all_requests() {
+        let m = model3(Repr::Condensed);
+        let cfg = ServeConfig {
+            mode: ServeMode::Adaptive { workers: 2, cap: 8 },
+            n_requests: 200,
+            mean_interarrival: Duration::ZERO, // flood -> depth EWMA rises
+            threads: 1,
+            seed: 6,
+        };
+        let stats = serve_model(&m, &cfg);
+        assert_eq!(stats.n, 200, "adaptive pool must serve every request exactly once");
+        assert!(stats.mean_batch >= 1.0 && stats.mean_batch <= 8.0);
+    }
+
+    #[test]
+    fn adaptive_batcher_tracks_depth() {
+        let b = AdaptiveBatcher::new(8);
+        assert_eq!(b.next_batch(0), 1, "empty queue serves batch-1");
+        // sustained flood drives the limit to the cap
+        let mut last = 0;
+        for _ in 0..50 {
+            last = b.next_batch(100);
+        }
+        assert_eq!(last, 8, "flood saturates at cap");
+        assert!(b.ewma() > 8.0);
+        // sustained idle decays back to batch-1
+        for _ in 0..100 {
+            last = b.next_batch(0);
+        }
+        assert_eq!(last, 1, "idle decays to batch-1");
+        assert!(b.ewma() < 1.0);
+    }
+
+    #[test]
+    fn adaptive_batcher_intermediate_depths() {
+        let b = AdaptiveBatcher::with_alpha(16, 1.0); // no smoothing: limit == depth
+        assert_eq!(b.next_batch(3), 3);
+        assert_eq!(b.next_batch(40), 16, "clamped to cap");
+        assert_eq!(b.next_batch(0), 1, "floor 1");
+        assert_eq!(AdaptiveBatcher::new(0).next_batch(100), 1, "cap floor is 1");
+    }
+
+    #[test]
     fn percentiles_ordered() {
         let sorted: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         assert_eq!(percentile(&sorted, 50.0), 51.0);
@@ -343,5 +468,32 @@ mod tests {
         assert_eq!(s.n, 0);
         assert!(s.p50_us.is_nan() && s.max_us.is_nan());
         assert_eq!(s.throughput_rps, 0.0);
+        assert!(s.mean_us.is_finite(), "empty mean must not divide by zero");
+        assert_eq!(s.mean_batch, 0.0, "no batches -> mean_batch 0, not NaN");
+    }
+
+    #[test]
+    fn merged_workers_with_no_samples() {
+        // workers that never popped a request: non-empty worker list, zero samples
+        let s = LatencyStats::from_workers(&[WorkerStats::default(), WorkerStats::default()], 0.5);
+        assert_eq!(s.n, 0);
+        assert!(s.p50_us.is_nan() && s.p99_us.is_nan() && s.max_us.is_nan());
+        assert!(s.mean_us.is_finite() && s.mean_batch.is_finite());
+        assert_eq!(s.throughput_rps, 0.0);
+    }
+
+    #[test]
+    fn merged_single_sample() {
+        let w = WorkerStats { latencies_us: vec![123.0], served: 1, batches: 1 };
+        let s = LatencyStats::from_workers(&[w], 2.0);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.mean_us, 123.0);
+        // every percentile of a single sample is that sample
+        assert_eq!(s.p50_us, 123.0);
+        assert_eq!(s.p95_us, 123.0);
+        assert_eq!(s.p99_us, 123.0);
+        assert_eq!(s.max_us, 123.0);
+        assert_eq!(s.throughput_rps, 0.5);
+        assert_eq!(s.mean_batch, 1.0);
     }
 }

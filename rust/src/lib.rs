@@ -6,7 +6,9 @@
 //! * **L3 (this crate)** — the coordinator: DST topology updaters
 //!   ([`dst`]), the training-loop driver ([`train`]), the PJRT runtime
 //!   that executes AOT-compiled JAX programs ([`runtime`]), the condensed
-//!   sparse inference engine and online-inference server ([`inference`]),
+//!   sparse inference engine and online-inference server ([`inference`])
+//!   with its socket serving front-end ([`inference::frontend`] over the
+//!   [`net`] wire protocol),
 //!   plus the analysis substrates the paper's evaluation needs
 //!   ([`stats`], [`flops`]) and one harness per paper table/figure
 //!   ([`exp`]).
@@ -24,6 +26,7 @@ pub mod dst;
 pub mod exp;
 pub mod flops;
 pub mod inference;
+pub mod net;
 pub mod runtime;
 pub mod sparsity;
 pub mod stats;

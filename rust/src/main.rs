@@ -12,8 +12,9 @@ use anyhow::Result;
 
 use srigl::data;
 use srigl::exp;
-use srigl::inference::server::{serve, serve_model, ServeConfig, ServeMode};
-use srigl::inference::{Activation, LayerBundle, LayerSpec, Repr, SparseModel};
+use srigl::inference::server::{serve, serve_model, Batching, ServeConfig, ServeMode};
+use srigl::inference::{frontend, Activation, FrontendConfig, LayerBundle, LayerSpec, Repr, SparseModel};
+use srigl::runtime::manifest::ServeKnobs;
 use srigl::runtime::{Manifest, Runtime};
 use srigl::sparsity::Distribution;
 use srigl::train::{LrSchedule, Method, Session, TrainConfig};
@@ -38,7 +39,9 @@ USAGE:
   srigl serve [--sparsity 0.9] [--requests N] [--batched MAX]
   srigl serve-model [--dims 3072,768,768,256] [--repr condensed|dense|csr|structured|mixed]
               [--sparsity 0.9] [--workers 4] [--max-batch 8] [--requests N]
-              [--threads T] [--gap-us G] [--stack NAME]
+              [--threads T] [--gap-us G] [--stack NAME] [--adaptive]
+              [--listen ADDR] [--queue-cap N] [--cache-cap N] [--retry-ms M]
+              [--fixed-batch]
   srigl check
   srigl list"
     );
@@ -212,18 +215,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Serve a multi-layer sparse model through the worker-pool server,
-/// reporting workers=1 vs workers=N so the pool speedup is visible.
+/// Serve a multi-layer sparse model: by default through the in-process
+/// Poisson benchmark (reporting workers=1 vs workers=N so the pool speedup
+/// is visible); with `--listen ADDR`, through the network front-end until
+/// the process is killed.
 fn cmd_serve_model(args: &Args) -> Result<()> {
     let n_requests: usize = args.parse_or("requests", 2000)?;
     let workers: usize = args.parse_or("workers", 4)?;
-    let max_batch: usize = args.parse_or("max-batch", 8)?;
     let threads: usize = args.parse_or("threads", 1)?;
     let gap = std::time::Duration::from_micros(args.parse_or("gap-us", 0u64)?);
 
-    let model = if let Some(name) = args.get("stack") {
+    let (model, knobs) = if let Some(name) = args.get("stack") {
         let man = Manifest::load_default()?;
-        SparseModel::from_stack(man.stack(name)?)?
+        let entry = man.stack(name)?;
+        (SparseModel::from_stack(entry)?, entry.serve)
     } else {
         let dims: Vec<usize> = args.list_or("dims", &[3072usize, 768, 768, 256])?;
         anyhow::ensure!(dims.len() >= 2, "--dims needs an input width plus >=1 layer widths");
@@ -245,14 +250,25 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
                 activation: if i + 1 == n_layers { Activation::Identity } else { Activation::Relu },
             });
         }
-        SparseModel::synth(dims[0], &specs, 42)?
+        (SparseModel::synth(dims[0], &specs, 42)?, ServeKnobs::default())
     };
+    let max_batch: usize = args.parse_or("max-batch", knobs.max_batch)?;
+    // In-process benches only go adaptive on an explicit flag (the PR-1
+    // Poisson path stays byte-identical by default); the listen path
+    // defaults to the stack's serve knobs, `--fixed-batch` overriding.
+    let adaptive = args.has("adaptive");
+
+    if let Some(addr) = args.get("listen") {
+        let adaptive = adaptive || (knobs.adaptive && !args.has("fixed-batch"));
+        return serve_listen(args, model, knobs, addr, workers, max_batch, adaptive, threads);
+    }
 
     println!("serving model: {}", model.describe());
     println!(
-        "{} layers, {} KiB total, {n_requests} requests, max_batch={max_batch}, {threads} intra-op thread(s)",
+        "{} layers, {} KiB total, {n_requests} requests, max_batch={max_batch}{}, {threads} intra-op thread(s)",
         model.depth(),
-        model.storage_bytes() / 1024
+        model.storage_bytes() / 1024,
+        if adaptive { " (adaptive)" } else { "" }
     );
     let mut worker_counts = vec![1usize];
     if workers > 1 {
@@ -260,15 +276,14 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
     }
     let mut base_rps = 0.0;
     for &w in &worker_counts {
+        let mode = if adaptive {
+            ServeMode::Adaptive { workers: w, cap: max_batch }
+        } else {
+            ServeMode::Pooled { workers: w, max_batch }
+        };
         let stats = serve_model(
             &model,
-            &ServeConfig {
-                mode: ServeMode::Pooled { workers: w, max_batch },
-                n_requests,
-                mean_interarrival: gap,
-                threads,
-                seed: 1,
-            },
+            &ServeConfig { mode, n_requests, mean_interarrival: gap, threads, seed: 1 },
         );
         let speedup = if base_rps > 0.0 {
             format!("  ({:.2}x vs 1 worker)", stats.throughput_rps / base_rps)
@@ -281,6 +296,46 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
             stats.p50_us, stats.p99_us, stats.mean_batch, stats.throughput_rps
         );
     }
+    Ok(())
+}
+
+/// `serve-model --listen ADDR`: run the socket front-end until killed.
+/// Manifest `serve` knobs (when `--stack`) provide defaults; flags win.
+#[allow(clippy::too_many_arguments)]
+fn serve_listen(
+    args: &Args,
+    model: SparseModel,
+    knobs: ServeKnobs,
+    addr: &str,
+    workers: usize,
+    max_batch: usize,
+    adaptive: bool,
+    threads: usize,
+) -> Result<()> {
+    let cfg = FrontendConfig {
+        workers,
+        batching: if adaptive {
+            Batching::Adaptive { cap: max_batch }
+        } else {
+            Batching::Fixed(max_batch)
+        },
+        queue_capacity: args.parse_or("queue-cap", knobs.queue_capacity)?,
+        cache_capacity: args.parse_or("cache-cap", knobs.cache_capacity)?,
+        threads,
+        retry_after_ms: args.parse_or("retry-ms", 2)?,
+    };
+    println!("serving model: {}", model.describe());
+    let handle = frontend::spawn(std::sync::Arc::new(model), addr, cfg)?;
+    println!(
+        "listening on {} — {} workers, {} batching (cap {max_batch}), queue cap {}, cache {} entries",
+        handle.addr(),
+        cfg.workers,
+        if adaptive { "adaptive" } else { "fixed" },
+        cfg.queue_capacity,
+        cfg.cache_capacity
+    );
+    println!("wire format: docs/WIRE.md; stop with Ctrl-C");
+    handle.run_forever();
     Ok(())
 }
 

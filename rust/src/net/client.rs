@@ -1,0 +1,81 @@
+//! Synchronous loopback client for the serving front-end: one request in
+//! flight per connection, so responses always match the outstanding id.
+//! Used by `examples/socket_serving.rs`, `benches/frontend.rs`, and the
+//! socket integration tests.
+
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::{read_response, write_request, RequestFrame, ResponseBody};
+
+/// What the server said about one request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    /// Row-major model output (`rows * out_width` f32s).
+    Output(Vec<f32>),
+    /// Backpressure: the bounded queue was full; retry after the backoff.
+    Busy { retry_after_ms: u32 },
+}
+
+/// Blocking request/response client over one TCP connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?; // request/response pattern: don't Nagle-delay frames
+        let writer = BufWriter::new(stream.try_clone()?);
+        Ok(Client { reader: BufReader::new(stream), writer, next_id: 1 })
+    }
+
+    /// Send `rows` rows of features and block for the server's answer.
+    /// A [`ResponseBody::Error`] from the server surfaces as an
+    /// `InvalidInput` io error (the connection stays usable).
+    pub fn infer(&mut self, rows: usize, x: &[f32]) -> io::Result<Reply> {
+        let id = self.next_id;
+        self.next_id += 1;
+        write_request(
+            &mut self.writer,
+            &RequestFrame { id, rows: rows as u32, payload: x.to_vec() },
+        )?;
+        self.writer.flush()?;
+        let resp = read_response(&mut self.reader)?.ok_or_else(|| {
+            io::Error::new(io::ErrorKind::ConnectionAborted, "server closed mid-request")
+        })?;
+        if resp.id != id {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("response id {} for request {id} (sync client)", resp.id),
+            ));
+        }
+        match resp.body {
+            ResponseBody::Output { data, .. } => Ok(Reply::Output(data)),
+            ResponseBody::Busy { retry_after_ms } => Ok(Reply::Busy { retry_after_ms }),
+            ResponseBody::Error(msg) => Err(io::Error::new(io::ErrorKind::InvalidInput, msg)),
+        }
+    }
+
+    /// [`Client::infer`], sleeping out `Busy` backoffs up to `max_retries`
+    /// times — the polite way to drive a backpressuring server.
+    pub fn infer_retrying(
+        &mut self,
+        rows: usize,
+        x: &[f32],
+        max_retries: usize,
+    ) -> io::Result<Vec<f32>> {
+        for _ in 0..=max_retries {
+            match self.infer(rows, x)? {
+                Reply::Output(out) => return Ok(out),
+                Reply::Busy { retry_after_ms } => {
+                    std::thread::sleep(Duration::from_millis(retry_after_ms as u64));
+                }
+            }
+        }
+        Err(io::Error::new(io::ErrorKind::TimedOut, "server still busy after retries"))
+    }
+}

@@ -1,0 +1,351 @@
+//! Wire protocol for the network serving front-end
+//! ([`crate::inference::frontend`]) — a minimal length-prefixed binary
+//! format over TCP (see `docs/WIRE.md` for the byte-level spec).
+//!
+//! All integers are little-endian; payloads are raw f32 bits.
+//!
+//! **Request** (client -> server):
+//! ```text
+//! u32 len      # bytes after this field (= 12 + 4*rows*d)
+//! u64 id       # client-chosen, echoed in the response
+//! u32 rows     # batch rows in this request
+//! f32[rows*d]  # row-major features, d = model input width
+//! ```
+//!
+//! **Response** (server -> client):
+//! ```text
+//! u32 len      # bytes after this field
+//! u64 id       # echoes the request id
+//! u8  status   # 0 = Ok, 1 = Busy (backpressure), 2 = Error
+//! status 0:  u32 rows, f32[rows*out_width]
+//! status 1:  u32 retry_after_ms
+//! status 2:  utf-8 message (len - 9 bytes)
+//! ```
+//!
+//! Responses carry the request id because a pipelined connection may be
+//! answered out of submission order (cache hits and rejections are written
+//! by the reader thread, computed results by whichever pool worker ran the
+//! batch). The synchronous [`Client`] keeps one request in flight, so it
+//! never observes reordering.
+
+mod client;
+
+pub use client::{Client, Reply};
+
+use std::io::{self, Read, Write};
+
+/// Refuse frames above this size (64 MiB) so a corrupt or hostile length
+/// prefix cannot OOM the server.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Response status byte.
+pub const STATUS_OK: u8 = 0;
+pub const STATUS_BUSY: u8 = 1;
+pub const STATUS_ERROR: u8 = 2;
+
+/// One inference request: `rows` feature rows, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestFrame {
+    pub id: u64,
+    pub rows: u32,
+    pub payload: Vec<f32>,
+}
+
+/// One server response, tagged by the request id it answers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResponseFrame {
+    pub id: u64,
+    pub body: ResponseBody,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum ResponseBody {
+    /// Model output: `rows` rows of `out_width` f32s, row-major.
+    Output { rows: u32, data: Vec<f32> },
+    /// Bounded queue was full; retry after the given backoff.
+    Busy { retry_after_ms: u32 },
+    /// Malformed or unservable request (shape mismatch, oversized batch).
+    Error(String),
+}
+
+/// FNV-1a over a byte slice — the result-cache key; the serving front-end
+/// ([`crate::inference::frontend`]) hashes each request's row bytes with
+/// this.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// FNV-1a over the raw bits of an f32 slice (no copy).
+pub fn fnv1a_f32(xs: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for x in xs {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> io::Result<bool> {
+    // Distinguish clean EOF (no bytes at all) from a truncated frame.
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(false);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("truncated frame: {got}/{} header bytes", buf.len()),
+                ));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+fn frame_len<R: Read>(r: &mut R) -> io::Result<Option<usize>> {
+    let mut lenb = [0u8; 4];
+    if !read_exact_or_eof(r, &mut lenb)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(lenb) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds cap {MAX_FRAME_BYTES}"),
+        ));
+    }
+    Ok(Some(len))
+}
+
+fn f32s_from_le(bytes: &[u8]) -> io::Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("payload of {} bytes is not a whole number of f32s", bytes.len()),
+        ));
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn extend_f32s_le(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Write one request frame (single `write_all` so a frame is never
+/// interleaved with another writer on a shared stream).
+pub fn write_request<W: Write>(w: &mut W, req: &RequestFrame) -> io::Result<()> {
+    let len = 12 + req.payload.len() * 4;
+    let mut buf = Vec::with_capacity(4 + len);
+    buf.extend_from_slice(&(len as u32).to_le_bytes());
+    buf.extend_from_slice(&req.id.to_le_bytes());
+    buf.extend_from_slice(&req.rows.to_le_bytes());
+    extend_f32s_le(&mut buf, &req.payload);
+    w.write_all(&buf)
+}
+
+/// Read one request frame; `Ok(None)` on clean EOF (client hung up between
+/// frames). Shape validation (rows x d) is the server's job — the wire
+/// layer only enforces framing.
+pub fn read_request<R: Read>(r: &mut R) -> io::Result<Option<RequestFrame>> {
+    let Some(len) = frame_len(r)? else {
+        return Ok(None);
+    };
+    if len < 12 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("request frame of {len} bytes is shorter than its 12-byte header"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    let id = u64::from_le_bytes(body[0..8].try_into().unwrap());
+    let rows = u32::from_le_bytes(body[8..12].try_into().unwrap());
+    let payload = f32s_from_le(&body[12..])?;
+    Ok(Some(RequestFrame { id, rows, payload }))
+}
+
+/// Write one response frame (single `write_all`; see [`write_request`]).
+pub fn write_response<W: Write>(w: &mut W, resp: &ResponseFrame) -> io::Result<()> {
+    let body_len = match &resp.body {
+        ResponseBody::Output { data, .. } => 13 + data.len() * 4,
+        ResponseBody::Busy { .. } => 13,
+        ResponseBody::Error(msg) => 9 + msg.len(),
+    };
+    let mut buf = Vec::with_capacity(4 + body_len);
+    buf.extend_from_slice(&(body_len as u32).to_le_bytes());
+    buf.extend_from_slice(&resp.id.to_le_bytes());
+    match &resp.body {
+        ResponseBody::Output { rows, data } => {
+            buf.push(STATUS_OK);
+            buf.extend_from_slice(&rows.to_le_bytes());
+            extend_f32s_le(&mut buf, data);
+        }
+        ResponseBody::Busy { retry_after_ms } => {
+            buf.push(STATUS_BUSY);
+            buf.extend_from_slice(&retry_after_ms.to_le_bytes());
+        }
+        ResponseBody::Error(msg) => {
+            buf.push(STATUS_ERROR);
+            buf.extend_from_slice(msg.as_bytes());
+        }
+    }
+    w.write_all(&buf)
+}
+
+/// Read one response frame; `Ok(None)` on clean EOF (server closed).
+pub fn read_response<R: Read>(r: &mut R) -> io::Result<Option<ResponseFrame>> {
+    let Some(len) = frame_len(r)? else {
+        return Ok(None);
+    };
+    if len < 9 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("response frame of {len} bytes is shorter than its 9-byte header"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    let id = u64::from_le_bytes(body[0..8].try_into().unwrap());
+    let status = body[8];
+    let rest = &body[9..];
+    let body = match status {
+        STATUS_OK => {
+            if rest.len() < 4 {
+                return Err(io::Error::new(io::ErrorKind::InvalidData, "Ok frame missing rows"));
+            }
+            let rows = u32::from_le_bytes(rest[0..4].try_into().unwrap());
+            ResponseBody::Output { rows, data: f32s_from_le(&rest[4..])? }
+        }
+        STATUS_BUSY => {
+            if rest.len() != 4 {
+                return Err(io::Error::new(io::ErrorKind::InvalidData, "Busy frame malformed"));
+            }
+            ResponseBody::Busy { retry_after_ms: u32::from_le_bytes(rest.try_into().unwrap()) }
+        }
+        STATUS_ERROR => ResponseBody::Error(String::from_utf8_lossy(rest).into_owned()),
+        other => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unknown response status {other}"),
+            ))
+        }
+    };
+    Ok(Some(ResponseFrame { id, body }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn request_roundtrip() {
+        let req = RequestFrame { id: 0xDEAD_BEEF_0042, rows: 2, payload: vec![1.5, -2.0, 0.0, 3.25] };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        assert_eq!(buf.len(), 4 + 12 + 16);
+        let got = read_request(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(got, req);
+    }
+
+    #[test]
+    fn response_roundtrips_all_variants() {
+        let frames = [
+            ResponseFrame { id: 1, body: ResponseBody::Output { rows: 1, data: vec![9.0, -1.0] } },
+            ResponseFrame { id: 2, body: ResponseBody::Busy { retry_after_ms: 7 } },
+            ResponseFrame { id: 3, body: ResponseBody::Error("bad shape".into()) },
+        ];
+        for f in &frames {
+            let mut buf = Vec::new();
+            write_response(&mut buf, f).unwrap();
+            let got = read_response(&mut Cursor::new(&buf)).unwrap().unwrap();
+            assert_eq!(&got, f);
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_and_clean_eof() {
+        let mut buf = Vec::new();
+        for id in 0..3u64 {
+            write_request(&mut buf, &RequestFrame { id, rows: 1, payload: vec![id as f32] })
+                .unwrap();
+        }
+        let mut cur = Cursor::new(&buf);
+        for id in 0..3u64 {
+            let got = read_request(&mut cur).unwrap().unwrap();
+            assert_eq!(got.id, id);
+            assert_eq!(got.payload, vec![id as f32]);
+        }
+        assert!(read_request(&mut cur).unwrap().is_none(), "clean EOF after last frame");
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_eof() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &RequestFrame { id: 5, rows: 1, payload: vec![1.0, 2.0] }).unwrap();
+        for cut in [2, 6, buf.len() - 1] {
+            let err = match read_request(&mut Cursor::new(&buf[..cut])) {
+                Err(e) => e,
+                Ok(f) => panic!("cut={cut} parsed {f:?}"),
+            };
+            assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn oversized_and_undersized_frames_rejected() {
+        let huge = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes();
+        assert!(read_request(&mut Cursor::new(&huge[..])).is_err());
+        // len < header size
+        let mut tiny = Vec::new();
+        tiny.extend_from_slice(&4u32.to_le_bytes());
+        tiny.extend_from_slice(&[0u8; 4]);
+        assert!(read_request(&mut Cursor::new(&tiny)).is_err());
+        assert!(read_response(&mut Cursor::new(&tiny)).is_err());
+    }
+
+    #[test]
+    fn ragged_payload_rejected() {
+        // 13-byte request body: 12-byte header + 1 stray payload byte
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&13u32.to_le_bytes());
+        buf.extend_from_slice(&1u64.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(0xFF);
+        assert!(read_request(&mut Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // Reference values for the 64-bit FNV-1a test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv1a_f32_matches_byte_hash() {
+        let xs = [1.5f32, -0.25, 3.1415, f32::MIN_POSITIVE];
+        let mut bytes = Vec::new();
+        for x in &xs {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        assert_eq!(fnv1a_f32(&xs), fnv1a(&bytes));
+        assert_ne!(fnv1a_f32(&xs), fnv1a_f32(&xs[..3]));
+    }
+}

@@ -85,6 +85,27 @@ pub struct StackLayerSpec {
     pub activation: String,
 }
 
+/// Serving knobs a stack can carry in its optional `"serve"` object —
+/// defaults for the front-end's queue bound, result cache, and batching
+/// (`serve-model --listen` reads these; CLI flags override).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeKnobs {
+    /// Bounded `Injector` capacity (requests).
+    pub queue_capacity: usize,
+    /// LRU result-cache entries; 0 disables the cache.
+    pub cache_capacity: usize,
+    /// true: adaptive (EWMA-of-depth) batching up to `max_batch`;
+    /// false: fixed `max_batch` per pop.
+    pub adaptive: bool,
+    pub max_batch: usize,
+}
+
+impl Default for ServeKnobs {
+    fn default() -> ServeKnobs {
+        ServeKnobs { queue_capacity: 1024, cache_capacity: 1024, adaptive: true, max_batch: 8 }
+    }
+}
+
 /// A multi-layer serving model described in the manifest's optional
 /// `"stacks"` section — shapes/sparsities only (no weight data); the
 /// inference engine synthesizes weights from `seed`. Consumed by
@@ -95,6 +116,8 @@ pub struct StackEntry {
     pub d_in: usize,
     pub seed: u64,
     pub layers: Vec<StackLayerSpec>,
+    /// Front-end defaults for this stack (absent section -> defaults).
+    pub serve: ServeKnobs,
 }
 
 #[derive(Clone, Debug)]
@@ -187,11 +210,33 @@ fn parse_stack(name: &str, s: &Json) -> Result<StackEntry> {
                 .unwrap_or_else(|| "relu".to_string()),
         });
     }
+    let mut serve = ServeKnobs::default();
+    if let Some(k) = s.opt("serve") {
+        serve = ServeKnobs {
+            queue_capacity: k
+                .opt("queue_capacity")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(serve.queue_capacity),
+            cache_capacity: k
+                .opt("cache_capacity")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(serve.cache_capacity),
+            adaptive: k.opt("adaptive").map(|v| v.as_bool()).transpose()?.unwrap_or(serve.adaptive),
+            max_batch: k
+                .opt("max_batch")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(serve.max_batch),
+        };
+    }
     Ok(StackEntry {
         name: name.to_string(),
         d_in: s.get("d_in")?.as_usize()?,
         seed: s.opt("seed").map(|v| v.as_usize()).transpose()?.unwrap_or(0) as u64,
         layers,
+        serve,
     })
 }
 
@@ -260,6 +305,36 @@ mod tests {
         assert_eq!(e.layers[1].ablated_frac, 0.0, "ablated_frac defaults to 0");
         assert_eq!(e.layers[1].activation, "relu", "activation defaults to relu");
         assert_eq!(e.layers[2].activation, "identity");
+        assert_eq!(e.serve, ServeKnobs::default(), "no serve section -> defaults");
+    }
+
+    #[test]
+    fn parses_serve_knobs() {
+        let src = r#"{
+            "d_in": 16,
+            "layers": [{"n": 8, "repr": "dense", "sparsity": 0.5}],
+            "serve": {"queue_capacity": 64, "cache_capacity": 0, "adaptive": false, "max_batch": 4}
+        }"#;
+        let e = parse_stack("s", &Json::parse(src).unwrap()).unwrap();
+        assert_eq!(
+            e.serve,
+            ServeKnobs { queue_capacity: 64, cache_capacity: 0, adaptive: false, max_batch: 4 }
+        );
+    }
+
+    #[test]
+    fn partial_serve_knobs_keep_defaults() {
+        let src = r#"{
+            "d_in": 16,
+            "layers": [{"n": 8, "repr": "dense", "sparsity": 0.5}],
+            "serve": {"max_batch": 32}
+        }"#;
+        let e = parse_stack("s", &Json::parse(src).unwrap()).unwrap();
+        assert_eq!(e.serve.max_batch, 32);
+        let d = ServeKnobs::default();
+        assert_eq!(e.serve.queue_capacity, d.queue_capacity);
+        assert_eq!(e.serve.cache_capacity, d.cache_capacity);
+        assert_eq!(e.serve.adaptive, d.adaptive);
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Fixed-capacity LRU map — in-tree replacement for the `lru` crate
+//! (offline environment). Backs the serving front-end's result cache
+//! ([`crate::inference::frontend`]): O(1) get/insert via a HashMap into an
+//! intrusive doubly-linked list stored as slot indices in a `Vec`.
+
+use std::collections::HashMap;
+
+const NIL: usize = usize::MAX;
+
+struct Slot<K, V> {
+    key: K,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+/// Least-recently-used map with a hard entry cap. `get` refreshes recency;
+/// inserting past capacity evicts the coldest entry.
+pub struct LruCache<K: std::hash::Hash + Eq + Clone, V> {
+    map: HashMap<K, usize>,
+    slots: Vec<Slot<K, V>>,
+    head: usize, // most recent
+    tail: usize, // least recent
+    capacity: usize,
+}
+
+impl<K: std::hash::Hash + Eq + Clone, V> LruCache<K, V> {
+    /// Cache holding at most `capacity` entries (floor 1).
+    pub fn new(capacity: usize) -> LruCache<K, V> {
+        let capacity = capacity.max(1);
+        LruCache {
+            map: HashMap::with_capacity(capacity),
+            slots: Vec::with_capacity(capacity),
+            head: NIL,
+            tail: NIL,
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Unlink slot `i` from the recency list (it must be linked).
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.slots[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.slots[next].prev = prev;
+        }
+    }
+
+    /// Link slot `i` at the head (most recent).
+    fn link_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Look up `key`, marking the entry most-recently-used on a hit.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        let &i = self.map.get(key)?;
+        if self.head != i {
+            self.unlink(i);
+            self.link_front(i);
+        }
+        Some(&self.slots[i].value)
+    }
+
+    /// Insert or overwrite `key`. Returns the evicted `(key, value)` pair
+    /// when the cache was full and a cold entry had to make room.
+    pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
+        if let Some(&i) = self.map.get(&key) {
+            self.slots[i].value = value;
+            if self.head != i {
+                self.unlink(i);
+                self.link_front(i);
+            }
+            return None;
+        }
+        let mut evicted = None;
+        let i = if self.slots.len() < self.capacity {
+            self.slots.push(Slot { key: key.clone(), value, prev: NIL, next: NIL });
+            self.slots.len() - 1
+        } else {
+            // reuse the coldest slot in place
+            let i = self.tail;
+            self.unlink(i);
+            let old = std::mem::replace(
+                &mut self.slots[i],
+                Slot { key: key.clone(), value, prev: NIL, next: NIL },
+            );
+            self.map.remove(&old.key);
+            evicted = Some((old.key, old.value));
+            i
+        };
+        self.map.insert(key, i);
+        self.link_front(i);
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_and_overwrite() {
+        let mut c: LruCache<u64, i32> = LruCache::new(4);
+        assert!(c.is_empty());
+        assert!(c.get(&1).is_none());
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.get(&1), Some(&10));
+        assert_eq!(c.len(), 2);
+        c.insert(1, 11);
+        assert_eq!(c.get(&1), Some(&11), "insert overwrites");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: LruCache<u64, i32> = LruCache::new(3);
+        c.insert(1, 1);
+        c.insert(2, 2);
+        c.insert(3, 3);
+        assert_eq!(c.get(&1), Some(&1)); // 1 is now hot; 2 is coldest
+        let ev = c.insert(4, 4);
+        assert_eq!(ev, Some((2, 2)), "coldest entry evicted");
+        assert!(c.get(&2).is_none());
+        assert_eq!(c.get(&1), Some(&1));
+        assert_eq!(c.get(&3), Some(&3));
+        assert_eq!(c.get(&4), Some(&4));
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn capacity_one() {
+        let mut c: LruCache<u64, &str> = LruCache::new(0); // clamped to 1
+        assert_eq!(c.capacity(), 1);
+        assert_eq!(c.insert(1, "a"), None);
+        assert_eq!(c.insert(2, "b"), Some((1, "a")));
+        assert_eq!(c.get(&2), Some(&"b"));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn overwrite_refreshes_recency() {
+        let mut c: LruCache<u64, i32> = LruCache::new(2);
+        c.insert(1, 1);
+        c.insert(2, 2);
+        c.insert(1, 100); // 2 becomes coldest
+        assert_eq!(c.insert(3, 3), Some((2, 2)));
+        assert_eq!(c.get(&1), Some(&100));
+    }
+
+    #[test]
+    fn churn_stays_bounded_and_consistent() {
+        let cap = 16;
+        let mut c: LruCache<u64, u64> = LruCache::new(cap);
+        for i in 0..1000u64 {
+            c.insert(i % 37, i);
+            assert!(c.len() <= cap);
+            // recent insert is always retrievable with its latest value
+            assert_eq!(c.get(&(i % 37)), Some(&i));
+        }
+        // the cap hottest keys of the final window are present
+        let mut present = 0;
+        for k in 0..37u64 {
+            if c.get(&k).is_some() {
+                present += 1;
+            }
+        }
+        assert_eq!(present, cap);
+    }
+}

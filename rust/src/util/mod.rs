@@ -3,5 +3,6 @@
 
 pub mod cli;
 pub mod json;
+pub mod lru;
 pub mod rng;
 pub mod threadpool;

@@ -80,19 +80,45 @@ struct InjectorInner<T> {
     closed: bool,
 }
 
+/// Error returned by [`Injector::push_bounded`] when the queue is at
+/// capacity; carries the rejected item back so the caller can answer the
+/// originating client (the front-end's backpressure path).
+#[derive(Debug)]
+pub struct QueueFull<T>(pub T);
+
 /// A multi-producer / multi-consumer FIFO work queue: producers `push`,
 /// workers block in [`Injector::pop_batch`] until items arrive (draining up
 /// to `max` at once — the server's dynamic batching) or the queue is
 /// closed *and* empty. Plain Mutex + Condvar: contention is one lock per
 /// batch, negligible next to a layer forward.
+///
+/// [`Injector::with_capacity`] bounds the queue: [`Injector::push_bounded`]
+/// then rejects with [`QueueFull`] instead of growing without limit — the
+/// hook the network front-end uses to shed load. `push` stays infallible
+/// (and ignores the bound) for trusted in-process producers.
 pub struct Injector<T> {
     inner: Mutex<InjectorInner<T>>,
     cv: Condvar,
+    capacity: usize,
 }
 
 impl<T> Injector<T> {
+    /// Unbounded queue (`push_bounded` never rejects).
     pub fn new() -> Injector<T> {
-        Injector { inner: Mutex::new(InjectorInner { q: VecDeque::new(), closed: false }), cv: Condvar::new() }
+        Injector::with_capacity(usize::MAX)
+    }
+
+    /// Queue bounded at `capacity` items (floor 1) for `push_bounded`.
+    pub fn with_capacity(capacity: usize) -> Injector<T> {
+        Injector {
+            inner: Mutex::new(InjectorInner { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     /// Enqueue one item. Panics if the queue was closed.
@@ -102,6 +128,22 @@ impl<T> Injector<T> {
         g.q.push_back(item);
         drop(g);
         self.cv.notify_one();
+    }
+
+    /// Enqueue one item unless the queue already holds `capacity` items;
+    /// on rejection the item is handed back inside [`QueueFull`]. Panics if
+    /// the queue was closed (same contract as [`Injector::push`] — shut
+    /// producers down before closing).
+    pub fn push_bounded(&self, item: T) -> Result<(), QueueFull<T>> {
+        let mut g = self.inner.lock().unwrap();
+        assert!(!g.closed, "push after close");
+        if g.q.len() >= self.capacity {
+            return Err(QueueFull(item));
+        }
+        g.q.push_back(item);
+        drop(g);
+        self.cv.notify_one();
+        Ok(())
     }
 
     /// No more items will arrive; wakes all blocked workers.
@@ -215,6 +257,105 @@ mod tests {
         assert_eq!(inj.pop_batch(1, &mut out), 1);
         assert_eq!(inj.pop_batch(1, &mut out), 0);
         assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn bounded_push_rejects_at_capacity_and_returns_item() {
+        let inj: Injector<u32> = Injector::with_capacity(2);
+        assert_eq!(inj.capacity(), 2);
+        assert!(inj.push_bounded(10).is_ok());
+        assert!(inj.push_bounded(20).is_ok());
+        let QueueFull(rejected) = inj.push_bounded(30).unwrap_err();
+        assert_eq!(rejected, 30, "QueueFull hands the item back");
+        assert_eq!(inj.len(), 2, "rejected item was not enqueued");
+        // draining one slot re-admits
+        let mut out = Vec::new();
+        assert_eq!(inj.pop_batch(1, &mut out), 1);
+        assert!(inj.push_bounded(30).is_ok());
+        out.clear();
+        inj.close();
+        assert_eq!(inj.pop_batch(10, &mut out), 2);
+        assert_eq!(out, vec![20, 30], "FIFO order preserved across a rejection");
+    }
+
+    #[test]
+    fn bounded_close_then_pop_drains() {
+        let inj: Injector<u32> = Injector::with_capacity(4);
+        for i in 0..3 {
+            inj.push_bounded(i).unwrap();
+        }
+        inj.close();
+        let mut out = Vec::new();
+        assert_eq!(inj.pop_batch(2, &mut out), 2);
+        assert_eq!(inj.pop_batch(2, &mut out), 1);
+        assert_eq!(inj.pop_batch(2, &mut out), 0, "closed and drained");
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn capacity_floor_is_one() {
+        let inj: Injector<u8> = Injector::with_capacity(0);
+        assert!(inj.push_bounded(1).is_ok(), "capacity 0 is clamped to 1");
+        assert!(inj.push_bounded(2).is_err());
+    }
+
+    #[test]
+    fn unbounded_push_bounded_never_rejects() {
+        let inj: Injector<usize> = Injector::new();
+        for i in 0..10_000 {
+            inj.push_bounded(i).unwrap();
+        }
+        assert_eq!(inj.len(), 10_000);
+    }
+
+    #[test]
+    fn bounded_len_consistent_under_contention() {
+        let cap = 8;
+        let inj: Injector<usize> = Injector::with_capacity(cap);
+        let produced = 2000usize;
+        let accepted = AtomicUsize::new(0);
+        let rejected = AtomicUsize::new(0);
+        let consumed = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            // one consumer draining slowly enough that producers hit the bound
+            let consumer = {
+                let (inj, consumed) = (&inj, &consumed);
+                s.spawn(move || {
+                    let mut buf = Vec::new();
+                    loop {
+                        buf.clear();
+                        if inj.pop_batch(3, &mut buf) == 0 {
+                            break;
+                        }
+                        consumed.fetch_add(buf.len(), Ordering::Relaxed);
+                        assert!(inj.len() <= cap, "len may never exceed capacity");
+                    }
+                })
+            };
+            std::thread::scope(|p| {
+                for t in 0..4 {
+                    let (inj, accepted, rejected) = (&inj, &accepted, &rejected);
+                    p.spawn(move || {
+                        for i in 0..produced / 4 {
+                            match inj.push_bounded(t * 1000 + i) {
+                                Ok(()) => accepted.fetch_add(1, Ordering::Relaxed),
+                                Err(QueueFull(_)) => rejected.fetch_add(1, Ordering::Relaxed),
+                            };
+                            assert!(inj.len() <= cap);
+                        }
+                    });
+                }
+            });
+            inj.close();
+            consumer.join().unwrap();
+        });
+        let (a, r, c) = (
+            accepted.load(Ordering::Relaxed),
+            rejected.load(Ordering::Relaxed),
+            consumed.load(Ordering::Relaxed),
+        );
+        assert_eq!(a + r, produced, "every push either accepted or rejected");
+        assert_eq!(c, a, "exactly the accepted items are consumed");
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! Loopback integration tests for the network serving front-end: every
+//! socket-served output must equal the direct `SparseModel::forward`
+//! result bit-for-bit, backpressure must answer with a well-formed retry
+//! response, and the adaptive batcher must be visible in the stats.
+//!
+//! All tests bind 127.0.0.1 port 0 (kernel-assigned), so they are safe to
+//! run in parallel; CI still serializes them (`--test-threads=1`) out of
+//! caution. Test names share the `socket_` prefix so the main test sweep
+//! can `--skip socket_`.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use srigl::inference::server::Batching;
+use srigl::inference::{frontend, Activation, FrontendConfig, LayerSpec, Repr, SparseModel};
+use srigl::net::{
+    read_response, write_request, Client, Reply, RequestFrame, ResponseBody,
+};
+use srigl::util::rng::Rng;
+
+const D_IN: usize = 64;
+const D_OUT: usize = 16;
+
+fn test_model(repr: Repr) -> Arc<SparseModel> {
+    let spec = |n, act| LayerSpec {
+        n,
+        repr,
+        sparsity: 0.9,
+        ablated_frac: 0.25,
+        activation: act,
+    };
+    Arc::new(
+        SparseModel::synth(
+            D_IN,
+            &[
+                spec(48, Activation::Relu),
+                spec(32, Activation::Relu),
+                spec(D_OUT, Activation::Identity),
+            ],
+            17,
+        )
+        .unwrap(),
+    )
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: idx {i}: {g} vs {w} (must be bit-for-bit)");
+    }
+}
+
+/// ≥2 concurrent client threads, mixed row counts: every response equals
+/// the direct forward bit-for-bit.
+#[test]
+fn socket_outputs_match_direct_forward_across_clients() {
+    let model = test_model(Repr::Condensed);
+    let handle = frontend::spawn(
+        Arc::clone(&model),
+        "127.0.0.1:0",
+        FrontendConfig {
+            workers: 2,
+            batching: Batching::Adaptive { cap: 8 },
+            queue_capacity: 256,
+            cache_capacity: 64,
+            threads: 1,
+            retry_after_ms: 1,
+        },
+    )
+    .unwrap();
+    let addr = handle.addr();
+
+    std::thread::scope(|s| {
+        for t in 0..3u64 {
+            let model = Arc::clone(&model);
+            s.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                let mut rng = Rng::new(0x50C + t);
+                for req in 0..30usize {
+                    let rows = 1 + (req % 3);
+                    let x: Vec<f32> = (0..rows * D_IN).map(|_| rng.normal_f32()).collect();
+                    let got = client.infer_retrying(rows, &x, 50).expect("infer");
+                    let want = model.forward_vec(&x, rows, 1);
+                    assert_bits_eq(&got, &want, &format!("client {t} req {req} rows {rows}"));
+                }
+            });
+        }
+    });
+
+    let stats = handle.stop();
+    assert_eq!(stats.connections, 3);
+    assert_eq!(
+        stats.served + stats.cache_hits,
+        3 * 30,
+        "every request answered exactly once (rejected={})",
+        stats.rejected
+    );
+    assert_eq!(stats.bad_requests, 0);
+}
+
+/// Sending the same payload twice must hit the result cache the second
+/// time — and the cached answer must still be bit-identical.
+#[test]
+fn socket_cache_hit_path_serves_identical_results() {
+    let model = test_model(Repr::Condensed);
+    let handle = frontend::spawn(
+        Arc::clone(&model),
+        "127.0.0.1:0",
+        FrontendConfig {
+            workers: 1,
+            batching: Batching::Fixed(4),
+            queue_capacity: 64,
+            cache_capacity: 32,
+            threads: 1,
+            retry_after_ms: 1,
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(handle.addr()).unwrap();
+    let mut rng = Rng::new(99);
+    let x: Vec<f32> = (0..D_IN).map(|_| rng.normal_f32()).collect();
+    let want = model.forward_vec(&x, 1, 1);
+
+    let first = client.infer_retrying(1, &x, 50).unwrap();
+    // the sync client saw the first response, so the insert has happened:
+    // the replay below is a guaranteed cache hit
+    let second = client.infer_retrying(1, &x, 50).unwrap();
+    assert_bits_eq(&first, &want, "first (computed)");
+    assert_bits_eq(&second, &want, "second (cached)");
+
+    let stats = handle.stop();
+    assert_eq!(stats.served, 1, "exactly one compute");
+    assert_eq!(stats.cache_hits, 1, "replay served from cache");
+}
+
+/// With no workers draining (ingestion-only mode) a bounded queue fills
+/// deterministically: the overflow request gets a well-formed Busy
+/// response carrying the configured retry hint.
+#[test]
+fn socket_backpressure_returns_busy_when_queue_full() {
+    let model = test_model(Repr::Condensed);
+    let handle = frontend::spawn(
+        Arc::clone(&model),
+        "127.0.0.1:0",
+        FrontendConfig {
+            workers: 0, // nothing drains: pushes 3 will find a full queue
+            batching: Batching::Fixed(4),
+            queue_capacity: 2,
+            cache_capacity: 0,
+            threads: 1,
+            retry_after_ms: 7,
+        },
+    )
+    .unwrap();
+    let mut stream = TcpStream::connect(handle.addr()).unwrap();
+    let x = vec![0.5f32; D_IN];
+    for id in 1..=3u64 {
+        write_request(&mut stream, &RequestFrame { id, rows: 1, payload: x.clone() }).unwrap();
+    }
+    // requests 1 and 2 sit in the queue; 3 must bounce
+    let resp = read_response(&mut stream).unwrap().expect("busy response");
+    assert_eq!(resp.id, 3, "the overflowing request is the one rejected");
+    assert_eq!(
+        resp.body,
+        ResponseBody::Busy { retry_after_ms: 7 },
+        "well-formed retry response with the configured hint"
+    );
+    drop(stream);
+    let stats = handle.stop();
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.served, 0);
+}
+
+/// Trickle traffic must be served batch-1; pipelined flood traffic must
+/// coalesce — observed forward sizes vary with offered load, which is the
+/// adaptive batcher doing its job.
+#[test]
+fn socket_adaptive_batch_sizes_vary_with_load() {
+    // Big dense layers: one forward costs ~100x a frame parse, so the
+    // pipelined flood reliably outpaces the single worker and builds
+    // queue depth for the EWMA to observe.
+    let d_in = 256usize;
+    let d_out = 128usize;
+    let spec = |n, act| LayerSpec {
+        n,
+        repr: Repr::Dense,
+        sparsity: 0.9,
+        ablated_frac: 0.25,
+        activation: act,
+    };
+    let model = Arc::new(
+        SparseModel::synth(
+            d_in,
+            &[spec(512, Activation::Relu), spec(512, Activation::Relu), spec(d_out, Activation::Identity)],
+            23,
+        )
+        .unwrap(),
+    );
+    let handle = frontend::spawn(
+        Arc::clone(&model),
+        "127.0.0.1:0",
+        FrontendConfig {
+            workers: 1,
+            batching: Batching::Adaptive { cap: 8 },
+            queue_capacity: 512,
+            cache_capacity: 0,
+            threads: 1,
+            retry_after_ms: 1,
+        },
+    )
+    .unwrap();
+    let addr = handle.addr();
+    let mut rng = Rng::new(0xADA);
+
+    // phase 1 — trickle: one request in flight at a time
+    let mut client = Client::connect(addr).unwrap();
+    for _ in 0..20 {
+        let x: Vec<f32> = (0..d_in).map(|_| rng.normal_f32()).collect();
+        match client.infer(1, &x).unwrap() {
+            Reply::Output(out) => assert_eq!(out.len(), d_out),
+            Reply::Busy { .. } => panic!("trickle must never be rejected at queue cap 512"),
+        }
+    }
+
+    // phase 2 — flood: pipeline 300 requests, then collect 300 responses
+    let n_flood = 300usize;
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut payloads = Vec::with_capacity(n_flood);
+    for id in 0..n_flood as u64 {
+        let x: Vec<f32> = (0..d_in).map(|_| rng.normal_f32()).collect();
+        write_request(&mut stream, &RequestFrame { id, rows: 1, payload: x.clone() }).unwrap();
+        payloads.push(x);
+    }
+    let mut answered = 0usize;
+    for _ in 0..n_flood {
+        let resp = read_response(&mut stream).unwrap().expect("flood response");
+        match resp.body {
+            ResponseBody::Output { rows, data } => {
+                assert_eq!(rows, 1);
+                let want = model.forward_vec(&payloads[resp.id as usize], 1, 1);
+                assert_bits_eq(&data, &want, &format!("flood id {}", resp.id));
+                answered += 1;
+            }
+            ResponseBody::Busy { .. } => panic!("flood of 300 fits queue cap 512"),
+            ResponseBody::Error(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert_eq!(answered, n_flood);
+    drop(stream);
+
+    let stats = handle.stop();
+    assert_eq!(stats.served, 20 + n_flood);
+    assert_eq!(stats.min_forward_rows, 1, "trickle phase ran batch-1 forwards");
+    assert!(
+        stats.max_forward_rows > 1,
+        "flood phase must coalesce (max_forward_rows = {}, mean_batch = {:.2})",
+        stats.max_forward_rows,
+        stats.latency.mean_batch
+    );
+}
+
+/// Malformed requests are answered with Error and the connection stays
+/// usable for well-formed follow-ups.
+#[test]
+fn socket_bad_request_answered_but_connection_survives() {
+    let model = test_model(Repr::Condensed);
+    let handle = frontend::spawn(
+        Arc::clone(&model),
+        "127.0.0.1:0",
+        FrontendConfig {
+            workers: 1,
+            batching: Batching::Fixed(4),
+            queue_capacity: 64,
+            cache_capacity: 0,
+            threads: 1,
+            retry_after_ms: 1,
+        },
+    )
+    .unwrap();
+    let mut stream = TcpStream::connect(handle.addr()).unwrap();
+
+    // wrong width (payload is d+1 floats), zero rows, and oversized rows
+    let bad = [
+        RequestFrame { id: 1, rows: 1, payload: vec![0.0; D_IN + 1] },
+        RequestFrame { id: 2, rows: 0, payload: vec![] },
+        RequestFrame { id: 3, rows: 99, payload: vec![0.0; 99 * D_IN] },
+    ];
+    for req in &bad {
+        write_request(&mut stream, req).unwrap();
+        let resp = read_response(&mut stream).unwrap().expect("error response");
+        assert_eq!(resp.id, req.id);
+        assert!(
+            matches!(resp.body, ResponseBody::Error(_)),
+            "id {} should be rejected, got {:?}",
+            req.id,
+            resp.body
+        );
+    }
+
+    // the same connection still serves a valid request
+    let x = vec![0.25f32; D_IN];
+    write_request(&mut stream, &RequestFrame { id: 4, rows: 1, payload: x.clone() }).unwrap();
+    let resp = read_response(&mut stream).unwrap().expect("ok response");
+    assert_eq!(resp.id, 4);
+    match resp.body {
+        ResponseBody::Output { rows, data } => {
+            assert_eq!(rows, 1);
+            assert_bits_eq(&data, &model.forward_vec(&x, 1, 1), "post-error request");
+        }
+        other => panic!("expected output, got {other:?}"),
+    }
+    drop(stream);
+    let stats = handle.stop();
+    assert_eq!(stats.bad_requests, 3);
+    assert_eq!(stats.served, 1);
+}
+
+/// Multi-row requests round-trip with row-major layout preserved.
+#[test]
+fn socket_multi_row_request_roundtrips() {
+    let model = test_model(Repr::Structured);
+    let handle = frontend::spawn(
+        Arc::clone(&model),
+        "127.0.0.1:0",
+        FrontendConfig {
+            workers: 2,
+            batching: Batching::Adaptive { cap: 8 },
+            queue_capacity: 64,
+            cache_capacity: 16,
+            threads: 1,
+            retry_after_ms: 1,
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(handle.addr()).unwrap();
+    let mut rng = Rng::new(5);
+    for rows in [2usize, 5, 8] {
+        let x: Vec<f32> = (0..rows * D_IN).map(|_| rng.normal_f32()).collect();
+        let got = client.infer_retrying(rows, &x, 50).unwrap();
+        assert_eq!(got.len(), rows * D_OUT);
+        assert_bits_eq(&got, &model.forward_vec(&x, rows, 1), &format!("rows {rows}"));
+    }
+    handle.stop();
+}
