@@ -50,6 +50,7 @@ fn run(model: &Arc<SparseModel>, batching: Batching, hit_ratio: f64) -> (Latency
             cache_capacity: 2048,
             threads: 1,
             retry_after_ms: 1,
+            shards: 1,
         },
     )
     .expect("bind loopback");

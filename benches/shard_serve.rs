@@ -1,0 +1,86 @@
+//! Replicated-vs-sharded serving sweep: the same 3-layer trunk served by
+//! (a) a replicated worker pool of S workers, each owning a full model
+//! scratch, and (b) one coordinator fanning each forward over an S-shard
+//! tensor-parallel team (`ServeMode::Sharded`). Flooded queue, so
+//! throughput is compute-bound; p50/p99 use the interpolated percentile.
+//!
+//! What to look for: replicated wins on throughput under a flood (batching
+//! amortizes per-request cost across independent cores), sharded wins on
+//! single-request latency for wide layers (the work of one request is
+//! split S ways) and holds scratch memory constant instead of S-fold.
+//! On the 1-core CI testbed both mostly measure coordination overhead —
+//! same caveat as benches/model_serve.rs.
+
+use std::time::Duration;
+
+use srigl::inference::server::{serve_model, LatencyStats, ServeConfig, ServeMode};
+use srigl::inference::shard::ShardPlan;
+use srigl::inference::{Activation, LayerSpec, Repr, SparseModel};
+
+fn model_for(repr: Repr, sparsity: f64) -> SparseModel {
+    let spec = |n, act| LayerSpec { n, repr, sparsity, ablated_frac: 0.35, activation: act };
+    SparseModel::synth(
+        1024,
+        &[
+            spec(768, Activation::Relu),
+            spec(768, Activation::Relu),
+            spec(256, Activation::Identity),
+        ],
+        42,
+    )
+    .expect("valid stack")
+}
+
+fn run(model: &SparseModel, mode: ServeMode, n_requests: usize) -> LatencyStats {
+    serve_model(
+        model,
+        &ServeConfig {
+            mode,
+            n_requests,
+            mean_interarrival: Duration::ZERO,
+            threads: 1,
+            seed: 7,
+        },
+    )
+}
+
+fn main() {
+    let sparsity = 0.9;
+    let n_requests = 1024;
+    let cap = 8;
+    println!("shard_serve — 3-layer 1024->768->768->256 @ {:.0}% sparsity,", sparsity * 100.0);
+    println!("{n_requests} flooded requests, cap={cap}, 1 intra-op/intra-shard thread\n");
+    println!(
+        "{:>11} {:>3} | {:>10} {:>10} {:>10} | {:>10} {:>10} {:>10} | {:>7}",
+        "repr", "S", "repl p50", "repl p99", "repl rps", "shard p50", "shard p99", "shard rps", "ratio"
+    );
+    for repr in Repr::ALL {
+        let model = model_for(repr, sparsity);
+        for shards in [1usize, 2, 4] {
+            let rep = run(&model, ServeMode::Pooled { workers: shards, max_batch: cap }, n_requests);
+            let sh = run(&model, ServeMode::Sharded { shards, cap }, n_requests);
+            println!(
+                "{:>11} {:>3} | {:>10.1} {:>10.1} {:>10.0} | {:>10.1} {:>10.1} {:>10.0} | {:>6.2}x",
+                repr.name(),
+                shards,
+                rep.p50_us,
+                rep.p99_us,
+                rep.throughput_rps,
+                sh.p50_us,
+                sh.p99_us,
+                sh.throughput_rps,
+                sh.throughput_rps / rep.throughput_rps.max(1e-9)
+            );
+        }
+    }
+    // how evenly the stored-weight-balanced plan splits each layer
+    let model = model_for(Repr::Condensed, sparsity);
+    let plan = ShardPlan::balanced(&model, 4);
+    let imb: Vec<String> =
+        (0..model.depth()).map(|l| format!("{:.3}", plan.imbalance(&model, l))).collect();
+    println!(
+        "\n(ratio = sharded/replicated throughput; condensed 4-shard plan imbalance per layer: [{}],",
+        imb.join(", ")
+    );
+    println!(" 1.0 = perfectly even stored weights per shard — ablated neurons cost nothing)");
+}

@@ -42,6 +42,7 @@ fn main() -> Result<()> {
             cache_capacity: 128,
             threads: 1,
             retry_after_ms: 2,
+            shards: 1,
         },
     )?;
     println!("front-end listening on {} (2 workers, adaptive batching, cache 128)\n", handle.addr());

@@ -1,7 +1,8 @@
 //! Network serving front-end: turns the worker-pool inference engine into
-//! a real socket server. The ROADMAP's "serving scale-out" block, minus
-//! sharding: async IO ingestion, backpressure, adaptive batching, and a
-//! result cache.
+//! a real socket server. The ROADMAP's "serving scale-out" block: async IO
+//! ingestion, backpressure, adaptive batching, a result cache, and — via
+//! [`FrontendConfig::shards`] — tensor-parallel sharded execution
+//! ([`crate::inference::shard`]) behind the same queue machinery.
 //!
 //! Data path:
 //!
@@ -28,7 +29,7 @@
 //!
 //! Known limitation (documented, not fixed here): a worker blocks while
 //! writing to a slow client's socket, stalling the rest of its batch —
-//! per-connection egress queues are future work alongside sharding.
+//! per-connection egress queues are future work.
 
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -39,6 +40,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::server::{AdaptiveBatcher, Batching, LatencyStats, WorkerStats};
+use super::shard::{ServeEngine, ShardedModel};
 use super::SparseModel;
 use crate::net::{fnv1a_f32, read_request, write_response, ResponseBody, ResponseFrame};
 use crate::util::lru::LruCache;
@@ -57,10 +59,16 @@ pub struct FrontendConfig {
     pub queue_capacity: usize,
     /// Result-cache entries; `0` disables caching.
     pub cache_capacity: usize,
-    /// Intra-op threads per worker (the kernel `threads` parameter).
+    /// Intra-op threads per worker (the kernel `threads` parameter; with
+    /// sharding, the intra-*shard* thread count).
     pub threads: usize,
     /// Backoff hint sent with `Busy` rejections.
     pub retry_after_ms: u32,
+    /// Tensor-parallel shards per forward (`<= 1` = replicated). With
+    /// `shards > 1` each worker's forward fans out over a shard team
+    /// ([`crate::inference::shard::ShardedModel`]); pair with `workers: 1`
+    /// unless you want teams x workers oversubscription.
+    pub shards: usize,
 }
 
 impl Default for FrontendConfig {
@@ -72,6 +80,7 @@ impl Default for FrontendConfig {
             cache_capacity: 1024,
             threads: 1,
             retry_after_ms: 2,
+            shards: 1,
         }
     }
 }
@@ -144,7 +153,7 @@ impl Drop for ReaderTicket {
 }
 
 struct Shared {
-    model: Arc<SparseModel>,
+    engine: Arc<ServeEngine>,
     injector: Injector<Job>,
     /// hash -> (input bits, output); input kept to defeat hash collisions.
     cache: Option<Mutex<LruCache<u64, (Vec<f32>, Vec<f32>)>>>,
@@ -216,13 +225,32 @@ impl Drop for FrontendHandle {
 }
 
 /// Bind `addr` (e.g. `"127.0.0.1:0"`) and serve `model` until
-/// [`FrontendHandle::stop`].
+/// [`FrontendHandle::stop`] — replicated across workers, or tensor-parallel
+/// sharded when `cfg.shards > 1` (the `serve-model --listen --shards N`
+/// path).
 pub fn spawn(model: Arc<SparseModel>, addr: &str, cfg: FrontendConfig) -> Result<FrontendHandle> {
+    let engine = if cfg.shards > 1 {
+        ServeEngine::Sharded(Arc::new(
+            ShardedModel::from_model(&model, cfg.shards).context("building shard plan")?,
+        ))
+    } else {
+        ServeEngine::Replicated(model)
+    };
+    spawn_engine(Arc::new(engine), addr, cfg)
+}
+
+/// Bind `addr` and serve a pre-built [`ServeEngine`] (replicated or
+/// sharded with a custom plan).
+pub fn spawn_engine(
+    engine: Arc<ServeEngine>,
+    addr: &str,
+    cfg: FrontendConfig,
+) -> Result<FrontendHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let bound = listener.local_addr().context("resolving bound address")?;
     let cap = cfg.batching.cap();
     let shared = Arc::new(Shared {
-        model,
+        engine,
         injector: Injector::with_capacity(cfg.queue_capacity),
         cache: (cfg.cache_capacity > 0).then(|| Mutex::new(LruCache::new(cfg.cache_capacity))),
         batcher: AdaptiveBatcher::new(cap),
@@ -333,7 +361,11 @@ fn bits_eq(a: &[f32], b: &[f32]) -> bool {
 }
 
 /// Per-connection ingestion: parse frames, consult the cache, enqueue or
-/// reject. Exits on EOF, a framing error, or socket shutdown.
+/// reject. Exits on EOF, a framing error, or socket shutdown. Framing
+/// errors (bad length prefix, ragged payload, truncated frame) count as
+/// `bad_requests`; an `InvalidData` frame additionally gets a best-effort
+/// `Error` response with the reserved id 0 (docs/WIRE.md — clients use
+/// ids >= 1) before the hang-up.
 fn reader_loop(stream: TcpStream, shared: &Shared) {
     let _ = stream.set_nodelay(true);
     let writer = match stream.try_clone() {
@@ -341,9 +373,32 @@ fn reader_loop(stream: TcpStream, shared: &Shared) {
         Err(_) => return,
     };
     let mut rd = std::io::BufReader::new(stream);
-    let d = shared.model.in_width();
+    let d = shared.engine.in_width();
     let cap = shared.cfg.batching.cap();
-    while let Ok(Some(req)) = read_request(&mut rd) {
+    loop {
+        let req = match read_request(&mut rd) {
+            Ok(Some(req)) => req,
+            Ok(None) => break, // clean EOF (client hung up between frames)
+            Err(e) => {
+                match e.kind() {
+                    std::io::ErrorKind::InvalidData => {
+                        shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+                        respond(
+                            &writer,
+                            0,
+                            ResponseBody::Error(format!("framing error: {e}")),
+                        );
+                    }
+                    std::io::ErrorKind::UnexpectedEof => {
+                        // truncated frame: the peer died mid-write; count
+                        // it, but there is nobody left to answer
+                        shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    }
+                    _ => {} // transport error (reset/shutdown): not a bad request
+                }
+                break;
+            }
+        };
         let rows = req.rows as usize;
         if rows == 0 || rows > cap || req.payload.len() != rows * d {
             shared.bad_requests.fetch_add(1, Ordering::Relaxed);
@@ -357,17 +412,20 @@ fn reader_loop(stream: TcpStream, shared: &Shared) {
         let hash = fnv1a_f32(&req.payload);
         if let Some(cache) = &shared.cache {
             let mut c = cache.lock().unwrap();
-            if let Some((input, output)) = c.get(&hash) {
-                if bits_eq(input, &req.payload) {
-                    let body =
-                        ResponseBody::Output { rows: req.rows, data: output.clone() };
-                    drop(c);
-                    shared.cache_hits.fetch_add(1, Ordering::Relaxed);
-                    respond(&writer, req.id, body);
-                    continue;
-                }
-                // FNV collision: fall through and recompute (the insert
-                // below will overwrite the colliding entry).
+            // peek, verify, then promote: a plain `get` would bump a hash-
+            // *colliding* entry to most-recently-used before the bits_eq
+            // check rejects it, polluting the recency order
+            let verified = match c.peek(&hash) {
+                Some((input, output)) if bits_eq(input, &req.payload) => Some(output.clone()),
+                _ => None, // miss, or FNV collision: recompute (the worker's
+                           // insert overwrites the colliding entry)
+            };
+            if let Some(data) = verified {
+                c.touch(&hash);
+                drop(c);
+                shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+                respond(&writer, req.id, ResponseBody::Output { rows: req.rows, data });
+                continue;
             }
         }
         let job = Job {
@@ -392,12 +450,12 @@ fn reader_loop(stream: TcpStream, shared: &Shared) {
 /// Pool worker: adaptive pop, greedy row-packing, forward, route results.
 /// Returns (stats, min packed rows, max packed rows).
 fn worker_loop(shared: &Shared) -> (WorkerStats, usize, usize) {
-    let model = &shared.model;
-    let d = model.in_width();
-    let ow = model.out_width();
+    let engine = &shared.engine;
+    let d = engine.in_width();
+    let ow = engine.out_width();
     let cap = shared.cfg.batching.cap();
     let threads = shared.cfg.threads;
-    let mut scratch = model.make_scratch(cap);
+    let mut scratch = engine.make_scratch(cap);
     let mut xbuf = vec![0f32; cap * d];
     let mut jobs: Vec<Job> = Vec::with_capacity(cap);
     let mut ws = WorkerStats::default();
@@ -425,7 +483,7 @@ fn worker_loop(shared: &Shared) -> (WorkerStats, usize, usize) {
                 xbuf[off * d..(off + job.rows) * d].copy_from_slice(&job.x);
                 off += job.rows;
             }
-            let out = model.forward(&xbuf[..rows * d], rows, &mut scratch, threads);
+            let out = engine.forward(&xbuf[..rows * d], rows, &mut scratch, threads);
             let t_done = Instant::now();
             min_rows = min_rows.min(rows);
             max_rows = max_rows.max(rows);

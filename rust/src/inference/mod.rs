@@ -16,9 +16,11 @@
 pub mod frontend;
 pub mod model;
 pub mod server;
+pub mod shard;
 
 pub use frontend::{FrontendConfig, FrontendHandle, FrontendStats};
 pub use model::{Activation, LayerSpec, ModelLayer, Repr, Scratch, SparseModel};
+pub use shard::{EngineScratch, ServeEngine, ShardPlan, ShardedModel, ShardedScratch};
 
 use crate::sparsity::{Condensed, Csr, Mask};
 use crate::tensor::Tensor;
@@ -37,6 +39,26 @@ pub trait LinearKernel: Send + Sync {
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize);
     /// Bytes this representation occupies (weights + indices + bias).
     fn storage_bytes(&self) -> usize;
+    /// Surviving (non-ablated) output-neuron ids in ascending *full
+    /// logical* coordinates — `Some` only for the compact forms that emit
+    /// fewer rows than the layer's logical width.
+    fn active_rows(&self) -> Option<&[u32]> {
+        None
+    }
+    /// Slice this kernel to the contiguous full-logical-width output-neuron
+    /// range `lo..hi` — the tensor-parallel sharding primitive. The paper's
+    /// constant fan-in makes every contiguous neuron range of a condensed
+    /// kernel itself a valid condensed kernel (each output neuron owns
+    /// exactly k weights), and the same holds trivially for the other three
+    /// representations. The slice copies the underlying rows verbatim, so a
+    /// sliced forward is bit-for-bit identical to the corresponding rows of
+    /// the unsliced forward.
+    fn slice_rows(&self, lo: usize, hi: usize) -> Box<dyn LinearKernel>;
+    /// Stored weights per full logical output neuron (len `full_width`) —
+    /// the [`shard::ShardPlan`] balancing costs. Ablated neurons cost 0 in
+    /// the compact forms and their CSR rows are empty, so balancing by
+    /// these weights (not by neuron count) keeps shard compute even.
+    fn row_weights(&self, full_width: usize) -> Vec<usize>;
 }
 
 /// Split a single output row into per-thread contiguous chunks (batch-1
@@ -123,6 +145,22 @@ impl LinearKernel for DenseLayer {
         (self.w.len() + self.bias.len()) * 4
     }
 
+    fn slice_rows(&self, lo: usize, hi: usize) -> Box<dyn LinearKernel> {
+        assert!(lo <= hi && hi <= self.n, "slice {lo}..{hi} out of 0..{}", self.n);
+        Box::new(DenseLayer {
+            n: hi - lo,
+            d: self.d,
+            w: self.w[lo * self.d..hi * self.d].to_vec(),
+            bias: self.bias[lo..hi].to_vec(),
+        })
+    }
+
+    fn row_weights(&self, full_width: usize) -> Vec<usize> {
+        assert_eq!(full_width, self.n);
+        // dense stores (and computes) every row, ablated or not
+        vec![self.d; self.n]
+    }
+
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
         debug_assert_eq!(x.len(), batch * self.d);
         debug_assert_eq!(out.len(), batch * self.n);
@@ -181,6 +219,28 @@ impl LinearKernel for CsrLayer {
         self.csr.storage_bytes() + self.bias.len() * 4
     }
 
+    fn slice_rows(&self, lo: usize, hi: usize) -> Box<dyn LinearKernel> {
+        assert!(lo <= hi && hi <= self.csr.rows, "slice {lo}..{hi} out of 0..{}", self.csr.rows);
+        let base = self.csr.indptr[lo];
+        let csr = Csr {
+            rows: hi - lo,
+            cols: self.csr.cols,
+            indptr: self.csr.indptr[lo..=hi].iter().map(|&p| p - base).collect(),
+            indices: self.csr.indices[base as usize..self.csr.indptr[hi] as usize].to_vec(),
+            values: self.csr.values[base as usize..self.csr.indptr[hi] as usize].to_vec(),
+        };
+        Box::new(CsrLayer { csr, bias: self.bias[lo..hi].to_vec() })
+    }
+
+    fn row_weights(&self, full_width: usize) -> Vec<usize> {
+        assert_eq!(full_width, self.csr.rows);
+        self.csr
+            .indptr
+            .windows(2)
+            .map(|w| (w[1] - w[0]) as usize)
+            .collect()
+    }
+
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
         let (n, d) = (self.csr.rows, self.csr.cols);
         debug_assert_eq!(out.len(), batch * n);
@@ -231,6 +291,9 @@ impl LinearKernel for CsrLayer {
 
 pub struct StructuredLayer {
     pub n_active: usize,
+    /// Logical rows of the original matrix (incl. ablated) — retained so
+    /// slicing can validate ranges like the other representations.
+    pub n_orig: usize,
     pub d: usize,
     /// (n_active, d) packed dense rows of the surviving neurons.
     pub w: Vec<f32>,
@@ -256,7 +319,7 @@ impl StructuredLayer {
                 active.push(r as u32);
             }
         }
-        StructuredLayer { n_active: active.len(), d, w: packed, bias: pbias, active }
+        StructuredLayer { n_active: active.len(), n_orig: n, d, w: packed, bias: pbias, active }
     }
 }
 
@@ -275,6 +338,35 @@ impl LinearKernel for StructuredLayer {
 
     fn storage_bytes(&self) -> usize {
         (self.w.len() + self.bias.len() + self.active.len()) * 4
+    }
+
+    fn active_rows(&self) -> Option<&[u32]> {
+        Some(&self.active)
+    }
+
+    fn slice_rows(&self, lo: usize, hi: usize) -> Box<dyn LinearKernel> {
+        assert!(lo <= hi && hi <= self.n_orig, "slice {lo}..{hi} out of 0..{}", self.n_orig);
+        // active is ascending, so the surviving rows of lo..hi are a
+        // contiguous run of the packed storage
+        let p = self.active.partition_point(|&a| (a as usize) < lo);
+        let q = self.active.partition_point(|&a| (a as usize) < hi);
+        Box::new(StructuredLayer {
+            n_active: q - p,
+            n_orig: hi - lo,
+            d: self.d,
+            w: self.w[p * self.d..q * self.d].to_vec(),
+            bias: self.bias[p..q].to_vec(),
+            active: self.active[p..q].iter().map(|&a| a - lo as u32).collect(),
+        })
+    }
+
+    fn row_weights(&self, full_width: usize) -> Vec<usize> {
+        assert_eq!(full_width, self.n_orig);
+        let mut w = vec![0usize; full_width];
+        for &a in &self.active {
+            w[a as usize] = self.d; // structured stores the full dense row
+        }
+        w
     }
 
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
@@ -332,6 +424,35 @@ impl LinearKernel for CondensedLayer {
 
     fn storage_bytes(&self) -> usize {
         self.c.storage_bytes() + self.bias.len() * 4
+    }
+
+    fn active_rows(&self) -> Option<&[u32]> {
+        Some(&self.c.active)
+    }
+
+    fn slice_rows(&self, lo: usize, hi: usize) -> Box<dyn LinearKernel> {
+        assert!(lo <= hi && hi <= self.c.n_orig, "slice {lo}..{hi} out of 0..{}", self.c.n_orig);
+        let k = self.c.k;
+        let p = self.c.active.partition_point(|&a| (a as usize) < lo);
+        let q = self.c.active.partition_point(|&a| (a as usize) < hi);
+        let c = Condensed {
+            d: self.c.d,
+            n_orig: hi - lo,
+            k,
+            active: self.c.active[p..q].iter().map(|&a| a - lo as u32).collect(),
+            values: self.c.values[p * k..q * k].to_vec(),
+            idx: self.c.idx[p * k..q * k].to_vec(),
+        };
+        Box::new(CondensedLayer { c, bias: self.bias[p..q].to_vec() })
+    }
+
+    fn row_weights(&self, full_width: usize) -> Vec<usize> {
+        assert_eq!(full_width, self.c.n_orig);
+        let mut w = vec![0usize; full_width];
+        for &a in &self.c.active {
+            w[a as usize] = self.c.k; // constant fan-in: k stored weights each
+        }
+        w
     }
 
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
@@ -532,6 +653,58 @@ mod tests {
             let b: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
             let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
             assert!((dot(&a, &b) - naive).abs() < 1e-4 * (1.0 + naive.abs()));
+        }
+    }
+
+    #[test]
+    fn slice_rows_partitions_every_representation() {
+        // two slices at an arbitrary cut must reproduce the full forward
+        // bit-for-bit, rows concatenated (compact forms: the active lists
+        // partition, so the compact outputs concatenate too)
+        let bundle = LayerBundle::synth(24, 32, 0.85, 0.3, 5);
+        let batch = 3;
+        let mut rng = Rng::new(77);
+        let x: Vec<f32> = (0..batch * 32).map(|_| rng.normal_f32()).collect();
+        for kernel in bundle.kernels() {
+            let ow = kernel.out_width();
+            let mut full = vec![0f32; batch * ow];
+            kernel.forward(&x, batch, &mut full, 1);
+            for cut in [0usize, 7, 13, 24] {
+                let (a, b) = (kernel.slice_rows(0, cut), kernel.slice_rows(cut, 24));
+                let (wa, wb) = (a.out_width(), b.out_width());
+                assert_eq!(wa + wb, ow, "{} cut {cut}: slices must partition", kernel.name());
+                let mut oa = vec![0f32; batch * wa];
+                let mut ob = vec![0f32; batch * wb];
+                a.forward(&x, batch, &mut oa, 1);
+                b.forward(&x, batch, &mut ob, 1);
+                for bi in 0..batch {
+                    let got: Vec<u32> = oa[bi * wa..(bi + 1) * wa]
+                        .iter()
+                        .chain(&ob[bi * wb..(bi + 1) * wb])
+                        .map(|v| v.to_bits())
+                        .collect();
+                    let want: Vec<u32> =
+                        full[bi * ow..(bi + 1) * ow].iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(got, want, "{} cut {cut} row {bi}", kernel.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_weights_reflect_stored_weights() {
+        let bundle = LayerBundle::synth(16, 20, 0.8, 0.25, 9);
+        let n_active = bundle.condensed.c.n_active();
+        let k = bundle.condensed.c.k;
+        assert_eq!(bundle.dense.row_weights(16).iter().sum::<usize>(), 16 * 20);
+        assert_eq!(bundle.csr.row_weights(16).iter().sum::<usize>(), bundle.csr.csr.nnz());
+        assert_eq!(bundle.structured.row_weights(16).iter().sum::<usize>(), n_active * 20);
+        let cw = bundle.condensed.row_weights(16);
+        assert_eq!(cw.iter().sum::<usize>(), n_active * k);
+        // ablated rows cost 0 in the compact forms
+        for r in 0..16 {
+            let ablated = !bundle.condensed.c.active.contains(&(r as u32));
+            assert_eq!(cw[r] == 0, ablated, "row {r}");
         }
     }
 

@@ -169,6 +169,35 @@ impl ModelLayer {
     pub fn activation(&self) -> Activation {
         self.activation
     }
+
+    /// Scatter ids mapping the kernel's compact output rows back to full
+    /// logical neuron positions — `None` when the kernel already emits the
+    /// full width.
+    pub fn active_ids(&self) -> Option<&[u32]> {
+        self.active.as_deref()
+    }
+
+    /// Stored weights per logical output neuron — what
+    /// [`crate::inference::shard::ShardPlan`] balances shards on.
+    pub fn row_weights(&self) -> Vec<usize> {
+        self.kernel.row_weights(self.full_width)
+    }
+
+    /// Slice this layer to the contiguous logical output-neuron range —
+    /// the tensor-parallel sharding primitive. The slice's logical width is
+    /// `range.len()`; its scatter ids are rebased to the range start, and
+    /// its per-neuron arithmetic is bit-for-bit that of the full layer.
+    pub fn slice(&self, range: std::ops::Range<usize>) -> ModelLayer {
+        assert!(
+            range.start <= range.end && range.end <= self.full_width,
+            "slice {range:?} out of 0..{}",
+            self.full_width
+        );
+        let kernel = self.kernel.slice_rows(range.start, range.end);
+        let w = range.end - range.start;
+        let active = kernel.active_rows().map(<[u32]>::to_vec).filter(|a| a.len() < w);
+        ModelLayer { kernel, activation: self.activation, active, full_width: w }
+    }
 }
 
 /// Per-worker workspace for [`SparseModel::forward`]: two ping-pong

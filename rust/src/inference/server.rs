@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use super::model::Scratch;
+use super::shard::{ShardedModel, ShardedScratch};
 use super::{LinearKernel, SparseModel};
 use crate::util::rng::Rng;
 use crate::util::threadpool::Injector;
@@ -33,6 +34,14 @@ pub enum ServeMode {
     /// an EWMA of observed queue depth (capped at `cap`), so a trickle is
     /// served batch-1 for latency and a flood coalesces for throughput.
     Adaptive { workers: usize, cap: usize },
+    /// Tensor-parallel serving (only meaningful through [`serve_model`]):
+    /// one coordinator drains the queue coalescing up to `cap`, and each
+    /// forward fans out over a `shards`-thread team, each owning a
+    /// contiguous output-neuron range of every layer
+    /// ([`crate::inference::shard::ShardedModel`]). Parallelism lives
+    /// *inside* the request, so wide layers speed up even at batch 1 and
+    /// scratch is not replicated per worker.
+    Sharded { shards: usize, cap: usize },
 }
 
 /// How a worker picks its per-pop batch limit.
@@ -154,12 +163,22 @@ impl LatencyStats {
     }
 }
 
+/// Percentile by linear interpolation between closest ranks
+/// (`rank = p/100 * (n-1)`, the numpy/NIST default). The old nearest-rank
+/// round-half-away-from-zero variant biased percentiles high — p50 of
+/// 1..=100 reported 51.0 instead of 50.5.
 fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
     }
-    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        return sorted[lo];
+    }
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
 }
 
 struct Request {
@@ -167,15 +186,19 @@ struct Request {
     t_submit: Instant,
 }
 
-/// Anything the serving loop can drive: a whole model stack or (via the
-/// blanket impl on `&dyn LinearKernel`) one bare layer representation.
+/// Anything the serving loop can drive: a whole model stack, a sharded
+/// stack, or (via the blanket impl on `&dyn LinearKernel`) one bare layer
+/// representation. Each target brings its own per-worker scratch type.
 pub trait ServeTarget: Sync {
+    type Scratch;
     fn in_width(&self) -> usize;
-    fn make_scratch(&self, max_batch: usize) -> Scratch;
-    fn infer(&self, x: &[f32], batch: usize, scratch: &mut Scratch, threads: usize);
+    fn make_scratch(&self, max_batch: usize) -> Self::Scratch;
+    fn infer(&self, x: &[f32], batch: usize, scratch: &mut Self::Scratch, threads: usize);
 }
 
 impl ServeTarget for SparseModel {
+    type Scratch = Scratch;
+
     fn in_width(&self) -> usize {
         SparseModel::in_width(self)
     }
@@ -189,7 +212,25 @@ impl ServeTarget for SparseModel {
     }
 }
 
+impl ServeTarget for ShardedModel {
+    type Scratch = ShardedScratch;
+
+    fn in_width(&self) -> usize {
+        ShardedModel::in_width(self)
+    }
+
+    fn make_scratch(&self, max_batch: usize) -> ShardedScratch {
+        ShardedModel::make_scratch(self, max_batch)
+    }
+
+    fn infer(&self, x: &[f32], batch: usize, scratch: &mut ShardedScratch, threads: usize) {
+        let _ = self.forward(x, batch, scratch, threads);
+    }
+}
+
 impl<'a> ServeTarget for &'a dyn LinearKernel {
+    type Scratch = Scratch;
+
     fn in_width(&self) -> usize {
         (**self).in_width()
     }
@@ -211,8 +252,29 @@ pub fn serve(layer: &dyn LinearKernel, cfg: &ServeConfig) -> LatencyStats {
 }
 
 /// Drive a whole [`SparseModel`] stack through the serving loop.
+/// `ServeMode::Sharded` re-materializes the stack as a
+/// [`ShardedModel`] (stored-weight-balanced plan) and serves with one
+/// coordinator draining the queue while each forward runs on the shard
+/// team.
 pub fn serve_model(model: &SparseModel, cfg: &ServeConfig) -> LatencyStats {
+    if let ServeMode::Sharded { shards, .. } = cfg.mode {
+        let sharded = ShardedModel::from_model(model, shards)
+            .expect("sharding a validated model with a balanced plan cannot fail");
+        return serve_target(&sharded, cfg);
+    }
     serve_target(model, cfg)
+}
+
+/// One Poisson inter-arrival gap: exponential with the configured mean,
+/// clamped at 10x the mean so one extreme tail draw cannot stall the
+/// submitter for unbounded time. (The old code clamped to an absolute
+/// 10 ms — `gap.min(0.01)` — which silently floored any configured mean
+/// above ~10 ms into a flood; the realized mean now tracks the configured
+/// one for every `mean`.)
+pub fn poisson_gap(mean: Duration, rng: &mut Rng) -> Duration {
+    let mean_s = mean.as_secs_f64();
+    let u = rng.uniform().max(1e-12);
+    Duration::from_secs_f64((mean_s * -u.ln()).min(10.0 * mean_s))
 }
 
 /// The serving engine all modes share: `Online` and `Batched` are the
@@ -227,6 +289,8 @@ pub fn serve_target<T: ServeTarget>(target: &T, cfg: &ServeConfig) -> LatencySta
         ServeMode::Adaptive { workers, cap } => {
             (workers.max(1), Batching::Adaptive { cap: cap.max(1) })
         }
+        // one coordinator: intra-request parallelism is the target's job
+        ServeMode::Sharded { cap, .. } => (1, Batching::Fixed(cap.max(1))),
     };
     let max_batch = batching.cap();
     let batcher = AdaptiveBatcher::new(max_batch);
@@ -248,10 +312,7 @@ pub fn serve_target<T: ServeTarget>(target: &T, cfg: &ServeConfig) -> LatencySta
                 let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
                 inj.push(Request { x, t_submit: Instant::now() });
                 if mean_gap > Duration::ZERO {
-                    // exponential inter-arrival
-                    let u = rng.uniform().max(1e-12);
-                    let gap = mean_gap.as_secs_f64() * -u.ln();
-                    std::thread::sleep(Duration::from_secs_f64(gap.min(0.01)));
+                    std::thread::sleep(poisson_gap(mean_gap, &mut rng));
                 }
             }
             inj.close();
@@ -401,6 +462,79 @@ mod tests {
     }
 
     #[test]
+    fn sharded_mode_serves_all_requests() {
+        let m = model3(Repr::Condensed);
+        for shards in [1usize, 2, 3] {
+            let cfg = ServeConfig {
+                mode: ServeMode::Sharded { shards, cap: 4 },
+                n_requests: 120,
+                mean_interarrival: Duration::ZERO,
+                threads: 1,
+                seed: 5,
+            };
+            let stats = serve_model(&m, &cfg);
+            assert_eq!(stats.n, 120, "shards={shards}: every request served exactly once");
+            assert!(stats.p99_us >= stats.p50_us);
+            assert!(stats.mean_batch >= 1.0 && stats.mean_batch <= 4.0);
+        }
+    }
+
+    #[test]
+    fn poisson_gap_mean_tracks_configured_mean() {
+        // 10k deterministic draws at a 50 ms mean: the sample mean must sit
+        // near 50 ms (the old absolute 10 ms clamp floored every draw)
+        let mean = Duration::from_millis(50);
+        let mut rng = Rng::new(42);
+        let n = 10_000;
+        let mut total = 0.0f64;
+        let mut max_gap = 0.0f64;
+        for _ in 0..n {
+            let g = poisson_gap(mean, &mut rng).as_secs_f64();
+            total += g;
+            max_gap = max_gap.max(g);
+        }
+        let sample_mean = total / n as f64;
+        assert!(
+            (sample_mean - 0.05).abs() < 0.005,
+            "sample mean {:.2} ms should track the configured 50 ms",
+            sample_mean * 1e3
+        );
+        assert!(max_gap <= 0.5 + 1e-9, "clamp is 10x the mean, got {max_gap}");
+        assert!(max_gap > 0.05, "tail draws exceed the mean (old clamp capped them at 10 ms)");
+    }
+
+    #[test]
+    fn poisson_submitter_realizes_configured_mean_gap() {
+        // regression for the absolute-10ms clamp: a run configured at
+        // mean_interarrival = 50 ms must realize ~50 ms mean gaps (the old
+        // code floored them to 10 ms, a 5x flood)
+        let bundle = LayerBundle::synth(8, 8, 0.5, 0.0, 0);
+        let n_requests = 40;
+        let cfg = ServeConfig {
+            mode: ServeMode::Online,
+            n_requests,
+            mean_interarrival: Duration::from_millis(50),
+            threads: 1,
+            // This seed's 40 exponential draws average 46.25 ms — a little
+            // under the mean on purpose: sleep can only overshoot, so the
+            // slack absorbs scheduler oversleep when the parallel test
+            // sweep loads the machine, while the lower bound (> 40 ms) is
+            // guaranteed by the draws themselves.
+            seed: 15,
+        };
+        let t0 = Instant::now();
+        let stats = serve(&bundle.condensed, &cfg);
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(stats.n, n_requests);
+        let mean_gap = wall / n_requests as f64;
+        assert!(
+            (mean_gap - 0.05).abs() <= 0.01,
+            "realized mean gap {:.1} ms must be within 20% of the configured 50 ms",
+            mean_gap * 1e3
+        );
+    }
+
+    #[test]
     fn adaptive_batcher_tracks_depth() {
         let b = AdaptiveBatcher::new(8);
         assert_eq!(b.next_batch(0), 1, "empty queue serves batch-1");
@@ -431,8 +565,21 @@ mod tests {
     #[test]
     fn percentiles_ordered() {
         let sorted: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        assert_eq!(percentile(&sorted, 50.0), 51.0);
+        // interpolated: rank 49.5 -> midway between 50 and 51 (the old
+        // nearest-rank variant reported 51.0, biased high)
+        assert_eq!(percentile(&sorted, 50.0), 50.5);
         assert!(percentile(&sorted, 99.0) >= percentile(&sorted, 95.0));
+    }
+
+    #[test]
+    fn percentile_interpolates_between_ranks() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 25.0), 17.5, "rank 0.75 -> 10 + 0.75*10");
+        assert_eq!(percentile(&xs, 50.0), 25.0, "rank 1.5 -> midway");
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        // out-of-range p clamps instead of indexing out of bounds
+        assert_eq!(percentile(&xs, 150.0), 40.0);
+        assert_eq!(percentile(&xs, -5.0), 10.0);
     }
 
     #[test]
@@ -458,7 +605,9 @@ mod tests {
         assert_eq!(s.max_us, 400.0);
         assert_eq!(s.throughput_rps, 2.0, "n / wall");
         assert!((s.mean_batch - 4.0 / 3.0).abs() < 1e-12, "served / batches across workers");
-        assert_eq!(s.p50_us, 300.0, "exact percentile over the merged samples");
+        // merged sorted samples [100,200,300,400]: interpolated p50 at
+        // rank 1.5 is 250 (the old nearest-rank variant said 300)
+        assert_eq!(s.p50_us, 250.0, "interpolated percentile over the merged samples");
         assert!(s.p99_us <= s.max_us && s.p95_us <= s.p99_us);
     }
 

@@ -1,0 +1,590 @@
+//! Tensor-parallel sharded serving: split every layer's output neurons
+//! across a team of S shard workers so one request's forward runs on S
+//! cores *within* the request — the ROADMAP's "shard a model's
+//! layers/neuron ranges across workers" item, and the alternative to the
+//! worker-pool's replicate-everything scaling.
+//!
+//! The paper's constant fan-in constraint makes output-neuron sharding
+//! natural: each output neuron owns exactly k weights, so any contiguous
+//! neuron range of a condensed layer is itself a valid condensed kernel
+//! (the same property that makes N:M-style structured sparsity
+//! hardware-friendly). The other three representations slice the same way.
+//!
+//! Pieces:
+//!
+//! * [`ShardPlan`] — per layer, S+1 monotone cut points over the *full
+//!   logical* neuron range, balanced by **stored weights** rather than
+//!   neuron count so ablated neurons (which cost nothing in the compact
+//!   forms) don't skew shard load.
+//! * [`ShardedModel`] — each shard holds [`ModelLayer::slice`]s of every
+//!   layer. A forward runs one scoped thread per shard; at layer l, shard
+//!   s computes its slice into private staging, then writes the disjoint
+//!   column range `cuts[l][s]..cuts[l][s+1]` of a shared full-width
+//!   activation buffer and waits on a [`Barrier`] so every shard sees the
+//!   complete layer output before reading it as the next layer's input.
+//! * [`ServeEngine`] — replicated-vs-sharded dispatch for the serving
+//!   front-end (`FrontendConfig::shards`).
+//!
+//! Outputs are **bit-for-bit identical** to the replicated
+//! [`SparseModel::forward`]: slicing copies rows verbatim, each neuron's
+//! dot product runs unchanged, and the scatter/zero-fill/ReLU sequence per
+//! element matches the replicated path (`rust/tests/shard_equivalence.rs`
+//! pins this across reprs, shard counts, and batch sizes).
+//!
+//! Known limitation (documented, not fixed here): the shard team is
+//! spawned per forward via `std::thread::scope`, costing a few tens of
+//! microseconds per request; a persistent team with a request doorbell is
+//! the follow-on once profiles say the spawn dominates.
+
+use std::cell::UnsafeCell;
+use std::ops::Range;
+use std::sync::{Arc, Barrier};
+
+use anyhow::Result;
+
+use super::model::{ModelLayer, Scratch};
+use super::SparseModel;
+
+/// Per-layer contiguous partition of the output-neuron range into S
+/// shards, balanced by stored weights.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    shards: usize,
+    /// `cuts[layer]`: S+1 monotone entries, `cuts[layer][0] == 0`,
+    /// `cuts[layer][S] == layer full width`. Shard s owns
+    /// `cuts[layer][s]..cuts[layer][s+1]` (possibly empty).
+    cuts: Vec<Vec<usize>>,
+}
+
+impl ShardPlan {
+    /// Balance each layer's neurons over `shards` contiguous ranges so the
+    /// stored weights (= gather-MAC work) per shard are as even as the
+    /// neuron granularity allows. Ablated neurons carry zero weight in the
+    /// compact representations, so a run of ablated neurons is absorbed
+    /// into a shard for free instead of counting like live ones.
+    pub fn balanced(model: &SparseModel, shards: usize) -> ShardPlan {
+        let shards = shards.max(1);
+        let cuts =
+            model.layers().iter().map(|l| balance_layer(&l.row_weights(), shards)).collect();
+        ShardPlan { shards, cuts }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn layers(&self) -> usize {
+        self.cuts.len()
+    }
+
+    /// Neuron range of `shard` within `layer` (full logical coordinates).
+    pub fn range(&self, layer: usize, shard: usize) -> Range<usize> {
+        self.cuts[layer][shard]..self.cuts[layer][shard + 1]
+    }
+
+    /// Largest shard cost divided by ideal (total/S) cost for one layer —
+    /// 1.0 is perfect balance. Diagnostics for the bench/docs.
+    pub fn imbalance(&self, model: &SparseModel, layer: usize) -> f64 {
+        let w = model.layers()[layer].row_weights();
+        let total: usize = w.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let ideal = total as f64 / self.shards as f64;
+        (0..self.shards)
+            .map(|s| w[self.range(layer, s)].iter().sum::<usize>() as f64 / ideal)
+            .fold(1.0, f64::max)
+    }
+}
+
+/// Contiguous partition of `cost` into `shards` ranges with near-equal
+/// sums: greedy prefix walk that stops each cut at the boundary closest to
+/// the j/S quantile of total cost. Zero-cost layers fall back to an even
+/// neuron split. Cuts are monotone; ranges may be empty when `shards`
+/// exceeds the number of cost-bearing neurons.
+fn balance_layer(cost: &[usize], shards: usize) -> Vec<usize> {
+    let n = cost.len();
+    let total: usize = cost.iter().sum();
+    let mut cuts = Vec::with_capacity(shards + 1);
+    cuts.push(0);
+    if total == 0 {
+        for j in 1..shards {
+            cuts.push(n * j / shards);
+        }
+        cuts.push(n);
+        return cuts;
+    }
+    let mut prefix = 0usize;
+    let mut i = 0usize;
+    for j in 1..shards {
+        let target = total as f64 * j as f64 / shards as f64;
+        while i < n {
+            let next = prefix + cost[i];
+            // advance while the next boundary is at least as close to the
+            // target as the current one (ties advance: prefer spending
+            // neurons early so trailing shards can't starve the walk)
+            if (next as f64 - target).abs() <= (target - prefix as f64).abs() {
+                prefix = next;
+                i += 1;
+            } else {
+                break;
+            }
+        }
+        cuts.push(i);
+    }
+    cuts.push(n);
+    cuts
+}
+
+/// A full-width activation buffer shards write disjoint column ranges of.
+/// `UnsafeCell` per element: shards mutate through shared references, with
+/// disjointness and write/read phase separation enforced by the caller
+/// (`ShardedModel::forward`'s barrier discipline).
+struct SharedBuf {
+    cells: Vec<UnsafeCell<f32>>,
+}
+
+// SAFETY: all concurrent access goes through the raw-pointer accessors
+// below under ShardedModel::forward's protocol — writers touch disjoint
+// ranges, and a Barrier separates every write phase from the reads of the
+// next layer.
+unsafe impl Sync for SharedBuf {}
+
+impl SharedBuf {
+    fn new(len: usize) -> SharedBuf {
+        SharedBuf { cells: (0..len).map(|_| UnsafeCell::new(0.0)).collect() }
+    }
+
+    /// # Safety
+    /// No other reference to `start..start+len` may exist for the returned
+    /// lifetime (shards uphold this by owning disjoint column ranges).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn region_mut(&self, start: usize, len: usize) -> &mut [f32] {
+        debug_assert!(start + len <= self.cells.len());
+        // UnsafeCell<f32> is repr(transparent) over f32
+        std::slice::from_raw_parts_mut(self.cells.as_ptr().add(start) as *mut f32, len)
+    }
+
+    /// # Safety
+    /// No write to `0..len` may be in flight (callers read only buffers
+    /// completed behind a barrier).
+    unsafe fn read(&self, len: usize) -> &[f32] {
+        debug_assert!(len <= self.cells.len());
+        std::slice::from_raw_parts(self.cells.as_ptr() as *const f32, len)
+    }
+}
+
+/// Per-call workspace for [`ShardedModel::forward`]: two shared ping-pong
+/// full-width buffers plus one private staging buffer per shard (kernel
+/// outputs are (batch, slice width) contiguous; the shared buffer's rows
+/// are strided by the full width, so every shard stages then copies).
+pub struct ShardedScratch {
+    a: SharedBuf,
+    b: SharedBuf,
+    stage: Vec<Vec<f32>>,
+    max_batch: usize,
+}
+
+impl ShardedScratch {
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+}
+
+/// A [`SparseModel`] re-materialized as S shard slices per layer, sharing
+/// one barrier-synchronized forward. Build via [`ShardedModel::from_model`]
+/// (balanced plan) or [`ShardedModel::with_plan`].
+pub struct ShardedModel {
+    /// `layers[layer][shard]` — zero-width slices are legal (shard counts
+    /// above a narrow layer's width leave trailing shards empty there).
+    layers: Vec<Vec<ModelLayer>>,
+    plan: ShardPlan,
+    d_in: usize,
+    out_width: usize,
+    /// Full logical width per layer (the shared-buffer row stride).
+    widths: Vec<usize>,
+}
+
+impl ShardedModel {
+    /// Shard `model` with a stored-weight-balanced [`ShardPlan`].
+    pub fn from_model(model: &SparseModel, shards: usize) -> Result<ShardedModel> {
+        ShardedModel::with_plan(model, ShardPlan::balanced(model, shards))
+    }
+
+    /// Shard `model` with an explicit plan (must cover every layer's full
+    /// width with monotone cuts).
+    pub fn with_plan(model: &SparseModel, plan: ShardPlan) -> Result<ShardedModel> {
+        anyhow::ensure!(
+            plan.cuts.len() == model.depth(),
+            "plan has {} layers, model has {}",
+            plan.cuts.len(),
+            model.depth()
+        );
+        let shards = plan.shards;
+        let mut layers = Vec::with_capacity(model.depth());
+        for (li, layer) in model.layers().iter().enumerate() {
+            let cuts = &plan.cuts[li];
+            anyhow::ensure!(
+                cuts.len() == shards + 1
+                    && cuts[0] == 0
+                    && cuts[shards] == layer.out_full_width()
+                    && cuts.windows(2).all(|w| w[0] <= w[1]),
+                "layer {li}: cuts {cuts:?} must rise monotonically 0..={}",
+                layer.out_full_width()
+            );
+            layers.push((0..shards).map(|s| layer.slice(cuts[s]..cuts[s + 1])).collect());
+        }
+        Ok(ShardedModel {
+            layers,
+            plan,
+            d_in: model.in_width(),
+            out_width: model.out_width(),
+            widths: model.layers().iter().map(|l| l.out_full_width()).collect(),
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.plan.shards
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn in_width(&self) -> usize {
+        self.d_in
+    }
+
+    pub fn out_width(&self) -> usize {
+        self.out_width
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Total stored bytes across all shard slices — each weight lives in
+    /// exactly one shard, so this matches the replicated model's storage
+    /// (CSR slices add one 4-byte indptr sentinel per extra shard).
+    pub fn storage_bytes(&self) -> usize {
+        self.layers.iter().flatten().map(|l| l.kernel().storage_bytes()).sum()
+    }
+
+    pub fn describe(&self) -> String {
+        let widths: Vec<String> = self.widths.iter().map(|w| w.to_string()).collect();
+        format!("{} -> {} x{} shards", self.d_in, widths.join(" -> "), self.plan.shards)
+    }
+
+    /// Allocate a workspace for forwards up to `max_batch` rows.
+    pub fn make_scratch(&self, max_batch: usize) -> ShardedScratch {
+        let max_batch = max_batch.max(1);
+        let maxw = self.widths.iter().copied().max().unwrap_or(1).max(1);
+        let stage = (0..self.plan.shards)
+            .map(|s| {
+                let maxc =
+                    self.layers.iter().map(|l| l[s].kernel().out_width()).max().unwrap_or(0);
+                vec![0f32; max_batch * maxc]
+            })
+            .collect();
+        ShardedScratch {
+            a: SharedBuf::new(max_batch * maxw),
+            b: SharedBuf::new(max_batch * maxw),
+            stage,
+            max_batch,
+        }
+    }
+
+    /// One-shot forward that allocates its own scratch (tests/examples).
+    pub fn forward_vec(&self, x: &[f32], batch: usize, threads: usize) -> Vec<f32> {
+        let mut s = self.make_scratch(batch);
+        self.forward(x, batch, &mut s, threads).to_vec()
+    }
+
+    /// Run the sharded stack on `batch` rows of `x`. Spawns one scoped
+    /// thread per shard; `threads` is the *intra-shard* kernel thread
+    /// count (total parallelism = shards x threads). Bit-for-bit equal to
+    /// the replicated [`SparseModel::forward`] on the same weights.
+    pub fn forward<'s>(
+        &self,
+        x: &[f32],
+        batch: usize,
+        s: &'s mut ShardedScratch,
+        threads: usize,
+    ) -> &'s [f32] {
+        assert!(batch >= 1, "batch must be >= 1");
+        assert!(batch <= s.max_batch, "batch {batch} exceeds scratch capacity {}", s.max_batch);
+        assert_eq!(x.len(), batch * self.d_in, "input size mismatch");
+        let depth = self.layers.len();
+        let shards = self.plan.shards;
+        let barrier = Barrier::new(shards);
+        let (buf_a, buf_b) = (&s.a, &s.b);
+        std::thread::scope(|scope| {
+            for (si, stage) in s.stage.iter_mut().enumerate() {
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    for li in 0..depth {
+                        let layer = &self.layers[li][si];
+                        let w_full = self.widths[li];
+                        let r = self.plan.range(li, si);
+                        let sw = r.end - r.start;
+                        // same ping-pong parity as the replicated forward:
+                        // layer 0 writes `a`, layer 1 writes `b`, ...
+                        let (dst, src) = if li % 2 == 0 { (buf_a, buf_b) } else { (buf_b, buf_a) };
+                        // SAFETY: the barrier at the end of the previous
+                        // iteration ordered every shard's writes to `src`
+                        // before this read; nobody writes `src` this phase.
+                        let src: &[f32] = if li == 0 {
+                            x
+                        } else {
+                            unsafe { src.read(batch * layer.in_width()) }
+                        };
+                        if sw > 0 {
+                            let na = layer.kernel().out_width();
+                            let c = &mut stage[..batch * na];
+                            layer.kernel().forward(src, batch, c, threads);
+                            for bi in 0..batch {
+                                // SAFETY: shard si exclusively owns columns
+                                // r.start..r.end of every row this phase
+                                // (ShardPlan ranges are disjoint).
+                                let region = unsafe { dst.region_mut(bi * w_full + r.start, sw) };
+                                match layer.active_ids() {
+                                    None => region.copy_from_slice(&c[bi * na..(bi + 1) * na]),
+                                    Some(active) => {
+                                        region.fill(0.0);
+                                        for (j, &row) in active.iter().enumerate() {
+                                            region[row as usize] = c[bi * na + j];
+                                        }
+                                    }
+                                }
+                                layer.activation().apply(region);
+                            }
+                        }
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+        let final_buf = if (depth - 1) % 2 == 0 { &s.a } else { &s.b };
+        // SAFETY: the scope joined every shard; we hold &mut scratch.
+        unsafe { final_buf.read(batch * self.out_width) }
+    }
+}
+
+/// Replicated-vs-sharded dispatch for the serving front-end: one enum so
+/// `frontend::Shared` stays non-generic while `--shards N` swaps the
+/// execution strategy under the same queue/cache/batching machinery.
+pub enum ServeEngine {
+    /// Every pool worker owns a private [`Scratch`] and runs whole
+    /// forwards (the PR-1/PR-2 behaviour).
+    Replicated(Arc<SparseModel>),
+    /// Each forward fans out over a shard team; typically paired with
+    /// `workers: 1` since the parallelism lives inside the request.
+    Sharded(Arc<ShardedModel>),
+}
+
+/// Matching per-worker workspace for a [`ServeEngine`].
+pub enum EngineScratch {
+    Replicated(Scratch),
+    Sharded(ShardedScratch),
+}
+
+impl ServeEngine {
+    pub fn in_width(&self) -> usize {
+        match self {
+            ServeEngine::Replicated(m) => m.in_width(),
+            ServeEngine::Sharded(m) => m.in_width(),
+        }
+    }
+
+    pub fn out_width(&self) -> usize {
+        match self {
+            ServeEngine::Replicated(m) => m.out_width(),
+            ServeEngine::Sharded(m) => m.out_width(),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            ServeEngine::Replicated(m) => m.describe(),
+            ServeEngine::Sharded(m) => m.describe(),
+        }
+    }
+
+    pub fn make_scratch(&self, max_batch: usize) -> EngineScratch {
+        match self {
+            ServeEngine::Replicated(m) => EngineScratch::Replicated(m.make_scratch(max_batch)),
+            ServeEngine::Sharded(m) => EngineScratch::Sharded(m.make_scratch(max_batch)),
+        }
+    }
+
+    pub fn forward<'s>(
+        &self,
+        x: &[f32],
+        batch: usize,
+        s: &'s mut EngineScratch,
+        threads: usize,
+    ) -> &'s [f32] {
+        match (self, s) {
+            (ServeEngine::Replicated(m), EngineScratch::Replicated(s)) => {
+                m.forward(x, batch, s, threads)
+            }
+            (ServeEngine::Sharded(m), EngineScratch::Sharded(s)) => m.forward(x, batch, s, threads),
+            _ => panic!("EngineScratch does not match its ServeEngine"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::model::{Activation, LayerSpec, Repr};
+    use crate::sparsity::Mask;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn model3(repr: Repr, ablated: f64) -> SparseModel {
+        let spec = |n, act| LayerSpec { n, repr, sparsity: 0.9, ablated_frac: ablated, activation: act };
+        SparseModel::synth(
+            64,
+            &[
+                spec(48, Activation::Relu),
+                spec(32, Activation::Relu),
+                spec(16, Activation::Identity),
+            ],
+            11,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn balance_layer_properties() {
+        for (cost, shards) in [
+            (vec![4usize; 16], 4usize),
+            (vec![0, 0, 0, 0, 4, 4, 4, 4], 2),
+            (vec![1, 100, 1, 1], 2),
+            (vec![0; 8], 3),
+            (vec![5], 4),
+        ] {
+            let cuts = balance_layer(&cost, shards);
+            assert_eq!(cuts.len(), shards + 1, "{cost:?}");
+            assert_eq!(cuts[0], 0);
+            assert_eq!(*cuts.last().unwrap(), cost.len());
+            assert!(cuts.windows(2).all(|w| w[0] <= w[1]), "monotone: {cuts:?}");
+        }
+        // uniform cost splits evenly
+        assert_eq!(balance_layer(&[4; 16], 4), vec![0, 4, 8, 12, 16]);
+        // an ablated (zero-cost) head is absorbed: the cut lands at the
+        // weight midpoint, not the neuron midpoint
+        assert_eq!(balance_layer(&[0, 0, 0, 0, 4, 4, 4, 4], 2), vec![0, 6, 8]);
+    }
+
+    #[test]
+    fn plan_balances_by_stored_weights_not_neurons() {
+        // neurons 0..8 ablated, 8..16 live with k=4: a 2-shard plan must
+        // cut at neuron 12 (weight midpoint), not 8 (neuron midpoint)
+        let n = 16;
+        let d = 8;
+        let mut mask = Mask::from_tensor(Tensor::zeros(&[n, d]));
+        for r in 8..n {
+            for j in 0..4 {
+                mask.set(r, j, true);
+            }
+        }
+        let mut rng = Rng::new(3);
+        let mut w = Tensor::normal(&[n, d], 1.0, &mut rng);
+        w.mul_assign(&mask.t);
+        let bias = vec![0.0f32; n];
+        let layer = ModelLayer::from_weights(&w, &mask, &bias, Repr::Condensed, Activation::Identity);
+        let model = SparseModel::new(vec![layer]).unwrap();
+        let plan = ShardPlan::balanced(&model, 2);
+        assert_eq!(plan.range(0, 0), 0..12);
+        assert_eq!(plan.range(0, 1), 12..16);
+        assert!((plan.imbalance(&model, 0) - 1.0).abs() < 1e-9, "perfectly even split");
+    }
+
+    #[test]
+    fn sharded_matches_replicated_smoke() {
+        // full cross-product lives in rust/tests/shard_equivalence.rs
+        let m = model3(Repr::Condensed, 0.25);
+        let sh = ShardedModel::from_model(&m, 3).unwrap();
+        assert_eq!(sh.shards(), 3);
+        assert_eq!(sh.storage_bytes(), m.storage_bytes(), "weights partition exactly");
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..4 * 64).map(|_| rng.normal_f32()).collect();
+        let want = m.forward_vec(&x, 4, 1);
+        let got = sh.forward_vec(&x, 4, 1);
+        assert_eq!(want.len(), got.len());
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "idx {i}: {w} vs {g}");
+        }
+    }
+
+    #[test]
+    fn more_shards_than_neurons_leaves_empty_shards() {
+        let spec = |n, act| LayerSpec {
+            n,
+            repr: Repr::Condensed,
+            sparsity: 0.5,
+            ablated_frac: 0.0,
+            activation: act,
+        };
+        let m = SparseModel::synth(8, &[spec(4, Activation::Relu), spec(2, Activation::Identity)], 2)
+            .unwrap();
+        let sh = ShardedModel::from_model(&m, 5).unwrap();
+        let x = vec![0.5f32; 8];
+        let want = m.forward_vec(&x, 1, 1);
+        let got = sh.forward_vec(&x, 1, 1);
+        assert_eq!(
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // narrowest layer (2 neurons) cannot fill 5 shards
+        let widths: Vec<usize> = (0..5).map(|s| sh.plan().range(1, s).len()).collect();
+        assert_eq!(widths.iter().sum::<usize>(), 2);
+        assert!(widths.iter().filter(|&&w| w == 0).count() >= 3);
+    }
+
+    #[test]
+    fn single_shard_is_the_replicated_model() {
+        let m = model3(Repr::Dense, 0.25);
+        let sh = ShardedModel::from_model(&m, 1).unwrap();
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        assert_eq!(
+            m.forward_vec(&x, 1, 1).iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            sh.forward_vec(&x, 1, 1).iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn with_plan_rejects_malformed_cuts() {
+        let m = model3(Repr::Csr, 0.0);
+        let good = ShardPlan::balanced(&m, 2);
+        assert!(ShardedModel::with_plan(&m, good).is_ok());
+        let mut bad = ShardPlan::balanced(&m, 2);
+        bad.cuts[1][1] = 1000; // beyond the layer width
+        assert!(ShardedModel::with_plan(&m, bad).is_err());
+        let mut short = ShardPlan::balanced(&m, 2);
+        short.cuts.pop(); // wrong layer count
+        assert!(ShardedModel::with_plan(&m, short).is_err());
+    }
+
+    #[test]
+    fn engine_dispatch_matches() {
+        let m = Arc::new(model3(Repr::Structured, 0.4));
+        let rep = ServeEngine::Replicated(Arc::clone(&m));
+        let sh = ServeEngine::Sharded(Arc::new(ShardedModel::from_model(&m, 2).unwrap()));
+        assert_eq!(rep.in_width(), sh.in_width());
+        assert_eq!(rep.out_width(), sh.out_width());
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..2 * 64).map(|_| rng.normal_f32()).collect();
+        let mut sr = rep.make_scratch(2);
+        let mut ss = sh.make_scratch(2);
+        let a = rep.forward(&x, 2, &mut sr, 1).to_vec();
+        let b = sh.forward(&x, 2, &mut ss, 1).to_vec();
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -40,8 +40,8 @@ USAGE:
   srigl serve-model [--dims 3072,768,768,256] [--repr condensed|dense|csr|structured|mixed]
               [--sparsity 0.9] [--workers 4] [--max-batch 8] [--requests N]
               [--threads T] [--gap-us G] [--stack NAME] [--adaptive]
-              [--listen ADDR] [--queue-cap N] [--cache-cap N] [--retry-ms M]
-              [--fixed-batch]
+              [--shards S] [--listen ADDR] [--queue-cap N] [--cache-cap N]
+              [--retry-ms M] [--fixed-batch]
   srigl check
   srigl list"
     );
@@ -257,10 +257,43 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
     // Poisson path stays byte-identical by default); the listen path
     // defaults to the stack's serve knobs, `--fixed-batch` overriding.
     let adaptive = args.has("adaptive");
+    let shards: usize = args.parse_or("shards", knobs.shards)?;
 
     if let Some(addr) = args.get("listen") {
         let adaptive = adaptive || (knobs.adaptive && !args.has("fixed-batch"));
-        return serve_listen(args, model, knobs, addr, workers, max_batch, adaptive, threads);
+        return serve_listen(args, model, knobs, addr, workers, max_batch, adaptive, threads, shards);
+    }
+
+    if shards > 1 {
+        // replicated pool at the same core budget vs the shard team, so
+        // the tensor-parallel tradeoff is visible in one run
+        if adaptive || args.get("workers").is_some() {
+            println!(
+                "note: --shards comparison pins the replicated baseline to workers={shards} \
+                 with fixed batching; --workers/--adaptive are ignored here (use --listen for \
+                 a sharded front-end with those knobs)"
+            );
+        }
+        println!("serving model: {} ({shards} shards)", model.describe());
+        println!(
+            "{} layers, {} KiB total, {n_requests} requests, cap={max_batch}, {threads} intra-shard thread(s)",
+            model.depth(),
+            model.storage_bytes() / 1024,
+        );
+        for (label, mode) in [
+            ("replicated", ServeMode::Pooled { workers: shards, max_batch }),
+            ("sharded", ServeMode::Sharded { shards, cap: max_batch }),
+        ] {
+            let stats = serve_model(
+                &model,
+                &ServeConfig { mode, n_requests, mean_interarrival: gap, threads, seed: 1 },
+            );
+            println!(
+                "  {label:<10} p50={:>8.1}us p99={:>8.1}us mean_batch={:.1} throughput={:.0} req/s",
+                stats.p50_us, stats.p99_us, stats.mean_batch, stats.throughput_rps
+            );
+        }
+        return Ok(());
     }
 
     println!("serving model: {}", model.describe());
@@ -311,6 +344,7 @@ fn serve_listen(
     max_batch: usize,
     adaptive: bool,
     threads: usize,
+    shards: usize,
 ) -> Result<()> {
     let cfg = FrontendConfig {
         workers,
@@ -323,16 +357,18 @@ fn serve_listen(
         cache_capacity: args.parse_or("cache-cap", knobs.cache_capacity)?,
         threads,
         retry_after_ms: args.parse_or("retry-ms", 2)?,
+        shards,
     };
     println!("serving model: {}", model.describe());
     let handle = frontend::spawn(std::sync::Arc::new(model), addr, cfg)?;
     println!(
-        "listening on {} — {} workers, {} batching (cap {max_batch}), queue cap {}, cache {} entries",
+        "listening on {} — {} workers, {} batching (cap {max_batch}), queue cap {}, cache {} entries{}",
         handle.addr(),
         cfg.workers,
         if adaptive { "adaptive" } else { "fixed" },
         cfg.queue_capacity,
-        cfg.cache_capacity
+        cfg.cache_capacity,
+        if shards > 1 { format!(", {shards} shards/forward") } else { String::new() }
     );
     println!("wire format: docs/WIRE.md; stop with Ctrl-C");
     handle.run_forever();

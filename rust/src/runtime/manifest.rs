@@ -98,11 +98,20 @@ pub struct ServeKnobs {
     /// false: fixed `max_batch` per pop.
     pub adaptive: bool,
     pub max_batch: usize,
+    /// Tensor-parallel shards per forward; `1` (default) = replicated
+    /// workers (`inference::shard` is engaged when > 1).
+    pub shards: usize,
 }
 
 impl Default for ServeKnobs {
     fn default() -> ServeKnobs {
-        ServeKnobs { queue_capacity: 1024, cache_capacity: 1024, adaptive: true, max_batch: 8 }
+        ServeKnobs {
+            queue_capacity: 1024,
+            cache_capacity: 1024,
+            adaptive: true,
+            max_batch: 8,
+            shards: 1,
+        }
     }
 }
 
@@ -229,6 +238,7 @@ fn parse_stack(name: &str, s: &Json) -> Result<StackEntry> {
                 .map(|v| v.as_usize())
                 .transpose()?
                 .unwrap_or(serve.max_batch),
+            shards: k.opt("shards").map(|v| v.as_usize()).transpose()?.unwrap_or(serve.shards),
         };
     }
     Ok(StackEntry {
@@ -313,12 +323,19 @@ mod tests {
         let src = r#"{
             "d_in": 16,
             "layers": [{"n": 8, "repr": "dense", "sparsity": 0.5}],
-            "serve": {"queue_capacity": 64, "cache_capacity": 0, "adaptive": false, "max_batch": 4}
+            "serve": {"queue_capacity": 64, "cache_capacity": 0, "adaptive": false,
+                      "max_batch": 4, "shards": 4}
         }"#;
         let e = parse_stack("s", &Json::parse(src).unwrap()).unwrap();
         assert_eq!(
             e.serve,
-            ServeKnobs { queue_capacity: 64, cache_capacity: 0, adaptive: false, max_batch: 4 }
+            ServeKnobs {
+                queue_capacity: 64,
+                cache_capacity: 0,
+                adaptive: false,
+                max_batch: 4,
+                shards: 4
+            }
         );
     }
 
@@ -335,6 +352,7 @@ mod tests {
         assert_eq!(e.serve.queue_capacity, d.queue_capacity);
         assert_eq!(e.serve.cache_capacity, d.cache_capacity);
         assert_eq!(e.serve.adaptive, d.adaptive);
+        assert_eq!(e.serve.shards, 1, "absent shards knob means replicated");
     }
 
     #[test]

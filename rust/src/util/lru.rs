@@ -87,6 +87,29 @@ impl<K: std::hash::Hash + Eq + Clone, V> LruCache<K, V> {
         Some(&self.slots[i].value)
     }
 
+    /// Look up `key` **without** refreshing recency. For lookups that
+    /// still need verification (e.g. the front-end's collision check on a
+    /// hash key): peek first, then [`LruCache::touch`] only once the entry
+    /// is confirmed to be the one wanted — an unverified `get` would
+    /// promote a colliding entry to most-recently-used.
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        let &i = self.map.get(key)?;
+        Some(&self.slots[i].value)
+    }
+
+    /// Promote an existing entry to most-recently-used; returns whether
+    /// the key was present. The recency half of [`LruCache::get`].
+    pub fn touch(&mut self, key: &K) -> bool {
+        let Some(&i) = self.map.get(key) else {
+            return false;
+        };
+        if self.head != i {
+            self.unlink(i);
+            self.link_front(i);
+        }
+        true
+    }
+
     /// Insert or overwrite `key`. Returns the evicted `(key, value)` pair
     /// when the cache was full and a cold entry had to make room.
     pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
@@ -172,6 +195,33 @@ mod tests {
         c.insert(1, 100); // 2 becomes coldest
         assert_eq!(c.insert(3, 3), Some((2, 2)));
         assert_eq!(c.get(&1), Some(&100));
+    }
+
+    #[test]
+    fn peek_does_not_promote() {
+        let mut c: LruCache<u64, i32> = LruCache::new(3);
+        c.insert(1, 1);
+        c.insert(2, 2);
+        c.insert(3, 3);
+        assert_eq!(c.peek(&1), Some(&1), "peek sees the value");
+        assert_eq!(c.peek(&9), None);
+        // 1 was peeked, not promoted: it is still the coldest and evicts
+        let ev = c.insert(4, 4);
+        assert_eq!(ev, Some((1, 1)), "peek must not refresh recency");
+        assert!(c.peek(&1).is_none());
+    }
+
+    #[test]
+    fn touch_promotes_like_get() {
+        let mut c: LruCache<u64, i32> = LruCache::new(3);
+        c.insert(1, 1);
+        c.insert(2, 2);
+        c.insert(3, 3);
+        assert!(c.touch(&1), "present key");
+        assert!(!c.touch(&9), "absent key");
+        let ev = c.insert(4, 4);
+        assert_eq!(ev, Some((2, 2)), "touched entry survived; 2 was coldest");
+        assert_eq!(c.get(&1), Some(&1));
     }
 
     #[test]

@@ -8,13 +8,14 @@
 //! caution. Test names share the `socket_` prefix so the main test sweep
 //! can `--skip socket_`.
 
+use std::io::Write;
 use std::net::TcpStream;
 use std::sync::Arc;
 
 use srigl::inference::server::Batching;
 use srigl::inference::{frontend, Activation, FrontendConfig, LayerSpec, Repr, SparseModel};
 use srigl::net::{
-    read_response, write_request, Client, Reply, RequestFrame, ResponseBody,
+    read_response, write_request, Client, Reply, RequestFrame, ResponseBody, MAX_FRAME_BYTES,
 };
 use srigl::util::rng::Rng;
 
@@ -65,6 +66,7 @@ fn socket_outputs_match_direct_forward_across_clients() {
             cache_capacity: 64,
             threads: 1,
             retry_after_ms: 1,
+            shards: 1,
         },
     )
     .unwrap();
@@ -113,6 +115,7 @@ fn socket_cache_hit_path_serves_identical_results() {
             cache_capacity: 32,
             threads: 1,
             retry_after_ms: 1,
+            shards: 1,
         },
     )
     .unwrap();
@@ -149,6 +152,7 @@ fn socket_backpressure_returns_busy_when_queue_full() {
             cache_capacity: 0,
             threads: 1,
             retry_after_ms: 7,
+            shards: 1,
         },
     )
     .unwrap();
@@ -206,6 +210,7 @@ fn socket_adaptive_batch_sizes_vary_with_load() {
             cache_capacity: 0,
             threads: 1,
             retry_after_ms: 1,
+            shards: 1,
         },
     )
     .unwrap();
@@ -274,6 +279,7 @@ fn socket_bad_request_answered_but_connection_survives() {
             cache_capacity: 0,
             threads: 1,
             retry_after_ms: 1,
+            shards: 1,
         },
     )
     .unwrap();
@@ -315,6 +321,84 @@ fn socket_bad_request_answered_but_connection_survives() {
     assert_eq!(stats.served, 1);
 }
 
+/// A frame with an unparseable length prefix must be counted as a bad
+/// request AND answered with a best-effort Error response (id 0: the
+/// request id was unreadable) before the server hangs up — the old reader
+/// exited silently, leaving the client waiting forever.
+#[test]
+fn socket_framing_error_answered_and_counted() {
+    let model = test_model(Repr::Condensed);
+    let handle = frontend::spawn(
+        Arc::clone(&model),
+        "127.0.0.1:0",
+        FrontendConfig {
+            workers: 1,
+            batching: Batching::Fixed(4),
+            queue_capacity: 64,
+            cache_capacity: 0,
+            threads: 1,
+            retry_after_ms: 1,
+            shards: 1,
+        },
+    )
+    .unwrap();
+    let mut stream = TcpStream::connect(handle.addr()).unwrap();
+
+    // length prefix beyond MAX_FRAME_BYTES: InvalidData at the wire layer
+    stream.write_all(&((MAX_FRAME_BYTES + 1) as u32).to_le_bytes()).unwrap();
+    stream.flush().unwrap();
+
+    let resp = read_response(&mut stream).unwrap().expect("framing-error response");
+    assert_eq!(resp.id, 0, "no parseable request id -> id 0");
+    match resp.body {
+        ResponseBody::Error(msg) => {
+            assert!(msg.contains("framing"), "diagnostic names the failure: {msg}")
+        }
+        other => panic!("expected Error, got {other:?}"),
+    }
+    // the server hangs up after a framing error
+    assert!(read_response(&mut stream).unwrap().is_none(), "connection closed after the error");
+    drop(stream);
+
+    let stats = handle.stop();
+    assert_eq!(stats.bad_requests, 1, "framing error counted");
+    assert_eq!(stats.served, 0);
+}
+
+/// `shards: 2` swaps the execution engine under the same socket front-end:
+/// responses must still be bit-for-bit identical to the replicated direct
+/// forward (the shard team computes the same arithmetic per neuron).
+#[test]
+fn socket_sharded_engine_matches_replicated_bits() {
+    let model = test_model(Repr::Condensed);
+    let handle = frontend::spawn(
+        Arc::clone(&model),
+        "127.0.0.1:0",
+        FrontendConfig {
+            workers: 1, // parallelism lives inside the shard team
+            batching: Batching::Fixed(4),
+            queue_capacity: 64,
+            cache_capacity: 16,
+            threads: 1,
+            retry_after_ms: 1,
+            shards: 2,
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(handle.addr()).unwrap();
+    let mut rng = Rng::new(0x5AAD);
+    for req in 0..20usize {
+        let rows = 1 + (req % 3);
+        let x: Vec<f32> = (0..rows * D_IN).map(|_| rng.normal_f32()).collect();
+        let got = client.infer_retrying(rows, &x, 50).expect("infer");
+        let want = model.forward_vec(&x, rows, 1);
+        assert_bits_eq(&got, &want, &format!("sharded req {req} rows {rows}"));
+    }
+    let stats = handle.stop();
+    assert_eq!(stats.served + stats.cache_hits, 20);
+    assert_eq!(stats.bad_requests, 0);
+}
+
 /// Multi-row requests round-trip with row-major layout preserved.
 #[test]
 fn socket_multi_row_request_roundtrips() {
@@ -329,6 +413,7 @@ fn socket_multi_row_request_roundtrips() {
             cache_capacity: 16,
             threads: 1,
             retry_after_ms: 1,
+            shards: 1,
         },
     )
     .unwrap();
