@@ -3,12 +3,16 @@
 //! fixed vs adaptive batching and result-cache hit ratios {0, 0.5, 0.9}.
 //! Client-side latency includes the wire round trip, so numbers here sit
 //! above the in-process `model_serve` bench by the loopback overhead.
+//!
+//! The final line is a machine-readable JSON summary (`{"bench":...}`) so
+//! CI and future PRs can track the perf trajectory.
 
 use std::sync::Arc;
 
 use srigl::inference::server::{Batching, LatencyStats, WorkerStats};
-use srigl::inference::{frontend, Activation, FrontendConfig, LayerSpec, Repr, SparseModel};
+use srigl::inference::{frontend, Activation, EngineBuilder, LayerSpec, Repr, SparseModel};
 use srigl::net::Client;
+use srigl::util::json::{arr, num, obj, s, Json};
 use srigl::util::rng::Rng;
 
 const N_REQUESTS: usize = 600;
@@ -43,15 +47,12 @@ fn run(model: &Arc<SparseModel>, batching: Batching, hit_ratio: f64) -> (Latency
     let handle = frontend::spawn(
         Arc::clone(model),
         "127.0.0.1:0",
-        FrontendConfig {
-            workers: 2,
-            batching,
-            queue_capacity: 1024,
-            cache_capacity: 2048,
-            threads: 1,
-            retry_after_ms: 1,
-            shards: 1,
-        },
+        &EngineBuilder::new()
+            .workers(2)
+            .batching(batching)
+            .queue_capacity(1024)
+            .cache_capacity(2048)
+            .retry_after_ms(1),
     )
     .expect("bind loopback");
     let addr = handle.addr();
@@ -118,6 +119,7 @@ fn main() {
         "{:<10} {:>9} {:>10} {:>10} {:>10}   server",
         "batching", "hit-ratio", "p50 (us)", "p99 (us)", "req/s"
     );
+    let mut rows: Vec<Json> = Vec::new();
     for batching in [Batching::Fixed(8), Batching::Adaptive { cap: 8 }] {
         for hit_ratio in [0.0f64, 0.5, 0.9] {
             let (lat, server) = run(&model, batching, hit_ratio);
@@ -129,8 +131,22 @@ fn main() {
                 "{name:<10} {hit_ratio:>9.1} {:>10.1} {:>10.1} {:>10.0}   {server}",
                 lat.p50_us, lat.p99_us, lat.throughput_rps
             );
+            rows.push(obj(vec![
+                ("batching", s(&name)),
+                ("hit_ratio", num(hit_ratio)),
+                ("p50_us", num(lat.p50_us)),
+                ("p99_us", num(lat.p99_us)),
+                ("rps", num(lat.throughput_rps)),
+            ]));
         }
     }
     println!("\n(sync clients: one request in flight each, so req/s is latency-bound;");
     println!(" higher hit ratios should cut p50 toward the wire round-trip floor)");
+    let summary = obj(vec![
+        ("bench", s("frontend")),
+        ("n_requests", num(N_REQUESTS as f64)),
+        ("clients", num(CLIENTS as f64)),
+        ("rows", arr(rows)),
+    ]);
+    println!("{}", summary.to_string());
 }

@@ -4,11 +4,16 @@
 //! pool should scale with workers on multi-core hosts (on the 1-core
 //! testbed the sweep exercises coordination overhead instead — same caveat
 //! as benches/fig18_thread_sweep.rs).
+//!
+//! The final line is a machine-readable JSON summary (`{"bench":...}`) so
+//! CI and future PRs can track the perf trajectory; everything above it is
+//! for humans.
 
 use std::time::Duration;
 
-use srigl::inference::server::{serve_model, ServeConfig, ServeMode};
-use srigl::inference::{Activation, LayerSpec, Repr, SparseModel};
+use srigl::inference::server::{serve_model, ServeConfig};
+use srigl::inference::{Activation, EngineBuilder, LayerSpec, Repr, SparseModel};
+use srigl::util::json::{arr, num, obj, s, Json};
 
 fn model_for(repr: Repr, sparsity: f64) -> SparseModel {
     let spec = |n, act| LayerSpec { n, repr, sparsity, ablated_frac: 0.35, activation: act };
@@ -34,20 +39,17 @@ fn main() {
         "{:>11} {:>8} {:>10} {:>10} {:>12} {:>9}",
         "repr", "workers", "p50 (us)", "p99 (us)", "req/s", "scaling"
     );
+    let mut rows: Vec<Json> = Vec::new();
     for repr in Repr::ALL {
         let model = model_for(repr, sparsity);
         let mut base = 0.0f64;
         for workers in [1usize, 2, 4] {
             let stats = serve_model(
                 &model,
-                &ServeConfig {
-                    mode: ServeMode::Pooled { workers, max_batch },
-                    n_requests,
-                    mean_interarrival: Duration::ZERO,
-                    threads: 1,
-                    seed: 7,
-                },
-            );
+                &EngineBuilder::new().workers(workers).fixed_batch(max_batch),
+                &ServeConfig { n_requests, mean_interarrival: Duration::ZERO, seed: 7 },
+            )
+            .expect("replicated serving cannot fail");
             if workers == 1 {
                 base = stats.throughput_rps;
             }
@@ -60,7 +62,22 @@ fn main() {
                 stats.throughput_rps,
                 stats.throughput_rps / base.max(1e-9)
             );
+            rows.push(obj(vec![
+                ("repr", s(repr.name())),
+                ("workers", num(workers as f64)),
+                ("p50_us", num(stats.p50_us)),
+                ("p99_us", num(stats.p99_us)),
+                ("rps", num(stats.throughput_rps)),
+            ]));
         }
     }
     println!("\n(scaling column is throughput relative to the same repr at workers=1)");
+    let summary = obj(vec![
+        ("bench", s("model_serve")),
+        ("sparsity", num(sparsity)),
+        ("n_requests", num(n_requests as f64)),
+        ("max_batch", num(max_batch as f64)),
+        ("rows", arr(rows)),
+    ]);
+    println!("{}", summary.to_string());
 }

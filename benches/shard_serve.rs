@@ -1,21 +1,30 @@
 //! Replicated-vs-sharded serving sweep: the same 3-layer trunk served by
 //! (a) a replicated worker pool of S workers, each owning a full model
-//! scratch, and (b) one coordinator fanning each forward over an S-shard
-//! tensor-parallel team (`ServeMode::Sharded`). Flooded queue, so
-//! throughput is compute-bound; p50/p99 use the interpolated percentile.
+//! scratch, and (b) one coordinator feeding each forward to a
+//! **persistent S-shard team** (`EngineBuilder::shards`). Flooded queue,
+//! so throughput is compute-bound; p50/p99 use the interpolated
+//! percentile.
 //!
 //! What to look for: replicated wins on throughput under a flood (batching
 //! amortizes per-request cost across independent cores), sharded wins on
 //! single-request latency for wide layers (the work of one request is
-//! split S ways) and holds scratch memory constant instead of S-fold.
+//! split S ways) and holds scratch memory constant instead of S-fold —
+//! and the persistent team pays zero thread spawns per request (the old
+//! scoped-spawn path cost tens of microseconds per forward).
 //! On the 1-core CI testbed both mostly measure coordination overhead —
 //! same caveat as benches/model_serve.rs.
+//!
+//! The final line is a machine-readable JSON summary (`{"bench":...}`) so
+//! CI and future PRs can track the perf trajectory.
 
 use std::time::Duration;
 
-use srigl::inference::server::{serve_model, LatencyStats, ServeConfig, ServeMode};
+use srigl::inference::server::{serve_model, serve_target, LatencyStats, ServeConfig};
 use srigl::inference::shard::ShardPlan;
-use srigl::inference::{Activation, LayerSpec, Repr, SparseModel};
+use srigl::inference::{
+    Activation, EngineBuilder, LayerSpec, PersistentShardedEngine, Repr, SparseModel,
+};
+use srigl::util::json::{arr, num, obj, s, Json};
 
 fn model_for(repr: Repr, sparsity: f64) -> SparseModel {
     let spec = |n, act| LayerSpec { n, repr, sparsity, ablated_frac: 0.35, activation: act };
@@ -31,16 +40,26 @@ fn model_for(repr: Repr, sparsity: f64) -> SparseModel {
     .expect("valid stack")
 }
 
-fn run(model: &SparseModel, mode: ServeMode, n_requests: usize) -> LatencyStats {
+fn run(model: &SparseModel, builder: &EngineBuilder, n_requests: usize) -> LatencyStats {
     serve_model(
         model,
-        &ServeConfig {
-            mode,
-            n_requests,
-            mean_interarrival: Duration::ZERO,
-            threads: 1,
-            seed: 7,
-        },
+        builder,
+        &ServeConfig { n_requests, mean_interarrival: Duration::ZERO, seed: 7 },
+    )
+    .expect("plan within layer widths")
+}
+
+/// The sharded column always measures a REAL persistent team — including
+/// S=1, where the row isolates pure team-coordination overhead (mailbox
+/// post + latch) against the in-thread replicated baseline. (Routing
+/// through `serve_model` would silently fall back to the replicated
+/// engine at shards=1 and compare the same code path against itself.)
+fn run_team(model: &SparseModel, cap: usize, shards: usize, n_requests: usize) -> LatencyStats {
+    let team = PersistentShardedEngine::from_model(model, shards).expect("plan fits");
+    serve_target(
+        &team,
+        &EngineBuilder::new().workers(1).fixed_batch(cap),
+        &ServeConfig { n_requests, mean_interarrival: Duration::ZERO, seed: 7 },
     )
 }
 
@@ -49,16 +68,19 @@ fn main() {
     let n_requests = 1024;
     let cap = 8;
     println!("shard_serve — 3-layer 1024->768->768->256 @ {:.0}% sparsity,", sparsity * 100.0);
-    println!("{n_requests} flooded requests, cap={cap}, 1 intra-op/intra-shard thread\n");
+    println!(
+        "{n_requests} flooded requests, cap={cap}, 1 intra-shard thread, persistent shard team\n"
+    );
     println!(
         "{:>11} {:>3} | {:>10} {:>10} {:>10} | {:>10} {:>10} {:>10} | {:>7}",
         "repr", "S", "repl p50", "repl p99", "repl rps", "shard p50", "shard p99", "shard rps", "ratio"
     );
+    let mut rows: Vec<Json> = Vec::new();
     for repr in Repr::ALL {
         let model = model_for(repr, sparsity);
         for shards in [1usize, 2, 4] {
-            let rep = run(&model, ServeMode::Pooled { workers: shards, max_batch: cap }, n_requests);
-            let sh = run(&model, ServeMode::Sharded { shards, cap }, n_requests);
+            let rep = run(&model, &EngineBuilder::new().workers(shards).fixed_batch(cap), n_requests);
+            let sh = run_team(&model, cap, shards, n_requests);
             println!(
                 "{:>11} {:>3} | {:>10.1} {:>10.1} {:>10.0} | {:>10.1} {:>10.1} {:>10.0} | {:>6.2}x",
                 repr.name(),
@@ -71,11 +93,19 @@ fn main() {
                 sh.throughput_rps,
                 sh.throughput_rps / rep.throughput_rps.max(1e-9)
             );
+            rows.push(obj(vec![
+                ("repr", s(repr.name())),
+                ("shards", num(shards as f64)),
+                ("repl_p50_us", num(rep.p50_us)),
+                ("repl_rps", num(rep.throughput_rps)),
+                ("shard_p50_us", num(sh.p50_us)),
+                ("shard_rps", num(sh.throughput_rps)),
+            ]));
         }
     }
     // how evenly the stored-weight-balanced plan splits each layer
     let model = model_for(Repr::Condensed, sparsity);
-    let plan = ShardPlan::balanced(&model, 4);
+    let plan = ShardPlan::balanced(&model, 4).expect("4 shards fit every layer");
     let imb: Vec<String> =
         (0..model.depth()).map(|l| format!("{:.3}", plan.imbalance(&model, l))).collect();
     println!(
@@ -83,4 +113,12 @@ fn main() {
         imb.join(", ")
     );
     println!(" 1.0 = perfectly even stored weights per shard — ablated neurons cost nothing)");
+    let summary = obj(vec![
+        ("bench", s("shard_serve")),
+        ("sparsity", num(sparsity)),
+        ("n_requests", num(n_requests as f64)),
+        ("cap", num(cap as f64)),
+        ("rows", arr(rows)),
+    ]);
+    println!("{}", summary.to_string());
 }

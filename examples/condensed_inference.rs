@@ -10,8 +10,8 @@ use anyhow::Result;
 
 use srigl::bench::{bench5, print_table};
 use srigl::exp::timings::{ablated_frac_for, VIT_FF_D, VIT_FF_N};
-use srigl::inference::server::{serve, serve_model, ServeConfig, ServeMode};
-use srigl::inference::{Activation, LayerBundle, LayerSpec, LinearKernel, Repr, SparseModel};
+use srigl::inference::server::{serve, serve_model, ServeConfig};
+use srigl::inference::{Activation, EngineBuilder, LayerBundle, LayerSpec, LinearKernel, Repr, SparseModel};
 use srigl::runtime::{i32s_to_lit, lit_to_tensor, tensor_to_lit, Manifest, Runtime};
 use srigl::tensor::Tensor;
 use srigl::util::cli::Args;
@@ -55,11 +55,10 @@ fn main() -> Result<()> {
     for kernel in bundle.kernels() {
         let stats = serve(
             kernel,
+            &EngineBuilder::online(),
             &ServeConfig {
-                mode: ServeMode::Online,
                 n_requests: 500,
                 mean_interarrival: std::time::Duration::from_micros(100),
-                threads: 1,
                 seed: 3,
             },
         );
@@ -93,14 +92,13 @@ fn main() -> Result<()> {
     for workers in [1usize, 4] {
         let stats = serve_model(
             &model,
+            &EngineBuilder::new().workers(workers).fixed_batch(8),
             &ServeConfig {
-                mode: ServeMode::Pooled { workers, max_batch: 8 },
                 n_requests: 400,
                 mean_interarrival: std::time::Duration::ZERO,
-                threads: 1,
                 seed: 5,
             },
-        );
+        )?;
         println!(
             "  workers={workers}  p50={:>7.1}us p99={:>7.1}us mean_batch={:.1} throughput={:>6.0} req/s",
             stats.p50_us, stats.p99_us, stats.mean_batch, stats.throughput_rps

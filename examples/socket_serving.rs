@@ -9,8 +9,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use srigl::exp::timings::ablated_frac_for;
-use srigl::inference::server::Batching;
-use srigl::inference::{frontend, Activation, FrontendConfig, LayerSpec, Repr, SparseModel};
+use srigl::inference::{frontend, Activation, EngineBuilder, LayerSpec, Repr, SparseModel};
 use srigl::net::{Client, Reply};
 use srigl::util::cli::Args;
 use srigl::util::rng::Rng;
@@ -35,15 +34,12 @@ fn main() -> Result<()> {
     let handle = frontend::spawn(
         Arc::clone(&model),
         "127.0.0.1:0",
-        FrontendConfig {
-            workers: 2,
-            batching: Batching::Adaptive { cap: 8 },
-            queue_capacity: 256,
-            cache_capacity: 128,
-            threads: 1,
-            retry_after_ms: 2,
-            shards: 1,
-        },
+        &EngineBuilder::new()
+            .workers(2)
+            .adaptive(8)
+            .queue_capacity(256)
+            .cache_capacity(128)
+            .retry_after_ms(2),
     )?;
     println!("front-end listening on {} (2 workers, adaptive batching, cache 128)\n", handle.addr());
 
@@ -77,10 +73,11 @@ fn main() -> Result<()> {
 
     let stats = handle.stop();
     println!(
-        "\nserver stats: served={} cache_hits={} rejected={} connections={} mean_batch={:.2}",
+        "\nserver stats: served={} cache_hits={} rejected={} dropped={} connections={} mean_batch={:.2}",
         stats.served,
         stats.cache_hits,
         stats.rejected,
+        stats.dropped_responses,
         stats.connections,
         stats.latency.mean_batch
     );

@@ -2,7 +2,7 @@
 //!
 //! Every harness prints the paper-style rows plus, where meaningful, the
 //! paper's own numbers for shape comparison, and appends a JSON record to
-//! results/<id>.json. All are scaled to this testbed (see DESIGN.md §4);
+//! `results/<id>.json`. All are scaled to this testbed (see DESIGN.md §4);
 //! `--steps`, `--seeds`, etc. rescale them.
 
 pub mod tables;

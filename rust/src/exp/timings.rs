@@ -11,8 +11,8 @@ use std::time::Duration;
 
 use super::{record, Table};
 use crate::bench::{bench, black_box, fmt_time, Measurement};
-use crate::inference::server::{serve, ServeConfig, ServeMode};
-use crate::inference::{LayerBundle, LinearKernel};
+use crate::inference::server::{serve, ServeConfig};
+use crate::inference::{EngineBuilder, LayerBundle, LinearKernel};
 use crate::util::cli::Args;
 use crate::util::json::{arr, num, obj, s as js, Json};
 use crate::util::rng::Rng;
@@ -184,13 +184,8 @@ pub fn fig22(args: &Args) -> Result<()> {
         ] {
             let stats = serve(
                 kernel,
-                &ServeConfig {
-                    mode: ServeMode::Online,
-                    n_requests,
-                    mean_interarrival: Duration::ZERO,
-                    threads,
-                    seed: 3,
-                },
+                &EngineBuilder::online().threads(threads),
+                &ServeConfig { n_requests, mean_interarrival: Duration::ZERO, seed: 3 },
             );
             t.row(vec![
                 format!("{:.0}%", sp * 100.0),

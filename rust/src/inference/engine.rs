@@ -1,0 +1,883 @@
+//! The serving engine abstraction: one [`Engine`] trait every execution
+//! strategy implements, and one [`EngineBuilder`] every serving caller
+//! (CLI, manifest, front-end, benches, examples) constructs engines
+//! through.
+//!
+//! Before this module the serving path had three parallel dispatch
+//! surfaces — `ServeMode` (in-process benchmark), the
+//! `ServeEngine`/`EngineScratch` enum pair (socket front-end, which
+//! panicked on a scratch mismatch), and ad-hoc `FrontendConfig` knobs —
+//! that every new caller rewired by hand. The trait collapses them:
+//!
+//! * [`Engine`] — `scratch`/`forward` plus the shape/diagnostic surface.
+//!   The scratch is an **associated type**, so handing an engine the wrong
+//!   workspace is a compile error, not a runtime panic: there is no way to
+//!   write the old `EngineScratch does not match its ServeEngine` bug.
+//! * [`ReplicatedEngine`] — wraps an `Arc<SparseModel>`; every pool worker
+//!   owns a private [`Scratch`] and runs whole forwards.
+//! * [`PersistentShardedEngine`] — a **long-lived shard team** parked on
+//!   per-shard mailbox condvars. A forward hands the team a job through
+//!   the mailboxes, the shards run the exact same
+//!   `ShardedModel::shard_pass` layer walk as the scoped reference
+//!   implementation (same per-layer barrier), and a completion latch wakes
+//!   the caller — **zero thread spawns per request**, replacing the
+//!   per-forward `std::thread::scope` in [`ShardedModel::forward`] (which
+//!   is kept as the executable specification and pinned bit-for-bit
+//!   against the team by `rust/tests/engine_conformance.rs`).
+//! * [`KernelEngine`] — adapts one bare [`LinearKernel`] so the Fig. 4
+//!   single-layer benchmarks drive the same serving loop.
+//!
+//! [`SparseModel`] and [`ShardedModel`] also implement [`Engine`]
+//! directly, so tests and harnesses can drive any execution path through
+//! one generic interface.
+
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::model::{Scratch, SparseModel};
+use super::server::Batching;
+use super::shard::{SharedBuf, ShardedModel, ShardedScratch};
+use super::LinearKernel;
+use crate::runtime::manifest::ServeKnobs;
+
+/// A serving execution strategy: anything that can run batched forwards
+/// on its own typed workspace. The associated `Scratch` ties each engine
+/// to the only workspace shape it can accept — a mismatch is a type
+/// error, which is the whole point of the redesign.
+pub trait Engine: Send + Sync {
+    /// Per-worker workspace; create one per serving thread via
+    /// [`Engine::scratch`] and reuse it across requests
+    /// (allocation-free hot path).
+    type Scratch;
+
+    /// Allocate a workspace for forwards up to `max_batch` rows.
+    fn scratch(&self, max_batch: usize) -> Self::Scratch;
+
+    /// Run `batch` rows of `x` (row-major, width [`Engine::in_width`]),
+    /// returning the (batch x [`Engine::out_width`]) activations inside
+    /// `scratch`. `threads` is the intra-op kernel thread count (for a
+    /// sharded engine: intra-*shard*).
+    fn forward<'s>(
+        &self,
+        x: &[f32],
+        batch: usize,
+        scratch: &'s mut Self::Scratch,
+        threads: usize,
+    ) -> &'s [f32];
+
+    fn in_width(&self) -> usize;
+    fn out_width(&self) -> usize;
+
+    /// Human-readable topology/strategy line for logs and banners.
+    fn describe(&self) -> String;
+
+    /// Bytes of model storage behind this engine (weights+indices+bias).
+    fn storage_bytes(&self) -> usize;
+}
+
+impl Engine for SparseModel {
+    type Scratch = Scratch;
+
+    fn scratch(&self, max_batch: usize) -> Scratch {
+        self.make_scratch(max_batch)
+    }
+
+    fn forward<'s>(&self, x: &[f32], batch: usize, s: &'s mut Scratch, threads: usize) -> &'s [f32] {
+        SparseModel::forward(self, x, batch, s, threads)
+    }
+
+    fn in_width(&self) -> usize {
+        SparseModel::in_width(self)
+    }
+
+    fn out_width(&self) -> usize {
+        SparseModel::out_width(self)
+    }
+
+    fn describe(&self) -> String {
+        SparseModel::describe(self)
+    }
+
+    fn storage_bytes(&self) -> usize {
+        SparseModel::storage_bytes(self)
+    }
+}
+
+impl Engine for ShardedModel {
+    type Scratch = ShardedScratch;
+
+    fn scratch(&self, max_batch: usize) -> ShardedScratch {
+        self.make_scratch(max_batch)
+    }
+
+    fn forward<'s>(
+        &self,
+        x: &[f32],
+        batch: usize,
+        s: &'s mut ShardedScratch,
+        threads: usize,
+    ) -> &'s [f32] {
+        ShardedModel::forward(self, x, batch, s, threads)
+    }
+
+    fn in_width(&self) -> usize {
+        ShardedModel::in_width(self)
+    }
+
+    fn out_width(&self) -> usize {
+        ShardedModel::out_width(self)
+    }
+
+    fn describe(&self) -> String {
+        format!("{} (scoped spawn)", ShardedModel::describe(self))
+    }
+
+    fn storage_bytes(&self) -> usize {
+        ShardedModel::storage_bytes(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ReplicatedEngine
+// ---------------------------------------------------------------------------
+
+/// The replicate-everything strategy: each serving worker owns a full
+/// [`Scratch`] and runs whole forwards on the shared model. Parallelism
+/// lives *across* requests.
+pub struct ReplicatedEngine {
+    model: Arc<SparseModel>,
+}
+
+impl ReplicatedEngine {
+    pub fn new(model: Arc<SparseModel>) -> ReplicatedEngine {
+        ReplicatedEngine { model }
+    }
+
+    pub fn model(&self) -> &Arc<SparseModel> {
+        &self.model
+    }
+}
+
+impl Engine for ReplicatedEngine {
+    type Scratch = Scratch;
+
+    fn scratch(&self, max_batch: usize) -> Scratch {
+        self.model.make_scratch(max_batch)
+    }
+
+    fn forward<'s>(&self, x: &[f32], batch: usize, s: &'s mut Scratch, threads: usize) -> &'s [f32] {
+        self.model.forward(x, batch, s, threads)
+    }
+
+    fn in_width(&self) -> usize {
+        self.model.in_width()
+    }
+
+    fn out_width(&self) -> usize {
+        self.model.out_width()
+    }
+
+    fn describe(&self) -> String {
+        self.model.describe()
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.model.storage_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KernelEngine
+// ---------------------------------------------------------------------------
+
+/// One bare layer representation behind the [`Engine`] interface — how the
+/// single-layer Fig. 4 benchmarks (`srigl serve`) drive the same serving
+/// loop as whole model stacks.
+pub struct KernelEngine<'a> {
+    kernel: &'a dyn LinearKernel,
+}
+
+impl<'a> KernelEngine<'a> {
+    pub fn new(kernel: &'a dyn LinearKernel) -> KernelEngine<'a> {
+        KernelEngine { kernel }
+    }
+}
+
+impl Engine for KernelEngine<'_> {
+    type Scratch = Scratch;
+
+    fn scratch(&self, max_batch: usize) -> Scratch {
+        Scratch::single(max_batch, self.kernel.out_width())
+    }
+
+    fn forward<'s>(&self, x: &[f32], batch: usize, s: &'s mut Scratch, threads: usize) -> &'s [f32] {
+        let ow = self.kernel.out_width();
+        self.kernel.forward(x, batch, &mut s.a[..batch * ow], threads);
+        &s.a[..batch * ow]
+    }
+
+    fn in_width(&self) -> usize {
+        self.kernel.in_width()
+    }
+
+    fn out_width(&self) -> usize {
+        self.kernel.out_width()
+    }
+
+    fn describe(&self) -> String {
+        format!("{} {}x{}", self.kernel.name(), self.kernel.out_width(), self.kernel.in_width())
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.kernel.storage_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PersistentShardedEngine — the long-lived shard team
+// ---------------------------------------------------------------------------
+
+/// Raw-pointer job descriptor handed to one shard thread. The pointers
+/// stay valid for the whole job because the coordinator keeps `x` and the
+/// scratch borrowed (and the team's job mutex held) until every shard has
+/// arrived at the completion latch.
+struct ForwardJob {
+    x: *const f32,
+    x_len: usize,
+    batch: usize,
+    threads: usize,
+    buf_a: *const SharedBuf,
+    buf_b: *const SharedBuf,
+    stage: *mut f32,
+    stage_len: usize,
+}
+
+// SAFETY: the pointers are only dereferenced while the submitting
+// `forward` call blocks on the completion latch (see above), so the
+// pointed-to data outlives every access and `stage` is touched by exactly
+// one shard thread.
+unsafe impl Send for ForwardJob {}
+
+enum ShardJob {
+    Forward(ForwardJob),
+    Stop,
+}
+
+/// One shard's parking spot: a single-slot mailbox. The shard thread
+/// sleeps on the condvar until the coordinator posts a job; the job mutex
+/// plus the completion latch guarantee the slot is empty at every post.
+struct Mailbox {
+    slot: Mutex<Option<ShardJob>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn new() -> Mailbox {
+        Mailbox { slot: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn put(&self, job: ShardJob) {
+        let mut g = self.slot.lock().unwrap();
+        debug_assert!(g.is_none(), "mailbox must be empty (jobs are serialized)");
+        *g = Some(job);
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    fn take(&self) -> ShardJob {
+        let mut g = self.slot.lock().unwrap();
+        loop {
+            if let Some(job) = g.take() {
+                return job;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Counts shard arrivals at the end of a job; the coordinator blocks here
+/// instead of joining threads.
+struct DoneLatch {
+    n: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl DoneLatch {
+    fn new() -> DoneLatch {
+        DoneLatch { n: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    fn arrive(&self) {
+        let mut g = self.n.lock().unwrap();
+        *g += 1;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Wait until `target` arrivals, then reset for the next job. Safe
+    /// because the team mutex serializes jobs: no shard can arrive for
+    /// job N+1 before the coordinator posts it, which happens after this
+    /// returns.
+    fn wait_and_reset(&self, target: usize) {
+        let mut g = self.n.lock().unwrap();
+        while *g < target {
+            g = self.cv.wait(g).unwrap();
+        }
+        *g = 0;
+    }
+}
+
+/// State shared between the coordinator and the team threads.
+struct TeamShared {
+    mailboxes: Vec<Mailbox>,
+    /// Reused across layers AND jobs (std's `Barrier` resets itself once
+    /// all participants pass) — the same per-layer rendezvous as the
+    /// scoped reference implementation.
+    barrier: Barrier,
+    done: DoneLatch,
+    /// The `ThreadId` each shard observed while running its most recent
+    /// job — the thread-reuse conformance test reads this to prove no
+    /// per-request spawning happens.
+    last_tid: Vec<Mutex<Option<std::thread::ThreadId>>>,
+}
+
+/// A [`ShardedModel`] driven by a **persistent shard team**: S threads
+/// spawned once at construction, parked on mailbox condvars between
+/// requests, running the identical `ShardedModel::shard_pass` as the
+/// scoped reference — so outputs are bit-for-bit equal to both the scoped
+/// sharded forward and the replicated [`SparseModel::forward`], with zero
+/// thread spawns per request.
+///
+/// Forwards are serialized by an internal mutex (the team is one physical
+/// resource); a worker pool in front of this engine therefore adds
+/// batching/packing parallelism, not forward parallelism. Stop/start
+/// lifecycle: the team parks when idle and is torn down (Stop message per
+/// mailbox + join) when the engine drops.
+pub struct PersistentShardedEngine {
+    model: Arc<ShardedModel>,
+    shared: Arc<TeamShared>,
+    team: Vec<JoinHandle<()>>,
+    /// Serializes forwards: exactly one job owns the team at a time.
+    job: Mutex<()>,
+}
+
+impl PersistentShardedEngine {
+    /// Shard `model` with a stored-weight-balanced plan and spawn the
+    /// team. Fails like [`ShardedModel::from_model`] (typed
+    /// [`super::shard::ShardPlanError`] wrapped in `anyhow`).
+    pub fn from_model(model: &SparseModel, shards: usize) -> Result<PersistentShardedEngine> {
+        PersistentShardedEngine::new(Arc::new(ShardedModel::from_model(model, shards)?))
+    }
+
+    /// Spawn a persistent team for a pre-built (possibly custom-planned)
+    /// [`ShardedModel`].
+    pub fn new(model: Arc<ShardedModel>) -> Result<PersistentShardedEngine> {
+        let shards = model.shards();
+        let shared = Arc::new(TeamShared {
+            mailboxes: (0..shards).map(|_| Mailbox::new()).collect(),
+            barrier: Barrier::new(shards),
+            done: DoneLatch::new(),
+            last_tid: (0..shards).map(|_| Mutex::new(None)).collect(),
+        });
+        let mut team = Vec::with_capacity(shards);
+        for si in 0..shards {
+            let model = Arc::clone(&model);
+            let shared = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("srigl-shard-{si}"))
+                .spawn(move || shard_thread(&model, &shared, si))
+                .map_err(|e| anyhow::anyhow!("spawning shard thread {si}: {e}"))?;
+            team.push(handle);
+        }
+        Ok(PersistentShardedEngine { model, shared, team, job: Mutex::new(()) })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.model.shards()
+    }
+
+    /// The scoped-spawn reference model this team executes.
+    pub fn sharded(&self) -> &ShardedModel {
+        &self.model
+    }
+
+    /// Number of long-lived team threads (== shards for the team's whole
+    /// lifetime — there is no per-request spawning to count).
+    pub fn team_size(&self) -> usize {
+        self.team.len()
+    }
+
+    /// The `ThreadId` each shard ran its most recent job on (`None` before
+    /// the first forward). The conformance suite asserts these stay
+    /// constant across forwards — with per-request scoped spawning every
+    /// forward would mint fresh `ThreadId`s, which Rust guarantees are
+    /// never reused within a process.
+    pub fn last_shard_threads(&self) -> Vec<Option<std::thread::ThreadId>> {
+        self.shared.last_tid.iter().map(|m| *m.lock().unwrap()).collect()
+    }
+}
+
+/// Drop guard: a panic that unwinds out of a shard job cannot be
+/// propagated (the coordinator is blocked on the latch, siblings on the
+/// barrier) — the team would wedge silently, holding the job mutex and
+/// hanging every future forward. Inputs and scratch shapes are validated
+/// coordinator-side before a job is posted, so reaching this means a
+/// genuine kernel bug; abort loudly instead of deadlocking the server.
+struct AbortOnPanic(usize);
+
+impl Drop for AbortOnPanic {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            eprintln!(
+                "srigl-shard-{}: panic inside a shard job; team state is unrecoverable, aborting",
+                self.0
+            );
+            std::process::abort();
+        }
+    }
+}
+
+fn shard_thread(model: &ShardedModel, shared: &TeamShared, si: usize) {
+    loop {
+        match shared.mailboxes[si].take() {
+            ShardJob::Stop => return,
+            ShardJob::Forward(job) => {
+                let _abort_guard = AbortOnPanic(si);
+                *shared.last_tid[si].lock().unwrap() = Some(std::thread::current().id());
+                // SAFETY: the coordinator blocks on the completion latch
+                // (holding the job mutex) until this shard arrives, so the
+                // input, the ping-pong buffers, and this shard's private
+                // staging slice all outlive the accesses below; `stage` is
+                // referenced by this thread only.
+                let x = unsafe { std::slice::from_raw_parts(job.x, job.x_len) };
+                let stage = unsafe { std::slice::from_raw_parts_mut(job.stage, job.stage_len) };
+                let (buf_a, buf_b) = unsafe { (&*job.buf_a, &*job.buf_b) };
+                model.shard_pass(si, x, job.batch, stage, buf_a, buf_b, &shared.barrier, job.threads);
+                shared.done.arrive();
+            }
+        }
+    }
+}
+
+impl Engine for PersistentShardedEngine {
+    type Scratch = ShardedScratch;
+
+    fn scratch(&self, max_batch: usize) -> ShardedScratch {
+        self.model.make_scratch(max_batch)
+    }
+
+    fn forward<'s>(
+        &self,
+        x: &[f32],
+        batch: usize,
+        s: &'s mut ShardedScratch,
+        threads: usize,
+    ) -> &'s [f32] {
+        assert!(batch >= 1, "batch must be >= 1");
+        assert!(
+            batch <= s.max_batch(),
+            "batch {batch} exceeds scratch capacity {}",
+            s.max_batch()
+        );
+        assert_eq!(x.len(), batch * self.model.in_width(), "input size mismatch");
+        let shards = self.model.shards();
+        // Validate the scratch COORDINATOR-SIDE before any job is posted:
+        // a too-small workspace (built from a different model) must panic
+        // here, not inside a team thread where unwinding would wedge the
+        // barrier and the latch.
+        self.model.assert_scratch_fits(s, batch);
+        // One job owns the team at a time (concurrent pool workers queue
+        // here); the guard is held until every shard reports done, which
+        // is what keeps the raw pointers below valid.
+        let _job = self.job.lock().unwrap();
+        let buf_a: *const SharedBuf = &s.a;
+        let buf_b: *const SharedBuf = &s.b;
+        for (si, stage) in s.stage.iter_mut().enumerate() {
+            self.shared.mailboxes[si].put(ShardJob::Forward(ForwardJob {
+                x: x.as_ptr(),
+                x_len: x.len(),
+                batch,
+                threads,
+                buf_a,
+                buf_b,
+                stage: stage.as_mut_ptr(),
+                stage_len: stage.len(),
+            }));
+        }
+        self.shared.done.wait_and_reset(shards);
+        // SAFETY: every shard arrived at the latch — no write is in
+        // flight, and we hold &mut scratch.
+        unsafe { self.model.final_buf(s).read(batch * self.model.out_width()) }
+    }
+
+    fn in_width(&self) -> usize {
+        self.model.in_width()
+    }
+
+    fn out_width(&self) -> usize {
+        self.model.out_width()
+    }
+
+    fn describe(&self) -> String {
+        format!("{} (persistent team)", self.model.describe())
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.model.storage_bytes()
+    }
+}
+
+impl Drop for PersistentShardedEngine {
+    fn drop(&mut self) {
+        // &mut self: no forward can be in flight. Park -> Stop -> join.
+        for mb in &self.shared.mailboxes {
+            mb.put(ShardJob::Stop);
+        }
+        for handle in self.team.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EngineBuilder
+// ---------------------------------------------------------------------------
+
+/// The single construction path for serving engines and the knobs every
+/// serving surface shares. `serve`/`serve_model`/`serve_target`
+/// ([`super::server`]), [`super::frontend::spawn`], the `serve-model` CLI,
+/// the manifest `"serve"` section, and the serve benches all configure
+/// through this — there is no other way to wire up a serving stack.
+///
+/// Fields are public for reading (banners, stats); prefer the chainable
+/// setters when constructing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EngineBuilder {
+    /// Pool workers draining the request queue. The in-process benchmark
+    /// floors this at 1; the front-end accepts `0` (ingestion-only — used
+    /// by the deterministic backpressure tests).
+    pub workers: usize,
+    /// Per-pop batch-limit policy; `Batching::cap()` sizes worker scratch
+    /// and bounds the rows one request may carry.
+    pub batching: Batching,
+    /// Tensor-parallel shards per forward. `<= 1` builds a
+    /// [`ReplicatedEngine`]; `> 1` builds a [`PersistentShardedEngine`]
+    /// (long-lived team, typically paired with `workers: 1` since the
+    /// parallelism lives inside the request).
+    pub shards: usize,
+    /// Bounded request-queue capacity (requests, not rows).
+    pub queue_capacity: usize,
+    /// Result-cache entries; `0` disables caching.
+    pub cache_capacity: usize,
+    /// Per-connection egress-queue capacity (response frames) — a slow
+    /// client can absorb at most this many computed responses before
+    /// overflow converts them to `Busy` (see `docs/WIRE.md`).
+    pub egress_capacity: usize,
+    /// Intra-op threads per worker (with sharding: intra-*shard*).
+    pub threads: usize,
+    /// Backoff hint sent with `Busy` rejections.
+    pub retry_after_ms: u32,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> EngineBuilder {
+        EngineBuilder {
+            workers: 4,
+            batching: Batching::Adaptive { cap: 8 },
+            shards: 1,
+            queue_capacity: 1024,
+            cache_capacity: 1024,
+            egress_capacity: 64,
+            threads: 1,
+            retry_after_ms: 2,
+        }
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Strict batch-1 service on one worker — the paper's online-inference
+    /// setting (Fig. 4a).
+    pub fn online() -> EngineBuilder {
+        EngineBuilder::new().workers(1).fixed_batch(1)
+    }
+
+    /// Defaults from a manifest stack's `"serve"` knobs (CLI flags layer
+    /// on top via the plain setters).
+    pub fn from_knobs(knobs: &ServeKnobs) -> EngineBuilder {
+        let b = EngineBuilder::new();
+        EngineBuilder {
+            batching: if knobs.adaptive {
+                Batching::Adaptive { cap: knobs.max_batch.max(1) }
+            } else {
+                Batching::Fixed(knobs.max_batch.max(1))
+            },
+            shards: knobs.shards,
+            queue_capacity: knobs.queue_capacity,
+            cache_capacity: knobs.cache_capacity,
+            egress_capacity: knobs.egress_capacity,
+            ..b
+        }
+    }
+
+    pub fn workers(mut self, workers: usize) -> EngineBuilder {
+        self.workers = workers;
+        self
+    }
+
+    /// Fixed batch limit `n` per pop.
+    pub fn fixed_batch(mut self, n: usize) -> EngineBuilder {
+        self.batching = Batching::Fixed(n.max(1));
+        self
+    }
+
+    /// Adaptive (EWMA-of-queue-depth) batching up to `cap`.
+    pub fn adaptive(mut self, cap: usize) -> EngineBuilder {
+        self.batching = Batching::Adaptive { cap: cap.max(1) };
+        self
+    }
+
+    pub fn batching(mut self, batching: Batching) -> EngineBuilder {
+        self.batching = batching;
+        self
+    }
+
+    pub fn shards(mut self, shards: usize) -> EngineBuilder {
+        self.shards = shards;
+        self
+    }
+
+    pub fn queue_capacity(mut self, n: usize) -> EngineBuilder {
+        self.queue_capacity = n;
+        self
+    }
+
+    pub fn cache_capacity(mut self, n: usize) -> EngineBuilder {
+        self.cache_capacity = n;
+        self
+    }
+
+    pub fn egress_capacity(mut self, n: usize) -> EngineBuilder {
+        self.egress_capacity = n;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> EngineBuilder {
+        self.threads = threads;
+        self
+    }
+
+    pub fn retry_after_ms(mut self, ms: u32) -> EngineBuilder {
+        self.retry_after_ms = ms;
+        self
+    }
+
+    /// Upper bound on any batch the configured policy can produce — what
+    /// scratch buffers are sized for.
+    pub fn max_batch(&self) -> usize {
+        self.batching.cap()
+    }
+
+    /// True when `EngineBuilder::shards` selects the persistent sharded
+    /// engine over the replicated one.
+    pub fn is_sharded(&self) -> bool {
+        self.shards > 1
+    }
+
+    /// Build the replicated engine for `model`.
+    pub fn build_replicated(&self, model: Arc<SparseModel>) -> ReplicatedEngine {
+        ReplicatedEngine::new(model)
+    }
+
+    /// Build (and spawn) the persistent shard team for `model` using the
+    /// builder's shard count.
+    pub fn build_persistent_sharded(&self, model: &SparseModel) -> Result<PersistentShardedEngine> {
+        PersistentShardedEngine::from_model(model, self.shards.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::model::{Activation, LayerSpec, Repr};
+    use crate::inference::LayerBundle;
+    use crate::util::rng::Rng;
+
+    fn model3(repr: Repr) -> SparseModel {
+        let spec = |n, act| LayerSpec {
+            n,
+            repr,
+            sparsity: 0.9,
+            ablated_frac: 0.25,
+            activation: act,
+        };
+        SparseModel::synth(
+            64,
+            &[
+                spec(48, Activation::Relu),
+                spec(32, Activation::Relu),
+                spec(16, Activation::Identity),
+            ],
+            11,
+        )
+        .unwrap()
+    }
+
+    fn run<E: Engine>(e: &E, x: &[f32], batch: usize) -> Vec<f32> {
+        let mut s = e.scratch(batch);
+        e.forward(x, batch, &mut s, 1).to_vec()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn replicated_engine_matches_model() {
+        let m = Arc::new(model3(Repr::Condensed));
+        let engine = ReplicatedEngine::new(Arc::clone(&m));
+        assert_eq!(engine.in_width(), 64);
+        assert_eq!(engine.out_width(), 16);
+        assert_eq!(engine.storage_bytes(), m.storage_bytes());
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..3 * 64).map(|_| rng.normal_f32()).collect();
+        assert_bits_eq(&run(&engine, &x, 3), &m.forward_vec(&x, 3, 1), "replicated");
+    }
+
+    #[test]
+    fn kernel_engine_matches_direct_forward() {
+        let bundle = LayerBundle::synth(24, 32, 0.9, 0.2, 3);
+        let engine = KernelEngine::new(&bundle.condensed);
+        assert_eq!(engine.in_width(), 32);
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..2 * 32).map(|_| rng.normal_f32()).collect();
+        let mut want = vec![0f32; 2 * bundle.condensed.out_width()];
+        bundle.condensed.forward(&x, 2, &mut want, 1);
+        assert_bits_eq(&run(&engine, &x, 2), &want, "kernel engine");
+        assert!(engine.describe().contains("condensed"));
+    }
+
+    #[test]
+    fn persistent_team_matches_scoped_and_replicated() {
+        // full cross-product lives in rust/tests/engine_conformance.rs
+        let m = model3(Repr::Condensed);
+        let scoped = ShardedModel::from_model(&m, 2).unwrap();
+        let team = PersistentShardedEngine::from_model(&m, 2).unwrap();
+        assert_eq!(team.shards(), 2);
+        assert_eq!(team.team_size(), 2);
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..4 * 64).map(|_| rng.normal_f32()).collect();
+        let want = m.forward_vec(&x, 4, 1);
+        assert_bits_eq(&run(&scoped, &x, 4), &want, "scoped vs replicated");
+        assert_bits_eq(&run(&team, &x, 4), &want, "persistent vs replicated");
+    }
+
+    #[test]
+    fn persistent_team_scratch_reuse_and_varying_batch() {
+        let m = model3(Repr::Structured);
+        let team = PersistentShardedEngine::from_model(&m, 3).unwrap();
+        let mut s = team.scratch(8);
+        let mut rng = Rng::new(9);
+        for &batch in &[1usize, 5, 8, 1, 3] {
+            let x: Vec<f32> = (0..batch * 64).map(|_| rng.normal_f32()).collect();
+            let want = m.forward_vec(&x, batch, 1);
+            let got = team.forward(&x, batch, &mut s, 1).to_vec();
+            assert_bits_eq(&got, &want, &format!("batch {batch}"));
+        }
+    }
+
+    #[test]
+    fn persistent_team_serializes_concurrent_forwards() {
+        let m = Arc::new(model3(Repr::Condensed));
+        let team = Arc::new(PersistentShardedEngine::from_model(&m, 2).unwrap());
+        std::thread::scope(|s| {
+            for t in 0..3u64 {
+                let team = Arc::clone(&team);
+                let m = Arc::clone(&m);
+                s.spawn(move || {
+                    let mut scratch = team.scratch(4);
+                    let mut rng = Rng::new(0xC0 + t);
+                    for i in 0..20usize {
+                        let batch = 1 + i % 4;
+                        let x: Vec<f32> = (0..batch * 64).map(|_| rng.normal_f32()).collect();
+                        let want = m.forward_vec(&x, batch, 1);
+                        let got = team.forward(&x, batch, &mut scratch, 1).to_vec();
+                        assert_bits_eq(&got, &want, &format!("caller {t} iter {i}"));
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn persistent_team_rejects_oversized_shard_count() {
+        // narrowest layer has 16 neurons
+        let m = model3(Repr::Condensed);
+        assert!(PersistentShardedEngine::from_model(&m, 17).is_err());
+    }
+
+    #[test]
+    fn dropping_idle_and_used_teams_terminates() {
+        let m = model3(Repr::Dense);
+        // never-used team
+        drop(PersistentShardedEngine::from_model(&m, 3).unwrap());
+        // used team
+        let team = PersistentShardedEngine::from_model(&m, 3).unwrap();
+        let x = vec![0.25f32; 64];
+        let _ = run(&team, &x, 1);
+        drop(team); // Stop + join must not hang
+    }
+
+    #[test]
+    fn builder_defaults_and_knobs() {
+        let b = EngineBuilder::new();
+        assert_eq!(b.workers, 4);
+        assert_eq!(b.shards, 1);
+        assert!(!b.is_sharded());
+        assert_eq!(b.max_batch(), 8);
+
+        let online = EngineBuilder::online();
+        assert_eq!(online.workers, 1);
+        assert_eq!(online.batching, Batching::Fixed(1));
+
+        let knobs = ServeKnobs {
+            queue_capacity: 64,
+            cache_capacity: 0,
+            egress_capacity: 7,
+            adaptive: false,
+            max_batch: 4,
+            shards: 3,
+        };
+        let b = EngineBuilder::from_knobs(&knobs).workers(2).threads(2).retry_after_ms(9);
+        assert_eq!(b.batching, Batching::Fixed(4));
+        assert_eq!(b.queue_capacity, 64);
+        assert_eq!(b.cache_capacity, 0);
+        assert_eq!(b.egress_capacity, 7);
+        assert_eq!(b.shards, 3);
+        assert!(b.is_sharded());
+        assert_eq!(b.workers, 2);
+        assert_eq!(b.threads, 2);
+        assert_eq!(b.retry_after_ms, 9);
+    }
+
+    #[test]
+    fn builder_constructs_both_engine_kinds() {
+        let m = Arc::new(model3(Repr::Condensed));
+        let rep = EngineBuilder::new().build_replicated(Arc::clone(&m));
+        let sh = EngineBuilder::new().shards(2).build_persistent_sharded(&m).unwrap();
+        assert_eq!(rep.in_width(), sh.in_width());
+        assert_eq!(rep.out_width(), sh.out_width());
+        assert_eq!(rep.storage_bytes(), sh.storage_bytes(), "weights partition exactly");
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..2 * 64).map(|_| rng.normal_f32()).collect();
+        assert_bits_eq(&run(&rep, &x, 2), &run(&sh, &x, 2), "builder engines agree");
+    }
+}

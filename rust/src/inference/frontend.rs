@@ -1,8 +1,8 @@
-//! Network serving front-end: turns the worker-pool inference engine into
-//! a real socket server. The ROADMAP's "serving scale-out" block: async IO
+//! Network serving front-end: turns the inference engine into a real
+//! socket server. The ROADMAP's "serving scale-out" block: async IO
 //! ingestion, backpressure, adaptive batching, a result cache, and — via
-//! [`FrontendConfig::shards`] — tensor-parallel sharded execution
-//! ([`crate::inference::shard`]) behind the same queue machinery.
+//! `EngineBuilder::shards` — tensor-parallel execution on a persistent
+//! shard team behind the same queue machinery.
 //!
 //! Data path:
 //!
@@ -14,23 +14,34 @@
 //!        │    immediately without touching the queue
 //!        ├─ miss → Injector::push_bounded: a full queue answers
 //!        │    Busy{retry_after_ms} (backpressure, never unbounded growth)
-//!        └─ per-connection writer (Mutex<TcpStream>) shared with workers
+//!        └─ responses route through the connection's bounded Egress
+//!             queue, drained by one writer thread per connection
 //!   workers (N threads, shared queue)
 //!        ├─ pop up to AdaptiveBatcher::next_batch(queue depth) requests
 //!        ├─ greedily pack popped requests into ≤ cap-row forwards on a
-//!        │    per-worker Scratch (allocation-free)
-//!        └─ route each result back through the owning connection's writer
+//!        │    per-worker typed scratch (allocation-free)
+//!        └─ push each result onto the owning connection's egress queue —
+//!             NEVER a blocking socket write from a pool worker
 //! ```
+//!
+//! **Slow-client isolation**: a client that stops reading its socket
+//! blocks only its own writer thread. Its egress queue then fills; once
+//! full, each further response is dropped and (headroom permitting)
+//! replaced by a `Busy{retry_after_ms}` frame, and the server-wide
+//! `dropped_responses` counter increments. Pool workers never block on a
+//! socket, so one stalled client cannot hold a batch hostage
+//! (see `docs/WIRE.md` for the client-visible semantics).
 //!
 //! Responses carry the request id, so a pipelined connection may see them
 //! out of submission order (cache hits overtake queued work). The
 //! synchronous [`crate::net::Client`] keeps one request in flight and never
 //! observes this.
 //!
-//! Known limitation (documented, not fixed here): a worker blocks while
-//! writing to a slow client's socket, stalling the rest of its batch —
-//! per-connection egress queues are future work.
+//! The front-end is generic over [`Engine`], so each worker's scratch has
+//! exactly the engine's associated type — the old `ServeEngine` /
+//! `EngineScratch` runtime mismatch panic is now unrepresentable.
 
+use std::collections::HashMap;
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -39,51 +50,12 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use super::engine::{Engine, EngineBuilder};
 use super::server::{AdaptiveBatcher, Batching, LatencyStats, WorkerStats};
-use super::shard::{ServeEngine, ShardedModel};
 use super::SparseModel;
 use crate::net::{fnv1a_f32, read_request, write_response, ResponseBody, ResponseFrame};
 use crate::util::lru::LruCache;
 use crate::util::threadpool::{Injector, QueueFull};
-
-#[derive(Clone, Copy, Debug)]
-pub struct FrontendConfig {
-    /// Pool workers draining the queue. `0` is allowed and means ingestion
-    /// only — nothing drains, so the bounded queue fills deterministically
-    /// (used by the backpressure tests).
-    pub workers: usize,
-    /// Batch-limit policy per pop; `Batching::cap()` also bounds the rows
-    /// a single request may carry.
-    pub batching: Batching,
-    /// Bounded request-queue capacity (requests, not rows).
-    pub queue_capacity: usize,
-    /// Result-cache entries; `0` disables caching.
-    pub cache_capacity: usize,
-    /// Intra-op threads per worker (the kernel `threads` parameter; with
-    /// sharding, the intra-*shard* thread count).
-    pub threads: usize,
-    /// Backoff hint sent with `Busy` rejections.
-    pub retry_after_ms: u32,
-    /// Tensor-parallel shards per forward (`<= 1` = replicated). With
-    /// `shards > 1` each worker's forward fans out over a shard team
-    /// ([`crate::inference::shard::ShardedModel`]); pair with `workers: 1`
-    /// unless you want teams x workers oversubscription.
-    pub shards: usize,
-}
-
-impl Default for FrontendConfig {
-    fn default() -> FrontendConfig {
-        FrontendConfig {
-            workers: 4,
-            batching: Batching::Adaptive { cap: 8 },
-            queue_capacity: 1024,
-            cache_capacity: 1024,
-            threads: 1,
-            retry_after_ms: 2,
-            shards: 1,
-        }
-    }
-}
 
 /// End-of-run accounting returned by [`FrontendHandle::stop`].
 #[derive(Clone, Debug)]
@@ -94,10 +66,15 @@ pub struct FrontendStats {
     pub served: usize,
     /// Requests answered straight from the result cache.
     pub cache_hits: usize,
-    /// Requests rejected with `Busy` (bounded queue full).
+    /// Requests rejected with `Busy` (bounded ingress queue full).
     pub rejected: usize,
     /// Malformed requests answered with `Error`.
     pub bad_requests: usize,
+    /// Responses a slow client failed to absorb: its egress queue was
+    /// full, so the computed output was discarded (answered `Busy` when
+    /// headroom allowed). Nonzero means some client is reading slower
+    /// than it submits.
+    pub dropped_responses: usize,
     /// Connections accepted over the run.
     pub connections: usize,
     /// Smallest / largest packed forward (rows) any worker ran — under a
@@ -107,31 +84,184 @@ pub struct FrontendStats {
     pub max_forward_rows: usize,
 }
 
-/// One enqueued request: features plus the route back to its connection.
-struct Job {
-    id: u64,
-    rows: usize,
-    x: Vec<f32>,
-    hash: u64,
-    writer: Arc<Mutex<TcpStream>>,
-    t_submit: Instant,
+// ---------------------------------------------------------------------------
+// Per-connection egress queue
+// ---------------------------------------------------------------------------
+
+/// Extra slots past capacity reserved for `Busy` conversion frames (a few
+/// bytes each), so an overflowing client still learns it should retry
+/// instead of waiting forever. Beyond the headroom responses are dropped
+/// outright — the queue stays bounded no matter what the client does.
+const EGRESS_BUSY_HEADROOM: usize = 32;
+
+/// What happened to a frame handed to [`Egress::send`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SendOutcome {
+    /// Queued for the writer thread.
+    Queued,
+    /// Queue full: the frame was replaced by a `Busy` hint (counts as a
+    /// dropped response).
+    ConvertedBusy,
+    /// Queue and Busy headroom full: nothing was queued (counts as a
+    /// dropped response).
+    Dropped,
+    /// Connection already torn down; the frame went nowhere (not counted —
+    /// the client is gone, not slow).
+    Gone,
 }
 
-/// Counts reader threads so shutdown can wait for them without collecting
-/// an unbounded Vec of join handles (connections come and go).
-struct ReaderGate {
+struct EgressInner {
+    q: std::collections::VecDeque<ResponseFrame>,
+    /// Jobs enqueued for this connection and not yet answered.
+    inflight: usize,
+    /// The reader has exited; close once the last in-flight job answers.
+    reader_done: bool,
+    /// No more frames will be accepted; the writer drains and exits.
+    closed: bool,
+}
+
+/// Bounded per-connection response queue between producers (pool workers,
+/// the reader's cache-hit/error paths) and this connection's single writer
+/// thread. The bound is what keeps a slow client's memory footprint — and
+/// its ability to stall a worker — finite.
+struct Egress {
+    inner: Mutex<EgressInner>,
+    cv: Condvar,
+    capacity: usize,
+    retry_after_ms: u32,
+}
+
+impl Egress {
+    fn new(capacity: usize, retry_after_ms: u32) -> Egress {
+        Egress {
+            inner: Mutex::new(EgressInner {
+                q: std::collections::VecDeque::new(),
+                inflight: 0,
+                reader_done: false,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+            retry_after_ms,
+        }
+    }
+
+    /// Queue a response for the writer. Never blocks: on overflow, a bulky
+    /// `Output` frame is converted to `Busy` (within headroom) or dropped;
+    /// small control frames (`Busy`, `Error`) pass through the headroom
+    /// verbatim — an Error must never morph into Busy, or a client
+    /// following the retry-on-Busy protocol would resend a malformed
+    /// request forever.
+    fn send(&self, frame: ResponseFrame) -> SendOutcome {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return SendOutcome::Gone;
+        }
+        if g.q.len() < self.capacity {
+            g.q.push_back(frame);
+            drop(g);
+            self.cv.notify_all();
+            return SendOutcome::Queued;
+        }
+        if g.q.len() < self.capacity + EGRESS_BUSY_HEADROOM {
+            let outcome = match frame.body {
+                ResponseBody::Output { .. } => {
+                    g.q.push_back(ResponseFrame {
+                        id: frame.id,
+                        body: ResponseBody::Busy { retry_after_ms: self.retry_after_ms },
+                    });
+                    SendOutcome::ConvertedBusy
+                }
+                _ => {
+                    g.q.push_back(frame);
+                    SendOutcome::Queued
+                }
+            };
+            drop(g);
+            self.cv.notify_all();
+            return outcome;
+        }
+        SendOutcome::Dropped
+    }
+
+    /// A job for this connection entered the shared queue.
+    fn job_started(&self) {
+        self.inner.lock().unwrap().inflight += 1;
+    }
+
+    /// A job for this connection was answered (or rejected). Closes the
+    /// queue once the reader is gone and nothing is outstanding, letting
+    /// the writer drain and exit.
+    fn job_finished(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.inflight -= 1;
+        if g.reader_done && g.inflight == 0 {
+            g.closed = true;
+            drop(g);
+            self.cv.notify_all();
+        }
+    }
+
+    /// The reader exited (EOF, framing error, shutdown).
+    fn reader_done(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.reader_done = true;
+        if g.inflight == 0 {
+            g.closed = true;
+            drop(g);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Force-close (teardown path for jobs that will never be answered,
+    /// e.g. a drained-but-unserved queue with zero workers). Queued frames
+    /// are still drained by the writer before it exits.
+    fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Blocking pop for the writer thread; `None` once closed and drained.
+    fn recv(&self) -> Option<ResponseFrame> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(f) = g.q.pop_front() {
+                return Some(f);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking pop (writer batching between flushes).
+    fn try_recv(&self) -> Option<ResponseFrame> {
+        self.inner.lock().unwrap().q.pop_front()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared state
+// ---------------------------------------------------------------------------
+
+/// Counts live threads of one kind so shutdown can wait for them without
+/// collecting an unbounded Vec of join handles (connections come and go).
+struct Gate {
     n: Mutex<usize>,
     cv: Condvar,
 }
 
-impl ReaderGate {
-    fn new() -> ReaderGate {
-        ReaderGate { n: Mutex::new(0), cv: Condvar::new() }
+impl Gate {
+    fn new() -> Gate {
+        Gate { n: Mutex::new(0), cv: Condvar::new() }
     }
 
-    fn enter(gate: &Arc<ReaderGate>) -> ReaderTicket {
+    fn enter(gate: &Arc<Gate>) -> GateTicket {
         *gate.n.lock().unwrap() += 1;
-        ReaderTicket(Arc::clone(gate))
+        GateTicket(Arc::clone(gate))
     }
 
     fn wait_idle(&self) {
@@ -142,39 +272,74 @@ impl ReaderGate {
     }
 }
 
-/// Drop guard: decrements the gate even if a reader panics.
-struct ReaderTicket(Arc<ReaderGate>);
+/// Drop guard: decrements the gate even if the thread panics.
+struct GateTicket(Arc<Gate>);
 
-impl Drop for ReaderTicket {
+impl Drop for GateTicket {
     fn drop(&mut self) {
         *self.0.n.lock().unwrap() -= 1;
         self.0.cv.notify_all();
     }
 }
 
-struct Shared {
-    engine: Arc<ServeEngine>,
-    injector: Injector<Job>,
-    /// hash -> (input bits, output); input kept to defeat hash collisions.
-    cache: Option<Mutex<LruCache<u64, (Vec<f32>, Vec<f32>)>>>,
-    batcher: AdaptiveBatcher,
-    cfg: FrontendConfig,
+/// Engine-independent control plane: everything [`FrontendHandle`] and the
+/// teardown sequence need, with no generic parameter so the handle type
+/// stays plain.
+struct Control {
+    cfg: EngineBuilder,
     shutdown: AtomicBool,
     cache_hits: AtomicUsize,
     rejected: AtomicUsize,
     bad_requests: AtomicUsize,
+    dropped_responses: AtomicUsize,
     connections: AtomicUsize,
     /// Live connection streams (clones) so shutdown can unblock readers.
-    conns: Mutex<std::collections::HashMap<u64, TcpStream>>,
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    /// Live egress queues so teardown can force-close connections whose
+    /// jobs will never be answered (removed by each writer on exit).
+    egresses: Mutex<HashMap<u64, Arc<Egress>>>,
     next_conn_id: AtomicUsize,
-    gate: Arc<ReaderGate>,
+    readers: Arc<Gate>,
+    writers: Arc<Gate>,
+}
+
+impl Control {
+    /// Record an egress overflow of a **computed output** (converted to
+    /// Busy or dropped). Only called for `Output` sends — control frames
+    /// (Busy/Error) are not "responses a slow client failed to absorb".
+    fn count_send(&self, outcome: SendOutcome) {
+        if matches!(outcome, SendOutcome::ConvertedBusy | SendOutcome::Dropped) {
+            self.dropped_responses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The generic data plane: the engine plus the queue/cache machinery its
+/// workers share.
+struct Shared<E: Engine> {
+    engine: Arc<E>,
+    injector: Injector<Job>,
+    /// hash -> (input bits, output); input kept to defeat hash collisions.
+    cache: Option<Mutex<LruCache<u64, (Vec<f32>, Vec<f32>)>>>,
+    batcher: AdaptiveBatcher,
+    ctrl: Arc<Control>,
+}
+
+/// One enqueued request: features plus the route back to its connection.
+struct Job {
+    id: u64,
+    rows: usize,
+    x: Vec<f32>,
+    hash: u64,
+    egress: Arc<Egress>,
+    t_submit: Instant,
 }
 
 /// Running front-end: keep it to keep serving; [`FrontendHandle::stop`]
 /// drains and returns stats.
 pub struct FrontendHandle {
     addr: SocketAddr,
-    shared: Arc<Shared>,
+    ctrl: Arc<Control>,
     join: Option<JoinHandle<FrontendStats>>,
 }
 
@@ -199,7 +364,7 @@ impl FrontendHandle {
 
     fn shutdown_and_join(&mut self) -> Option<std::thread::Result<FrontendStats>> {
         let join = self.join.take()?;
-        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.ctrl.shutdown.store(true, Ordering::SeqCst);
         // Wake the blocking accept with a throwaway connection.
         let mut addr = self.addr;
         if addr.ip().is_unspecified() {
@@ -224,59 +389,68 @@ impl Drop for FrontendHandle {
     }
 }
 
-/// Bind `addr` (e.g. `"127.0.0.1:0"`) and serve `model` until
-/// [`FrontendHandle::stop`] — replicated across workers, or tensor-parallel
-/// sharded when `cfg.shards > 1` (the `serve-model --listen --shards N`
-/// path).
-pub fn spawn(model: Arc<SparseModel>, addr: &str, cfg: FrontendConfig) -> Result<FrontendHandle> {
-    let engine = if cfg.shards > 1 {
-        ServeEngine::Sharded(Arc::new(
-            ShardedModel::from_model(&model, cfg.shards).context("building shard plan")?,
-        ))
+/// Bind `addr` (e.g. `"127.0.0.1:0"`) and serve `model` with the engine
+/// the builder selects: replicated across pool workers, or — when
+/// `builder.shards > 1` — a persistent shard team
+/// ([`super::engine::PersistentShardedEngine`], the
+/// `serve-model --listen --shards N` path).
+pub fn spawn(model: Arc<SparseModel>, addr: &str, builder: &EngineBuilder) -> Result<FrontendHandle> {
+    if builder.is_sharded() {
+        let team = builder.build_persistent_sharded(&model).context("building shard team")?;
+        spawn_engine(Arc::new(team), addr, builder)
     } else {
-        ServeEngine::Replicated(model)
-    };
-    spawn_engine(Arc::new(engine), addr, cfg)
+        spawn_engine(Arc::new(builder.build_replicated(model)), addr, builder)
+    }
 }
 
-/// Bind `addr` and serve a pre-built [`ServeEngine`] (replicated or
-/// sharded with a custom plan).
-pub fn spawn_engine(
-    engine: Arc<ServeEngine>,
+/// Bind `addr` and serve a pre-built [`Engine`] (any implementation —
+/// replicated, persistent-sharded with a custom plan, or the scoped
+/// reference). The worker scratch type follows the engine's associated
+/// type, so there is no scratch/engine mismatch to get wrong.
+pub fn spawn_engine<E: Engine + 'static>(
+    engine: Arc<E>,
     addr: &str,
-    cfg: FrontendConfig,
+    builder: &EngineBuilder,
 ) -> Result<FrontendHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let bound = listener.local_addr().context("resolving bound address")?;
-    let cap = cfg.batching.cap();
-    let shared = Arc::new(Shared {
-        engine,
-        injector: Injector::with_capacity(cfg.queue_capacity),
-        cache: (cfg.cache_capacity > 0).then(|| Mutex::new(LruCache::new(cfg.cache_capacity))),
-        batcher: AdaptiveBatcher::new(cap),
-        cfg,
+    let cap = builder.batching.cap();
+    let ctrl = Arc::new(Control {
+        cfg: *builder,
         shutdown: AtomicBool::new(false),
         cache_hits: AtomicUsize::new(0),
         rejected: AtomicUsize::new(0),
         bad_requests: AtomicUsize::new(0),
+        dropped_responses: AtomicUsize::new(0),
         connections: AtomicUsize::new(0),
-        conns: Mutex::new(std::collections::HashMap::new()),
+        conns: Mutex::new(HashMap::new()),
+        egresses: Mutex::new(HashMap::new()),
         next_conn_id: AtomicUsize::new(0),
-        gate: Arc::new(ReaderGate::new()),
+        readers: Arc::new(Gate::new()),
+        writers: Arc::new(Gate::new()),
     });
-    let thread_shared = Arc::clone(&shared);
+    let shared = Arc::new(Shared {
+        engine,
+        injector: Injector::with_capacity(builder.queue_capacity),
+        cache: (builder.cache_capacity > 0)
+            .then(|| Mutex::new(LruCache::new(builder.cache_capacity))),
+        batcher: AdaptiveBatcher::new(cap),
+        ctrl: Arc::clone(&ctrl),
+    });
     let join = std::thread::Builder::new()
         .name("srigl-frontend".into())
-        .spawn(move || serve_loop(listener, thread_shared))
+        .spawn(move || serve_loop(listener, shared))
         .context("spawning front-end thread")?;
-    Ok(FrontendHandle { addr: bound, shared, join: Some(join) })
+    Ok(FrontendHandle { addr: bound, ctrl, join: Some(join) })
 }
 
 /// Acceptor body: runs on the dedicated front-end thread until shutdown,
-/// then tears down readers -> queue -> workers in dependency order.
-fn serve_loop(listener: TcpListener, shared: Arc<Shared>) -> FrontendStats {
+/// then tears down readers -> queue/workers -> egresses/writers in
+/// dependency order.
+fn serve_loop<E: Engine>(listener: TcpListener, shared: Arc<Shared<E>>) -> FrontendStats {
     let t_start = Instant::now();
-    let worker_handles: Vec<JoinHandle<(WorkerStats, usize, usize)>> = (0..shared.cfg.workers)
+    let ctrl = Arc::clone(&shared.ctrl);
+    let worker_handles: Vec<JoinHandle<(WorkerStats, usize, usize)>> = (0..ctrl.cfg.workers)
         .map(|w| {
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
@@ -290,7 +464,7 @@ fn serve_loop(listener: TcpListener, shared: Arc<Shared>) -> FrontendStats {
         let stream = match listener.accept() {
             Ok((s, _)) => s,
             Err(_) => {
-                if shared.shutdown.load(Ordering::SeqCst) {
+                if ctrl.shutdown.load(Ordering::SeqCst) {
                     break;
                 }
                 // Transient accept error (EMFILE under connection flood):
@@ -300,34 +474,39 @@ fn serve_loop(listener: TcpListener, shared: Arc<Shared>) -> FrontendStats {
                 continue;
             }
         };
-        if shared.shutdown.load(Ordering::SeqCst) {
+        if ctrl.shutdown.load(Ordering::SeqCst) {
             break; // the wake-up connection from stop()
         }
-        shared.connections.fetch_add(1, Ordering::Relaxed);
-        let conn_id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed) as u64;
+        ctrl.connections.fetch_add(1, Ordering::Relaxed);
+        let conn_id = ctrl.next_conn_id.fetch_add(1, Ordering::Relaxed) as u64;
         let Ok(registry_clone) = stream.try_clone() else { continue };
-        shared.conns.lock().unwrap().insert(conn_id, registry_clone);
-        let ticket = ReaderGate::enter(&shared.gate);
+        ctrl.conns.lock().unwrap().insert(conn_id, registry_clone);
+        let ticket = Gate::enter(&ctrl.readers);
         let reader_shared = Arc::clone(&shared);
+        // The conns entry is removed by the connection's WRITER thread (the
+        // last one out): the socket must stay reachable for teardown to
+        // unblock a writer stuck on a slow client even after its reader
+        // has exited.
         let spawned = std::thread::Builder::new()
             .name(format!("srigl-conn-{conn_id}"))
             .spawn(move || {
                 let _ticket = ticket; // decrements the gate on exit/panic
-                reader_loop(stream, &reader_shared);
-                reader_shared.conns.lock().unwrap().remove(&conn_id);
+                reader_loop(stream, &reader_shared, conn_id);
             });
         if spawned.is_err() {
-            shared.conns.lock().unwrap().remove(&conn_id);
+            ctrl.conns.lock().unwrap().remove(&conn_id);
         }
     }
 
-    // Teardown: hang up on every live connection so readers unblock...
-    for (_, c) in shared.conns.lock().unwrap().iter() {
+    // Teardown, in dependency order:
+    // 1. hang up on every live connection so blocked readers (and writers
+    //    stuck on a full socket) unblock...
+    for (_, c) in ctrl.conns.lock().unwrap().iter() {
         let _ = c.shutdown(Shutdown::Both);
     }
-    shared.gate.wait_idle();
-    // ...then close the queue (readers are gone, nobody can push) and let
-    // the workers drain what is left.
+    ctrl.readers.wait_idle();
+    // 2. ...then close the queue (readers are gone, nobody can push) and
+    //    let the workers drain what is left into the egress queues...
     shared.injector.close();
     let mut worker_stats = Vec::with_capacity(worker_handles.len());
     let (mut min_rows, mut max_rows) = (usize::MAX, 0usize);
@@ -337,23 +516,54 @@ fn serve_loop(listener: TcpListener, shared: Arc<Shared>) -> FrontendStats {
         max_rows = max_rows.max(hi);
         worker_stats.push(ws);
     }
+    // 3. ...then force-close any egress still open (a connection whose
+    //    queued jobs could never be answered — e.g. zero workers) and wait
+    //    for the writers to drain and exit.
+    for (_, e) in ctrl.egresses.lock().unwrap().iter() {
+        e.close();
+    }
+    ctrl.writers.wait_idle();
+
     let served = worker_stats.iter().map(|w| w.served).sum();
     FrontendStats {
         latency: LatencyStats::from_workers(&worker_stats, t_start.elapsed().as_secs_f64()),
         served,
-        cache_hits: shared.cache_hits.load(Ordering::Relaxed),
-        rejected: shared.rejected.load(Ordering::Relaxed),
-        bad_requests: shared.bad_requests.load(Ordering::Relaxed),
-        connections: shared.connections.load(Ordering::Relaxed),
+        cache_hits: ctrl.cache_hits.load(Ordering::Relaxed),
+        rejected: ctrl.rejected.load(Ordering::Relaxed),
+        bad_requests: ctrl.bad_requests.load(Ordering::Relaxed),
+        dropped_responses: ctrl.dropped_responses.load(Ordering::Relaxed),
+        connections: ctrl.connections.load(Ordering::Relaxed),
         min_forward_rows: if max_rows == 0 { 0 } else { min_rows },
         max_forward_rows: max_rows,
     }
 }
 
-fn respond(writer: &Mutex<TcpStream>, id: u64, body: ResponseBody) {
-    // Write errors mean the client hung up; the reader will notice EOF.
-    let mut w = writer.lock().unwrap();
-    let _ = write_response(&mut *w, &ResponseFrame { id, body });
+/// One connection's writer: drains the egress queue onto the socket. This
+/// is the ONLY place a response touches the network, so a stalled socket
+/// blocks exactly this thread. Exits once the egress closes and drains
+/// (or the socket dies), then unregisters the egress.
+fn writer_loop(stream: TcpStream, egress: Arc<Egress>, ctrl: Arc<Control>, conn_id: u64) {
+    let mut w = std::io::BufWriter::new(stream);
+    'outer: while let Some(frame) = egress.recv() {
+        if write_response(&mut w, &frame).is_err() {
+            break;
+        }
+        // Opportunistically coalesce queued frames into one flush.
+        while let Some(frame) = egress.try_recv() {
+            if write_response(&mut w, &frame).is_err() {
+                break 'outer;
+            }
+        }
+        if std::io::Write::flush(&mut w).is_err() {
+            break;
+        }
+    }
+    // Socket death or close: stop accepting frames so producers see Gone,
+    // then unregister the connection (the writer is the last one out).
+    egress.close();
+    let _ = std::io::Write::flush(&mut w);
+    ctrl.egresses.lock().unwrap().remove(&conn_id);
+    ctrl.conns.lock().unwrap().remove(&conn_id);
 }
 
 fn bits_eq(a: &[f32], b: &[f32]) -> bool {
@@ -366,15 +576,34 @@ fn bits_eq(a: &[f32], b: &[f32]) -> bool {
 /// `bad_requests`; an `InvalidData` frame additionally gets a best-effort
 /// `Error` response with the reserved id 0 (docs/WIRE.md — clients use
 /// ids >= 1) before the hang-up.
-fn reader_loop(stream: TcpStream, shared: &Shared) {
+fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
     let _ = stream.set_nodelay(true);
-    let writer = match stream.try_clone() {
-        Ok(w) => Arc::new(Mutex::new(w)),
-        Err(_) => return,
+    let ctrl = &shared.ctrl;
+    let Ok(wstream) = stream.try_clone() else {
+        ctrl.conns.lock().unwrap().remove(&conn_id);
+        return;
     };
+    let egress =
+        Arc::new(Egress::new(ctrl.cfg.egress_capacity, ctrl.cfg.retry_after_ms));
+    ctrl.egresses.lock().unwrap().insert(conn_id, Arc::clone(&egress));
+    let wticket = Gate::enter(&ctrl.writers);
+    let wegress = Arc::clone(&egress);
+    let wctrl = Arc::clone(ctrl);
+    let spawned = std::thread::Builder::new()
+        .name(format!("srigl-write-{conn_id}"))
+        .spawn(move || {
+            let _ticket = wticket; // decrements the gate on exit/panic
+            writer_loop(wstream, wegress, wctrl, conn_id);
+        });
+    if spawned.is_err() {
+        ctrl.egresses.lock().unwrap().remove(&conn_id);
+        ctrl.conns.lock().unwrap().remove(&conn_id);
+        return;
+    }
+
     let mut rd = std::io::BufReader::new(stream);
     let d = shared.engine.in_width();
-    let cap = shared.cfg.batching.cap();
+    let cap = ctrl.cfg.batching.cap();
     loop {
         let req = match read_request(&mut rd) {
             Ok(Some(req)) => req,
@@ -382,17 +611,18 @@ fn reader_loop(stream: TcpStream, shared: &Shared) {
             Err(e) => {
                 match e.kind() {
                     std::io::ErrorKind::InvalidData => {
-                        shared.bad_requests.fetch_add(1, Ordering::Relaxed);
-                        respond(
-                            &writer,
-                            0,
-                            ResponseBody::Error(format!("framing error: {e}")),
-                        );
+                        ctrl.bad_requests.fetch_add(1, Ordering::Relaxed);
+                        // control frame: not a computed response, so an
+                        // overflow here is not a "dropped response"
+                        let _ = egress.send(ResponseFrame {
+                            id: 0,
+                            body: ResponseBody::Error(format!("framing error: {e}")),
+                        });
                     }
                     std::io::ErrorKind::UnexpectedEof => {
                         // truncated frame: the peer died mid-write; count
                         // it, but there is nobody left to answer
-                        shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+                        ctrl.bad_requests.fetch_add(1, Ordering::Relaxed);
                     }
                     _ => {} // transport error (reset/shutdown): not a bad request
                 }
@@ -401,12 +631,12 @@ fn reader_loop(stream: TcpStream, shared: &Shared) {
         };
         let rows = req.rows as usize;
         if rows == 0 || rows > cap || req.payload.len() != rows * d {
-            shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+            ctrl.bad_requests.fetch_add(1, Ordering::Relaxed);
             let msg = format!(
                 "bad request: rows={rows} payload={} (need 1..={cap} rows of width {d})",
                 req.payload.len()
             );
-            respond(&writer, req.id, ResponseBody::Error(msg));
+            let _ = egress.send(ResponseFrame { id: req.id, body: ResponseBody::Error(msg) });
             continue;
         }
         let hash = fnv1a_f32(&req.payload);
@@ -423,8 +653,12 @@ fn reader_loop(stream: TcpStream, shared: &Shared) {
             if let Some(data) = verified {
                 c.touch(&hash);
                 drop(c);
-                shared.cache_hits.fetch_add(1, Ordering::Relaxed);
-                respond(&writer, req.id, ResponseBody::Output { rows: req.rows, data });
+                ctrl.cache_hits.fetch_add(1, Ordering::Relaxed);
+                let frame = ResponseFrame {
+                    id: req.id,
+                    body: ResponseBody::Output { rows: req.rows, data },
+                };
+                ctrl.count_send(egress.send(frame));
                 continue;
             }
         }
@@ -433,36 +667,42 @@ fn reader_loop(stream: TcpStream, shared: &Shared) {
             rows,
             x: req.payload,
             hash,
-            writer: Arc::clone(&writer),
+            egress: Arc::clone(&egress),
             t_submit: Instant::now(),
         };
+        job.egress.job_started();
         if let Err(QueueFull(job)) = shared.injector.push_bounded(job) {
-            shared.rejected.fetch_add(1, Ordering::Relaxed);
-            respond(
-                &job.writer,
-                job.id,
-                ResponseBody::Busy { retry_after_ms: shared.cfg.retry_after_ms },
-            );
+            ctrl.rejected.fetch_add(1, Ordering::Relaxed);
+            // already counted as `rejected`; the Busy control frame must
+            // not also count as a dropped response
+            let _ = job.egress.send(ResponseFrame {
+                id: job.id,
+                body: ResponseBody::Busy { retry_after_ms: ctrl.cfg.retry_after_ms },
+            });
+            job.egress.job_finished();
         }
     }
+    egress.reader_done();
 }
 
-/// Pool worker: adaptive pop, greedy row-packing, forward, route results.
+/// Pool worker: adaptive pop, greedy row-packing, forward, route results
+/// through each job's egress queue (never a blocking socket write).
 /// Returns (stats, min packed rows, max packed rows).
-fn worker_loop(shared: &Shared) -> (WorkerStats, usize, usize) {
-    let engine = &shared.engine;
+fn worker_loop<E: Engine>(shared: &Shared<E>) -> (WorkerStats, usize, usize) {
+    let engine = &*shared.engine;
+    let ctrl = &shared.ctrl;
     let d = engine.in_width();
     let ow = engine.out_width();
-    let cap = shared.cfg.batching.cap();
-    let threads = shared.cfg.threads;
-    let mut scratch = engine.make_scratch(cap);
+    let cap = ctrl.cfg.batching.cap();
+    let threads = ctrl.cfg.threads;
+    let mut scratch = engine.scratch(cap);
     let mut xbuf = vec![0f32; cap * d];
     let mut jobs: Vec<Job> = Vec::with_capacity(cap);
     let mut ws = WorkerStats::default();
     let (mut min_rows, mut max_rows) = (usize::MAX, 0usize);
     loop {
         jobs.clear();
-        let want = match shared.cfg.batching {
+        let want = match ctrl.cfg.batching {
             Batching::Fixed(n) => n.max(1),
             Batching::Adaptive { .. } => shared.batcher.next_batch(shared.injector.len()),
         };
@@ -500,13 +740,103 @@ fn worker_loop(shared: &Shared) -> (WorkerStats, usize, usize) {
                 if let Some(cache) = &shared.cache {
                     cache.lock().unwrap().insert(job.hash, (job.x, data.clone()));
                 }
-                respond(
-                    &job.writer,
-                    job.id,
-                    ResponseBody::Output { rows: job.rows as u32, data },
-                );
+                let frame = ResponseFrame {
+                    id: job.id,
+                    body: ResponseBody::Output { rows: job.rows as u32, data },
+                };
+                ctrl.count_send(job.egress.send(frame));
+                job.egress.job_finished();
             }
         }
     }
     (ws, min_rows, max_rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out_frame(id: u64) -> ResponseFrame {
+        ResponseFrame { id, body: ResponseBody::Output { rows: 1, data: vec![1.0, 2.0] } }
+    }
+
+    #[test]
+    fn egress_overflow_converts_to_busy_then_drops() {
+        let e = Egress::new(2, 7);
+        assert_eq!(e.send(out_frame(1)), SendOutcome::Queued);
+        assert_eq!(e.send(out_frame(2)), SendOutcome::Queued);
+        // full: data frames convert to Busy within the headroom
+        for i in 0..EGRESS_BUSY_HEADROOM as u64 {
+            assert_eq!(e.send(out_frame(3 + i)), SendOutcome::ConvertedBusy, "headroom {i}");
+        }
+        // headroom exhausted: dropped outright — bounded no matter what
+        assert_eq!(e.send(out_frame(99)), SendOutcome::Dropped);
+        assert_eq!(e.send(out_frame(100)), SendOutcome::Dropped);
+
+        // the writer sees the data frames first, then the Busy hints
+        assert_eq!(e.try_recv().unwrap(), out_frame(1));
+        assert_eq!(e.try_recv().unwrap(), out_frame(2));
+        let busy = e.try_recv().unwrap();
+        assert_eq!(busy.id, 3);
+        assert_eq!(busy.body, ResponseBody::Busy { retry_after_ms: 7 });
+        // draining reopens capacity for data frames
+        assert_eq!(e.send(out_frame(200)), SendOutcome::Queued);
+    }
+
+    #[test]
+    fn egress_overflow_passes_control_frames_through_verbatim() {
+        // an Error must never morph into Busy (a retry-on-Busy client
+        // would resend a malformed request forever), and a Busy stays a
+        // Busy with its original hint
+        let e = Egress::new(1, 7);
+        assert_eq!(e.send(out_frame(1)), SendOutcome::Queued);
+        let err = ResponseFrame { id: 2, body: ResponseBody::Error("bad shape".into()) };
+        assert_eq!(e.send(err.clone()), SendOutcome::Queued, "control frame uses headroom");
+        let busy = ResponseFrame { id: 3, body: ResponseBody::Busy { retry_after_ms: 99 } };
+        assert_eq!(e.send(busy.clone()), SendOutcome::Queued);
+        assert_eq!(e.try_recv().unwrap(), out_frame(1));
+        assert_eq!(e.try_recv().unwrap(), err, "Error delivered verbatim");
+        assert_eq!(e.try_recv().unwrap(), busy, "Busy keeps its own hint (99, not 7)");
+    }
+
+    #[test]
+    fn egress_closes_after_reader_done_and_jobs_drain() {
+        let e = Egress::new(4, 1);
+        e.job_started();
+        e.job_started();
+        e.reader_done();
+        assert_eq!(e.send(out_frame(1)), SendOutcome::Queued, "still open: jobs in flight");
+        e.job_finished();
+        e.job_finished(); // last job out + reader gone -> closed
+        assert_eq!(e.send(out_frame(2)), SendOutcome::Gone);
+        // queued frames still drain after close...
+        assert_eq!(e.recv().unwrap(), out_frame(1));
+        // ...then recv reports closed
+        assert!(e.recv().is_none());
+    }
+
+    #[test]
+    fn egress_reader_done_with_no_jobs_closes_immediately() {
+        let e = Egress::new(4, 1);
+        e.reader_done();
+        assert_eq!(e.send(out_frame(1)), SendOutcome::Gone);
+        assert!(e.recv().is_none());
+    }
+
+    #[test]
+    fn egress_capacity_floor_is_one() {
+        let e = Egress::new(0, 1);
+        assert_eq!(e.send(out_frame(1)), SendOutcome::Queued);
+        assert_eq!(e.send(out_frame(2)), SendOutcome::ConvertedBusy);
+    }
+
+    #[test]
+    fn egress_recv_blocks_until_send() {
+        let e = Arc::new(Egress::new(2, 1));
+        let e2 = Arc::clone(&e);
+        let h = std::thread::spawn(move || e2.recv());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(e.send(out_frame(5)), SendOutcome::Queued);
+        assert_eq!(h.join().unwrap().unwrap(), out_frame(5));
+    }
 }

@@ -13,14 +13,16 @@
 //! sweeps 1/4/8 CPU threads in Figs. 18-20): batch-1 splits the single
 //! output row across threads; batched splits batch rows.
 
+pub mod engine;
 pub mod frontend;
 pub mod model;
 pub mod server;
 pub mod shard;
 
-pub use frontend::{FrontendConfig, FrontendHandle, FrontendStats};
+pub use engine::{Engine, EngineBuilder, KernelEngine, PersistentShardedEngine, ReplicatedEngine};
+pub use frontend::{FrontendHandle, FrontendStats};
 pub use model::{Activation, LayerSpec, ModelLayer, Repr, Scratch, SparseModel};
-pub use shard::{EngineScratch, ServeEngine, ShardPlan, ShardedModel, ShardedScratch};
+pub use shard::{ShardPlan, ShardPlanError, ShardedModel, ShardedScratch};
 
 use crate::sparsity::{Condensed, Csr, Mask};
 use crate::tensor::Tensor;

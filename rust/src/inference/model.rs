@@ -1,6 +1,9 @@
 //! Multi-layer sparse model serving: [`SparseModel`] — an owned stack of
-//! [`LinearKernel`] layers with per-layer activations, the forward path the
-//! worker-pool server ([`crate::inference::server`]) drives.
+//! [`LinearKernel`] layers with per-layer activations, the forward path
+//! behind the replicated serving engine (it implements
+//! [`crate::inference::engine::Engine`] directly, and
+//! [`crate::inference::engine::ReplicatedEngine`] wraps it for the
+//! worker-pool server and socket front-end).
 //!
 //! Each layer may use any of the four representations the paper benchmarks
 //! (dense / CSR / structured / condensed), mixed freely per layer via

@@ -5,49 +5,31 @@
 //! component of this repo).
 //!
 //! Architecture: a submitter thread enqueues requests at a configured rate
-//! into a shared [`Injector`] queue; N workers drain it — one-at-a-time in
-//! `Online` mode, up to `max_batch` at once in `Batched` mode, and across
-//! `workers` threads in `Pooled` mode — run the selected target (a single
-//! layer representation or a whole [`SparseModel`] stack) on per-worker
-//! scratch buffers, and record end-to-end latency per request. Per-worker
-//! latency records are merged into one [`LatencyStats`] at the end.
+//! into a shared [`Injector`] queue; N workers drain it, coalescing up to
+//! the configured batch limit per pop, run the selected [`Engine`] (a
+//! whole [`SparseModel`] stack, a persistent shard team, or — via
+//! [`KernelEngine`] — one bare layer representation) on per-worker typed
+//! scratch, and record end-to-end latency per request. Per-worker latency
+//! records are merged into one [`LatencyStats`] at the end.
+//!
+//! All knobs (workers, batching policy, shards, intra-op threads) come
+//! from one [`EngineBuilder`] — the same configuration surface the socket
+//! front-end, the CLI, and the manifest use.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
-use super::model::Scratch;
-use super::shard::{ShardedModel, ShardedScratch};
+use anyhow::Result;
+
+use super::engine::{Engine, EngineBuilder, KernelEngine};
 use super::{LinearKernel, SparseModel};
 use crate::util::rng::Rng;
 use crate::util::threadpool::Injector;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ServeMode {
-    /// Strict batch-1 service on one worker (paper Fig. 4a setting).
-    Online,
-    /// Dynamic batching on one worker: coalesce up to `max_batch`.
-    Batched { max_batch: usize },
-    /// Worker pool: `workers` threads share the queue, each coalescing up
-    /// to `max_batch` — the multi-core serving mode.
-    Pooled { workers: usize, max_batch: usize },
-    /// Worker pool with adaptive batching: each pop's batch limit follows
-    /// an EWMA of observed queue depth (capped at `cap`), so a trickle is
-    /// served batch-1 for latency and a flood coalesces for throughput.
-    Adaptive { workers: usize, cap: usize },
-    /// Tensor-parallel serving (only meaningful through [`serve_model`]):
-    /// one coordinator drains the queue coalescing up to `cap`, and each
-    /// forward fans out over a `shards`-thread team, each owning a
-    /// contiguous output-neuron range of every layer
-    /// ([`crate::inference::shard::ShardedModel`]). Parallelism lives
-    /// *inside* the request, so wide layers speed up even at batch 1 and
-    /// scratch is not replicated per worker.
-    Sharded { shards: usize, cap: usize },
-}
-
 /// How a worker picks its per-pop batch limit.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Batching {
-    /// Always pop up to `n` requests (the PR-1 behaviour).
+    /// Always pop up to `n` requests.
     Fixed(usize),
     /// Pop up to `AdaptiveBatcher::next_batch(queue depth)`, never more
     /// than `cap` (which also sizes the per-worker scratch).
@@ -109,14 +91,14 @@ impl AdaptiveBatcher {
     }
 }
 
+/// The synthetic-load half of a serving run: how many requests to submit
+/// and at what Poisson rate. Execution knobs (workers, batching, shards,
+/// threads) live in [`EngineBuilder`].
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
-    pub mode: ServeMode,
     pub n_requests: usize,
     /// Mean inter-arrival time; exponential distribution (Poisson load).
     pub mean_interarrival: Duration,
-    /// Intra-op threads *per worker* (the kernel `threads` parameter).
-    pub threads: usize,
     pub seed: u64,
 }
 
@@ -186,83 +168,32 @@ struct Request {
     t_submit: Instant,
 }
 
-/// Anything the serving loop can drive: a whole model stack, a sharded
-/// stack, or (via the blanket impl on `&dyn LinearKernel`) one bare layer
-/// representation. Each target brings its own per-worker scratch type.
-pub trait ServeTarget: Sync {
-    type Scratch;
-    fn in_width(&self) -> usize;
-    fn make_scratch(&self, max_batch: usize) -> Self::Scratch;
-    fn infer(&self, x: &[f32], batch: usize, scratch: &mut Self::Scratch, threads: usize);
-}
-
-impl ServeTarget for SparseModel {
-    type Scratch = Scratch;
-
-    fn in_width(&self) -> usize {
-        SparseModel::in_width(self)
-    }
-
-    fn make_scratch(&self, max_batch: usize) -> Scratch {
-        SparseModel::make_scratch(self, max_batch)
-    }
-
-    fn infer(&self, x: &[f32], batch: usize, scratch: &mut Scratch, threads: usize) {
-        let _ = self.forward(x, batch, scratch, threads);
-    }
-}
-
-impl ServeTarget for ShardedModel {
-    type Scratch = ShardedScratch;
-
-    fn in_width(&self) -> usize {
-        ShardedModel::in_width(self)
-    }
-
-    fn make_scratch(&self, max_batch: usize) -> ShardedScratch {
-        ShardedModel::make_scratch(self, max_batch)
-    }
-
-    fn infer(&self, x: &[f32], batch: usize, scratch: &mut ShardedScratch, threads: usize) {
-        let _ = self.forward(x, batch, scratch, threads);
-    }
-}
-
-impl<'a> ServeTarget for &'a dyn LinearKernel {
-    type Scratch = Scratch;
-
-    fn in_width(&self) -> usize {
-        (**self).in_width()
-    }
-
-    fn make_scratch(&self, max_batch: usize) -> Scratch {
-        Scratch::single(max_batch, self.out_width())
-    }
-
-    fn infer(&self, x: &[f32], batch: usize, scratch: &mut Scratch, threads: usize) {
-        let ow = self.out_width();
-        self.forward(x, batch, &mut scratch.a[..batch * ow], threads);
-    }
-}
-
 /// Drive a single layer representation with a synthetic Poisson request
-/// stream and return end-to-end latency statistics.
-pub fn serve(layer: &dyn LinearKernel, cfg: &ServeConfig) -> LatencyStats {
-    serve_target(&layer, cfg)
+/// stream and return end-to-end latency statistics. Wraps the kernel in a
+/// [`KernelEngine`] so it runs the same loop as whole stacks.
+pub fn serve(layer: &dyn LinearKernel, builder: &EngineBuilder, cfg: &ServeConfig) -> LatencyStats {
+    serve_target(&KernelEngine::new(layer), builder, cfg)
 }
 
 /// Drive a whole [`SparseModel`] stack through the serving loop.
-/// `ServeMode::Sharded` re-materializes the stack as a
-/// [`ShardedModel`] (stored-weight-balanced plan) and serves with one
-/// coordinator draining the queue while each forward runs on the shard
-/// team.
-pub fn serve_model(model: &SparseModel, cfg: &ServeConfig) -> LatencyStats {
-    if let ServeMode::Sharded { shards, .. } = cfg.mode {
-        let sharded = ShardedModel::from_model(model, shards)
-            .expect("sharding a validated model with a balanced plan cannot fail");
-        return serve_target(&sharded, cfg);
+/// `builder.shards > 1` re-materializes the stack as a
+/// [`super::engine::PersistentShardedEngine`] (stored-weight-balanced
+/// plan, long-lived team); otherwise the model itself serves replicated
+/// across workers.
+/// Fails only when the shard plan does
+/// (`shards > narrowest layer width`, a typed
+/// [`super::shard::ShardPlanError`]).
+pub fn serve_model(
+    model: &SparseModel,
+    builder: &EngineBuilder,
+    cfg: &ServeConfig,
+) -> Result<LatencyStats> {
+    if builder.is_sharded() {
+        let team = builder.build_persistent_sharded(model)?;
+        Ok(serve_target(&team, builder, cfg))
+    } else {
+        Ok(serve_target(model, builder, cfg))
     }
-    serve_target(model, cfg)
 }
 
 /// One Poisson inter-arrival gap: exponential with the configured mean,
@@ -277,25 +208,20 @@ pub fn poisson_gap(mean: Duration, rng: &mut Rng) -> Duration {
     Duration::from_secs_f64((mean_s * -u.ln()).min(10.0 * mean_s))
 }
 
-/// The serving engine all modes share: `Online` and `Batched` are the
-/// 1-worker special cases of the pool.
-pub fn serve_target<T: ServeTarget>(target: &T, cfg: &ServeConfig) -> LatencyStats {
-    let (workers, batching) = match cfg.mode {
-        ServeMode::Online => (1, Batching::Fixed(1)),
-        ServeMode::Batched { max_batch } => (1, Batching::Fixed(max_batch.max(1))),
-        ServeMode::Pooled { workers, max_batch } => {
-            (workers.max(1), Batching::Fixed(max_batch.max(1)))
-        }
-        ServeMode::Adaptive { workers, cap } => {
-            (workers.max(1), Batching::Adaptive { cap: cap.max(1) })
-        }
-        // one coordinator: intra-request parallelism is the target's job
-        ServeMode::Sharded { cap, .. } => (1, Batching::Fixed(cap.max(1))),
-    };
+/// The serving loop every configuration shares: Poisson submitter, shared
+/// queue, `builder.workers` poppers (floored at 1), each with a private
+/// typed scratch for the generic [`Engine`].
+pub fn serve_target<E: Engine>(
+    engine: &E,
+    builder: &EngineBuilder,
+    cfg: &ServeConfig,
+) -> LatencyStats {
+    let workers = builder.workers.max(1);
+    let batching = builder.batching;
     let max_batch = batching.cap();
     let batcher = AdaptiveBatcher::new(max_batch);
-    let d = target.in_width();
-    let threads = cfg.threads;
+    let d = engine.in_width();
+    let threads = builder.threads;
     let mean_gap = cfg.mean_interarrival;
     let n_req = cfg.n_requests;
     let seed = cfg.seed;
@@ -323,7 +249,7 @@ pub fn serve_target<T: ServeTarget>(target: &T, cfg: &ServeConfig) -> LatencySta
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 s.spawn(move || {
-                    let mut scratch = target.make_scratch(max_batch);
+                    let mut scratch = engine.scratch(max_batch);
                     let mut xbuf = vec![0f32; max_batch * d];
                     let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
                     let mut ws = WorkerStats::default();
@@ -340,7 +266,7 @@ pub fn serve_target<T: ServeTarget>(target: &T, cfg: &ServeConfig) -> LatencySta
                         for (i, r) in batch.iter().enumerate() {
                             xbuf[i * d..(i + 1) * d].copy_from_slice(&r.x);
                         }
-                        target.infer(&xbuf[..b * d], b, &mut scratch, threads);
+                        let _ = engine.forward(&xbuf[..b * d], b, &mut scratch, threads);
                         let t_done = Instant::now();
                         for r in &batch {
                             ws.latencies_us
@@ -388,13 +314,11 @@ mod tests {
     fn online_serves_all_requests() {
         let bundle = LayerBundle::synth(32, 64, 0.9, 0.2, 0);
         let cfg = ServeConfig {
-            mode: ServeMode::Online,
             n_requests: 50,
             mean_interarrival: Duration::ZERO,
-            threads: 1,
             seed: 1,
         };
-        let stats = serve(&bundle.condensed, &cfg);
+        let stats = serve(&bundle.condensed, &EngineBuilder::online(), &cfg);
         assert_eq!(stats.n, 50);
         assert!(stats.p50_us > 0.0 && stats.p99_us >= stats.p50_us);
         assert!((stats.mean_batch - 1.0).abs() < 1e-9, "online must be batch-1");
@@ -404,13 +328,11 @@ mod tests {
     fn batched_mode_coalesces() {
         let bundle = LayerBundle::synth(32, 64, 0.9, 0.2, 0);
         let cfg = ServeConfig {
-            mode: ServeMode::Batched { max_batch: 16 },
             n_requests: 200,
             mean_interarrival: Duration::ZERO, // flood -> batches form
-            threads: 1,
             seed: 2,
         };
-        let stats = serve(&bundle.dense, &cfg);
+        let stats = serve(&bundle.dense, &EngineBuilder::new().workers(1).fixed_batch(16), &cfg);
         assert_eq!(stats.n, 200);
         assert!(stats.mean_batch > 1.0, "flooded queue should batch, got {}", stats.mean_batch);
     }
@@ -419,13 +341,11 @@ mod tests {
     fn pooled_layer_serves_all_requests() {
         let bundle = LayerBundle::synth(32, 64, 0.9, 0.2, 0);
         let cfg = ServeConfig {
-            mode: ServeMode::Pooled { workers: 4, max_batch: 8 },
             n_requests: 300,
             mean_interarrival: Duration::ZERO,
-            threads: 1,
             seed: 3,
         };
-        let stats = serve(&bundle.condensed, &cfg);
+        let stats = serve(&bundle.condensed, &EngineBuilder::new().workers(4).fixed_batch(8), &cfg);
         assert_eq!(stats.n, 300, "pool must serve every request exactly once");
         assert!(stats.mean_batch >= 1.0);
         assert!(stats.throughput_rps > 0.0);
@@ -435,13 +355,12 @@ mod tests {
     fn pooled_model_serves_all_requests() {
         let m = model3(Repr::Condensed);
         let cfg = ServeConfig {
-            mode: ServeMode::Pooled { workers: 3, max_batch: 4 },
             n_requests: 120,
             mean_interarrival: Duration::from_micros(20),
-            threads: 1,
             seed: 4,
         };
-        let stats = serve_model(&m, &cfg);
+        let stats =
+            serve_model(&m, &EngineBuilder::new().workers(3).fixed_batch(4), &cfg).unwrap();
         assert_eq!(stats.n, 120);
         assert!(stats.p99_us >= stats.p50_us);
     }
@@ -450,33 +369,39 @@ mod tests {
     fn adaptive_mode_serves_all_requests() {
         let m = model3(Repr::Condensed);
         let cfg = ServeConfig {
-            mode: ServeMode::Adaptive { workers: 2, cap: 8 },
             n_requests: 200,
             mean_interarrival: Duration::ZERO, // flood -> depth EWMA rises
-            threads: 1,
             seed: 6,
         };
-        let stats = serve_model(&m, &cfg);
+        let stats = serve_model(&m, &EngineBuilder::new().workers(2).adaptive(8), &cfg).unwrap();
         assert_eq!(stats.n, 200, "adaptive pool must serve every request exactly once");
         assert!(stats.mean_batch >= 1.0 && stats.mean_batch <= 8.0);
     }
 
     #[test]
-    fn sharded_mode_serves_all_requests() {
+    fn sharded_builder_serves_all_requests() {
         let m = model3(Repr::Condensed);
-        for shards in [1usize, 2, 3] {
+        for shards in [2usize, 3] {
             let cfg = ServeConfig {
-                mode: ServeMode::Sharded { shards, cap: 4 },
                 n_requests: 120,
                 mean_interarrival: Duration::ZERO,
-                threads: 1,
                 seed: 5,
             };
-            let stats = serve_model(&m, &cfg);
+            let b = EngineBuilder::new().workers(1).fixed_batch(4).shards(shards);
+            let stats = serve_model(&m, &b, &cfg).unwrap();
             assert_eq!(stats.n, 120, "shards={shards}: every request served exactly once");
             assert!(stats.p99_us >= stats.p50_us);
             assert!(stats.mean_batch >= 1.0 && stats.mean_batch <= 4.0);
         }
+    }
+
+    #[test]
+    fn sharded_builder_propagates_plan_error() {
+        // narrowest layer has 16 neurons: 17 shards is a typed plan error
+        let m = model3(Repr::Condensed);
+        let cfg = ServeConfig { n_requests: 1, mean_interarrival: Duration::ZERO, seed: 1 };
+        let err = serve_model(&m, &EngineBuilder::new().shards(17), &cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("17 shards"), "{err:#}");
     }
 
     #[test]
@@ -511,10 +436,8 @@ mod tests {
         let bundle = LayerBundle::synth(8, 8, 0.5, 0.0, 0);
         let n_requests = 40;
         let cfg = ServeConfig {
-            mode: ServeMode::Online,
             n_requests,
             mean_interarrival: Duration::from_millis(50),
-            threads: 1,
             // This seed's 40 exponential draws average 46.25 ms — a little
             // under the mean on purpose: sleep can only overshoot, so the
             // slack absorbs scheduler oversleep when the parallel test
@@ -523,7 +446,7 @@ mod tests {
             seed: 15,
         };
         let t0 = Instant::now();
-        let stats = serve(&bundle.condensed, &cfg);
+        let stats = serve(&bundle.condensed, &EngineBuilder::online(), &cfg);
         let wall = t0.elapsed().as_secs_f64();
         assert_eq!(stats.n, n_requests);
         let mean_gap = wall / n_requests as f64;

@@ -1,8 +1,7 @@
-//! Tensor-parallel sharded serving: split every layer's output neurons
+//! Tensor-parallel sharded execution: split every layer's output neurons
 //! across a team of S shard workers so one request's forward runs on S
-//! cores *within* the request — the ROADMAP's "shard a model's
-//! layers/neuron ranges across workers" item, and the alternative to the
-//! worker-pool's replicate-everything scaling.
+//! cores *within* the request — the alternative to the worker-pool's
+//! replicate-everything scaling.
 //!
 //! The paper's constant fan-in constraint makes output-neuron sharding
 //! natural: each output neuron owns exactly k weights, so any contiguous
@@ -15,35 +14,71 @@
 //! * [`ShardPlan`] — per layer, S+1 monotone cut points over the *full
 //!   logical* neuron range, balanced by **stored weights** rather than
 //!   neuron count so ablated neurons (which cost nothing in the compact
-//!   forms) don't skew shard load.
+//!   forms) don't skew shard load. [`ShardPlan::balanced`] returns a typed
+//!   [`ShardPlanError`] when the request cannot be satisfied (zero shards,
+//!   or more shards than the narrowest layer has neurons) instead of
+//!   silently clamping.
 //! * [`ShardedModel`] — each shard holds [`ModelLayer::slice`]s of every
-//!   layer. A forward runs one scoped thread per shard; at layer l, shard
-//!   s computes its slice into private staging, then writes the disjoint
-//!   column range `cuts[l][s]..cuts[l][s+1]` of a shared full-width
-//!   activation buffer and waits on a [`Barrier`] so every shard sees the
-//!   complete layer output before reading it as the next layer's input.
-//! * [`ServeEngine`] — replicated-vs-sharded dispatch for the serving
-//!   front-end (`FrontendConfig::shards`).
+//!   layer. `ShardedModel::shard_pass` is one shard's walk over the
+//!   stack: at layer l, shard s computes its slice into private staging,
+//!   then writes the disjoint column range `cuts[l][s]..cuts[l][s+1]` of a
+//!   shared full-width activation buffer and waits on a [`Barrier`] so
+//!   every shard sees the complete layer output before reading it as the
+//!   next layer's input.
+//!
+//! Two drivers share `shard_pass` byte for byte:
+//!
+//! * [`ShardedModel::forward`] — the **scoped reference implementation**:
+//!   spawns one scoped thread per shard per call. Kept as the executable
+//!   specification the persistent team is pinned against.
+//! * [`crate::inference::engine::PersistentShardedEngine`] — the
+//!   production driver: a long-lived team parked on per-shard mailbox
+//!   condvars, zero thread spawns per request.
 //!
 //! Outputs are **bit-for-bit identical** to the replicated
 //! [`SparseModel::forward`]: slicing copies rows verbatim, each neuron's
 //! dot product runs unchanged, and the scatter/zero-fill/ReLU sequence per
-//! element matches the replicated path (`rust/tests/shard_equivalence.rs`
-//! pins this across reprs, shard counts, and batch sizes).
-//!
-//! Known limitation (documented, not fixed here): the shard team is
-//! spawned per forward via `std::thread::scope`, costing a few tens of
-//! microseconds per request; a persistent team with a request doorbell is
-//! the follow-on once profiles say the spawn dominates.
+//! element matches the replicated path (`rust/tests/engine_conformance.rs`
+//! pins all three execution paths against each other across reprs, shard
+//! counts, and batch sizes).
 
 use std::cell::UnsafeCell;
 use std::ops::Range;
-use std::sync::{Arc, Barrier};
+use std::sync::Barrier;
 
 use anyhow::Result;
 
-use super::model::{ModelLayer, Scratch};
+use super::model::ModelLayer;
 use super::SparseModel;
+
+/// Typed error from [`ShardPlan::balanced`]: the requested shard count
+/// cannot give every shard a (possibly empty) contiguous range of every
+/// layer in a useful way. Callers that *want* empty shards (e.g. tests of
+/// the barrier protocol) can still build an explicit plan via
+/// [`ShardedModel::with_plan`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardPlanError {
+    /// `shards == 0` — a team needs at least one member.
+    ZeroShards,
+    /// `shards` exceeds the width of `layer` (its full logical neuron
+    /// count): at least one shard would own nothing on every request.
+    ShardsExceedWidth { shards: usize, layer: usize, width: usize },
+}
+
+impl std::fmt::Display for ShardPlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardPlanError::ZeroShards => write!(f, "shard plan needs at least one shard"),
+            ShardPlanError::ShardsExceedWidth { shards, layer, width } => write!(
+                f,
+                "{shards} shards exceed layer {layer}'s width of {width} neurons \
+                 (every shard must be able to own at least one neuron)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ShardPlanError {}
 
 /// Per-layer contiguous partition of the output-neuron range into S
 /// shards, balanced by stored weights.
@@ -62,11 +97,25 @@ impl ShardPlan {
     /// neuron granularity allows. Ablated neurons carry zero weight in the
     /// compact representations, so a run of ablated neurons is absorbed
     /// into a shard for free instead of counting like live ones.
-    pub fn balanced(model: &SparseModel, shards: usize) -> ShardPlan {
-        let shards = shards.max(1);
+    ///
+    /// Errors (typed, not clamped): [`ShardPlanError::ZeroShards`] for
+    /// `shards == 0`, and [`ShardPlanError::ShardsExceedWidth`] when any
+    /// layer is narrower than the team — a plan that structurally idles
+    /// shards is almost always a caller mistake; build one explicitly via
+    /// [`ShardedModel::with_plan`] if that is really what you want.
+    pub fn balanced(model: &SparseModel, shards: usize) -> Result<ShardPlan, ShardPlanError> {
+        if shards == 0 {
+            return Err(ShardPlanError::ZeroShards);
+        }
+        for (layer, l) in model.layers().iter().enumerate() {
+            let width = l.out_full_width();
+            if shards > width {
+                return Err(ShardPlanError::ShardsExceedWidth { shards, layer, width });
+            }
+        }
         let cuts =
             model.layers().iter().map(|l| balance_layer(&l.row_weights(), shards)).collect();
-        ShardPlan { shards, cuts }
+        Ok(ShardPlan { shards, cuts })
     }
 
     pub fn shards(&self) -> usize {
@@ -100,8 +149,8 @@ impl ShardPlan {
 /// Contiguous partition of `cost` into `shards` ranges with near-equal
 /// sums: greedy prefix walk that stops each cut at the boundary closest to
 /// the j/S quantile of total cost. Zero-cost layers fall back to an even
-/// neuron split. Cuts are monotone; ranges may be empty when `shards`
-/// exceeds the number of cost-bearing neurons.
+/// neuron split. Cuts are monotone; ranges may be empty when the cost mass
+/// is too concentrated to fill every shard.
 fn balance_layer(cost: &[usize], shards: usize) -> Vec<usize> {
     let n = cost.len();
     let total: usize = cost.iter().sum();
@@ -139,15 +188,14 @@ fn balance_layer(cost: &[usize], shards: usize) -> Vec<usize> {
 /// A full-width activation buffer shards write disjoint column ranges of.
 /// `UnsafeCell` per element: shards mutate through shared references, with
 /// disjointness and write/read phase separation enforced by the caller
-/// (`ShardedModel::forward`'s barrier discipline).
-struct SharedBuf {
+/// (`ShardedModel::shard_pass`'s barrier discipline).
+pub(crate) struct SharedBuf {
     cells: Vec<UnsafeCell<f32>>,
 }
 
 // SAFETY: all concurrent access goes through the raw-pointer accessors
-// below under ShardedModel::forward's protocol — writers touch disjoint
-// ranges, and a Barrier separates every write phase from the reads of the
-// next layer.
+// below under shard_pass's protocol — writers touch disjoint ranges, and a
+// Barrier separates every write phase from the reads of the next layer.
 unsafe impl Sync for SharedBuf {}
 
 impl SharedBuf {
@@ -168,35 +216,47 @@ impl SharedBuf {
     /// # Safety
     /// No write to `0..len` may be in flight (callers read only buffers
     /// completed behind a barrier).
-    unsafe fn read(&self, len: usize) -> &[f32] {
+    pub(crate) unsafe fn read(&self, len: usize) -> &[f32] {
         debug_assert!(len <= self.cells.len());
         std::slice::from_raw_parts(self.cells.as_ptr() as *const f32, len)
     }
+
+    pub(crate) fn capacity(&self) -> usize {
+        self.cells.len()
+    }
 }
 
-/// Per-call workspace for [`ShardedModel::forward`]: two shared ping-pong
-/// full-width buffers plus one private staging buffer per shard (kernel
-/// outputs are (batch, slice width) contiguous; the shared buffer's rows
-/// are strided by the full width, so every shard stages then copies).
+/// Per-call workspace for a sharded forward (scoped or persistent): two
+/// shared ping-pong full-width buffers plus one private staging buffer per
+/// shard (kernel outputs are (batch, slice width) contiguous; the shared
+/// buffer's rows are strided by the full width, so every shard stages then
+/// copies).
 pub struct ShardedScratch {
-    a: SharedBuf,
-    b: SharedBuf,
-    stage: Vec<Vec<f32>>,
-    max_batch: usize,
+    pub(crate) a: SharedBuf,
+    pub(crate) b: SharedBuf,
+    pub(crate) stage: Vec<Vec<f32>>,
+    pub(crate) max_batch: usize,
 }
 
 impl ShardedScratch {
     pub fn max_batch(&self) -> usize {
         self.max_batch
     }
+
+    /// How many shards this workspace was allocated for (one staging
+    /// buffer each) — forwards assert it matches their team size.
+    pub fn stage_count(&self) -> usize {
+        self.stage.len()
+    }
 }
 
 /// A [`SparseModel`] re-materialized as S shard slices per layer, sharing
-/// one barrier-synchronized forward. Build via [`ShardedModel::from_model`]
-/// (balanced plan) or [`ShardedModel::with_plan`].
+/// one barrier-synchronized layer walk (`ShardedModel::shard_pass`).
+/// Build via [`ShardedModel::from_model`] (balanced plan) or
+/// [`ShardedModel::with_plan`].
 pub struct ShardedModel {
-    /// `layers[layer][shard]` — zero-width slices are legal (shard counts
-    /// above a narrow layer's width leave trailing shards empty there).
+    /// `layers[layer][shard]` — zero-width slices are legal (an explicit
+    /// plan may leave shards empty on some layers; they still synchronize).
     layers: Vec<Vec<ModelLayer>>,
     plan: ShardPlan,
     d_in: usize,
@@ -208,11 +268,11 @@ pub struct ShardedModel {
 impl ShardedModel {
     /// Shard `model` with a stored-weight-balanced [`ShardPlan`].
     pub fn from_model(model: &SparseModel, shards: usize) -> Result<ShardedModel> {
-        ShardedModel::with_plan(model, ShardPlan::balanced(model, shards))
+        ShardedModel::with_plan(model, ShardPlan::balanced(model, shards)?)
     }
 
     /// Shard `model` with an explicit plan (must cover every layer's full
-    /// width with monotone cuts).
+    /// width with monotone cuts; empty ranges are allowed here).
     pub fn with_plan(model: &SparseModel, plan: ShardPlan) -> Result<ShardedModel> {
         anyhow::ensure!(
             plan.cuts.len() == model.depth(),
@@ -300,10 +360,117 @@ impl ShardedModel {
         self.forward(x, batch, &mut s, threads).to_vec()
     }
 
-    /// Run the sharded stack on `batch` rows of `x`. Spawns one scoped
-    /// thread per shard; `threads` is the *intra-shard* kernel thread
-    /// count (total parallelism = shards x threads). Bit-for-bit equal to
-    /// the replicated [`SparseModel::forward`] on the same weights.
+    /// Reject a workspace that is too small for this model at `batch` —
+    /// coordinator-side, BEFORE any shard work starts. Without this, a
+    /// scratch built from a *different* sharded model (same shard count,
+    /// narrower buffers) would panic inside a shard thread, where
+    /// unwinding cannot be propagated and would wedge the barrier.
+    pub(crate) fn assert_scratch_fits(&self, s: &ShardedScratch, batch: usize) {
+        assert_eq!(
+            s.stage.len(),
+            self.plan.shards,
+            "scratch was built for a different shard count (create it via make_scratch/scratch())"
+        );
+        let maxw = self.widths.iter().copied().max().unwrap_or(1).max(1);
+        let need = batch * maxw;
+        assert!(
+            s.a.capacity() >= need && s.b.capacity() >= need,
+            "scratch activation buffers hold {} elements, this model needs {need} at batch {batch} \
+             (scratch from a different model?)",
+            s.a.capacity().min(s.b.capacity())
+        );
+        for (si, stage) in s.stage.iter().enumerate() {
+            let maxc = self.layers.iter().map(|l| l[si].kernel().out_width()).max().unwrap_or(0);
+            assert!(
+                stage.len() >= batch * maxc,
+                "shard {si} staging holds {} elements, needs {} at batch {batch} \
+                 (scratch from a different model?)",
+                stage.len(),
+                batch * maxc
+            );
+        }
+    }
+
+    /// The shared-buffer parity of the final layer: which ping-pong buffer
+    /// holds the stack's output after a forward.
+    pub(crate) fn final_buf<'s>(&self, s: &'s ShardedScratch) -> &'s SharedBuf {
+        if (self.layers.len() - 1) % 2 == 0 {
+            &s.a
+        } else {
+            &s.b
+        }
+    }
+
+    /// One shard's walk over every layer — THE sharded execution path,
+    /// shared verbatim by the scoped reference forward below and the
+    /// persistent team ([`crate::inference::engine::PersistentShardedEngine`]),
+    /// which is what makes the two bit-for-bit identical.
+    ///
+    /// Protocol per layer: compute the slice into `stage`, write the
+    /// disjoint column range into the destination ping-pong buffer
+    /// (zero-fill + scatter for compact kernels), apply the activation to
+    /// that range only, then `barrier.wait()`. Empty slices skip compute
+    /// but still wait, keeping the barrier count consistent.
+    pub(crate) fn shard_pass(
+        &self,
+        si: usize,
+        x: &[f32],
+        batch: usize,
+        stage: &mut [f32],
+        buf_a: &SharedBuf,
+        buf_b: &SharedBuf,
+        barrier: &Barrier,
+        threads: usize,
+    ) {
+        let depth = self.layers.len();
+        for li in 0..depth {
+            let layer = &self.layers[li][si];
+            let w_full = self.widths[li];
+            let r = self.plan.range(li, si);
+            let sw = r.end - r.start;
+            // same ping-pong parity as the replicated forward:
+            // layer 0 writes `a`, layer 1 writes `b`, ...
+            let (dst, src) = if li % 2 == 0 { (buf_a, buf_b) } else { (buf_b, buf_a) };
+            // SAFETY: the barrier at the end of the previous iteration
+            // ordered every shard's writes to `src` before this read;
+            // nobody writes `src` this phase.
+            let src: &[f32] = if li == 0 {
+                x
+            } else {
+                unsafe { src.read(batch * layer.in_width()) }
+            };
+            if sw > 0 {
+                let na = layer.kernel().out_width();
+                let c = &mut stage[..batch * na];
+                layer.kernel().forward(src, batch, c, threads);
+                for bi in 0..batch {
+                    // SAFETY: shard si exclusively owns columns
+                    // r.start..r.end of every row this phase (ShardPlan
+                    // ranges are disjoint).
+                    let region = unsafe { dst.region_mut(bi * w_full + r.start, sw) };
+                    match layer.active_ids() {
+                        None => region.copy_from_slice(&c[bi * na..(bi + 1) * na]),
+                        Some(active) => {
+                            region.fill(0.0);
+                            for (j, &row) in active.iter().enumerate() {
+                                region[row as usize] = c[bi * na + j];
+                            }
+                        }
+                    }
+                    layer.activation().apply(region);
+                }
+            }
+            barrier.wait();
+        }
+    }
+
+    /// Run the sharded stack on `batch` rows of `x` — the **scoped
+    /// reference implementation**: spawns one scoped thread per shard per
+    /// call. `threads` is the *intra-shard* kernel thread count (total
+    /// parallelism = shards x threads). Bit-for-bit equal to the
+    /// replicated [`SparseModel::forward`] — and to the persistent team,
+    /// which runs the same `ShardedModel::shard_pass` on long-lived
+    /// threads instead.
     pub fn forward<'s>(
         &self,
         x: &[f32],
@@ -314,7 +481,7 @@ impl ShardedModel {
         assert!(batch >= 1, "batch must be >= 1");
         assert!(batch <= s.max_batch, "batch {batch} exceeds scratch capacity {}", s.max_batch);
         assert_eq!(x.len(), batch * self.d_in, "input size mismatch");
-        let depth = self.layers.len();
+        self.assert_scratch_fits(s, batch);
         let shards = self.plan.shards;
         let barrier = Barrier::new(shards);
         let (buf_a, buf_b) = (&s.a, &s.b);
@@ -322,115 +489,12 @@ impl ShardedModel {
             for (si, stage) in s.stage.iter_mut().enumerate() {
                 let barrier = &barrier;
                 scope.spawn(move || {
-                    for li in 0..depth {
-                        let layer = &self.layers[li][si];
-                        let w_full = self.widths[li];
-                        let r = self.plan.range(li, si);
-                        let sw = r.end - r.start;
-                        // same ping-pong parity as the replicated forward:
-                        // layer 0 writes `a`, layer 1 writes `b`, ...
-                        let (dst, src) = if li % 2 == 0 { (buf_a, buf_b) } else { (buf_b, buf_a) };
-                        // SAFETY: the barrier at the end of the previous
-                        // iteration ordered every shard's writes to `src`
-                        // before this read; nobody writes `src` this phase.
-                        let src: &[f32] = if li == 0 {
-                            x
-                        } else {
-                            unsafe { src.read(batch * layer.in_width()) }
-                        };
-                        if sw > 0 {
-                            let na = layer.kernel().out_width();
-                            let c = &mut stage[..batch * na];
-                            layer.kernel().forward(src, batch, c, threads);
-                            for bi in 0..batch {
-                                // SAFETY: shard si exclusively owns columns
-                                // r.start..r.end of every row this phase
-                                // (ShardPlan ranges are disjoint).
-                                let region = unsafe { dst.region_mut(bi * w_full + r.start, sw) };
-                                match layer.active_ids() {
-                                    None => region.copy_from_slice(&c[bi * na..(bi + 1) * na]),
-                                    Some(active) => {
-                                        region.fill(0.0);
-                                        for (j, &row) in active.iter().enumerate() {
-                                            region[row as usize] = c[bi * na + j];
-                                        }
-                                    }
-                                }
-                                layer.activation().apply(region);
-                            }
-                        }
-                        barrier.wait();
-                    }
+                    self.shard_pass(si, x, batch, stage, buf_a, buf_b, barrier, threads)
                 });
             }
         });
-        let final_buf = if (depth - 1) % 2 == 0 { &s.a } else { &s.b };
         // SAFETY: the scope joined every shard; we hold &mut scratch.
-        unsafe { final_buf.read(batch * self.out_width) }
-    }
-}
-
-/// Replicated-vs-sharded dispatch for the serving front-end: one enum so
-/// `frontend::Shared` stays non-generic while `--shards N` swaps the
-/// execution strategy under the same queue/cache/batching machinery.
-pub enum ServeEngine {
-    /// Every pool worker owns a private [`Scratch`] and runs whole
-    /// forwards (the PR-1/PR-2 behaviour).
-    Replicated(Arc<SparseModel>),
-    /// Each forward fans out over a shard team; typically paired with
-    /// `workers: 1` since the parallelism lives inside the request.
-    Sharded(Arc<ShardedModel>),
-}
-
-/// Matching per-worker workspace for a [`ServeEngine`].
-pub enum EngineScratch {
-    Replicated(Scratch),
-    Sharded(ShardedScratch),
-}
-
-impl ServeEngine {
-    pub fn in_width(&self) -> usize {
-        match self {
-            ServeEngine::Replicated(m) => m.in_width(),
-            ServeEngine::Sharded(m) => m.in_width(),
-        }
-    }
-
-    pub fn out_width(&self) -> usize {
-        match self {
-            ServeEngine::Replicated(m) => m.out_width(),
-            ServeEngine::Sharded(m) => m.out_width(),
-        }
-    }
-
-    pub fn describe(&self) -> String {
-        match self {
-            ServeEngine::Replicated(m) => m.describe(),
-            ServeEngine::Sharded(m) => m.describe(),
-        }
-    }
-
-    pub fn make_scratch(&self, max_batch: usize) -> EngineScratch {
-        match self {
-            ServeEngine::Replicated(m) => EngineScratch::Replicated(m.make_scratch(max_batch)),
-            ServeEngine::Sharded(m) => EngineScratch::Sharded(m.make_scratch(max_batch)),
-        }
-    }
-
-    pub fn forward<'s>(
-        &self,
-        x: &[f32],
-        batch: usize,
-        s: &'s mut EngineScratch,
-        threads: usize,
-    ) -> &'s [f32] {
-        match (self, s) {
-            (ServeEngine::Replicated(m), EngineScratch::Replicated(s)) => {
-                m.forward(x, batch, s, threads)
-            }
-            (ServeEngine::Sharded(m), EngineScratch::Sharded(s)) => m.forward(x, batch, s, threads),
-            _ => panic!("EngineScratch does not match its ServeEngine"),
-        }
+        unsafe { self.final_buf(s).read(batch * self.out_width) }
     }
 }
 
@@ -496,15 +560,36 @@ mod tests {
         let bias = vec![0.0f32; n];
         let layer = ModelLayer::from_weights(&w, &mask, &bias, Repr::Condensed, Activation::Identity);
         let model = SparseModel::new(vec![layer]).unwrap();
-        let plan = ShardPlan::balanced(&model, 2);
+        let plan = ShardPlan::balanced(&model, 2).unwrap();
         assert_eq!(plan.range(0, 0), 0..12);
         assert_eq!(plan.range(0, 1), 12..16);
         assert!((plan.imbalance(&model, 0) - 1.0).abs() < 1e-9, "perfectly even split");
     }
 
     #[test]
+    fn balanced_rejects_zero_and_oversized_shard_counts() {
+        let m = model3(Repr::Condensed, 0.25);
+        assert_eq!(ShardPlan::balanced(&m, 0), Err(ShardPlanError::ZeroShards));
+        // narrowest layer has 16 neurons: 17 shards cannot all own one
+        match ShardPlan::balanced(&m, 17) {
+            Err(ShardPlanError::ShardsExceedWidth { shards, layer, width }) => {
+                assert_eq!(shards, 17);
+                assert_eq!(layer, 2);
+                assert_eq!(width, 16);
+            }
+            other => panic!("expected ShardsExceedWidth, got {other:?}"),
+        }
+        // the error formats into a readable diagnostic (and converts into
+        // anyhow::Error through std::error::Error)
+        let msg = ShardPlanError::ShardsExceedWidth { shards: 17, layer: 2, width: 16 }.to_string();
+        assert!(msg.contains("17") && msg.contains("16"), "{msg}");
+        let e: anyhow::Error = ShardPlanError::ZeroShards.into();
+        assert!(format!("{e}").contains("at least one shard"));
+    }
+
+    #[test]
     fn sharded_matches_replicated_smoke() {
-        // full cross-product lives in rust/tests/shard_equivalence.rs
+        // full cross-product lives in rust/tests/engine_conformance.rs
         let m = model3(Repr::Condensed, 0.25);
         let sh = ShardedModel::from_model(&m, 3).unwrap();
         assert_eq!(sh.shards(), 3);
@@ -520,7 +605,10 @@ mod tests {
     }
 
     #[test]
-    fn more_shards_than_neurons_leaves_empty_shards() {
+    fn explicit_plan_with_empty_shards_still_agrees() {
+        // balanced() refuses shards > narrowest width, but an explicit
+        // plan may leave shards empty — the barrier protocol must still
+        // hold (empty shards skip compute but keep synchronizing)
         let spec = |n, act| LayerSpec {
             n,
             repr: Repr::Condensed,
@@ -530,7 +618,12 @@ mod tests {
         };
         let m = SparseModel::synth(8, &[spec(4, Activation::Relu), spec(2, Activation::Identity)], 2)
             .unwrap();
-        let sh = ShardedModel::from_model(&m, 5).unwrap();
+        // 5 shards over widths [4, 2]: trailing shards own nothing
+        let plan = ShardPlan {
+            shards: 5,
+            cuts: vec![vec![0, 1, 2, 3, 4, 4], vec![0, 1, 2, 2, 2, 2]],
+        };
+        let sh = ShardedModel::with_plan(&m, plan).unwrap();
         let x = vec![0.5f32; 8];
         let want = m.forward_vec(&x, 1, 1);
         let got = sh.forward_vec(&x, 1, 1);
@@ -538,10 +631,9 @@ mod tests {
             want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             got.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
         );
-        // narrowest layer (2 neurons) cannot fill 5 shards
         let widths: Vec<usize> = (0..5).map(|s| sh.plan().range(1, s).len()).collect();
         assert_eq!(widths.iter().sum::<usize>(), 2);
-        assert!(widths.iter().filter(|&&w| w == 0).count() >= 3);
+        assert_eq!(widths.iter().filter(|&&w| w == 0).count(), 3);
     }
 
     #[test]
@@ -559,32 +651,13 @@ mod tests {
     #[test]
     fn with_plan_rejects_malformed_cuts() {
         let m = model3(Repr::Csr, 0.0);
-        let good = ShardPlan::balanced(&m, 2);
+        let good = ShardPlan::balanced(&m, 2).unwrap();
         assert!(ShardedModel::with_plan(&m, good).is_ok());
-        let mut bad = ShardPlan::balanced(&m, 2);
+        let mut bad = ShardPlan::balanced(&m, 2).unwrap();
         bad.cuts[1][1] = 1000; // beyond the layer width
         assert!(ShardedModel::with_plan(&m, bad).is_err());
-        let mut short = ShardPlan::balanced(&m, 2);
+        let mut short = ShardPlan::balanced(&m, 2).unwrap();
         short.cuts.pop(); // wrong layer count
         assert!(ShardedModel::with_plan(&m, short).is_err());
-    }
-
-    #[test]
-    fn engine_dispatch_matches() {
-        let m = Arc::new(model3(Repr::Structured, 0.4));
-        let rep = ServeEngine::Replicated(Arc::clone(&m));
-        let sh = ServeEngine::Sharded(Arc::new(ShardedModel::from_model(&m, 2).unwrap()));
-        assert_eq!(rep.in_width(), sh.in_width());
-        assert_eq!(rep.out_width(), sh.out_width());
-        let mut rng = Rng::new(1);
-        let x: Vec<f32> = (0..2 * 64).map(|_| rng.normal_f32()).collect();
-        let mut sr = rep.make_scratch(2);
-        let mut ss = sh.make_scratch(2);
-        let a = rep.forward(&x, 2, &mut sr, 1).to_vec();
-        let b = sh.forward(&x, 2, &mut ss, 1).to_vec();
-        assert_eq!(
-            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
-        );
     }
 }

@@ -1,7 +1,7 @@
 //! srigl — CLI entrypoint for the SRigL reproduction (L3 coordinator).
 //!
 //! Subcommands:
-//!   exp <id> [flags]     run a paper table/figure harness (exp --list)
+//!   exp `<id>` [flags]   run a paper table/figure harness (exp --list)
 //!   train [flags]        train one configuration and report
 //!   serve [flags]        run the online-inference server benchmark
 //!   serve-model [flags]  serve a multi-layer sparse model via the worker pool
@@ -12,8 +12,8 @@ use anyhow::Result;
 
 use srigl::data;
 use srigl::exp;
-use srigl::inference::server::{serve, serve_model, Batching, ServeConfig, ServeMode};
-use srigl::inference::{frontend, Activation, FrontendConfig, LayerBundle, LayerSpec, Repr, SparseModel};
+use srigl::inference::server::{serve, serve_model, ServeConfig};
+use srigl::inference::{frontend, Activation, EngineBuilder, LayerBundle, LayerSpec, Repr, SparseModel};
 use srigl::runtime::manifest::ServeKnobs;
 use srigl::runtime::{Manifest, Runtime};
 use srigl::sparsity::Distribution;
@@ -41,7 +41,7 @@ USAGE:
               [--sparsity 0.9] [--workers 4] [--max-batch 8] [--requests N]
               [--threads T] [--gap-us G] [--stack NAME] [--adaptive]
               [--shards S] [--listen ADDR] [--queue-cap N] [--cache-cap N]
-              [--retry-ms M] [--fixed-batch]
+              [--egress-cap N] [--retry-ms M] [--fixed-batch]
   srigl check
   srigl list"
     );
@@ -177,10 +177,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let sparsity: f64 = args.parse_or("sparsity", 0.9)?;
     let n_requests: usize = args.parse_or("requests", 500)?;
     let threads: usize = args.parse_or("threads", 1)?;
-    let mode = match args.get("batched") {
-        Some(v) => ServeMode::Batched { max_batch: v.parse()? },
-        None => ServeMode::Online,
-    };
+    let builder = match args.get("batched") {
+        Some(v) => EngineBuilder::new().workers(1).fixed_batch(v.parse()?),
+        None => EngineBuilder::online(),
+    }
+    .threads(threads);
     let bundle = LayerBundle::synth(
         exp::timings::VIT_FF_N,
         exp::timings::VIT_FF_D,
@@ -195,11 +196,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for kernel in bundle.kernels() {
         let stats = serve(
             kernel,
+            &builder,
             &ServeConfig {
-                mode,
                 n_requests,
                 mean_interarrival: std::time::Duration::from_micros(args.parse_or("gap-us", 0u64)?),
-                threads,
                 seed: 1,
             },
         );
@@ -259,9 +259,25 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
     let adaptive = args.has("adaptive");
     let shards: usize = args.parse_or("shards", knobs.shards)?;
 
+    // One construction path for every serving surface: the stack's serve
+    // knobs seed the builder, CLI flags override.
+    let builder = EngineBuilder::from_knobs(&knobs)
+        .workers(workers)
+        .threads(threads)
+        .shards(shards)
+        .queue_capacity(args.parse_or("queue-cap", knobs.queue_capacity)?)
+        .cache_capacity(args.parse_or("cache-cap", knobs.cache_capacity)?)
+        .egress_capacity(args.parse_or("egress-cap", knobs.egress_capacity)?)
+        .retry_after_ms(args.parse_or("retry-ms", 2)?);
+
     if let Some(addr) = args.get("listen") {
         let adaptive = adaptive || (knobs.adaptive && !args.has("fixed-batch"));
-        return serve_listen(args, model, knobs, addr, workers, max_batch, adaptive, threads, shards);
+        let builder = if adaptive {
+            builder.adaptive(max_batch)
+        } else {
+            builder.fixed_batch(max_batch)
+        };
+        return serve_listen(model, addr, &builder);
     }
 
     if shards > 1 {
@@ -280,14 +296,15 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
             model.depth(),
             model.storage_bytes() / 1024,
         );
-        for (label, mode) in [
-            ("replicated", ServeMode::Pooled { workers: shards, max_batch }),
-            ("sharded", ServeMode::Sharded { shards, cap: max_batch }),
+        for (label, b) in [
+            ("replicated", builder.workers(shards).fixed_batch(max_batch).shards(1)),
+            ("sharded", builder.workers(1).fixed_batch(max_batch).shards(shards)),
         ] {
             let stats = serve_model(
                 &model,
-                &ServeConfig { mode, n_requests, mean_interarrival: gap, threads, seed: 1 },
-            );
+                &b,
+                &ServeConfig { n_requests, mean_interarrival: gap, seed: 1 },
+            )?;
             println!(
                 "  {label:<10} p50={:>8.1}us p99={:>8.1}us mean_batch={:.1} throughput={:.0} req/s",
                 stats.p50_us, stats.p99_us, stats.mean_batch, stats.throughput_rps
@@ -309,15 +326,13 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
     }
     let mut base_rps = 0.0;
     for &w in &worker_counts {
-        let mode = if adaptive {
-            ServeMode::Adaptive { workers: w, cap: max_batch }
+        let b = if adaptive {
+            builder.workers(w).adaptive(max_batch)
         } else {
-            ServeMode::Pooled { workers: w, max_batch }
+            builder.workers(w).fixed_batch(max_batch)
         };
-        let stats = serve_model(
-            &model,
-            &ServeConfig { mode, n_requests, mean_interarrival: gap, threads, seed: 1 },
-        );
+        let stats =
+            serve_model(&model, &b, &ServeConfig { n_requests, mean_interarrival: gap, seed: 1 })?;
         let speedup = if base_rps > 0.0 {
             format!("  ({:.2}x vs 1 worker)", stats.throughput_rps / base_rps)
         } else {
@@ -333,42 +348,29 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
 }
 
 /// `serve-model --listen ADDR`: run the socket front-end until killed.
-/// Manifest `serve` knobs (when `--stack`) provide defaults; flags win.
-#[allow(clippy::too_many_arguments)]
-fn serve_listen(
-    args: &Args,
-    model: SparseModel,
-    knobs: ServeKnobs,
-    addr: &str,
-    workers: usize,
-    max_batch: usize,
-    adaptive: bool,
-    threads: usize,
-    shards: usize,
-) -> Result<()> {
-    let cfg = FrontendConfig {
-        workers,
-        batching: if adaptive {
-            Batching::Adaptive { cap: max_batch }
-        } else {
-            Batching::Fixed(max_batch)
-        },
-        queue_capacity: args.parse_or("queue-cap", knobs.queue_capacity)?,
-        cache_capacity: args.parse_or("cache-cap", knobs.cache_capacity)?,
-        threads,
-        retry_after_ms: args.parse_or("retry-ms", 2)?,
-        shards,
-    };
+/// The builder (manifest knobs + CLI overrides) is the single source of
+/// serving configuration.
+fn serve_listen(model: SparseModel, addr: &str, builder: &EngineBuilder) -> Result<()> {
     println!("serving model: {}", model.describe());
-    let handle = frontend::spawn(std::sync::Arc::new(model), addr, cfg)?;
+    let handle = frontend::spawn(std::sync::Arc::new(model), addr, builder)?;
     println!(
-        "listening on {} — {} workers, {} batching (cap {max_batch}), queue cap {}, cache {} entries{}",
+        "listening on {} — {} workers, {} batching (cap {}), queue cap {}, cache {} entries, \
+         egress cap {}{}",
         handle.addr(),
-        cfg.workers,
-        if adaptive { "adaptive" } else { "fixed" },
-        cfg.queue_capacity,
-        cfg.cache_capacity,
-        if shards > 1 { format!(", {shards} shards/forward") } else { String::new() }
+        builder.workers,
+        match builder.batching {
+            srigl::inference::server::Batching::Adaptive { .. } => "adaptive",
+            srigl::inference::server::Batching::Fixed(_) => "fixed",
+        },
+        builder.max_batch(),
+        builder.queue_capacity,
+        builder.cache_capacity,
+        builder.egress_capacity,
+        if builder.is_sharded() {
+            format!(", {} shards/forward (persistent team)", builder.shards)
+        } else {
+            String::new()
+        }
     );
     println!("wire format: docs/WIRE.md; stop with Ctrl-C");
     handle.run_forever();

@@ -94,12 +94,16 @@ pub struct ServeKnobs {
     pub queue_capacity: usize,
     /// LRU result-cache entries; 0 disables the cache.
     pub cache_capacity: usize,
+    /// Per-connection egress-queue capacity (response frames): how many
+    /// computed responses a slow client may leave unread before overflow
+    /// converts further ones to Busy (docs/WIRE.md).
+    pub egress_capacity: usize,
     /// true: adaptive (EWMA-of-depth) batching up to `max_batch`;
     /// false: fixed `max_batch` per pop.
     pub adaptive: bool,
     pub max_batch: usize,
     /// Tensor-parallel shards per forward; `1` (default) = replicated
-    /// workers (`inference::shard` is engaged when > 1).
+    /// workers (a persistent shard team is engaged when > 1).
     pub shards: usize,
 }
 
@@ -108,6 +112,7 @@ impl Default for ServeKnobs {
         ServeKnobs {
             queue_capacity: 1024,
             cache_capacity: 1024,
+            egress_capacity: 64,
             adaptive: true,
             max_batch: 8,
             shards: 1,
@@ -232,6 +237,11 @@ fn parse_stack(name: &str, s: &Json) -> Result<StackEntry> {
                 .map(|v| v.as_usize())
                 .transpose()?
                 .unwrap_or(serve.cache_capacity),
+            egress_capacity: k
+                .opt("egress_capacity")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(serve.egress_capacity),
             adaptive: k.opt("adaptive").map(|v| v.as_bool()).transpose()?.unwrap_or(serve.adaptive),
             max_batch: k
                 .opt("max_batch")
@@ -323,8 +333,8 @@ mod tests {
         let src = r#"{
             "d_in": 16,
             "layers": [{"n": 8, "repr": "dense", "sparsity": 0.5}],
-            "serve": {"queue_capacity": 64, "cache_capacity": 0, "adaptive": false,
-                      "max_batch": 4, "shards": 4}
+            "serve": {"queue_capacity": 64, "cache_capacity": 0, "egress_capacity": 16,
+                      "adaptive": false, "max_batch": 4, "shards": 4}
         }"#;
         let e = parse_stack("s", &Json::parse(src).unwrap()).unwrap();
         assert_eq!(
@@ -332,6 +342,7 @@ mod tests {
             ServeKnobs {
                 queue_capacity: 64,
                 cache_capacity: 0,
+                egress_capacity: 16,
                 adaptive: false,
                 max_batch: 4,
                 shards: 4
@@ -351,6 +362,7 @@ mod tests {
         let d = ServeKnobs::default();
         assert_eq!(e.serve.queue_capacity, d.queue_capacity);
         assert_eq!(e.serve.cache_capacity, d.cache_capacity);
+        assert_eq!(e.serve.egress_capacity, d.egress_capacity, "absent egress knob -> default");
         assert_eq!(e.serve.adaptive, d.adaptive);
         assert_eq!(e.serve.shards, 1, "absent shards knob means replicated");
     }

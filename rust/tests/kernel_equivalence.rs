@@ -8,7 +8,8 @@
 //! limited only by f32 re-association.
 
 use srigl::inference::model::{Activation, LayerSpec, ModelLayer, Repr, SparseModel};
-use srigl::inference::server::{serve_model, ServeConfig, ServeMode};
+use srigl::inference::server::{serve_model, ServeConfig};
+use srigl::inference::EngineBuilder;
 use srigl::inference::{LayerBundle, LinearKernel};
 use srigl::sparsity::Mask;
 use srigl::tensor::Tensor;
@@ -170,14 +171,14 @@ fn pooled_serving_is_complete() {
     for (workers, threads) in [(1usize, 1usize), (4, 1), (2, 4)] {
         let stats = serve_model(
             &model,
+            &EngineBuilder::new().workers(workers).fixed_batch(8).threads(threads),
             &ServeConfig {
-                mode: ServeMode::Pooled { workers, max_batch: 8 },
                 n_requests: 256,
                 mean_interarrival: std::time::Duration::ZERO,
-                threads,
                 seed: 13,
             },
-        );
+        )
+        .unwrap();
         assert_eq!(stats.n, 256, "workers={workers} threads={threads}");
         assert!(stats.mean_batch >= 1.0);
         assert!(stats.p50_us.is_finite() && stats.p99_us >= stats.p50_us);

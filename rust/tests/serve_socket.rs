@@ -1,7 +1,9 @@
 //! Loopback integration tests for the network serving front-end: every
 //! socket-served output must equal the direct `SparseModel::forward`
 //! result bit-for-bit, backpressure must answer with a well-formed retry
-//! response, and the adaptive batcher must be visible in the stats.
+//! response, the adaptive batcher must be visible in the stats, and a
+//! slow client must stall only its own connection (egress-queue
+//! isolation).
 //!
 //! All tests bind 127.0.0.1 port 0 (kernel-assigned), so they are safe to
 //! run in parallel; CI still serializes them (`--test-threads=1`) out of
@@ -12,8 +14,7 @@ use std::io::Write;
 use std::net::TcpStream;
 use std::sync::Arc;
 
-use srigl::inference::server::Batching;
-use srigl::inference::{frontend, Activation, FrontendConfig, LayerSpec, Repr, SparseModel};
+use srigl::inference::{frontend, Activation, EngineBuilder, LayerSpec, Repr, SparseModel};
 use srigl::net::{
     read_response, write_request, Client, Reply, RequestFrame, ResponseBody, MAX_FRAME_BYTES,
 };
@@ -59,15 +60,12 @@ fn socket_outputs_match_direct_forward_across_clients() {
     let handle = frontend::spawn(
         Arc::clone(&model),
         "127.0.0.1:0",
-        FrontendConfig {
-            workers: 2,
-            batching: Batching::Adaptive { cap: 8 },
-            queue_capacity: 256,
-            cache_capacity: 64,
-            threads: 1,
-            retry_after_ms: 1,
-            shards: 1,
-        },
+        &EngineBuilder::new()
+            .workers(2)
+            .adaptive(8)
+            .queue_capacity(256)
+            .cache_capacity(64)
+            .retry_after_ms(1),
     )
     .unwrap();
     let addr = handle.addr();
@@ -98,6 +96,7 @@ fn socket_outputs_match_direct_forward_across_clients() {
         stats.rejected
     );
     assert_eq!(stats.bad_requests, 0);
+    assert_eq!(stats.dropped_responses, 0, "prompt readers never overflow their egress");
 }
 
 /// Sending the same payload twice must hit the result cache the second
@@ -108,15 +107,12 @@ fn socket_cache_hit_path_serves_identical_results() {
     let handle = frontend::spawn(
         Arc::clone(&model),
         "127.0.0.1:0",
-        FrontendConfig {
-            workers: 1,
-            batching: Batching::Fixed(4),
-            queue_capacity: 64,
-            cache_capacity: 32,
-            threads: 1,
-            retry_after_ms: 1,
-            shards: 1,
-        },
+        &EngineBuilder::new()
+            .workers(1)
+            .fixed_batch(4)
+            .queue_capacity(64)
+            .cache_capacity(32)
+            .retry_after_ms(1),
     )
     .unwrap();
     let mut client = Client::connect(handle.addr()).unwrap();
@@ -145,15 +141,12 @@ fn socket_backpressure_returns_busy_when_queue_full() {
     let handle = frontend::spawn(
         Arc::clone(&model),
         "127.0.0.1:0",
-        FrontendConfig {
-            workers: 0, // nothing drains: pushes 3 will find a full queue
-            batching: Batching::Fixed(4),
-            queue_capacity: 2,
-            cache_capacity: 0,
-            threads: 1,
-            retry_after_ms: 7,
-            shards: 1,
-        },
+        &EngineBuilder::new()
+            .workers(0) // nothing drains: push 3 will find a full queue
+            .fixed_batch(4)
+            .queue_capacity(2)
+            .cache_capacity(0)
+            .retry_after_ms(7),
     )
     .unwrap();
     let mut stream = TcpStream::connect(handle.addr()).unwrap();
@@ -203,15 +196,16 @@ fn socket_adaptive_batch_sizes_vary_with_load() {
     let handle = frontend::spawn(
         Arc::clone(&model),
         "127.0.0.1:0",
-        FrontendConfig {
-            workers: 1,
-            batching: Batching::Adaptive { cap: 8 },
-            queue_capacity: 512,
-            cache_capacity: 0,
-            threads: 1,
-            retry_after_ms: 1,
-            shards: 1,
-        },
+        &EngineBuilder::new()
+            .workers(1)
+            .adaptive(8)
+            .queue_capacity(512)
+            .cache_capacity(0)
+            // the flood below pipelines 300 responses against a client
+            // that reads them all afterwards: give the egress room so
+            // none convert to Busy while the client is still writing
+            .egress_capacity(512)
+            .retry_after_ms(1),
     )
     .unwrap();
     let addr = handle.addr();
@@ -264,6 +258,113 @@ fn socket_adaptive_batch_sizes_vary_with_load() {
     );
 }
 
+/// A slow client (pipelines a flood, then reads nothing) must not stall
+/// other connections: pool workers push to the slow connection's bounded
+/// egress queue instead of blocking on its socket, so a concurrent
+/// well-behaved client keeps getting served by the SAME single worker.
+/// Overflowed responses surface as Busy frames and the dropped-responses
+/// counter.
+#[test]
+fn socket_slow_client_blocks_only_its_own_connection() {
+    // Wide output (4096 f32 = 16 KiB per response frame): a 300-deep
+    // unread flood is ~4.8 MiB of responses, far beyond what kernel
+    // socket buffers can absorb, so the cap-2 egress queue must overflow
+    // no matter how the host tunes its buffers.
+    let d_out = 4096usize;
+    let spec_narrow = LayerSpec {
+        n: 48,
+        repr: Repr::Condensed,
+        sparsity: 0.9,
+        ablated_frac: 0.25,
+        activation: Activation::Relu,
+    };
+    let spec_wide = LayerSpec {
+        n: d_out,
+        repr: Repr::Dense,
+        sparsity: 0.9,
+        ablated_frac: 0.0,
+        activation: Activation::Identity,
+    };
+    let model = Arc::new(SparseModel::synth(D_IN, &[spec_narrow, spec_wide], 31).unwrap());
+    let handle = frontend::spawn(
+        Arc::clone(&model),
+        "127.0.0.1:0",
+        &EngineBuilder::new()
+            .workers(1) // a single worker: if it blocked on the slow
+            // client's socket, the fast client below would starve
+            .fixed_batch(4)
+            .queue_capacity(512) // the whole flood fits: no ingress Busy
+            .cache_capacity(0)
+            .egress_capacity(2) // tiny egress: the flood must overflow it
+            .retry_after_ms(3),
+    )
+    .unwrap();
+    let addr = handle.addr();
+
+    // slow client: pipeline the flood, read nothing yet. The worker parks
+    // at most 2 computed responses in the egress (plus whatever the
+    // kernel buffered); the rest convert to Busy or drop — without ever
+    // blocking the worker.
+    let n_slow = 300usize;
+    let mut slow = TcpStream::connect(addr).unwrap();
+    let x = vec![0.25f32; D_IN];
+    for id in 1..=n_slow as u64 {
+        write_request(&mut slow, &RequestFrame { id, rows: 1, payload: x.clone() }).unwrap();
+    }
+    slow.flush().unwrap();
+
+    // fast client: must make steady progress while the flood is being
+    // worked through by the same single worker.
+    let mut fast = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(0x51);
+    for req in 0..20usize {
+        let xf: Vec<f32> = (0..D_IN).map(|_| rng.normal_f32()).collect();
+        let got = fast.infer_retrying(1, &xf, 200).expect("fast client served");
+        assert_bits_eq(&got, &model.forward_vec(&xf, 1, 1), &format!("fast req {req}"));
+    }
+
+    // now drain the slow connection: whatever arrives must be well-formed
+    // (Output bit-exact or Busy), until the server's answers run out
+    slow.set_read_timeout(Some(std::time::Duration::from_millis(500))).unwrap();
+    let want = model.forward_vec(&x, 1, 1);
+    let mut outputs = 0usize;
+    let mut busies = 0usize;
+    loop {
+        match read_response(&mut slow) {
+            Ok(Some(resp)) => match resp.body {
+                ResponseBody::Output { rows, data } => {
+                    assert_eq!(rows, 1);
+                    assert_bits_eq(&data, &want, "slow client output");
+                    outputs += 1;
+                }
+                ResponseBody::Busy { .. } => busies += 1,
+                ResponseBody::Error(e) => panic!("unexpected error: {e}"),
+            },
+            _ => break, // timeout or EOF: nothing more is coming
+        }
+    }
+    assert!(outputs >= 1, "some computed responses reach the slow client");
+    drop(slow);
+    drop(fast);
+
+    let stats = handle.stop();
+    assert_eq!(stats.connections, 2);
+    assert_eq!(stats.rejected, 0, "the flood fits the ingress queue");
+    assert_eq!(stats.served, n_slow + 20, "every request was computed — none stalled a worker");
+    assert!(
+        stats.dropped_responses > 0,
+        "a cap-2 egress under a {n_slow}-deep unread 16KiB-response flood must overflow \
+         (dropped_responses = {})",
+        stats.dropped_responses
+    );
+    // the Busy frames the slow client saw are a subset of the recorded
+    // overflow events (the rest were dropped past the headroom)
+    assert!(busies <= stats.dropped_responses, "busies={busies} <= dropped");
+    // every slow-connection response is accounted for: delivered Outputs
+    // plus overflow events (Busy conversions + silent drops) = requests
+    assert_eq!(outputs + stats.dropped_responses, n_slow);
+}
+
 /// Malformed requests are answered with Error and the connection stays
 /// usable for well-formed follow-ups.
 #[test]
@@ -272,15 +373,12 @@ fn socket_bad_request_answered_but_connection_survives() {
     let handle = frontend::spawn(
         Arc::clone(&model),
         "127.0.0.1:0",
-        FrontendConfig {
-            workers: 1,
-            batching: Batching::Fixed(4),
-            queue_capacity: 64,
-            cache_capacity: 0,
-            threads: 1,
-            retry_after_ms: 1,
-            shards: 1,
-        },
+        &EngineBuilder::new()
+            .workers(1)
+            .fixed_batch(4)
+            .queue_capacity(64)
+            .cache_capacity(0)
+            .retry_after_ms(1),
     )
     .unwrap();
     let mut stream = TcpStream::connect(handle.addr()).unwrap();
@@ -331,15 +429,12 @@ fn socket_framing_error_answered_and_counted() {
     let handle = frontend::spawn(
         Arc::clone(&model),
         "127.0.0.1:0",
-        FrontendConfig {
-            workers: 1,
-            batching: Batching::Fixed(4),
-            queue_capacity: 64,
-            cache_capacity: 0,
-            threads: 1,
-            retry_after_ms: 1,
-            shards: 1,
-        },
+        &EngineBuilder::new()
+            .workers(1)
+            .fixed_batch(4)
+            .queue_capacity(64)
+            .cache_capacity(0)
+            .retry_after_ms(1),
     )
     .unwrap();
     let mut stream = TcpStream::connect(handle.addr()).unwrap();
@@ -365,24 +460,23 @@ fn socket_framing_error_answered_and_counted() {
     assert_eq!(stats.served, 0);
 }
 
-/// `shards: 2` swaps the execution engine under the same socket front-end:
-/// responses must still be bit-for-bit identical to the replicated direct
-/// forward (the shard team computes the same arithmetic per neuron).
+/// `shards: 2` swaps in the persistent shard team under the same socket
+/// front-end: responses must still be bit-for-bit identical to the
+/// replicated direct forward (the team computes the same arithmetic per
+/// neuron, on the same long-lived threads for every request).
 #[test]
 fn socket_sharded_engine_matches_replicated_bits() {
     let model = test_model(Repr::Condensed);
     let handle = frontend::spawn(
         Arc::clone(&model),
         "127.0.0.1:0",
-        FrontendConfig {
-            workers: 1, // parallelism lives inside the shard team
-            batching: Batching::Fixed(4),
-            queue_capacity: 64,
-            cache_capacity: 16,
-            threads: 1,
-            retry_after_ms: 1,
-            shards: 2,
-        },
+        &EngineBuilder::new()
+            .workers(1) // parallelism lives inside the shard team
+            .fixed_batch(4)
+            .queue_capacity(64)
+            .cache_capacity(16)
+            .retry_after_ms(1)
+            .shards(2),
     )
     .unwrap();
     let mut client = Client::connect(handle.addr()).unwrap();
@@ -406,15 +500,12 @@ fn socket_multi_row_request_roundtrips() {
     let handle = frontend::spawn(
         Arc::clone(&model),
         "127.0.0.1:0",
-        FrontendConfig {
-            workers: 2,
-            batching: Batching::Adaptive { cap: 8 },
-            queue_capacity: 64,
-            cache_capacity: 16,
-            threads: 1,
-            retry_after_ms: 1,
-            shards: 1,
-        },
+        &EngineBuilder::new()
+            .workers(2)
+            .adaptive(8)
+            .queue_capacity(64)
+            .cache_capacity(16)
+            .retry_after_ms(1),
     )
     .unwrap();
     let mut client = Client::connect(handle.addr()).unwrap();
