@@ -1,0 +1,110 @@
+//! Kernel-forward sweep: dense vs CSR vs condensed (scalar-forced and
+//! auto-dispatched) vs batch-tiled condensed, across batch {1, 8, 256}
+//! and threads {1, 4}, on the Fig. 4 ViT-FF layer geometry (768x3072 @
+//! 90% sparse, 10% neurons ablated).
+//!
+//! `condensed[scalar]` pins the pre-kernels/ state of the repo (the
+//! 4-way-unrolled scalar gather-MAC), so the JSON line shows exactly what
+//! the runtime-dispatched SIMD + tiled layout buy on each machine. The
+//! final line is a machine-readable `{"bench":...}` summary (util::json)
+//! including the selected kernel kind, so CI and future PRs can track
+//! kernel selection and the perf trajectory across machines.
+
+use srigl::bench::{bench, black_box, Measurement};
+use srigl::inference::{CondensedLayer, LayerBundle, LinearKernel};
+use srigl::kernels::{self, KernelKind, Microkernel};
+use srigl::util::json::{arr, num, obj, s, Json};
+use std::time::Duration;
+
+fn main() {
+    let (n, d, sparsity, ablated) = (768usize, 3072usize, 0.9, 0.1);
+    let bundle = LayerBundle::synth(n, d, sparsity, ablated, 42);
+    let mut condensed_scalar =
+        CondensedLayer::new(&bundle.w, &bundle.mask, &bundle.bias).expect("constant fan-in");
+    condensed_scalar.mk = Microkernel::of(KernelKind::Scalar);
+
+    let kernels_under_test: Vec<(&str, &dyn LinearKernel)> = vec![
+        ("dense", &bundle.dense),
+        ("csr", &bundle.csr_unstructured),
+        ("condensed[scalar]", &condensed_scalar),
+        ("condensed", &bundle.condensed),
+        ("condensed-tiled", &bundle.condensed_tiled),
+    ];
+
+    println!(
+        "kernel_forward — {n}x{d} @ {:.0}% sparsity, {:.0}% ablated, dispatch {}",
+        sparsity * 100.0,
+        ablated * 100.0,
+        kernels::describe_selection()
+    );
+    println!(
+        "{:>18} {:>6} {:>8} {:>12} {:>10} {:>9}",
+        "kernel", "batch", "threads", "median (us)", "GFLOP/s", "vs scalar"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rng = srigl::util::rng::Rng::new(7);
+    // (batch=256, threads=1) medians for the acceptance check below
+    let mut scalar_256_us = 0.0f64;
+    let mut tiled_256_us = 0.0f64;
+    for &batch in &[1usize, 8, 256] {
+        let x: Vec<f32> = (0..batch * d).map(|_| rng.normal_f32()).collect();
+        for &threads in &[1usize, 4] {
+            // per-(batch, threads) scalar baseline for the speedup column
+            let mut scalar_us = 0.0f64;
+            for (name, kernel) in &kernels_under_test {
+                let mut out = vec![0f32; batch * kernel.out_width()];
+                let m: Measurement = bench(name, 5, Duration::from_millis(40), || {
+                    kernel.forward(black_box(&x), batch, &mut out, threads);
+                    black_box(&out);
+                });
+                let med_us = m.median_us();
+                // 2 FLOPs per stored weight per example (compact forms are
+                // credited only for rows they actually compute)
+                let stored: usize = kernel.row_weights(n).iter().sum();
+                let gflops = 2.0 * stored as f64 * batch as f64 / m.median_s().max(1e-12) / 1e9;
+                if *name == "condensed[scalar]" {
+                    scalar_us = med_us;
+                    if batch == 256 && threads == 1 {
+                        scalar_256_us = med_us;
+                    }
+                }
+                if *name == "condensed-tiled" && batch == 256 && threads == 1 {
+                    tiled_256_us = med_us;
+                }
+                let speed = if scalar_us > 0.0 && *name != "condensed[scalar]" {
+                    format!("{:.2}x", scalar_us / med_us)
+                } else {
+                    "-".into()
+                };
+                println!(
+                    "{name:>18} {batch:>6} {threads:>8} {med_us:>12.1} {gflops:>10.2} {speed:>9}"
+                );
+                rows.push(obj(vec![
+                    ("kernel", s(name)),
+                    ("batch", num(batch as f64)),
+                    ("threads", num(threads as f64)),
+                    ("median_us", num(med_us)),
+                    ("gflops", num(gflops)),
+                ]));
+            }
+        }
+    }
+    if scalar_256_us > 0.0 && tiled_256_us > 0.0 {
+        println!(
+            "\nbatch-256 headline: condensed-tiled {:.2}x vs the scalar condensed kernel",
+            scalar_256_us / tiled_256_us
+        );
+    }
+    let summary = obj(vec![
+        ("bench", s("kernel_forward")),
+        ("kernel", s(kernels::selected().name())),
+        ("tile", num(kernels::TILE as f64)),
+        ("n", num(n as f64)),
+        ("d", num(d as f64)),
+        ("sparsity", num(sparsity)),
+        ("ablated_frac", num(ablated)),
+        ("rows", arr(rows)),
+    ]);
+    println!("{}", summary.to_string());
+}

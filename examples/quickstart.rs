@@ -59,7 +59,7 @@ fn main() -> Result<()> {
 
     // 5) Export layer 0 in the condensed representation (Algorithm 1) and
     //    time it against the dense baseline in the native engine.
-    let cond = trainer.export_condensed(0);
+    let cond = trainer.export_condensed(0)?;
     println!(
         "condensed layer 0: {} active neurons x k={} ({} bytes vs {} dense)",
         cond.n_active(),
@@ -71,7 +71,7 @@ fn main() -> Result<()> {
     let bias = vec![0f32; cond.n_orig];
     let mask = cond.to_mask();
     let dense = DenseLayer::new(&dense_w, bias.clone());
-    let condensed = CondensedLayer::new(&dense_w, &mask, &bias);
+    let condensed = CondensedLayer::new(&dense_w, &mask, &bias)?;
 
     let x: Vec<f32> = (0..cond.d).map(|i| (i as f32 * 0.1).sin()).collect();
     let mut out_d = vec![0f32; dense.out_width()];

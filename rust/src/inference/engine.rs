@@ -70,7 +70,10 @@ pub trait Engine: Send + Sync {
     fn in_width(&self) -> usize;
     fn out_width(&self) -> usize;
 
-    /// Human-readable topology/strategy line for logs and banners.
+    /// Human-readable topology/strategy line for logs and banners —
+    /// includes the process-wide microkernel selection
+    /// ([`crate::kernels::describe_selection`]) so served-bench JSON and
+    /// startup banners record which kernel actually ran.
     fn describe(&self) -> String;
 
     /// Bytes of model storage behind this engine (weights+indices+bias).
@@ -227,7 +230,13 @@ impl Engine for KernelEngine<'_> {
     }
 
     fn describe(&self) -> String {
-        format!("{} {}x{}", self.kernel.name(), self.kernel.out_width(), self.kernel.in_width())
+        format!(
+            "{} {}x{} | {}",
+            self.kernel.name(),
+            self.kernel.out_width(),
+            self.kernel.in_width(),
+            crate::kernels::describe_selection()
+        )
     }
 
     fn storage_bytes(&self) -> usize {

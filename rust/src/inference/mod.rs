@@ -1,4 +1,4 @@
-//! Native CPU inference engine — the four linear-layer representations the
+//! Native CPU inference engine — the linear-layer representations the
 //! paper benchmarks against each other (Fig. 4, Appendices I/J/K):
 //!
 //! * [`DenseLayer`]      — dense GEMM baseline;
@@ -7,11 +7,24 @@
 //!                         the surviving rows;
 //! * [`CondensedLayer`]  — Algorithm 1: exploits ablation *and* constant
 //!                         fan-in via the (n_active × k) value/index
-//!                         gather-MAC.
+//!                         gather-MAC;
+//! * [`CondensedTiledLayer`] — the same condensed semantics on the
+//!                         batch-tiled interleaved layout: at batch >=
+//!                         [`crate::kernels::TILE`] the input tile is
+//!                         transposed once and every stored weight costs
+//!                         one contiguous 8-wide load + broadcast-MAC
+//!                         instead of `TILE` indexed loads.
 //!
-//! All kernels share a threading scheme (`threads` parameter — the paper
-//! sweeps 1/4/8 CPU threads in Figs. 18-20): batch-1 splits the single
-//! output row across threads; batched splits batch rows.
+//! The arithmetic inner loops live in [`crate::kernels`] (runtime-
+//! dispatched scalar / portable-SIMD / AVX2+FMA microkernels); each layer
+//! carries a copyable [`Microkernel`] handle stamped at construction and
+//! preserved through [`LinearKernel::slice_rows`], so a model and all of
+//! its tensor-parallel shard slices always run the same kernel kind.
+//! The shared threading scheme (`threads` parameter — the paper sweeps
+//! 1/4/8 CPU threads in Figs. 18-20) also lives there
+//! ([`crate::kernels::forward_rows`]): batch-1 splits the single output
+//! row across threads; batched splits batch rows (tile-aligned for the
+//! tiled layer).
 
 pub mod engine;
 pub mod frontend;
@@ -24,10 +37,10 @@ pub use frontend::{FrontendHandle, FrontendStats};
 pub use model::{Activation, LayerSpec, ModelLayer, Repr, Scratch, SparseModel};
 pub use shard::{ShardPlan, ShardPlanError, ShardedModel, ShardedScratch};
 
-use crate::sparsity::{Condensed, Csr, Mask};
+use crate::kernels::{self, Microkernel};
+use crate::sparsity::{Condensed, CondensedError, CondensedTiled, Csr, Mask};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
-use crate::util::threadpool::par_rows_mut;
 
 /// A linear layer representation that can run a batched forward pass.
 pub trait LinearKernel: Send + Sync {
@@ -51,43 +64,18 @@ pub trait LinearKernel: Send + Sync {
     /// range `lo..hi` — the tensor-parallel sharding primitive. The paper's
     /// constant fan-in makes every contiguous neuron range of a condensed
     /// kernel itself a valid condensed kernel (each output neuron owns
-    /// exactly k weights), and the same holds trivially for the other three
-    /// representations. The slice copies the underlying rows verbatim, so a
-    /// sliced forward is bit-for-bit identical to the corresponding rows of
-    /// the unsliced forward.
+    /// exactly k weights), and the same holds trivially for the other
+    /// representations — including the batch-tiled one, whose tiling runs
+    /// over the *batch* dimension and is untouched by a neuron-range cut.
+    /// The slice copies the underlying rows verbatim (and inherits the
+    /// microkernel handle), so a sliced forward is bit-for-bit identical
+    /// to the corresponding rows of the unsliced forward.
     fn slice_rows(&self, lo: usize, hi: usize) -> Box<dyn LinearKernel>;
     /// Stored weights per full logical output neuron (len `full_width`) —
     /// the [`shard::ShardPlan`] balancing costs. Ablated neurons cost 0 in
     /// the compact forms and their CSR rows are empty, so balancing by
     /// these weights (not by neuron count) keeps shard compute even.
     fn row_weights(&self, full_width: usize) -> Vec<usize>;
-}
-
-/// Split a single output row into per-thread contiguous chunks (batch-1
-/// fast path; avoids the useless spawn when threads == 1).
-fn par_single_row<F>(out: &mut [f32], threads: usize, f: F)
-where
-    F: Fn(usize, &mut [f32]) + Sync, // (start_col, chunk)
-{
-    let n = out.len();
-    let threads = threads.max(1).min(n.max(1));
-    if threads == 1 {
-        f(0, out);
-        return;
-    }
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        let mut rest = out;
-        let mut start = 0usize;
-        while !rest.is_empty() {
-            let take = chunk.min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            let f = &f;
-            s.spawn(move || f(start, head));
-            start += take;
-            rest = tail;
-        }
-    });
 }
 
 // ---------------------------------------------------------------------------
@@ -100,34 +88,16 @@ pub struct DenseLayer {
     /// (n, d) row-major.
     pub w: Vec<f32>,
     pub bias: Vec<f32>,
+    /// Microkernel selection (inherited by slices; see [`crate::kernels`]).
+    pub mk: Microkernel,
 }
 
 impl DenseLayer {
     pub fn new(w: &Tensor, bias: Vec<f32>) -> DenseLayer {
         let (n, d) = w.neuron_view();
         assert_eq!(bias.len(), n);
-        DenseLayer { n, d, w: w.data.clone(), bias }
+        DenseLayer { n, d, w: w.data.clone(), bias, mk: Microkernel::auto() }
     }
-}
-
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    // 4-way unrolled accumulators: breaks the FP add dependency chain so
-    // the compiler can keep multiple FMAs in flight (see §Perf).
-    let mut acc = [0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for j in chunks * 4..a.len() {
-        s += a[j] * b[j];
-    }
-    s
 }
 
 impl LinearKernel for DenseLayer {
@@ -154,6 +124,7 @@ impl LinearKernel for DenseLayer {
             d: self.d,
             w: self.w[lo * self.d..hi * self.d].to_vec(),
             bias: self.bias[lo..hi].to_vec(),
+            mk: self.mk,
         })
     }
 
@@ -166,21 +137,10 @@ impl LinearKernel for DenseLayer {
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
         debug_assert_eq!(x.len(), batch * self.d);
         debug_assert_eq!(out.len(), batch * self.n);
-        if batch == 1 {
-            par_single_row(out, threads, |start, chunk| {
-                for (i, o) in chunk.iter_mut().enumerate() {
-                    let r = start + i;
-                    *o = dot(&self.w[r * self.d..(r + 1) * self.d], x) + self.bias[r];
-                }
-            });
-        } else {
-            par_rows_mut(out, self.n, threads, |b, row| {
-                let xb = &x[b * self.d..(b + 1) * self.d];
-                for (r, o) in row.iter_mut().enumerate() {
-                    *o = dot(&self.w[r * self.d..(r + 1) * self.d], xb) + self.bias[r];
-                }
-            });
-        }
+        let mk = self.mk;
+        kernels::forward_rows(x, self.d, batch, out, threads, |xb, r| {
+            mk.dot(&self.w[r * self.d..(r + 1) * self.d], xb) + self.bias[r]
+        });
     }
 }
 
@@ -191,6 +151,8 @@ impl LinearKernel for DenseLayer {
 pub struct CsrLayer {
     pub csr: Csr,
     pub bias: Vec<f32>,
+    /// Microkernel selection (inherited by slices; see [`crate::kernels`]).
+    pub mk: Microkernel,
 }
 
 impl CsrLayer {
@@ -200,7 +162,7 @@ impl CsrLayer {
         // Same once-validated invariant as CondensedLayer (§Perf iter. 2):
         // column indices in range, so the gather can skip bounds checks.
         assert!(csr.indices.iter().all(|&j| (j as usize) < csr.cols));
-        CsrLayer { csr, bias }
+        CsrLayer { csr, bias, mk: Microkernel::auto() }
     }
 }
 
@@ -231,7 +193,7 @@ impl LinearKernel for CsrLayer {
             indices: self.csr.indices[base as usize..self.csr.indptr[hi] as usize].to_vec(),
             values: self.csr.values[base as usize..self.csr.indptr[hi] as usize].to_vec(),
         };
-        Box::new(CsrLayer { csr, bias: self.bias[lo..hi].to_vec() })
+        Box::new(CsrLayer { csr, bias: self.bias[lo..hi].to_vec(), mk: self.mk })
     }
 
     fn row_weights(&self, full_width: usize) -> Vec<usize> {
@@ -244,46 +206,17 @@ impl LinearKernel for CsrLayer {
     }
 
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
-        let (n, d) = (self.csr.rows, self.csr.cols);
-        debug_assert_eq!(out.len(), batch * n);
-        let row_kernel = |xb: &[f32], r: usize| -> f32 {
+        debug_assert_eq!(out.len(), batch * self.csr.rows);
+        let mk = self.mk;
+        kernels::forward_rows(x, self.csr.cols, batch, out, threads, |xb, r| {
             let lo = self.csr.indptr[r] as usize;
             let hi = self.csr.indptr[r + 1] as usize;
-            let vals = &self.csr.values[lo..hi];
-            let idx = &self.csr.indices[lo..hi];
-            // 4-way unrolled, bounds-check-free gather (matched to the
-            // condensed kernel so the Fig. 4 comparison is fair — §Perf).
-            let mut acc = [0f32; 4];
-            let mut vi = vals.chunks_exact(4);
-            let mut ii = idx.chunks_exact(4);
-            for (v4, i4) in (&mut vi).zip(&mut ii) {
-                unsafe {
-                    acc[0] += v4[0] * *xb.get_unchecked(i4[0] as usize);
-                    acc[1] += v4[1] * *xb.get_unchecked(i4[1] as usize);
-                    acc[2] += v4[2] * *xb.get_unchecked(i4[2] as usize);
-                    acc[3] += v4[3] * *xb.get_unchecked(i4[3] as usize);
-                }
-            }
-            let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-            for (v, i) in vi.remainder().iter().zip(ii.remainder()) {
-                s += v * unsafe { *xb.get_unchecked(*i as usize) };
-            }
+            // SAFETY: column indices validated `< cols` once in `new`.
+            let s = unsafe {
+                mk.gather(&self.csr.values[lo..hi], &self.csr.indices[lo..hi], xb)
+            };
             s + self.bias[r]
-        };
-        if batch == 1 {
-            par_single_row(out, threads, |start, chunk| {
-                for (i, o) in chunk.iter_mut().enumerate() {
-                    *o = row_kernel(x, start + i);
-                }
-            });
-        } else {
-            par_rows_mut(out, n, threads, |b, row| {
-                let xb = &x[b * d..(b + 1) * d];
-                for (r, o) in row.iter_mut().enumerate() {
-                    *o = row_kernel(xb, r);
-                }
-            });
-        }
+        });
     }
 }
 
@@ -301,6 +234,8 @@ pub struct StructuredLayer {
     pub w: Vec<f32>,
     pub bias: Vec<f32>,
     pub active: Vec<u32>,
+    /// Microkernel selection (inherited by slices; see [`crate::kernels`]).
+    pub mk: Microkernel,
 }
 
 impl StructuredLayer {
@@ -321,7 +256,15 @@ impl StructuredLayer {
                 active.push(r as u32);
             }
         }
-        StructuredLayer { n_active: active.len(), n_orig: n, d, w: packed, bias: pbias, active }
+        StructuredLayer {
+            n_active: active.len(),
+            n_orig: n,
+            d,
+            w: packed,
+            bias: pbias,
+            active,
+            mk: Microkernel::auto(),
+        }
     }
 }
 
@@ -359,6 +302,7 @@ impl LinearKernel for StructuredLayer {
             w: self.w[p * self.d..q * self.d].to_vec(),
             bias: self.bias[p..q].to_vec(),
             active: self.active[p..q].iter().map(|&a| a - lo as u32).collect(),
+            mk: self.mk,
         })
     }
 
@@ -373,21 +317,10 @@ impl LinearKernel for StructuredLayer {
 
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
         debug_assert_eq!(out.len(), batch * self.n_active);
-        if batch == 1 {
-            par_single_row(out, threads, |start, chunk| {
-                for (i, o) in chunk.iter_mut().enumerate() {
-                    let r = start + i;
-                    *o = dot(&self.w[r * self.d..(r + 1) * self.d], x) + self.bias[r];
-                }
-            });
-        } else {
-            par_rows_mut(out, self.n_active, threads, |b, row| {
-                let xb = &x[b * self.d..(b + 1) * self.d];
-                for (r, o) in row.iter_mut().enumerate() {
-                    *o = dot(&self.w[r * self.d..(r + 1) * self.d], xb) + self.bias[r];
-                }
-            });
-        }
+        let mk = self.mk;
+        kernels::forward_rows(x, self.d, batch, out, threads, |xb, r| {
+            mk.dot(&self.w[r * self.d..(r + 1) * self.d], xb) + self.bias[r]
+        });
     }
 }
 
@@ -398,16 +331,22 @@ impl LinearKernel for StructuredLayer {
 pub struct CondensedLayer {
     pub c: Condensed,
     pub bias: Vec<f32>, // packed to active neurons
+    /// Microkernel selection (inherited by slices; see [`crate::kernels`]).
+    pub mk: Microkernel,
 }
 
 impl CondensedLayer {
-    pub fn new(w: &Tensor, mask: &Mask, bias: &[f32]) -> CondensedLayer {
-        let c = Condensed::from_masked(w, mask);
+    /// Build from weights + constant-fan-in mask. Fails with a typed
+    /// [`CondensedError`] (fan-in disagreement, shape mismatch) instead of
+    /// panicking — a bad manifest must be a startup error, not a worker
+    /// crash.
+    pub fn new(w: &Tensor, mask: &Mask, bias: &[f32]) -> Result<CondensedLayer, CondensedError> {
+        let c = Condensed::from_masked(w, mask)?;
         // Validate the index invariant once so the forward pass can gather
         // without per-element bounds checks (§Perf iteration 1).
         assert!(c.idx.iter().all(|&j| (j as usize) < c.d), "index out of range");
         let pbias = c.active.iter().map(|&r| bias[r as usize]).collect();
-        CondensedLayer { c, bias: pbias }
+        Ok(CondensedLayer { c, bias: pbias, mk: Microkernel::auto() })
     }
 }
 
@@ -445,7 +384,7 @@ impl LinearKernel for CondensedLayer {
             values: self.c.values[p * k..q * k].to_vec(),
             idx: self.c.idx[p * k..q * k].to_vec(),
         };
-        Box::new(CondensedLayer { c, bias: self.bias[p..q].to_vec() })
+        Box::new(CondensedLayer { c, bias: self.bias[p..q].to_vec(), mk: self.mk })
     }
 
     fn row_weights(&self, full_width: usize) -> Vec<usize> {
@@ -459,47 +398,112 @@ impl LinearKernel for CondensedLayer {
 
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
         let k = self.c.k;
-        let n = self.c.n_active();
-        let d = self.c.d;
-        debug_assert_eq!(out.len(), batch * n);
-        let row_kernel = |xb: &[f32], r: usize| -> f32 {
-            let vals = &self.c.values[r * k..(r + 1) * k];
-            let idx = &self.c.idx[r * k..(r + 1) * k];
-            // 4-way unrolled gather-MAC (paper Algorithm 1 inner loop).
-            // Indices are validated once in `new`, so the gather skips
-            // bounds checks; 4 accumulators break the FP dependency chain
-            // (§Perf iteration 1: 2-way safe -> 4-way unchecked).
-            let mut acc = [0f32; 4];
-            let mut vi = vals.chunks_exact(4);
-            let mut ii = idx.chunks_exact(4);
-            for (v4, i4) in (&mut vi).zip(&mut ii) {
-                unsafe {
-                    acc[0] += v4[0] * *xb.get_unchecked(i4[0] as usize);
-                    acc[1] += v4[1] * *xb.get_unchecked(i4[1] as usize);
-                    acc[2] += v4[2] * *xb.get_unchecked(i4[2] as usize);
-                    acc[3] += v4[3] * *xb.get_unchecked(i4[3] as usize);
-                }
-            }
-            let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-            for (v, i) in vi.remainder().iter().zip(ii.remainder()) {
-                s += v * unsafe { *xb.get_unchecked(*i as usize) };
-            }
+        debug_assert_eq!(out.len(), batch * self.c.n_active());
+        let mk = self.mk;
+        kernels::forward_rows(x, self.c.d, batch, out, threads, |xb, r| {
+            // SAFETY: indices validated `< d` once in `new` — the gather
+            // (paper Algorithm 1 inner loop) skips bounds checks.
+            let s = unsafe {
+                mk.gather(&self.c.values[r * k..(r + 1) * k], &self.c.idx[r * k..(r + 1) * k], xb)
+            };
             s + self.bias[r]
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condensed, batch-tiled (Algorithm 1 + input-tile transpose)
+// ---------------------------------------------------------------------------
+
+/// The batch-tiled condensed representation: identical semantics (and
+/// storage bytes) to [`CondensedLayer`], but on the interleaved
+/// [`CondensedTiled`] layout consumed by [`crate::kernels::tiled`] — at
+/// batch >= [`crate::kernels::TILE`] each stored weight costs one
+/// contiguous 8-wide load + broadcast-MAC across the batch columns
+/// instead of `TILE` indexed loads. Batches below the tile width (and the
+/// ragged remainder) run a row kernel with the identical per-element
+/// association, so outputs never depend on where a row landed in the
+/// batch (the serving front-end's packing requires exactly this).
+pub struct CondensedTiledLayer {
+    pub t: CondensedTiled,
+    pub bias: Vec<f32>, // packed to active neurons
+    /// Microkernel selection (inherited by slices; see [`crate::kernels`]).
+    pub mk: Microkernel,
+}
+
+impl CondensedTiledLayer {
+    /// Build from weights + constant-fan-in mask (same typed-error
+    /// contract as [`CondensedLayer::new`]).
+    pub fn new(
+        w: &Tensor,
+        mask: &Mask,
+        bias: &[f32],
+    ) -> Result<CondensedTiledLayer, CondensedError> {
+        let t = CondensedTiled::from_masked(w, mask)?;
+        assert!(t.pairs.iter().all(|p| (p.idx as usize) < t.d), "index out of range");
+        let pbias = t.active.iter().map(|&r| bias[r as usize]).collect();
+        Ok(CondensedTiledLayer { t, bias: pbias, mk: Microkernel::auto() })
+    }
+}
+
+impl LinearKernel for CondensedTiledLayer {
+    fn name(&self) -> &'static str {
+        "condensed-tiled"
+    }
+
+    fn out_width(&self) -> usize {
+        self.t.n_active()
+    }
+
+    fn in_width(&self) -> usize {
+        self.t.d
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.t.storage_bytes() + self.bias.len() * 4
+    }
+
+    fn active_rows(&self) -> Option<&[u32]> {
+        Some(&self.t.active)
+    }
+
+    fn slice_rows(&self, lo: usize, hi: usize) -> Box<dyn LinearKernel> {
+        assert!(lo <= hi && hi <= self.t.n_orig, "slice {lo}..{hi} out of 0..{}", self.t.n_orig);
+        let k = self.t.k;
+        let p = self.t.active.partition_point(|&a| (a as usize) < lo);
+        let q = self.t.active.partition_point(|&a| (a as usize) < hi);
+        let t = CondensedTiled {
+            d: self.t.d,
+            n_orig: hi - lo,
+            k,
+            active: self.t.active[p..q].iter().map(|&a| a - lo as u32).collect(),
+            pairs: self.t.pairs[p * k..q * k].to_vec(),
         };
-        if batch == 1 {
-            par_single_row(out, threads, |start, chunk| {
-                for (i, o) in chunk.iter_mut().enumerate() {
-                    *o = row_kernel(x, start + i);
-                }
-            });
-        } else {
-            par_rows_mut(out, n, threads, |b, row| {
-                let xb = &x[b * d..(b + 1) * d];
-                for (r, o) in row.iter_mut().enumerate() {
-                    *o = row_kernel(xb, r);
-                }
-            });
+        Box::new(CondensedTiledLayer { t, bias: self.bias[p..q].to_vec(), mk: self.mk })
+    }
+
+    fn row_weights(&self, full_width: usize) -> Vec<usize> {
+        assert_eq!(full_width, self.t.n_orig);
+        let mut w = vec![0usize; full_width];
+        for &a in &self.t.active {
+            w[a as usize] = self.t.k; // constant fan-in: k stored weights each
         }
+        w
+    }
+
+    fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
+        kernels::tiled::forward_tiled(
+            &self.t.pairs,
+            self.t.k,
+            self.t.n_active(),
+            self.t.d,
+            &self.bias,
+            x,
+            batch,
+            out,
+            threads,
+            self.mk,
+        );
     }
 }
 
@@ -518,6 +522,9 @@ pub struct LayerBundle {
     pub csr_unstructured: CsrLayer,
     pub structured: StructuredLayer,
     pub condensed: CondensedLayer,
+    /// The batch-tiled twin of `condensed` (same weights, interleaved
+    /// layout) — what the kernel benches race against it.
+    pub condensed_tiled: CondensedTiledLayer,
     pub w: Tensor,
     pub mask: Mask,
     pub bias: Vec<f32>,
@@ -545,13 +552,39 @@ impl LayerBundle {
         uw.mul_assign(&um.t);
         let csr_unstructured = CsrLayer::new(&uw, bias.clone());
         let structured = StructuredLayer::new(&w, &mask, &bias);
-        let condensed = CondensedLayer::new(&w, &mask, &bias);
-        LayerBundle { dense, csr, csr_unstructured, structured, condensed, w, mask, bias }
+        let condensed =
+            CondensedLayer::new(&w, &mask, &bias).expect("synth masks have constant fan-in");
+        let condensed_tiled =
+            CondensedTiledLayer::new(&w, &mask, &bias).expect("synth masks have constant fan-in");
+        LayerBundle {
+            dense,
+            csr,
+            csr_unstructured,
+            structured,
+            condensed,
+            condensed_tiled,
+            w,
+            mask,
+            bias,
+        }
     }
 
     /// The four Fig. 4 representations (CSR = the unstructured baseline).
     pub fn kernels(&self) -> Vec<&dyn LinearKernel> {
         vec![&self.dense, &self.csr_unstructured, &self.structured, &self.condensed]
+    }
+
+    /// Every representation of the *same* matrix (CSR here is the
+    /// constant-fan-in twin, not the unstructured baseline) — what the
+    /// equivalence/slicing suites iterate.
+    pub fn kernels_same_matrix(&self) -> Vec<&dyn LinearKernel> {
+        vec![
+            &self.dense,
+            &self.csr,
+            &self.structured,
+            &self.condensed,
+            &self.condensed_tiled,
+        ]
     }
 }
 
@@ -617,7 +650,10 @@ mod tests {
             bundle.structured.forward(&x, batch, &mut out_s, threads);
             let mut out_k = vec![0f32; batch * bundle.condensed.out_width()];
             bundle.condensed.forward(&x, batch, &mut out_k, threads);
+            let mut out_t = vec![0f32; batch * bundle.condensed_tiled.out_width()];
+            bundle.condensed_tiled.forward(&x, batch, &mut out_t, threads);
             assert_close(&out_k, &out_s, 1e-4);
+            assert_close(&out_t, &out_s, 1e-4);
             for b in 0..batch {
                 for (i, &r) in bundle.structured.active.iter().enumerate() {
                     let e = expect[b * 48 + r as usize];
@@ -648,26 +684,16 @@ mod tests {
     }
 
     #[test]
-    fn dot_matches_naive() {
-        let mut rng = Rng::new(3);
-        for len in [0usize, 1, 3, 4, 7, 64, 100] {
-            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
-            let b: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
-            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-            assert!((dot(&a, &b) - naive).abs() < 1e-4 * (1.0 + naive.abs()));
-        }
-    }
-
-    #[test]
     fn slice_rows_partitions_every_representation() {
         // two slices at an arbitrary cut must reproduce the full forward
         // bit-for-bit, rows concatenated (compact forms: the active lists
-        // partition, so the compact outputs concatenate too)
+        // partition, so the compact outputs concatenate too). Batch 9
+        // covers the tiled layer's full-tile AND ragged-remainder paths.
         let bundle = LayerBundle::synth(24, 32, 0.85, 0.3, 5);
-        let batch = 3;
+        let batch = 9;
         let mut rng = Rng::new(77);
         let x: Vec<f32> = (0..batch * 32).map(|_| rng.normal_f32()).collect();
-        for kernel in bundle.kernels() {
+        for kernel in bundle.kernels_same_matrix() {
             let ow = kernel.out_width();
             let mut full = vec![0f32; batch * ow];
             kernel.forward(&x, batch, &mut full, 1);
@@ -703,6 +729,13 @@ mod tests {
         assert_eq!(bundle.structured.row_weights(16).iter().sum::<usize>(), n_active * 20);
         let cw = bundle.condensed.row_weights(16);
         assert_eq!(cw.iter().sum::<usize>(), n_active * k);
+        // the tiled twin stores exactly the same weights per neuron
+        assert_eq!(bundle.condensed_tiled.row_weights(16), cw);
+        assert_eq!(
+            bundle.condensed_tiled.storage_bytes(),
+            bundle.condensed.storage_bytes(),
+            "interleaving is byte-neutral"
+        );
         // ablated rows cost 0 in the compact forms
         for r in 0..16 {
             let ablated = !bundle.condensed.c.active.contains(&(r as u32));

@@ -5,9 +5,10 @@
 //! [`crate::inference::engine::ReplicatedEngine`] wraps it for the
 //! worker-pool server and socket front-end).
 //!
-//! Each layer may use any of the four representations the paper benchmarks
-//! (dense / CSR / structured / condensed), mixed freely per layer via
-//! [`Repr`]. Compact representations (structured/condensed) emit only the
+//! Each layer may use any of the representations the paper benchmarks
+//! (dense / CSR / structured / condensed) plus the batch-tiled condensed
+//! variant, mixed freely per layer via [`Repr`]. Compact representations
+//! (structured/condensed/condensed-tiled) emit only the
 //! surviving neurons; between layers the compact output is scattered back
 //! to the layer's full logical width so the next layer sees a fixed-width
 //! input regardless of representation. A fully-ablated neuron is removed
@@ -31,7 +32,10 @@
 
 use anyhow::Result;
 
-use super::{CondensedLayer, CsrLayer, DenseLayer, LinearKernel, StructuredLayer};
+use super::{
+    CondensedLayer, CondensedTiledLayer, CsrLayer, DenseLayer, LinearKernel, StructuredLayer,
+};
+use crate::kernels;
 use crate::runtime::manifest::StackEntry;
 use crate::sparsity::Mask;
 use crate::tensor::Tensor;
@@ -71,17 +75,28 @@ impl Activation {
     }
 }
 
-/// Which layer representation to build (paper Fig. 4 rows).
+/// Which layer representation to build (paper Fig. 4 rows, plus the
+/// batch-tiled condensed variant).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Repr {
     Dense,
     Csr,
     Structured,
     Condensed,
+    /// Condensed semantics on the interleaved batch-tiled layout
+    /// ([`CondensedTiledLayer`]) — fastest at batch >=
+    /// [`crate::kernels::TILE`].
+    CondensedTiled,
 }
 
 impl Repr {
-    pub const ALL: [Repr; 4] = [Repr::Dense, Repr::Csr, Repr::Structured, Repr::Condensed];
+    pub const ALL: [Repr; 5] = [
+        Repr::Dense,
+        Repr::Csr,
+        Repr::Structured,
+        Repr::Condensed,
+        Repr::CondensedTiled,
+    ];
 
     pub fn parse(s: &str) -> Result<Repr> {
         match s {
@@ -89,7 +104,10 @@ impl Repr {
             "csr" => Ok(Repr::Csr),
             "structured" => Ok(Repr::Structured),
             "condensed" => Ok(Repr::Condensed),
-            other => anyhow::bail!("unknown repr {other:?} (dense|csr|structured|condensed)"),
+            "condensed-tiled" | "tiled" => Ok(Repr::CondensedTiled),
+            other => anyhow::bail!(
+                "unknown repr {other:?} (dense|csr|structured|condensed|condensed-tiled)"
+            ),
         }
     }
 
@@ -99,6 +117,7 @@ impl Repr {
             Repr::Csr => "csr",
             Repr::Structured => "structured",
             Repr::Condensed => "condensed",
+            Repr::CondensedTiled => "condensed-tiled",
         }
     }
 }
@@ -118,16 +137,19 @@ impl ModelLayer {
     /// Build one layer from (possibly unmasked) weights + mask + bias in the
     /// requested representation. Weights are masked internally so every
     /// representation computes the same function; ablated neurons emit 0
-    /// (their bias is dead weight and is dropped/zeroed).
+    /// (their bias is dead weight and is dropped/zeroed). Fails (typed
+    /// [`crate::sparsity::CondensedError`] through `anyhow`) when a
+    /// condensed representation is requested for a mask without constant
+    /// fan-in — a bad manifest is a startup error, not a worker panic.
     pub fn from_weights(
         w: &Tensor,
         mask: &Mask,
         bias: &[f32],
         repr: Repr,
         activation: Activation,
-    ) -> ModelLayer {
+    ) -> Result<ModelLayer> {
         let (n, _d) = w.neuron_view();
-        assert_eq!(bias.len(), n, "bias len {} != neurons {n}", bias.len());
+        anyhow::ensure!(bias.len() == n, "bias len {} != neurons {n}", bias.len());
         let mut wm = w.clone();
         wm.mul_assign(&mask.t);
         let counts = mask.fan_in_counts();
@@ -145,15 +167,20 @@ impl ModelLayer {
                 (Box::new(l), Some(a))
             }
             Repr::Condensed => {
-                let l = CondensedLayer::new(&wm, mask, bias);
+                let l = CondensedLayer::new(&wm, mask, bias)?;
                 let a = l.c.active.clone();
+                (Box::new(l), Some(a))
+            }
+            Repr::CondensedTiled => {
+                let l = CondensedTiledLayer::new(&wm, mask, bias)?;
+                let a = l.t.active.clone();
                 (Box::new(l), Some(a))
             }
         };
         // A compact form with no ablated rows is already full-width: skip
         // the per-request scatter and write the output buffer directly.
         let active = active.filter(|a| a.len() < n);
-        ModelLayer { kernel, activation, active, full_width: n }
+        Ok(ModelLayer { kernel, activation, active, full_width: n })
     }
 
     pub fn in_width(&self) -> usize {
@@ -269,7 +296,7 @@ impl SparseModel {
         for spec in specs {
             anyhow::ensure!(spec.n > 0, "layer width must be positive");
             let (w, mask, bias) = synth_layer(spec.n, d, spec.sparsity, spec.ablated_frac, &mut rng);
-            layers.push(ModelLayer::from_weights(&w, &mask, &bias, spec.repr, spec.activation));
+            layers.push(ModelLayer::from_weights(&w, &mask, &bias, spec.repr, spec.activation)?);
             d = spec.n;
         }
         SparseModel::new(layers)
@@ -284,7 +311,7 @@ impl SparseModel {
         for (i, (w, m, b)) in layers.iter().enumerate() {
             let act =
                 if i + 1 == layers.len() { Activation::Identity } else { Activation::Relu };
-            out.push(ModelLayer::from_weights(w, m, b, repr, act));
+            out.push(ModelLayer::from_weights(w, m, b, repr, act)?);
         }
         SparseModel::new(out)
     }
@@ -326,7 +353,9 @@ impl SparseModel {
         self.layers.iter().map(|l| l.kernel.storage_bytes()).sum()
     }
 
-    /// Human-readable topology, e.g. `3072 -[condensed]-> 768(relu) -...`.
+    /// Human-readable topology, e.g. `3072 -[condensed]-> 768(relu) -...`,
+    /// suffixed with the process-wide microkernel selection (so serving
+    /// banners and bench logs record which kernel actually ran).
     pub fn describe(&self) -> String {
         let mut s = format!("{}", self.d_in);
         for l in &self.layers {
@@ -335,6 +364,7 @@ impl SparseModel {
                 s.push_str("(relu)");
             }
         }
+        s.push_str(&format!(" | {}", kernels::describe_selection()));
         s
     }
 
@@ -397,11 +427,12 @@ impl SparseModel {
                     let c = &mut compact[..batch * na];
                     layer.kernel.forward(src, batch, c, threads);
                     let d = &mut dst[..batch * w];
-                    d.fill(0.0);
                     for bi in 0..batch {
-                        for (j, &r) in active.iter().enumerate() {
-                            d[bi * w + r as usize] = c[bi * na + j];
-                        }
+                        kernels::scatter_row(
+                            &c[bi * na..(bi + 1) * na],
+                            active,
+                            &mut d[bi * w..(bi + 1) * w],
+                        );
                     }
                 }
             }
@@ -484,9 +515,27 @@ mod tests {
     fn mismatched_widths_rejected() {
         let (w1, m1, b1) = synth_layer(8, 16, 0.5, 0.0, &mut Rng::new(0));
         let (w2, m2, b2) = synth_layer(4, 9, 0.5, 0.0, &mut Rng::new(1)); // expects 9, gets 8
-        let l1 = ModelLayer::from_weights(&w1, &m1, &b1, Repr::Dense, Activation::Relu);
-        let l2 = ModelLayer::from_weights(&w2, &m2, &b2, Repr::Dense, Activation::Identity);
+        let l1 = ModelLayer::from_weights(&w1, &m1, &b1, Repr::Dense, Activation::Relu).unwrap();
+        let l2 =
+            ModelLayer::from_weights(&w2, &m2, &b2, Repr::Dense, Activation::Identity).unwrap();
         assert!(SparseModel::new(vec![l1, l2]).is_err());
+    }
+
+    #[test]
+    fn bad_mask_is_a_typed_startup_error_not_a_panic() {
+        // a hand-broken mask (non-constant fan-in) must fail layer
+        // construction with a CondensedError routed through anyhow
+        let mut rng = Rng::new(5);
+        let (w, mut m, b) = synth_layer(8, 16, 0.5, 0.0, &mut rng);
+        // knock one weight out of one row: fan-ins now disagree
+        let j = (0..16).find(|&j| m.is_active(0, j)).unwrap();
+        m.set(0, j, false);
+        for repr in [Repr::Condensed, Repr::CondensedTiled] {
+            let err = ModelLayer::from_weights(&w, &m, &b, repr, Activation::Relu).unwrap_err();
+            assert!(format!("{err:#}").contains("fan-in"), "{repr:?}: {err:#}");
+        }
+        // the dense/structured forms don't require constant fan-in
+        assert!(ModelLayer::from_weights(&w, &m, &b, Repr::Dense, Activation::Relu).is_ok());
     }
 
     #[test]
@@ -533,6 +582,10 @@ mod tests {
         let d = m.describe();
         assert!(d.starts_with("64"), "{d}");
         assert!(d.contains("condensed"), "{d}");
+        assert!(
+            d.contains(&crate::kernels::describe_selection()),
+            "describe must report the kernel selection: {d}"
+        );
         assert!(m.storage_bytes() > 0);
     }
 

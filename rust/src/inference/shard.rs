@@ -332,7 +332,13 @@ impl ShardedModel {
 
     pub fn describe(&self) -> String {
         let widths: Vec<String> = self.widths.iter().map(|w| w.to_string()).collect();
-        format!("{} -> {} x{} shards", self.d_in, widths.join(" -> "), self.plan.shards)
+        format!(
+            "{} -> {} x{} shards | {}",
+            self.d_in,
+            widths.join(" -> "),
+            self.plan.shards,
+            crate::kernels::describe_selection()
+        )
     }
 
     /// Allocate a workspace for forwards up to `max_batch` rows.
@@ -451,10 +457,7 @@ impl ShardedModel {
                     match layer.active_ids() {
                         None => region.copy_from_slice(&c[bi * na..(bi + 1) * na]),
                         Some(active) => {
-                            region.fill(0.0);
-                            for (j, &row) in active.iter().enumerate() {
-                                region[row as usize] = c[bi * na + j];
-                            }
+                            crate::kernels::scatter_row(&c[bi * na..(bi + 1) * na], active, region)
                         }
                     }
                     layer.activation().apply(region);
@@ -558,7 +561,9 @@ mod tests {
         let mut w = Tensor::normal(&[n, d], 1.0, &mut rng);
         w.mul_assign(&mask.t);
         let bias = vec![0.0f32; n];
-        let layer = ModelLayer::from_weights(&w, &mask, &bias, Repr::Condensed, Activation::Identity);
+        let layer =
+            ModelLayer::from_weights(&w, &mask, &bias, Repr::Condensed, Activation::Identity)
+                .unwrap();
         let model = SparseModel::new(vec![layer]).unwrap();
         let plan = ShardPlan::balanced(&model, 2).unwrap();
         assert_eq!(plan.range(0, 0), 0..12);

@@ -1,0 +1,147 @@
+//! AVX2+FMA microkernels (`std::arch::x86_64`, runtime-dispatched on
+//! stable Rust). Every function is `#[target_feature(enable = "avx2")]
+//! #[target_feature(enable = "fma")]` and therefore `unsafe` to call;
+//! the only construction path that selects them —
+//! [`super::KernelKind::available`] behind [`super::Microkernel`] —
+//! requires `is_x86_feature_detected!("avx2") && ("fma")`, so the
+//! features are guaranteed present at every call site.
+//!
+//! * [`dot`]    — two 8-lane FMA accumulators (16 floats/iteration).
+//! * [`gather`] — `vgatherdps` indexed loads + FMA, the vectorized
+//!   Algorithm-1 inner loop.
+//! * [`tile_mac`] — the batch-tiled condensed hot loop: one contiguous
+//!   8-wide load per stored weight (the [`super::tiled`] driver
+//!   transposed the input tile so a column index *is* a contiguous
+//!   vector), broadcast the weight, FMA across the 8 batch columns.
+//!
+//! Reduction orders are fixed; FMA fuses each multiply-add with a single
+//! rounding, so results differ from the scalar oracle within the
+//! documented ULP bound (`docs/KERNELS.md`), never across runs.
+
+use std::arch::x86_64::*;
+
+use super::TILE;
+use crate::sparsity::condensed::IdxVal;
+
+// The tile kernels identify one tile with one __m256.
+const _: () = assert!(TILE == 8, "avx2 tile kernels assume an 8-wide tile");
+
+/// Dense dot product.
+///
+/// # Safety
+/// AVX2+FMA must be available (guaranteed by the dispatch path).
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
+        let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc0 = _mm256_fmadd_ps(a0, b0, acc0);
+        let a1 = _mm256_loadu_ps(a.as_ptr().add(i + 8));
+        let b1 = _mm256_loadu_ps(b.as_ptr().add(i + 8));
+        acc1 = _mm256_fmadd_ps(a1, b1, acc1);
+        i += 16;
+    }
+    if i + 8 <= n {
+        let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
+        let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc0 = _mm256_fmadd_ps(a0, b0, acc0);
+        i += 8;
+    }
+    let mut s = hsum(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        s = a.get_unchecked(i).mul_add(*b.get_unchecked(i), s);
+        i += 1;
+    }
+    s
+}
+
+/// Gather-MAC over separate value/index streams via `vgatherdps`.
+///
+/// # Safety
+/// AVX2+FMA must be available, and every `idx[i] as usize < xb.len()`
+/// (validated once at layer construction — the gather reads `xb[idx[i]]`
+/// unchecked).
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub unsafe fn gather(vals: &[f32], idx: &[u32], xb: &[f32]) -> f32 {
+    let n = vals.len().min(idx.len());
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let j0 = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
+        let v0 = _mm256_loadu_ps(vals.as_ptr().add(i));
+        let x0 = _mm256_i32gather_ps::<4>(xb.as_ptr(), j0);
+        acc0 = _mm256_fmadd_ps(v0, x0, acc0);
+        let j1 = _mm256_loadu_si256(idx.as_ptr().add(i + 8) as *const __m256i);
+        let v1 = _mm256_loadu_ps(vals.as_ptr().add(i + 8));
+        let x1 = _mm256_i32gather_ps::<4>(xb.as_ptr(), j1);
+        acc1 = _mm256_fmadd_ps(v1, x1, acc1);
+        i += 16;
+    }
+    if i + 8 <= n {
+        let j0 = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
+        let v0 = _mm256_loadu_ps(vals.as_ptr().add(i));
+        let x0 = _mm256_i32gather_ps::<4>(xb.as_ptr(), j0);
+        acc0 = _mm256_fmadd_ps(v0, x0, acc0);
+        i += 8;
+    }
+    let mut s = hsum(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        s = vals
+            .get_unchecked(i)
+            .mul_add(*xb.get_unchecked(*idx.get_unchecked(i) as usize), s);
+        i += 1;
+    }
+    s
+}
+
+/// The batch-tiled condensed hot loop: for each interleaved (idx, value)
+/// record, load the contiguous 8 batch values of that column from the
+/// transposed tile `xt`, broadcast the value, FMA into the lane
+/// accumulators. Dual chains (`acc0` even records, `acc1` odd) — the
+/// **same association** as the ragged-remainder row kernel
+/// [`super::tiled`] uses with `f32::mul_add`, which is what keeps every
+/// output element bit-identical whether it landed in a full tile or the
+/// remainder (batch-position invariance).
+///
+/// # Safety
+/// AVX2+FMA must be available, and `xt` must hold at least
+/// `(max idx + 1) * TILE` floats.
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub unsafe fn tile_mac(row: &[IdxVal], xt: &[f32], acc0: &mut [f32; TILE], acc1: &mut [f32; TILE]) {
+    let mut a0 = _mm256_loadu_ps(acc0.as_ptr());
+    let mut a1 = _mm256_loadu_ps(acc1.as_ptr());
+    let mut it = row.chunks_exact(2);
+    for p in &mut it {
+        let x0 = _mm256_loadu_ps(xt.as_ptr().add(p[0].idx as usize * TILE));
+        a0 = _mm256_fmadd_ps(_mm256_set1_ps(p[0].v), x0, a0);
+        let x1 = _mm256_loadu_ps(xt.as_ptr().add(p[1].idx as usize * TILE));
+        a1 = _mm256_fmadd_ps(_mm256_set1_ps(p[1].v), x1, a1);
+    }
+    if let [p] = it.remainder() {
+        let x0 = _mm256_loadu_ps(xt.as_ptr().add(p.idx as usize * TILE));
+        a0 = _mm256_fmadd_ps(_mm256_set1_ps(p.v), x0, a0);
+    }
+    _mm256_storeu_ps(acc0.as_mut_ptr(), a0);
+    _mm256_storeu_ps(acc1.as_mut_ptr(), a1);
+}
+
+/// Fixed-order horizontal sum: low128 + high128, then pairwise within
+/// the quad.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let q = _mm_add_ps(lo, hi);
+    let d = _mm_add_ps(q, _mm_movehl_ps(q, q));
+    let s = _mm_add_ss(d, _mm_shuffle_ps::<0b01>(d, d));
+    _mm_cvtss_f32(s)
+}

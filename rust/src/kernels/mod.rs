@@ -1,0 +1,425 @@
+//! The compute subsystem: every forward path in the crate bottoms out in
+//! the microkernels defined here — one place for the gather-MAC inner
+//! loops that used to be copy-pasted across the four `LinearKernel`
+//! representations in [`crate::inference`].
+//!
+//! Three implementations of each inner loop, selected **once per process
+//! at runtime** (stable Rust, no nightly `std::simd`):
+//!
+//! * [`KernelKind::Scalar`] — the 4-way-unrolled scalar loops the repo
+//!   shipped with. Kept verbatim as the **executable reference oracle**:
+//!   the SIMD kinds are pinned against it by a per-element ULP bound
+//!   (see `docs/KERNELS.md` for the bound and its rationale).
+//! * [`KernelKind::Portable`] — fixed-width `[f32; 8]` accumulator loops
+//!   written so LLVM's autovectorizer can lower them to whatever vector
+//!   ISA the target has. The default on non-x86 and on x86 without AVX2.
+//! * [`KernelKind::Avx2`] — explicit `std::arch::x86_64` AVX2+FMA
+//!   intrinsics (`vgatherdps` for the indexed loads, `vfmadd` for the
+//!   MACs), selected via `is_x86_feature_detected!` so a generic build
+//!   still dispatches to it on capable hosts.
+//!
+//! Selection is cached in a `OnceLock` ([`selected`]) and can be forced
+//! with `SRIGL_KERNEL=scalar|portable|avx2` (an unavailable forced kind
+//! falls back with a warning — forcing AVX2 on a CPU without it would be
+//! undefined behaviour, so the override is validated, never trusted).
+//! Layers carry a copyable [`Microkernel`] handle stamped at
+//! construction; slicing a layer for tensor-parallel serving copies the
+//! handle, so every shard of a model runs the same kind and the engine
+//! conformance suite stays **bit-for-bit within a fixed selection**.
+//!
+//! Two invariants every kind must uphold (tests enforce both):
+//!
+//! 1. **Batch-position invariance** — an output element is a pure
+//!    function of its row's weights and its own input row, independent of
+//!    batch size, tile position, thread count, and shard cuts. The
+//!    serving front-end packs concurrent requests into one forward and
+//!    pins packed-vs-direct results bit-for-bit, so this is not optional.
+//!    For the batch-tiled path this is why the ragged-remainder row
+//!    kernel uses the exact same dual-chain association (and FMA parity)
+//!    as the full-tile lanes — see [`tiled`].
+//! 2. **Determinism within a kind** — no run-to-run or thread-count
+//!    variation; every reduction has a fixed association.
+
+use std::sync::OnceLock;
+
+use crate::util::threadpool::par_rows_mut;
+
+pub mod scalar;
+
+pub mod portable;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+pub mod tiled;
+
+/// Batch-tile width of the tiled condensed kernel: one AVX2 vector of
+/// f32, and the fixed width the portable path autovectorizes at. The
+/// [`tiled`] driver transposes `TILE` input rows at a time so every
+/// gathered column index becomes one contiguous `TILE`-wide load.
+pub const TILE: usize = 8;
+
+/// Which microkernel implementation a layer runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// 4-way unrolled scalar — the reference oracle.
+    Scalar,
+    /// `[f32; 8]` fixed-width, autovectorization-friendly.
+    Portable,
+    /// AVX2+FMA intrinsics (x86_64, runtime-detected).
+    Avx2,
+}
+
+impl KernelKind {
+    pub const ALL: [KernelKind; 3] = [KernelKind::Scalar, KernelKind::Portable, KernelKind::Avx2];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Portable => "portable",
+            KernelKind::Avx2 => "avx2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s {
+            "scalar" => Some(KernelKind::Scalar),
+            "portable" => Some(KernelKind::Portable),
+            "avx2" => Some(KernelKind::Avx2),
+            _ => None,
+        }
+    }
+
+    /// Whether this kind can execute on the running CPU. `Scalar` and
+    /// `Portable` always can; `Avx2` requires runtime-detected AVX2+FMA.
+    pub fn available(self) -> bool {
+        match self {
+            KernelKind::Scalar | KernelKind::Portable => true,
+            KernelKind::Avx2 => avx2_available(),
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+static SELECTED: OnceLock<KernelKind> = OnceLock::new();
+
+/// The process-wide kernel selection: `SRIGL_KERNEL` override when valid
+/// and available, else AVX2+FMA when detected, else the portable path.
+/// Computed once; every `Microkernel::auto()` layer shares it, which is
+/// what keeps replicated/sharded/persistent execution bit-for-bit.
+pub fn selected() -> KernelKind {
+    *SELECTED.get_or_init(|| {
+        if let Ok(v) = std::env::var("SRIGL_KERNEL") {
+            match KernelKind::parse(&v) {
+                Some(k) if k.available() => return k,
+                Some(k) => eprintln!(
+                    "SRIGL_KERNEL={v}: {} not available on this CPU, auto-detecting instead",
+                    k.name()
+                ),
+                None => eprintln!(
+                    "SRIGL_KERNEL={v}: unknown kernel (scalar|portable|avx2), auto-detecting instead"
+                ),
+            }
+        }
+        if KernelKind::Avx2.available() {
+            KernelKind::Avx2
+        } else {
+            KernelKind::Portable
+        }
+    })
+}
+
+/// One-line selection banner for logs / `Engine::describe`, e.g.
+/// `kernel=avx2 tile=8`.
+pub fn describe_selection() -> String {
+    format!("kernel={} tile={}", selected().name(), TILE)
+}
+
+/// A copyable handle to one microkernel implementation. Layers stamp one
+/// at construction ([`Microkernel::auto`] — the process-wide selection)
+/// and carry it through slicing, so a model and all of its shard slices
+/// always run the same kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Microkernel {
+    kind: KernelKind,
+}
+
+impl Microkernel {
+    /// The process-wide runtime selection (see [`selected`]).
+    pub fn auto() -> Microkernel {
+        Microkernel { kind: selected() }
+    }
+
+    /// Force a specific kind — benches and the SIMD-vs-scalar ULP tests.
+    /// Panics if the kind cannot execute on this CPU (forcing AVX2 where
+    /// it is not detected would be undefined behaviour, not a slow path).
+    pub fn of(kind: KernelKind) -> Microkernel {
+        assert!(kind.available(), "kernel kind {} not available on this CPU", kind.name());
+        Microkernel { kind }
+    }
+
+    pub fn kind(self) -> KernelKind {
+        self.kind
+    }
+
+    /// Dense dot product — the dense/structured row kernel.
+    #[inline]
+    pub fn dot(self, a: &[f32], b: &[f32]) -> f32 {
+        match self.kind {
+            KernelKind::Scalar => scalar::dot(a, b),
+            KernelKind::Portable => portable::dot(a, b),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Avx2 is only constructible when AVX2+FMA are
+            // runtime-detected (`KernelKind::available`).
+            KernelKind::Avx2 => unsafe { avx2::dot(a, b) },
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelKind::Avx2 => unreachable!("avx2 is never selected on this architecture"),
+        }
+    }
+
+    /// Sparse gather-MAC over separate value/index streams — the
+    /// condensed (Algorithm 1) and CSR row kernel.
+    ///
+    /// # Safety
+    /// Every `idx[i] as usize` must be `< xb.len()`. Both layer types
+    /// validate this once at construction so the hot loop can gather
+    /// without per-element bounds checks.
+    #[inline]
+    pub unsafe fn gather(self, vals: &[f32], idx: &[u32], xb: &[f32]) -> f32 {
+        debug_assert_eq!(vals.len(), idx.len());
+        debug_assert!(idx.iter().all(|&j| (j as usize) < xb.len()));
+        match self.kind {
+            KernelKind::Scalar => scalar::gather(vals, idx, xb),
+            KernelKind::Portable => portable::gather(vals, idx, xb),
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2 => avx2::gather(vals, idx, xb),
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelKind::Avx2 => unreachable!("avx2 is never selected on this architecture"),
+        }
+    }
+}
+
+/// The shared threading split of every layer forward (the code that was
+/// duplicated four times in `inference`): batch-1 splits the single
+/// output row's columns across threads (the paper's online-inference
+/// setting, Figs. 18-20); batched splits batch rows. `row(xb, r)`
+/// computes output feature `r` of input row `xb`. `out` is
+/// `(batch, out.len()/batch)` row-major.
+pub fn forward_rows<K>(x: &[f32], d: usize, batch: usize, out: &mut [f32], threads: usize, row: K)
+where
+    K: Fn(&[f32], usize) -> f32 + Sync,
+{
+    if out.is_empty() {
+        return;
+    }
+    debug_assert!(batch >= 1 && out.len() % batch == 0);
+    debug_assert_eq!(x.len(), batch * d);
+    if batch == 1 {
+        par_single_row(out, threads, |start, chunk| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                *o = row(x, start + i);
+            }
+        });
+    } else {
+        let ow = out.len() / batch;
+        par_rows_mut(out, ow, threads, |b, orow| {
+            let xb = &x[b * d..(b + 1) * d];
+            for (r, o) in orow.iter_mut().enumerate() {
+                *o = row(xb, r);
+            }
+        });
+    }
+}
+
+/// Split a single output row into per-thread contiguous chunks (batch-1
+/// fast path; avoids the useless spawn when threads == 1).
+pub(crate) fn par_single_row<F>(out: &mut [f32], threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync, // (start_col, chunk)
+{
+    let n = out.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        f(0, out);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut start = 0usize;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let f = &f;
+            s.spawn(move || f(start, head));
+            start += take;
+            rest = tail;
+        }
+    });
+}
+
+/// Scatter one compact (active-neurons-only) output row back to a
+/// zero-filled full-width region — the compact-form epilogue shared by
+/// [`crate::inference::SparseModel::forward`] and
+/// [`crate::inference::ShardedModel`]'s `shard_pass`.
+#[inline]
+pub fn scatter_row(compact: &[f32], active: &[u32], region: &mut [f32]) {
+    debug_assert_eq!(compact.len(), active.len());
+    region.fill(0.0);
+    for (j, &r) in active.iter().enumerate() {
+        region[r as usize] = compact[j];
+    }
+}
+
+/// Distance between two f32 in units-in-the-last-place, measured on the
+/// monotone integer mapping of IEEE-754 bit patterns (sign-aware, so a
+/// near-zero sign flip reads as a large distance — pair this with an
+/// absolute floor when comparing sums that can cancel; see
+/// `docs/KERNELS.md`). `a == b` (including `+0 == -0`) is 0; any NaN is
+/// `u64::MAX`.
+pub fn ulp_diff(a: f32, b: f32) -> u64 {
+    if a == b {
+        return 0;
+    }
+    if a.is_nan() || b.is_nan() {
+        return u64::MAX;
+    }
+    fn ord(x: f32) -> i64 {
+        let bits = x.to_bits();
+        if bits & 0x8000_0000 == 0 {
+            bits as i64
+        } else {
+            -((bits & 0x7FFF_FFFF) as i64)
+        }
+    }
+    (ord(a) - ord(b)).unsigned_abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn available_kinds() -> Vec<KernelKind> {
+        KernelKind::ALL.iter().copied().filter(|k| k.available()).collect()
+    }
+
+    #[test]
+    fn dot_matches_naive_for_every_kind() {
+        let mut rng = Rng::new(3);
+        for len in [0usize, 1, 3, 4, 7, 8, 15, 16, 17, 64, 100] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            for kind in available_kinds() {
+                let got = Microkernel::of(kind).dot(&a, &b);
+                assert!(
+                    (got - naive).abs() < 1e-4 * (1.0 + naive.abs()),
+                    "{} len {len}: {got} vs {naive}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gather_matches_naive_for_every_kind() {
+        let mut rng = Rng::new(11);
+        for len in [0usize, 1, 4, 7, 8, 9, 16, 33, 100] {
+            let d = 64;
+            let xb: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let vals: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let idx: Vec<u32> = (0..len).map(|_| rng.below(d) as u32).collect();
+            let naive: f32 =
+                vals.iter().zip(&idx).map(|(v, &j)| v * xb[j as usize]).sum();
+            for kind in available_kinds() {
+                let got = unsafe { Microkernel::of(kind).gather(&vals, &idx, &xb) };
+                assert!(
+                    (got - naive).abs() < 1e-4 * (1.0 + naive.abs()),
+                    "{} len {len}: {got} vs {naive}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forward_rows_covers_batched_and_single() {
+        // row function writes a recognizable value per (b, r)
+        let d = 4;
+        for &(batch, ow, threads) in
+            &[(1usize, 13usize, 1usize), (1, 13, 4), (5, 7, 1), (5, 7, 3), (8, 3, 8)]
+        {
+            let x: Vec<f32> = (0..batch * d).map(|i| i as f32).collect();
+            let mut out = vec![-1.0f32; batch * ow];
+            forward_rows(&x, d, batch, &mut out, threads, |xb, r| xb[0] * 100.0 + r as f32);
+            for b in 0..batch {
+                for r in 0..ow {
+                    let want = x[b * d] * 100.0 + r as f32;
+                    assert_eq!(out[b * ow + r], want, "b={b} r={r} threads={threads}");
+                }
+            }
+        }
+        // empty output is a no-op
+        forward_rows(&[], 0, 1, &mut [], 4, |_, _| panic!("no rows"));
+    }
+
+    #[test]
+    fn scatter_row_zero_fills_and_places() {
+        let mut region = vec![9.0f32; 6];
+        scatter_row(&[1.0, 2.0], &[1, 4], &mut region);
+        assert_eq!(region, vec![0.0, 1.0, 0.0, 0.0, 2.0, 0.0]);
+        scatter_row(&[], &[], &mut region[..0]);
+    }
+
+    #[test]
+    fn ulp_diff_basics() {
+        assert_eq!(ulp_diff(1.0, 1.0), 0);
+        assert_eq!(ulp_diff(0.0, -0.0), 0);
+        assert_eq!(ulp_diff(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_diff(-1.0, f32::from_bits((-1.0f32).to_bits() + 1)), 1);
+        // sign-crossing distances are symmetric and additive through zero
+        let tiny = f32::from_bits(5);
+        assert_eq!(ulp_diff(tiny, -tiny), 10);
+        assert_eq!(ulp_diff(f32::NAN, 1.0), u64::MAX);
+        assert!(ulp_diff(1.0, 1.0000001) <= 2);
+        assert!(ulp_diff(1.0, 2.0) > 1_000_000);
+    }
+
+    #[test]
+    fn selection_is_stable_and_available() {
+        let first = selected();
+        assert_eq!(selected(), first, "OnceLock-cached");
+        assert!(first.available());
+        assert_eq!(Microkernel::auto().kind(), first);
+        assert!(describe_selection().contains(first.name()));
+        assert!(describe_selection().contains("tile=8"));
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for kind in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(KernelKind::parse("sse"), None);
+    }
+
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn avx2_availability_is_consistent() {
+        // `of` must refuse what `available` refuses (panic-tested by hand:
+        // we only assert the non-panicking side here)
+        if KernelKind::Avx2.available() {
+            assert_eq!(Microkernel::of(KernelKind::Avx2).kind(), KernelKind::Avx2);
+        }
+    }
+}

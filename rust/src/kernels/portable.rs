@@ -1,0 +1,57 @@
+//! The portable SIMD microkernels: fixed-width `[f32; 8]` accumulator
+//! loops on stable Rust, written so LLVM's autovectorizer can lower the
+//! lane loops to whatever vector ISA the target actually has (SSE, NEON,
+//! AVX under `-C target-cpu=native`, or plain scalar with 8-way ILP).
+//! The default kind when AVX2+FMA is not runtime-detected.
+//!
+//! Reduction order is fixed — `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` —
+//! so results are deterministic across runs and thread counts (they may
+//! differ from the scalar oracle only by f32 re-association; the ULP
+//! tests pin that gap).
+
+use super::TILE;
+
+/// Dense dot product with `TILE` independent accumulator lanes.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0f32; TILE];
+    let mut ai = a.chunks_exact(TILE);
+    let mut bi = b.chunks_exact(TILE);
+    for (a8, b8) in (&mut ai).zip(&mut bi) {
+        for l in 0..TILE {
+            acc[l] += a8[l] * b8[l];
+        }
+    }
+    let mut s = reduce(&acc);
+    for (x, y) in ai.remainder().iter().zip(bi.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// Gather-MAC with `TILE` independent accumulator lanes. The indexed
+/// loads stay scalar on most targets (a true vector gather needs AVX2 —
+/// see [`super::avx2`]), but the 8 independent chains keep the FP units
+/// saturated.
+///
+/// # Safety
+/// Every `idx[i] as usize` must be `< xb.len()`.
+pub unsafe fn gather(vals: &[f32], idx: &[u32], xb: &[f32]) -> f32 {
+    let mut acc = [0f32; TILE];
+    let mut vi = vals.chunks_exact(TILE);
+    let mut ii = idx.chunks_exact(TILE);
+    for (v8, i8) in (&mut vi).zip(&mut ii) {
+        for l in 0..TILE {
+            acc[l] += v8[l] * *xb.get_unchecked(i8[l] as usize);
+        }
+    }
+    let mut s = reduce(&acc);
+    for (v, i) in vi.remainder().iter().zip(ii.remainder()) {
+        s += v * *xb.get_unchecked(*i as usize);
+    }
+    s
+}
+
+#[inline]
+fn reduce(acc: &[f32; TILE]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}

@@ -1,0 +1,50 @@
+//! The scalar microkernels — the 4-way-unrolled loops the inference
+//! engine shipped with, kept byte-for-byte as the **executable reference
+//! oracle** the SIMD kinds are ULP-pinned against (`docs/KERNELS.md`).
+//!
+//! Four accumulators break the FP add dependency chain so the hardware
+//! can keep multiple multiply-adds in flight even without vector code
+//! (§Perf iteration 1 of the original engine: 2-way safe -> 4-way
+//! unchecked).
+
+/// Dense dot product, 4 accumulators, fixed reduction order
+/// `a0 + a1 + a2 + a3` (left to right, as the original engine summed).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Gather-MAC over separate value/index streams (paper Algorithm 1 inner
+/// loop), 4 accumulators, bounds-check-free.
+///
+/// # Safety
+/// Every `idx[i] as usize` must be `< xb.len()` (validated once at layer
+/// construction).
+pub unsafe fn gather(vals: &[f32], idx: &[u32], xb: &[f32]) -> f32 {
+    let mut acc = [0f32; 4];
+    let mut vi = vals.chunks_exact(4);
+    let mut ii = idx.chunks_exact(4);
+    for (v4, i4) in (&mut vi).zip(&mut ii) {
+        acc[0] += v4[0] * *xb.get_unchecked(i4[0] as usize);
+        acc[1] += v4[1] * *xb.get_unchecked(i4[1] as usize);
+        acc[2] += v4[2] * *xb.get_unchecked(i4[2] as usize);
+        acc[3] += v4[3] * *xb.get_unchecked(i4[3] as usize);
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (v, i) in vi.remainder().iter().zip(ii.remainder()) {
+        s += v * *xb.get_unchecked(*i as usize);
+    }
+    s
+}

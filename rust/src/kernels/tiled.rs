@@ -1,0 +1,333 @@
+//! The batch-tiled condensed forward — the driver behind
+//! [`crate::inference::CondensedTiledLayer`].
+//!
+//! Motivation (paper Algorithm 1 on CPU): the dominant cost of the
+//! condensed gather-MAC at batch > 1 is the *indexed load* — every
+//! stored weight triggers one data-dependent read of the input row. The
+//! row-at-a-time kernel pays that load once per (weight, batch item).
+//! This driver instead walks the batch in tiles of [`TILE`] columns:
+//!
+//! 1. **Transpose** the tile's input rows into a `(d x TILE)` staging
+//!    buffer, so the `TILE` batch values of input feature `j` become one
+//!    contiguous 8-float vector at `xt[j*TILE..]`.
+//! 2. For every interleaved `(idx, value)` record of an output row,
+//!    issue **one** contiguous 8-wide load (no gather at all) and one
+//!    broadcast-FMA across the batch columns — the indexed-load cost is
+//!    amortized `TILE`-fold, and the loads vectorize on every ISA.
+//!
+//! The transpose staging buffer is thread-local and grown once per
+//! thread, so on the serving hot path — persistent pool workers and
+//! shard-team threads run their kernels with `threads == 1` — forwards
+//! are allocation-free after warmup (the serving engines' standing
+//! requirement). With intra-op `threads > 1` the engine already spawns
+//! fresh scoped threads per forward (`par_rows_mut`, pre-existing for
+//! every representation); those short-lived threads each grow a fresh
+//! staging buffer, a cost that rides along with the spawn itself.
+//!
+//! **Batch-position invariance** (load-bearing — the serving front-end
+//! packs concurrent requests into one forward and pins packed-vs-direct
+//! results bit-for-bit): an output element must not care whether it
+//! landed in a full tile or the ragged remainder. Both paths therefore
+//! accumulate with the *identical* association — dual chains over the
+//! fan-in (even records into `acc0`, odd into `acc1`, final
+//! `(acc0 + acc1) + bias`) — and with the same rounding: when the AVX2
+//! kind is selected the tile lanes use `vfmadd` and the remainder rows
+//! use `f32::mul_add` (IEEE fused multiply-add, bit-identical to the
+//! hardware instruction); the scalar/portable kinds use plain
+//! multiply-then-add on both paths. Thread splits are tile-aligned, so
+//! thread count never changes tile boundaries.
+
+use std::cell::RefCell;
+
+use super::{forward_rows, KernelKind, Microkernel, TILE};
+use crate::sparsity::condensed::IdxVal;
+use crate::util::threadpool::par_rows_mut;
+
+thread_local! {
+    /// Per-thread transpose staging buffer (`d * TILE` floats), grown on
+    /// demand and reused across tiles — and, on long-lived threads
+    /// (pool workers, shard teams, `threads == 1` callers), across
+    /// forwards and requests. Scoped threads spawned for intra-op
+    /// `threads > 1` grow their own and drop it at join (see module
+    /// docs).
+    static XT: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Forward `batch` rows of `x` (row-major, width `d`) through a
+/// batch-tiled condensed layer: `pairs` is the `(n_active x k)` row-major
+/// interleaved record array, `bias` is packed to active neurons, `out`
+/// is `(batch x n_active)` row-major.
+///
+/// Full tiles run the transposed broadcast-MAC; the ragged remainder
+/// (`batch % TILE` rows, or the whole batch when `batch < TILE`) runs
+/// the row kernel with the same association (see module docs). Threads
+/// split whole tiles, then remainder rows.
+///
+/// The caller (layer construction) validated `idx < d` for every record,
+/// which is what lets both paths read the input without bounds checks.
+pub fn forward_tiled(
+    pairs: &[IdxVal],
+    k: usize,
+    n_active: usize,
+    d: usize,
+    bias: &[f32],
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+    threads: usize,
+    mk: Microkernel,
+) {
+    debug_assert_eq!(pairs.len(), n_active * k);
+    debug_assert_eq!(bias.len(), n_active);
+    debug_assert_eq!(x.len(), batch * d);
+    debug_assert_eq!(out.len(), batch * n_active);
+    if n_active == 0 || batch == 0 {
+        return;
+    }
+    let kind = mk.kind();
+    let tiles = batch / TILE;
+    let rem_start = tiles * TILE;
+    if tiles > 0 {
+        // one "row" per tile: TILE batch rows x n_active outputs,
+        // contiguous in `out` — thread splits are tile-aligned by
+        // construction, so tiling never depends on the thread count
+        let tile_out = &mut out[..tiles * TILE * n_active];
+        par_rows_mut(tile_out, TILE * n_active, threads, |t, orows| {
+            XT.with(|cell| {
+                let mut buf = cell.borrow_mut();
+                if buf.len() < d * TILE {
+                    buf.resize(d * TILE, 0.0);
+                }
+                let xt = &mut buf[..d * TILE];
+                let t0 = t * TILE;
+                for l in 0..TILE {
+                    let xrow = &x[(t0 + l) * d..(t0 + l + 1) * d];
+                    for (j, &v) in xrow.iter().enumerate() {
+                        xt[j * TILE + l] = v;
+                    }
+                }
+                for r in 0..n_active {
+                    let mut acc0 = [0f32; TILE];
+                    let mut acc1 = [0f32; TILE];
+                    let row = &pairs[r * k..(r + 1) * k];
+                    // SAFETY: idx < d validated at construction, xt holds
+                    // d*TILE floats; AVX2 availability is guaranteed by
+                    // the Microkernel dispatch invariant.
+                    unsafe { tile_mac(row, xt, &mut acc0, &mut acc1, kind) };
+                    let b = bias[r];
+                    for l in 0..TILE {
+                        orows[l * n_active + r] = (acc0[l] + acc1[l]) + b;
+                    }
+                }
+            });
+        });
+    }
+    if rem_start < batch {
+        let rem = batch - rem_start;
+        let out_rem = &mut out[rem_start * n_active..];
+        forward_rows(&x[rem_start * d..], d, rem, out_rem, threads, |xb, r| {
+            // SAFETY: idx < d == xb.len(), validated at construction.
+            (unsafe { gather_pairs(&pairs[r * k..(r + 1) * k], xb, kind) }) + bias[r]
+        });
+    }
+}
+
+/// Row kernel over the interleaved layout — the ragged-remainder (and
+/// batch-1) path, association-matched to the tile lanes.
+///
+/// # Safety
+/// Every `record.idx as usize` must be `< xb.len()`.
+pub unsafe fn gather_pairs(row: &[IdxVal], xb: &[f32], kind: KernelKind) -> f32 {
+    match kind {
+        // f32::mul_add is IEEE fusedMultiplyAdd — bit-identical to the
+        // vfmadd lanes of the AVX2 tile path
+        KernelKind::Avx2 => gather_pairs_fma(row, xb),
+        _ => gather_pairs_muladd(row, xb),
+    }
+}
+
+#[inline]
+unsafe fn tile_mac(
+    row: &[IdxVal],
+    xt: &[f32],
+    acc0: &mut [f32; TILE],
+    acc1: &mut [f32; TILE],
+    kind: KernelKind,
+) {
+    match kind {
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => super::avx2::tile_mac(row, xt, acc0, acc1),
+        _ => tile_mac_muladd(row, xt, acc0, acc1),
+    }
+}
+
+/// Multiply-then-add tile lanes (scalar and portable kinds — the fixed
+/// 8-wide lane loop autovectorizes; there is nothing kind-specific left
+/// to dispatch on once the loads are contiguous).
+///
+/// # Safety
+/// Every `record.idx as usize * TILE + TILE` must be `<= xt.len()`.
+unsafe fn tile_mac_muladd(
+    row: &[IdxVal],
+    xt: &[f32],
+    acc0: &mut [f32; TILE],
+    acc1: &mut [f32; TILE],
+) {
+    let mut it = row.chunks_exact(2);
+    for p in &mut it {
+        let j0 = p[0].idx as usize * TILE;
+        let v0 = p[0].v;
+        for l in 0..TILE {
+            acc0[l] += v0 * *xt.get_unchecked(j0 + l);
+        }
+        let j1 = p[1].idx as usize * TILE;
+        let v1 = p[1].v;
+        for l in 0..TILE {
+            acc1[l] += v1 * *xt.get_unchecked(j1 + l);
+        }
+    }
+    if let [p] = it.remainder() {
+        let j = p.idx as usize * TILE;
+        for l in 0..TILE {
+            acc0[l] += p.v * *xt.get_unchecked(j + l);
+        }
+    }
+}
+
+unsafe fn gather_pairs_muladd(row: &[IdxVal], xb: &[f32]) -> f32 {
+    let (mut a0, mut a1) = (0f32, 0f32);
+    let mut it = row.chunks_exact(2);
+    for p in &mut it {
+        a0 += p[0].v * *xb.get_unchecked(p[0].idx as usize);
+        a1 += p[1].v * *xb.get_unchecked(p[1].idx as usize);
+    }
+    if let [p] = it.remainder() {
+        a0 += p.v * *xb.get_unchecked(p.idx as usize);
+    }
+    a0 + a1
+}
+
+unsafe fn gather_pairs_fma(row: &[IdxVal], xb: &[f32]) -> f32 {
+    let (mut a0, mut a1) = (0f32, 0f32);
+    let mut it = row.chunks_exact(2);
+    for p in &mut it {
+        a0 = p[0].v.mul_add(*xb.get_unchecked(p[0].idx as usize), a0);
+        a1 = p[1].v.mul_add(*xb.get_unchecked(p[1].idx as usize), a1);
+    }
+    if let [p] = it.remainder() {
+        a0 = p.v.mul_add(*xb.get_unchecked(p.idx as usize), a0);
+    }
+    a0 + a1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_rows(n: usize, k: usize, d: usize, seed: u64) -> (Vec<IdxVal>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let pairs = (0..n * k)
+            .map(|_| IdxVal { idx: rng.below(d) as u32, v: rng.normal_f32() })
+            .collect();
+        let bias = (0..n).map(|_| rng.normal_f32() * 0.01).collect();
+        (pairs, bias)
+    }
+
+    fn naive(pairs: &[IdxVal], k: usize, n: usize, bias: &[f32], x: &[f32], d: usize, batch: usize) -> Vec<f32> {
+        let mut out = vec![0f32; batch * n];
+        for b in 0..batch {
+            for r in 0..n {
+                let mut acc = bias[r];
+                for p in &pairs[r * k..(r + 1) * k] {
+                    acc += p.v * x[b * d + p.idx as usize];
+                }
+                out[b * n + r] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn tiled_matches_naive_over_ragged_batches() {
+        let (n, k, d) = (13, 9, 40);
+        let (pairs, bias) = rand_rows(n, k, d, 5);
+        for kind in KernelKind::ALL {
+            if !kind.available() {
+                continue;
+            }
+            let mk = Microkernel::of(kind);
+            for &batch in &[1usize, 3, 7, 8, 9, 16, 23] {
+                let mut rng = Rng::new(0xF0 ^ batch as u64);
+                let x: Vec<f32> = (0..batch * d).map(|_| rng.normal_f32()).collect();
+                let want = naive(&pairs, k, n, &bias, &x, d, batch);
+                for threads in [1usize, 4] {
+                    let mut out = vec![0f32; batch * n];
+                    forward_tiled(&pairs, k, n, d, &bias, &x, batch, &mut out, threads, mk);
+                    for (i, (g, w)) in out.iter().zip(&want).enumerate() {
+                        assert!(
+                            (g - w).abs() < 1e-4 * (1.0 + w.abs()),
+                            "{} b{batch} t{threads} idx {i}: {g} vs {w}",
+                            kind.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_position_invariance_bitwise() {
+        // the same input row must produce bit-identical outputs whether
+        // it sits in a full tile, the ragged remainder, or a batch-1
+        // forward — the serving front-end's packing depends on this
+        let (n, k, d) = (11, 7, 32);
+        let (pairs, bias) = rand_rows(n, k, d, 9);
+        let mut rng = Rng::new(77);
+        let xrow: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        for kind in KernelKind::ALL {
+            if !kind.available() {
+                continue;
+            }
+            let mk = Microkernel::of(kind);
+            let mut solo = vec![0f32; n];
+            forward_tiled(&pairs, k, n, d, &bias, &xrow, 1, &mut solo, 1, mk);
+            for &batch in &[8usize, 9, 17] {
+                for pos in [0usize, batch / 2, batch - 1] {
+                    let mut x = vec![0f32; batch * d];
+                    for b in 0..batch {
+                        for j in 0..d {
+                            x[b * d + j] = ((b * 31 + j) % 17) as f32 * 0.1 - 0.5;
+                        }
+                    }
+                    x[pos * d..(pos + 1) * d].copy_from_slice(&xrow);
+                    let mut out = vec![0f32; batch * n];
+                    forward_tiled(&pairs, k, n, d, &bias, &x, batch, &mut out, 2, mk);
+                    for r in 0..n {
+                        assert_eq!(
+                            out[pos * n + r].to_bits(),
+                            solo[r].to_bits(),
+                            "{} batch {batch} pos {pos} r {r}: packed vs solo must be bit-for-bit",
+                            kind.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_rows_and_zero_k() {
+        // n_active == 0: nothing to write
+        forward_tiled(&[], 0, 0, 10, &[], &[0.5; 10], 1, &mut [], 4, Microkernel::auto());
+        // k == 0 with active rows: bias passthrough
+        let bias = vec![1.5f32, -2.0];
+        let mut out = vec![0f32; 2 * 9];
+        let x = vec![0.25f32; 9 * 4];
+        forward_tiled(&[], 0, 2, 4, &bias, &x, 9, &mut out, 2, Microkernel::auto());
+        for b in 0..9 {
+            assert_eq!(out[b * 2], 1.5);
+            assert_eq!(out[b * 2 + 1], -2.0);
+        }
+    }
+}

@@ -6,7 +6,9 @@
 //! * **L3 (this crate)** — the coordinator: DST topology updaters
 //!   ([`dst`]), the training-loop driver ([`train`]), the PJRT runtime
 //!   that executes AOT-compiled JAX programs ([`runtime`]), the condensed
-//!   sparse inference engine and online-inference server ([`inference`])
+//!   sparse inference engine and online-inference server ([`inference`],
+//!   bottoming out in the runtime-dispatched SIMD microkernels of
+//!   [`kernels`])
 //!   with its socket serving front-end ([`inference::frontend`] over the
 //!   [`net`] wire protocol),
 //!   plus the analysis substrates the paper's evaluation needs
@@ -26,6 +28,7 @@ pub mod dst;
 pub mod exp;
 pub mod flops;
 pub mod inference;
+pub mod kernels;
 pub mod net;
 pub mod runtime;
 pub mod sparsity;

@@ -37,7 +37,8 @@ USAGE:
   srigl train --model cnn_proxy --method srigl --sparsity 0.9 [--steps N]
               [--gamma 0.3] [--no-ablation] [--dist erk|uniform] [--seed S]
   srigl serve [--sparsity 0.9] [--requests N] [--batched MAX]
-  srigl serve-model [--dims 3072,768,768,256] [--repr condensed|dense|csr|structured|mixed]
+  srigl serve-model [--dims 3072,768,768,256]
+              [--repr condensed|condensed-tiled|dense|csr|structured|mixed]
               [--sparsity 0.9] [--workers 4] [--max-batch 8] [--requests N]
               [--threads T] [--gap-us G] [--stack NAME] [--adaptive]
               [--shards S] [--listen ADDR] [--queue-cap N] [--cache-cap N]
@@ -259,6 +260,11 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
     let adaptive = args.has("adaptive");
     let shards: usize = args.parse_or("shards", knobs.shards)?;
 
+    // Startup kernel report: which microkernel dispatch selected, and a
+    // quick per-layer throughput estimate at the serving batch cap — so
+    // bench logs can attribute serving numbers to the kernel that ran.
+    report_kernel_selection(&model, max_batch, threads);
+
     // One construction path for every serving surface: the stack's serve
     // knobs seed the builder, CLI flags override.
     let builder = EngineBuilder::from_knobs(&knobs)
@@ -345,6 +351,40 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Print the process-wide microkernel selection and, per layer, the
+/// representation, shape, stored weights, and a quick measured GFLOP/s
+/// estimate at the serving batch cap (2 FLOPs per stored weight per
+/// example; ablated neurons store nothing, so compact forms are credited
+/// only for work they actually do). A few milliseconds per layer at
+/// startup buys bench JSON lines that can track kernel selection and
+/// per-layer throughput across machines.
+fn report_kernel_selection(model: &SparseModel, batch: usize, threads: usize) {
+    use srigl::bench::bench;
+    println!(
+        "kernel dispatch: {} (SRIGL_KERNEL=scalar|portable|avx2 overrides)",
+        srigl::kernels::describe_selection()
+    );
+    let batch = batch.max(1);
+    for (i, layer) in model.layers().iter().enumerate() {
+        let k = layer.kernel();
+        let stored: usize = layer.row_weights().iter().sum();
+        let flops = 2.0 * stored as f64 * batch as f64;
+        let x = vec![0.1f32; batch * k.in_width()];
+        let mut out = vec![0f32; batch * k.out_width()];
+        let m = bench("layer", 5, std::time::Duration::from_millis(4), || {
+            k.forward(&x, batch, &mut out, threads);
+        });
+        println!(
+            "  layer {i}: {:<15} {:>5}x{:<5} {:>9} stored weights, est {:>7.2} GFLOP/s @ batch {batch}",
+            k.name(),
+            k.out_width(),
+            k.in_width(),
+            stored,
+            flops / m.median_s().max(1e-12) / 1e9
+        );
+    }
 }
 
 /// `serve-model --listen ADDR`: run the socket front-end until killed.

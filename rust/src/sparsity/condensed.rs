@@ -6,11 +6,56 @@
 //! This exploits *both* structure levels SRigL learns: neuron ablation
 //! (skip all-zero rows entirely) and constant fan-in (uniform row layout,
 //! no indptr indirection like CSR).
+//!
+//! Two storage layouts share the same geometry:
+//!
+//! * [`Condensed`] — separate `values` / `idx` arrays (two streams per
+//!   row), the layout the scalar gather-MAC reads.
+//! * [`CondensedTiled`] — one interleaved `(idx, value)` record array
+//!   ([`IdxVal`]): a single sequential stream per row, which is what the
+//!   batch-tiled broadcast-MAC kernel in [`crate::kernels::tiled`] wants
+//!   (one cache stream for the weights, one for the transposed input
+//!   tile). The two layouts convert losslessly in both directions —
+//!   `prop_invariants` pins the round-trip.
+//!
+//! Construction returns a typed [`CondensedError`] instead of panicking:
+//! a serving stack built from a bad manifest must fail fast with a
+//! message, not take down a worker thread mid-request.
 
 use crate::sparsity::mask::Mask;
 use crate::tensor::Tensor;
 
-#[derive(Clone, Debug)]
+/// Why a weight/mask pair cannot be condensed. Converts into
+/// `anyhow::Error` through `std::error::Error` for the serving/manifest
+/// paths.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CondensedError {
+    /// Weight tensor and mask disagree on shape.
+    ShapeMismatch { weights: Vec<usize>, mask: Vec<usize> },
+    /// An active row's fan-in differs from the layer's constant fan-in —
+    /// the invariant SRigL maintains and Algorithm 1 requires.
+    FanInMismatch { row: usize, got: usize, expect: usize },
+}
+
+impl std::fmt::Display for CondensedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CondensedError::ShapeMismatch { weights, mask } => {
+                write!(f, "weights {weights:?} and mask {mask:?} have different shapes")
+            }
+            CondensedError::FanInMismatch { row, got, expect } => write!(
+                f,
+                "row {row}: fan-in {got} != constant {expect} \
+                 (constant fan-in per layer is the invariant SRigL maintains; \
+                 this mask cannot be condensed)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CondensedError {}
+
+#[derive(Clone, Debug, PartialEq)]
 pub struct Condensed {
     /// Number of columns of the dense matrix (layer input features).
     pub d: usize,
@@ -29,10 +74,17 @@ pub struct Condensed {
 
 impl Condensed {
     /// Build from a weight tensor and its constant-fan-in mask. Rows with
-    /// zero active weights (ablated neurons) are dropped. Panics if active
-    /// rows disagree on fan-in (the invariant SRigL maintains).
-    pub fn from_masked(w: &Tensor, m: &Mask) -> Condensed {
-        assert_eq!(w.shape, m.t.shape);
+    /// zero active weights (ablated neurons) are dropped; an all-ablated
+    /// mask yields an empty (k = 0) representation, which every consumer
+    /// supports. Errors (typed, no panics) when the shapes disagree or
+    /// active rows disagree on fan-in.
+    pub fn from_masked(w: &Tensor, m: &Mask) -> Result<Condensed, CondensedError> {
+        if w.shape != m.t.shape {
+            return Err(CondensedError::ShapeMismatch {
+                weights: w.shape.clone(),
+                mask: m.t.shape.clone(),
+            });
+        }
         let (n, d) = (m.neurons, m.fan_in);
         let counts = m.fan_in_counts();
         let k = counts.iter().copied().find(|&c| c > 0).unwrap_or(0);
@@ -44,7 +96,9 @@ impl Condensed {
             if c == 0 {
                 continue;
             }
-            assert_eq!(c, k, "row {row}: fan-in {c} != constant {k}");
+            if c != k {
+                return Err(CondensedError::FanInMismatch { row, got: c, expect: k });
+            }
             active.push(row as u32);
             for j in 0..d {
                 if m.is_active(row, j) {
@@ -53,7 +107,7 @@ impl Condensed {
                 }
             }
         }
-        Condensed { d, n_orig: n, k, active, values, idx }
+        Ok(Condensed { d, n_orig: n, k, active, values, idx })
     }
 
     pub fn n_active(&self) -> usize {
@@ -89,6 +143,93 @@ impl Condensed {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Batch-tiled layout
+// ---------------------------------------------------------------------------
+
+/// One interleaved weight record of the batch-tiled condensed layout:
+/// the column index and the stored value side by side, so the tile
+/// kernel's inner loop walks a single sequential stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+#[repr(C)]
+pub struct IdxVal {
+    pub idx: u32,
+    pub v: f32,
+}
+
+/// The batch-tiled condensed layout: same geometry as [`Condensed`]
+/// (n_active rows x constant fan-in k, ascending in-row indices, ablated
+/// rows dropped) with the value/index streams interleaved per weight.
+/// Consumed by the batch-tiled broadcast-MAC kernel
+/// ([`crate::kernels::tiled`]); converts to/from [`Condensed`] without
+/// loss. Tile width is a *kernel* property ([`crate::kernels::TILE`]),
+/// not a storage one — the same stored layout serves any tile width.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CondensedTiled {
+    pub d: usize,
+    pub n_orig: usize,
+    pub k: usize,
+    /// Surviving neuron ids, ascending; len = n_active.
+    pub active: Vec<u32>,
+    /// (n_active x k) interleaved (column index, value) records,
+    /// row-major, indices ascending within each row.
+    pub pairs: Vec<IdxVal>,
+}
+
+impl CondensedTiled {
+    /// Interleave a [`Condensed`] matrix (lossless).
+    pub fn from_condensed(c: &Condensed) -> CondensedTiled {
+        let pairs = c
+            .idx
+            .iter()
+            .zip(&c.values)
+            .map(|(&idx, &v)| IdxVal { idx, v })
+            .collect();
+        CondensedTiled {
+            d: c.d,
+            n_orig: c.n_orig,
+            k: c.k,
+            active: c.active.clone(),
+            pairs,
+        }
+    }
+
+    /// Build directly from a weight tensor and its constant-fan-in mask
+    /// (same contract as [`Condensed::from_masked`]).
+    pub fn from_masked(w: &Tensor, m: &Mask) -> Result<CondensedTiled, CondensedError> {
+        Ok(CondensedTiled::from_condensed(&Condensed::from_masked(w, m)?))
+    }
+
+    /// De-interleave back to the two-stream layout (lossless — the exact
+    /// inverse of [`CondensedTiled::from_condensed`]).
+    pub fn to_condensed(&self) -> Condensed {
+        let mut values = Vec::with_capacity(self.pairs.len());
+        let mut idx = Vec::with_capacity(self.pairs.len());
+        for p in &self.pairs {
+            idx.push(p.idx);
+            values.push(p.v);
+        }
+        Condensed {
+            d: self.d,
+            n_orig: self.n_orig,
+            k: self.k,
+            active: self.active.clone(),
+            values,
+            idx,
+        }
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Storage bytes: interleaved records (u32 + f32 each) + active list
+    /// (u32) — byte-for-byte the same total as the two-stream layout.
+    pub fn storage_bytes(&self) -> usize {
+        self.pairs.len() * 8 + self.active.len() * 4
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,7 +246,7 @@ mod tests {
     #[test]
     fn roundtrip_dense() {
         let (w, m) = random_layer(16, 40, 7, 0);
-        let c = Condensed::from_masked(&w, &m);
+        let c = Condensed::from_masked(&w, &m).unwrap();
         assert_eq!(c.n_active(), 16);
         assert_eq!(c.k, 7);
         assert_eq!(c.to_dense().data, w.data);
@@ -114,7 +255,7 @@ mod tests {
     #[test]
     fn roundtrip_mask() {
         let (w, m) = random_layer(8, 24, 3, 1);
-        let c = Condensed::from_masked(&w, &m);
+        let c = Condensed::from_masked(&w, &m).unwrap();
         assert_eq!(c.to_mask().t.data, m.t.data);
     }
 
@@ -128,7 +269,7 @@ mod tests {
                 w.data[row * 20 + j] = 0.0;
             }
         }
-        let c = Condensed::from_masked(&w, &m);
+        let c = Condensed::from_masked(&w, &m).unwrap();
         assert_eq!(c.n_active(), 8);
         assert!(!c.active.contains(&2) && !c.active.contains(&7));
         assert_eq!(c.to_dense().data, w.data);
@@ -137,7 +278,7 @@ mod tests {
     #[test]
     fn idx_rows_sorted() {
         let (w, m) = random_layer(12, 64, 9, 3);
-        let c = Condensed::from_masked(&w, &m);
+        let c = Condensed::from_masked(&w, &m).unwrap();
         for r in 0..c.n_active() {
             let row = &c.idx[r * c.k..(r + 1) * c.k];
             assert!(row.windows(2).all(|p| p[0] < p[1]), "{row:?}");
@@ -145,29 +286,75 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "fan-in")]
-    fn rejects_non_constant_fan_in() {
-        let mut rng = Rng::new(4);
-        let m = Mask::random_per_layer(&[8, 16], 30, &mut rng);
-        // Likely non-constant; if by rare chance constant this test would
-        // fail, so force it:
-        let mut m = m;
-        m.set(0, 0, true);
-        m.set(0, 1, true);
-        m.set(0, 2, true);
-        m.set(1, 0, true);
+    fn rejects_non_constant_fan_in_with_typed_error() {
         let mut m2 = Mask::from_tensor(Tensor::zeros(&[8, 16]));
         m2.set(0, 0, true);
         m2.set(0, 1, true);
         m2.set(1, 0, true); // row 1 has fan-in 1, row 0 has 2
         let w = Tensor::ones(&[8, 16]);
-        let _ = Condensed::from_masked(&w, &m2);
+        match Condensed::from_masked(&w, &m2) {
+            Err(CondensedError::FanInMismatch { row, got, expect }) => {
+                assert_eq!((row, got, expect), (1, 1, 2));
+            }
+            other => panic!("expected FanInMismatch, got {other:?}"),
+        }
+        // the tiled constructor propagates the same error
+        assert!(CondensedTiled::from_masked(&w, &m2).is_err());
+        // display + anyhow conversion carry a readable message
+        let e = Condensed::from_masked(&w, &m2).unwrap_err();
+        assert!(e.to_string().contains("fan-in 1 != constant 2"), "{e}");
+        let a: anyhow::Error = e.into();
+        assert!(format!("{a}").contains("fan-in"));
+    }
+
+    #[test]
+    fn rejects_shape_mismatch_with_typed_error() {
+        let (_, m) = random_layer(8, 16, 3, 9);
+        let w = Tensor::ones(&[8, 12]);
+        match Condensed::from_masked(&w, &m) {
+            Err(CondensedError::ShapeMismatch { weights, mask }) => {
+                assert_eq!(weights, vec![8, 12]);
+                assert_eq!(mask, vec![8, 16]);
+            }
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tiled_roundtrips_losslessly() {
+        let (mut w, mut m) = random_layer(14, 30, 5, 4);
+        // ablate a few rows so the active list is non-trivial
+        for &row in &[0usize, 6, 13] {
+            for j in 0..30 {
+                m.set(row, j, false);
+                w.data[row * 30 + j] = 0.0;
+            }
+        }
+        let c = Condensed::from_masked(&w, &m).unwrap();
+        let t = CondensedTiled::from_condensed(&c);
+        assert_eq!(t.n_active(), c.n_active());
+        assert_eq!(t.storage_bytes(), c.storage_bytes(), "interleaving is byte-neutral");
+        assert_eq!(t.to_condensed(), c, "lossless round-trip");
+        // direct construction agrees with the via-Condensed path
+        assert_eq!(CondensedTiled::from_masked(&w, &m).unwrap(), t);
+    }
+
+    #[test]
+    fn tiled_all_ablated_is_empty() {
+        let w = Tensor::zeros(&[6, 10]);
+        let m = Mask::from_tensor(Tensor::zeros(&[6, 10]));
+        let t = CondensedTiled::from_masked(&w, &m).unwrap();
+        assert_eq!(t.n_active(), 0);
+        assert_eq!(t.k, 0);
+        assert!(t.pairs.is_empty());
+        assert_eq!(t.storage_bytes(), 0);
+        assert_eq!(t.to_condensed().to_dense().data, w.data);
     }
 
     #[test]
     fn storage_beats_dense_at_high_sparsity() {
         let (w, m) = random_layer(768, 3072, 307, 5); // Fig. 4 @ 90%
-        let c = Condensed::from_masked(&w, &m);
+        let c = Condensed::from_masked(&w, &m).unwrap();
         let dense_bytes = w.numel() * 4;
         assert!(c.storage_bytes() * 4 < dense_bytes, "condensed should be <25% of dense");
     }

@@ -7,7 +7,7 @@ pub mod distribution;
 pub mod mask;
 pub mod nm;
 
-pub use condensed::Condensed;
+pub use condensed::{Condensed, CondensedError, CondensedTiled, IdxVal};
 pub use csr::Csr;
 pub use distribution::{achieved_sparsity, fan_in_targets, layer_densities, Distribution, LayerShape};
 pub use mask::Mask;

@@ -559,16 +559,18 @@ impl Trainer {
         })
     }
 
-    /// Export one trained sparse layer in the condensed representation
-    /// (requires constant fan-in — i.e. a structured method).
-    pub fn export_condensed(&self, layer: usize) -> Condensed {
+    /// Export one trained sparse layer in the condensed representation.
+    /// Fails with the typed [`crate::sparsity::CondensedError`] (through
+    /// `anyhow`) when the layer's mask does not have constant fan-in —
+    /// i.e. when a non-structured method trained it.
+    pub fn export_condensed(&self, layer: usize) -> Result<Condensed> {
         let pi = self.sparse_idx[layer];
         // flatten to (n, fan_in) view
         let p = &self.params[pi];
         let (n, f) = p.neuron_view();
         let w2 = Tensor::from_vec(&[n, f], p.data.clone());
         let m2 = Mask::from_tensor(Tensor::from_vec(&[n, f], self.masks[layer].t.data.clone()));
-        Condensed::from_masked(&w2, &m2)
+        Ok(Condensed::from_masked(&w2, &m2)?)
     }
 
     /// Export the trained sparse stack as a serving

@@ -8,7 +8,9 @@
 //! identical `shard_pass` layer walk, and slices copy weight rows
 //! verbatim. Pinned across:
 //!
-//! * all four representations, uniform and mixed per layer;
+//! * all five representations (incl. the batch-tiled condensed form —
+//!   batch 256 exercises its full-tile path, 7 its remainder), uniform
+//!   and mixed per layer;
 //! * shard counts {1, 2, 3};
 //! * batch sizes {1, 7, 256};
 //! * intra-shard thread counts {1, 4};
@@ -97,7 +99,11 @@ fn engines_agree_all_reprs() {
 
 #[test]
 fn engines_agree_mixed_stack() {
-    let model = stack(&[Repr::Condensed, Repr::Csr, Repr::Structured, Repr::Dense], 0.3, 21);
+    let model = stack(
+        &[Repr::Condensed, Repr::CondensedTiled, Repr::Csr, Repr::Structured, Repr::Dense],
+        0.3,
+        21,
+    );
     for &shards in &SHARDS {
         check_all_engines(&model, shards, &format!("mixed s{shards}"));
     }
@@ -106,12 +112,26 @@ fn engines_agree_mixed_stack() {
 #[test]
 fn engines_agree_with_heavy_ablation() {
     // over half the neurons ablated: plans must absorb long zero-cost runs
-    for repr in [Repr::Condensed, Repr::Structured] {
+    for repr in [Repr::Condensed, Repr::CondensedTiled, Repr::Structured] {
         let model = stack(&[repr; 3], 0.6, 33);
         for &shards in &SHARDS {
             check_all_engines(&model, shards, &format!("{} ablated s{shards}", repr.name()));
         }
     }
+}
+
+/// Every engine's `describe` reports the process-wide kernel selection —
+/// how bench JSON lines track which kernel actually ran on a machine.
+#[test]
+fn describe_reports_kernel_selection() {
+    let sel = srigl::kernels::describe_selection();
+    assert!(sel.contains(srigl::kernels::selected().name()));
+    let model = stack(&[Repr::CondensedTiled; 3], 0.25, 5);
+    assert!(Engine::describe(&model).contains(&sel), "{}", Engine::describe(&model));
+    let scoped = ShardedModel::from_model(&model, 2).unwrap();
+    assert!(Engine::describe(&scoped).contains(&sel), "{}", Engine::describe(&scoped));
+    let team = PersistentShardedEngine::from_model(&model, 2).unwrap();
+    assert!(Engine::describe(&team).contains(&sel), "{}", Engine::describe(&team));
 }
 
 /// The persistent team's whole point: 100 forwards reuse the same S

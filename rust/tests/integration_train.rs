@@ -109,7 +109,7 @@ fn condensed_export_matches_trained_params() {
         .unwrap();
     tr.run().unwrap();
     for li in 0..tr.sparse_idx.len() {
-        let c = tr.export_condensed(li);
+        let c = tr.export_condensed(li).expect("SRigL maintains constant fan-in");
         let pi = tr.sparse_idx[li];
         let dense = c.to_dense();
         assert_eq!(dense.data, tr.params[pi].data, "layer {li} condensed mismatch");

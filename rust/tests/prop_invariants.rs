@@ -9,7 +9,7 @@ use srigl::dst::{LayerView, RigL, SRigL, Set, TopologyUpdater};
 use srigl::sparsity::distribution::{
     achieved_sparsity, fan_in_targets, layer_densities, Distribution, LayerShape,
 };
-use srigl::sparsity::{Condensed, Csr, Mask};
+use srigl::sparsity::{Condensed, CondensedTiled, Csr, Mask};
 use srigl::tensor::Tensor;
 use srigl::util::json::Json;
 use srigl::util::rng::Rng;
@@ -130,9 +130,18 @@ fn prop_condensed_roundtrip() {
                 l.w.data[r * l.mask.fan_in + j] = 0.0;
             }
         }
-        let c = Condensed::from_masked(&l.w, &l.mask);
+        let c = Condensed::from_masked(&l.w, &l.mask).unwrap();
         assert_eq!(c.to_dense().data, l.w.data, "seed {seed}: dense roundtrip");
         assert_eq!(c.to_mask().t.data, l.mask.t.data, "seed {seed}: mask roundtrip");
+        // the batch-tiled layout interleaves the same data losslessly
+        let t = CondensedTiled::from_condensed(&c);
+        assert_eq!(t.to_condensed(), c, "seed {seed}: tiled roundtrip");
+        assert_eq!(t.storage_bytes(), c.storage_bytes(), "seed {seed}: tiled bytes");
+        assert_eq!(
+            CondensedTiled::from_masked(&l.w, &l.mask).unwrap(),
+            t,
+            "seed {seed}: direct tiled construction"
+        );
         // CSR roundtrip on the same matrix
         let csr = Csr::from_dense(&l.w);
         assert_eq!(csr.to_dense().data, l.w.data, "seed {seed}: csr roundtrip");
@@ -155,7 +164,7 @@ fn prop_condensed_storage_accounting() {
                 l.w.data[r * l.mask.fan_in + j] = 0.0;
             }
         }
-        let c = Condensed::from_masked(&l.w, &l.mask);
+        let c = Condensed::from_masked(&l.w, &l.mask).unwrap();
         let na = c.n_active();
         assert_eq!(na, n - n_ablate, "seed {seed}");
         assert_eq!(c.values.len(), na * c.k, "seed {seed}: values shape");
@@ -178,34 +187,45 @@ fn condensed_all_rows_ablated() {
     let d = 20;
     let w = Tensor::zeros(&[n, d]);
     let m = Mask::from_tensor(Tensor::zeros(&[n, d]));
-    let c = Condensed::from_masked(&w, &m);
+    let c = Condensed::from_masked(&w, &m).unwrap();
     assert_eq!(c.n_active(), 0);
     assert_eq!(c.k, 0);
     assert_eq!(c.storage_bytes(), 0);
     assert!(c.active.is_empty() && c.values.is_empty() && c.idx.is_empty());
     assert_eq!(c.to_dense().data, w.data);
     assert_eq!(c.to_mask().t.data, m.t.data);
+    // same for the tiled layout
+    let t = CondensedTiled::from_condensed(&c);
+    assert_eq!(t.n_active(), 0);
+    assert!(t.pairs.is_empty());
+    assert_eq!(t.to_condensed(), c);
 }
 
 #[test]
 fn condensed_k0_layer_forwards_empty() {
     // An all-ablated layer must still be constructible and serve a forward
-    // pass (empty output) through the inference engine.
-    use srigl::inference::CondensedLayer;
+    // pass (empty output) through the inference engine — in both the
+    // plain and the batch-tiled representation.
+    use srigl::inference::{CondensedLayer, CondensedTiledLayer, LinearKernel};
     let n = 6;
     let d = 10;
     let w = Tensor::zeros(&[n, d]);
     let m = Mask::from_tensor(Tensor::zeros(&[n, d]));
     let bias = vec![1.0f32; n];
-    let layer = CondensedLayer::new(&w, &m, &bias);
-    assert_eq!(srigl::inference::LinearKernel::out_width(&layer), 0);
-    for batch in [1usize, 3] {
+    let layer = CondensedLayer::new(&w, &m, &bias).unwrap();
+    let tiled = CondensedTiledLayer::new(&w, &m, &bias).unwrap();
+    assert_eq!(LinearKernel::out_width(&layer), 0);
+    assert_eq!(LinearKernel::out_width(&tiled), 0);
+    for batch in [1usize, 3, 9] {
         let x = vec![0.5f32; batch * d];
         let mut out: Vec<f32> = vec![];
-        srigl::inference::LinearKernel::forward(&layer, &x, batch, &mut out, 2);
+        LinearKernel::forward(&layer, &x, batch, &mut out, 2);
+        assert!(out.is_empty());
+        LinearKernel::forward(&tiled, &x, batch, &mut out, 2);
         assert!(out.is_empty());
     }
     assert_eq!(layer.c.storage_bytes(), 0);
+    assert_eq!(tiled.t.storage_bytes(), 0);
 }
 
 #[test]
