@@ -149,4 +149,5 @@ fn main() {
         ("rows", arr(rows)),
     ]);
     println!("{}", summary.to_string());
+    srigl::arena::persist_bench_summary("frontend", &summary);
 }

@@ -107,4 +107,5 @@ fn main() {
         ("rows", arr(rows)),
     ]);
     println!("{}", summary.to_string());
+    srigl::arena::persist_bench_summary("kernel_forward", &summary);
 }

@@ -80,4 +80,5 @@ fn main() {
         ("rows", arr(rows)),
     ]);
     println!("{}", summary.to_string());
+    srigl::arena::persist_bench_summary("model_serve", &summary);
 }

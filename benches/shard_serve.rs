@@ -121,4 +121,5 @@ fn main() {
         ("rows", arr(rows)),
     ]);
     println!("{}", summary.to_string());
+    srigl::arena::persist_bench_summary("shard_serve", &summary);
 }

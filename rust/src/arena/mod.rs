@@ -1,0 +1,191 @@
+//! The traffic arena: head-to-head engine duels on shared synthetic
+//! traffic, scored with paired statistics, persisted as a performance
+//! trajectory (`srigl arena`).
+//!
+//! The serving stack had accumulated knobs — worker count, fixed vs
+//! adaptive batching, shard count, queue/cache/egress capacities — whose
+//! comparisons lived in one-off bench runs under steady Poisson load, the
+//! friendliest possible traffic. The arena makes comparisons *fair*,
+//! *adversarial*, and *durable*:
+//!
+//! * **Fair** — both configs replay the *same* deterministic trace
+//!   ([`trace`]): identical arrival times, batch sizes, and payloads,
+//!   checked by a digest. Deltas are paired per round and per request, so
+//!   the shared load pattern cancels ([`summary`], backed by
+//!   [`crate::stats::compare`]).
+//! * **Adversarial** — five scenarios ([`Scenario`]): Poisson baseline,
+//!   bursty flash-crowds, a diurnal ramp, heavy-tailed batch sizes, and a
+//!   cache-adversarial stream of never-repeating payloads.
+//! * **Durable** — results persist as schema-versioned `BENCH_*.json`
+//!   records ([`persist`]); `srigl arena --history` renders the
+//!   trajectory across commits.
+//!
+//! [`replay`] drives the traffic either in-process (the serving pool
+//! without sockets) or over loopback TCP through the real front-end and
+//! retrying client — the mode where the cache, backpressure, and backoff
+//! fixes are actually on the field.
+
+pub mod persist;
+pub mod replay;
+pub mod summary;
+pub mod trace;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+pub use persist::{load_history, persist_bench_summary, render_history, HistoryRecord, SCHEMA_VERSION};
+pub use replay::{replay, replay_wire, ReplayOutcome};
+pub use summary::{summarize, DuelSummary};
+pub use trace::{Scenario, Trace, TraceEvent, TraceSpec};
+
+use crate::inference::engine::EngineBuilder;
+use crate::inference::SparseModel;
+
+/// Parse an engine-spec string like `"workers=4,adaptive=8,shards=2"`
+/// into an [`EngineBuilder`]. Keys: `workers`, `batch` (fixed), `adaptive`
+/// (cap), `shards`, `threads`, `queue`, `cache`, `egress`, `retry` (ms).
+/// Unknown keys error with the known list — a typo must not silently
+/// bench the defaults.
+pub fn parse_engine_spec(spec: &str) -> Result<EngineBuilder> {
+    let mut b = EngineBuilder::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (key, val) = part
+            .split_once('=')
+            .with_context(|| format!("engine spec {part:?}: expected key=value"))?;
+        let n: usize = val
+            .trim()
+            .parse()
+            .with_context(|| format!("engine spec {part:?}: value must be an integer"))?;
+        b = match key.trim() {
+            "workers" => b.workers(n),
+            "batch" => b.fixed_batch(n),
+            "adaptive" => b.adaptive(n),
+            "shards" => b.shards(n),
+            "threads" => b.threads(n),
+            "queue" => b.queue_capacity(n),
+            "cache" => b.cache_capacity(n),
+            "egress" => b.egress_capacity(n),
+            "retry" => b.retry_after_ms(n as u32),
+            other => bail!(
+                "engine spec: unknown key {other:?} (known: workers, batch, adaptive, \
+                 shards, threads, queue, cache, egress, retry)"
+            ),
+        };
+    }
+    Ok(b)
+}
+
+/// How a duel runs.
+#[derive(Clone, Copy, Debug)]
+pub struct DuelConfig {
+    /// Paired replays per side (floored at 1). More rounds tighten the
+    /// throughput interval.
+    pub rounds: usize,
+    /// Replay over loopback TCP through the real front-end instead of
+    /// in-process (engages cache, backpressure, egress, client backoff).
+    pub wire: bool,
+    /// Client connections in wire mode (clamped to 1..=64).
+    pub clients: usize,
+    /// `Client::infer_retrying` retry budget in wire mode.
+    pub max_retries: usize,
+}
+
+impl Default for DuelConfig {
+    fn default() -> DuelConfig {
+        DuelConfig { rounds: 3, wire: false, clients: 4, max_retries: 8 }
+    }
+}
+
+/// Run a full duel: replay `trace` under specs `a` and `b` for
+/// `cfg.rounds` paired rounds and score the result. Execution order
+/// alternates each round (A,B then B,A) so slow machine drift — thermal
+/// ramps, background load — cancels in the per-round pairing instead of
+/// biasing whichever side always ran second. `log` receives one progress
+/// line per round.
+pub fn run_duel(
+    model: &Arc<SparseModel>,
+    a: (&str, &EngineBuilder),
+    b: (&str, &EngineBuilder),
+    trace: &Trace,
+    cfg: &DuelConfig,
+    mut log: impl FnMut(String),
+) -> Result<DuelSummary> {
+    replay::validate(trace, a.1).context("side A")?;
+    replay::validate(trace, b.1).context("side B")?;
+    let rounds = cfg.rounds.max(1);
+    let mut a_out = Vec::with_capacity(rounds);
+    let mut b_out = Vec::with_capacity(rounds);
+    let mut run_side = |builder: &EngineBuilder| -> Result<ReplayOutcome> {
+        if cfg.wire {
+            replay_wire(model, builder, trace, cfg.clients, cfg.max_retries)
+        } else {
+            replay(model, builder, trace)
+        }
+    };
+    for round in 0..rounds {
+        let (ra, rb) = if round % 2 == 0 {
+            let ra = run_side(a.1).with_context(|| format!("round {round}, side A"))?;
+            let rb = run_side(b.1).with_context(|| format!("round {round}, side B"))?;
+            (ra, rb)
+        } else {
+            let rb = run_side(b.1).with_context(|| format!("round {round}, side B"))?;
+            let ra = run_side(a.1).with_context(|| format!("round {round}, side A"))?;
+            (ra, rb)
+        };
+        log(format!(
+            "round {}/{rounds}: A {:.1} rps ({} served) | B {:.1} rps ({} served)",
+            round + 1,
+            ra.rps(),
+            ra.served(),
+            rb.rps(),
+            rb.served()
+        ));
+        a_out.push(ra);
+        b_out.push(rb);
+    }
+    summarize(trace, a.0, b.0, &a_out, &b_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::server::Batching;
+
+    #[test]
+    fn engine_spec_parses_every_key() {
+        let b = parse_engine_spec(
+            "workers=2,adaptive=16,shards=3,threads=2,queue=99,cache=0,egress=7,retry=5",
+        )
+        .unwrap();
+        assert_eq!(b.workers, 2);
+        assert_eq!(b.batching, Batching::Adaptive { cap: 16 });
+        assert_eq!(b.shards, 3);
+        assert_eq!(b.threads, 2);
+        assert_eq!(b.queue_capacity, 99);
+        assert_eq!(b.cache_capacity, 0);
+        assert_eq!(b.egress_capacity, 7);
+        assert_eq!(b.retry_after_ms, 5);
+
+        let fixed = parse_engine_spec("batch=4").unwrap();
+        assert_eq!(fixed.batching, Batching::Fixed(4));
+        // later keys override earlier ones
+        let last = parse_engine_spec("batch=4,adaptive=8").unwrap();
+        assert_eq!(last.batching, Batching::Adaptive { cap: 8 });
+        // empty spec is the defaults
+        assert_eq!(parse_engine_spec("").unwrap(), EngineBuilder::new());
+    }
+
+    #[test]
+    fn engine_spec_rejects_garbage() {
+        for bad in ["wrkers=2", "workers", "workers=x", "batch=4,boop=1"] {
+            let err = parse_engine_spec(bad).unwrap_err();
+            assert!(!format!("{err:#}").is_empty(), "{bad}");
+        }
+        assert!(format!("{:#}", parse_engine_spec("boop=1").unwrap_err()).contains("known:"));
+    }
+}

@@ -1,0 +1,322 @@
+//! Persisted performance trajectory: every arena duel and JSON-emitting
+//! bench can drop a schema-versioned `BENCH_<name>_<label>.json` record at
+//! the repo root (or `SRIGL_BENCH_DIR`), and `srigl arena --history`
+//! renders the accumulated trajectory — performance over commits, not
+//! just one run's console scroll.
+//!
+//! Envelope (schema 1):
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "kind": "arena" | "bench",
+//!   "name": "arena-bursty",
+//!   "label": "1a2b3c4d5e6f",
+//!   "created_unix": 1754600000,
+//!   "headline": "bursty: B wins (...)",
+//!   "payload": { ... }
+//! }
+//! ```
+//!
+//! The label defaults to the current git commit (short sha, read straight
+//! from `.git` — no subprocess), overridable with `--label` or
+//! `SRIGL_BENCH_LABEL`, so CI can stamp records with run ids. Loading
+//! *fails* on an unknown `schema` — that is the CI drift gate: a change to
+//! the envelope must bump [`SCHEMA_VERSION`] and teach [`load_history`]
+//! about the old one, or the bench-trajectory job goes red.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{num, obj, s, Json};
+
+/// Envelope schema written by [`persist_record_in`] and required by
+/// [`load_history`].
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Environment override for where records are written/read (default: the
+/// current directory, i.e. the repo root when run from it).
+pub const ENV_BENCH_DIR: &str = "SRIGL_BENCH_DIR";
+
+/// Environment override for the record label (default: git short sha).
+pub const ENV_BENCH_LABEL: &str = "SRIGL_BENCH_LABEL";
+
+/// Directory bench records live in: `SRIGL_BENCH_DIR` or `.`.
+pub fn bench_dir() -> PathBuf {
+    std::env::var_os(ENV_BENCH_DIR).map(PathBuf::from).unwrap_or_else(|| PathBuf::from("."))
+}
+
+/// Keep labels filename- and JSON-safe: anything outside `[A-Za-z0-9._-]`
+/// becomes `-`.
+fn sanitize(label: &str) -> String {
+    let cleaned: String = label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '-' })
+        .collect();
+    if cleaned.is_empty() { "unlabeled".to_string() } else { cleaned }
+}
+
+/// The label to stamp on new records: `SRIGL_BENCH_LABEL`, else the git
+/// short sha of `HEAD` (found by walking ancestors of the current
+/// directory), else `"unlabeled"`.
+pub fn label() -> String {
+    if let Some(l) = std::env::var_os(ENV_BENCH_LABEL) {
+        return sanitize(&l.to_string_lossy());
+    }
+    sanitize(&git_label().unwrap_or_else(|| "unlabeled".to_string()))
+}
+
+/// Resolve HEAD to a 12-char short sha without shelling out: find the
+/// `.git` directory, parse `HEAD` (`ref: refs/...` or a detached sha),
+/// then the ref file or `packed-refs`.
+fn git_label() -> Option<String> {
+    let mut dir = std::env::current_dir().ok()?;
+    let git = loop {
+        let candidate = dir.join(".git");
+        if candidate.is_dir() {
+            break candidate;
+        }
+        if !dir.pop() {
+            return None;
+        }
+    };
+    let head = fs::read_to_string(git.join("HEAD")).ok()?;
+    let head = head.trim();
+    let sha = if let Some(refname) = head.strip_prefix("ref: ") {
+        let refname = refname.trim();
+        match fs::read_to_string(git.join(refname)) {
+            Ok(sha) => sha.trim().to_string(),
+            // ref not loose: scan packed-refs for "<sha> <refname>"
+            Err(_) => fs::read_to_string(git.join("packed-refs"))
+                .ok()?
+                .lines()
+                .filter(|l| !l.starts_with('#') && !l.starts_with('^'))
+                .find_map(|l| {
+                    let (sha, name) = l.split_once(' ')?;
+                    (name.trim() == refname).then(|| sha.to_string())
+                })?,
+        }
+    } else {
+        head.to_string()
+    };
+    let sha: String = sha.chars().take_while(char::is_ascii_hexdigit).collect();
+    if sha.len() < 7 {
+        return None;
+    }
+    Some(sha.chars().take(12).collect())
+}
+
+fn now_unix() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Write one record into `dir` as `BENCH_<name>_<label>.json`; returns the
+/// path written. `label_override` skips the env/git lookup.
+pub fn persist_record_in(
+    dir: &Path,
+    kind: &str,
+    name: &str,
+    headline: &str,
+    payload: Json,
+    label_override: Option<&str>,
+) -> Result<PathBuf> {
+    let label = match label_override {
+        Some(l) => sanitize(l),
+        None => label(),
+    };
+    let name = sanitize(name);
+    let record = obj(vec![
+        ("schema", num(SCHEMA_VERSION as f64)),
+        ("kind", s(kind)),
+        ("name", s(&name)),
+        ("label", s(&label)),
+        ("created_unix", num(now_unix() as f64)),
+        ("headline", s(headline)),
+        ("payload", payload),
+    ]);
+    let path = dir.join(format!("BENCH_{name}_{label}.json"));
+    fs::write(&path, record.to_string()).with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// [`persist_record_in`] targeting [`bench_dir`].
+pub fn persist_record(
+    kind: &str,
+    name: &str,
+    headline: &str,
+    payload: Json,
+    label_override: Option<&str>,
+) -> Result<PathBuf> {
+    persist_record_in(&bench_dir(), kind, name, headline, payload, label_override)
+}
+
+/// Best-effort persistence for the cargo benches: never fails the bench,
+/// just reports where the record went (or why it didn't).
+pub fn persist_bench_summary(name: &str, summary: &Json) {
+    match persist_record("bench", name, &format!("bench {name}"), summary.clone(), None) {
+        Ok(path) => eprintln!("bench record -> {}", path.display()),
+        Err(e) => eprintln!("bench record for {name} not persisted: {e:#}"),
+    }
+}
+
+/// One loaded `BENCH_*.json` record.
+#[derive(Clone, Debug)]
+pub struct HistoryRecord {
+    pub path: PathBuf,
+    pub kind: String,
+    pub name: String,
+    pub label: String,
+    pub created_unix: u64,
+    pub headline: String,
+    pub payload: Json,
+}
+
+/// Load every `BENCH_*.json` in `dir`, sorted by (name, created_unix,
+/// label). Errors on unreadable/unparsable records and on any schema
+/// other than [`SCHEMA_VERSION`] — schema drift must be handled here, not
+/// silently skipped.
+pub fn load_history(dir: &Path) -> Result<Vec<HistoryRecord>> {
+    let mut records = Vec::new();
+    let entries =
+        fs::read_dir(dir).with_context(|| format!("reading bench dir {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        let fname = match path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n,
+            None => continue,
+        };
+        if !fname.starts_with("BENCH_") || !fname.ends_with(".json") {
+            continue;
+        }
+        let text =
+            fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+        let json =
+            Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let schema = json.get("schema")?.as_usize()? as u64;
+        if schema != SCHEMA_VERSION {
+            bail!(
+                "{}: schema {schema} but this build reads schema {SCHEMA_VERSION} — \
+                 bump SCHEMA_VERSION handling in arena::persist",
+                path.display()
+            );
+        }
+        records.push(HistoryRecord {
+            kind: json.get("kind")?.as_str()?.to_string(),
+            name: json.get("name")?.as_str()?.to_string(),
+            label: json.get("label")?.as_str()?.to_string(),
+            created_unix: json.get("created_unix")?.as_usize()? as u64,
+            headline: json.get("headline")?.as_str()?.to_string(),
+            payload: json.get("payload")?.clone(),
+            path,
+        });
+    }
+    records.sort_by(|a, b| {
+        (&a.name, a.created_unix, &a.label).cmp(&(&b.name, b.created_unix, &b.label))
+    });
+    Ok(records)
+}
+
+/// The `srigl arena --history` listing: records grouped by name in time
+/// order — the perf trajectory.
+pub fn render_history(records: &[HistoryRecord]) -> String {
+    if records.is_empty() {
+        return "no BENCH_*.json records found\n".to_string();
+    }
+    let mut out = String::new();
+    let mut current = "";
+    for r in records {
+        if r.name != current {
+            current = &r.name;
+            out.push_str(&format!("{} ({}):\n", r.name, r.kind));
+        }
+        out.push_str(&format!("  [{}] {} — {}\n", r.created_unix, r.label, r.headline));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("srigl-arena-persist-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn sanitize_labels() {
+        assert_eq!(sanitize("abc123.def-g_h"), "abc123.def-g_h");
+        assert_eq!(sanitize("feat/odd name"), "feat-odd-name");
+        assert_eq!(sanitize(""), "unlabeled");
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let payload = obj(vec![("x", num(3.5))]);
+        let p1 = persist_record_in(&dir, "arena", "arena-poisson", "h1", payload.clone(), Some("lbl-a"))
+            .unwrap();
+        let p2 =
+            persist_record_in(&dir, "bench", "model_serve", "h2", payload, Some("lbl-b")).unwrap();
+        assert!(p1.file_name().unwrap().to_str().unwrap() == "BENCH_arena-poisson_lbl-a.json");
+        let hist = load_history(&dir).unwrap();
+        assert_eq!(hist.len(), 2);
+        // sorted by name: arena-poisson before model_serve
+        assert_eq!(hist[0].name, "arena-poisson");
+        assert_eq!(hist[0].kind, "arena");
+        assert_eq!(hist[0].label, "lbl-a");
+        assert_eq!(hist[0].headline, "h1");
+        assert_eq!(hist[0].payload.get("x").unwrap().as_f64().unwrap(), 3.5);
+        assert_eq!(hist[1].path, p2);
+        let listing = render_history(&hist);
+        assert!(listing.contains("arena-poisson") && listing.contains("lbl-b"), "{listing}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rewriting_same_name_and_label_overwrites() {
+        let dir = tmp_dir("overwrite");
+        let pay = |v| obj(vec![("v", num(v))]);
+        persist_record_in(&dir, "arena", "a", "old", pay(1.0), Some("l")).unwrap();
+        persist_record_in(&dir, "arena", "a", "new", pay(2.0), Some("l")).unwrap();
+        let hist = load_history(&dir).unwrap();
+        assert_eq!(hist.len(), 1, "same (name, label) -> one file");
+        assert_eq!(hist[0].headline, "new");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_schema_fails_loudly() {
+        let dir = tmp_dir("schema");
+        let record = obj(vec![
+            ("schema", num(999.0)),
+            ("kind", s("arena")),
+            ("name", s("x")),
+            ("label", s("l")),
+            ("created_unix", num(0.0)),
+            ("headline", s("h")),
+            ("payload", obj(vec![])),
+        ]);
+        fs::write(dir.join("BENCH_x_l.json"), record.to_string()).unwrap();
+        let err = load_history(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("schema 999"), "{err:#}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn non_bench_files_are_ignored() {
+        let dir = tmp_dir("ignore");
+        fs::write(dir.join("notes.txt"), "hi").unwrap();
+        fs::write(dir.join("BENCH_broken.notjson"), "{").unwrap();
+        assert!(load_history(&dir).unwrap().is_empty());
+        assert!(render_history(&[]).contains("no BENCH"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,392 @@
+//! Trace replay: drive one [`Trace`] through a serving configuration and
+//! record per-request latencies, aligned by event index so two replays of
+//! the same trace can be compared pairwise.
+//!
+//! Two drivers share the outcome type:
+//!
+//! * [`replay`] — in-process: the same submitter/queue/worker machinery as
+//!   [`crate::inference::server::serve_target`] (Injector, adaptive or
+//!   fixed batching, greedy row-packing, per-worker typed scratch), except
+//!   the submitter paces to the trace's absolute schedule instead of
+//!   drawing fresh Poisson gaps, payloads come from the trace's pool, and
+//!   each request keeps its event index so latencies land in a
+//!   position-aligned vector.
+//! * [`replay_wire`] — through the real socket front-end: spawns
+//!   [`crate::inference::frontend`] on a loopback port and fans the trace
+//!   out over a small set of [`Client`] connections using the retrying
+//!   (backoff-scheduled) request path. This is the mode where the result
+//!   cache, backpressure, and egress machinery participate — and where
+//!   [`Scenario::Adversarial`](super::trace::Scenario) vs pool traffic
+//!   actually differ.
+//!
+//! A request the wire driver could not get answered (retries exhausted)
+//! records a NaN latency; [`LatencyStats`] counts-and-excludes NaN
+//! (`nan_samples`), and the paired summary skips unpaired positions.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use super::trace::Trace;
+use crate::inference::engine::{Engine, EngineBuilder};
+use crate::inference::frontend::{self, FrontendStats};
+use crate::inference::server::{AdaptiveBatcher, Batching, LatencyStats, WorkerStats};
+use crate::inference::SparseModel;
+use crate::net::Client;
+use crate::util::json::{num, obj, Json};
+use crate::util::threadpool::Injector;
+
+/// One replay's measurements.
+#[derive(Clone, Debug)]
+pub struct ReplayOutcome {
+    /// Per-request latency in µs, indexed by trace event position; NaN
+    /// where the request was never answered (wire mode, retries
+    /// exhausted). Position alignment is what makes two outcomes of the
+    /// same trace pairwise comparable.
+    pub latencies_us: Vec<f64>,
+    /// Merged engine-side statistics (in-process: worker records; wire:
+    /// the front-end's queue-served latency block).
+    pub stats: LatencyStats,
+    /// Wall-clock of the whole replay (submission start to last answer).
+    pub wall_s: f64,
+    /// Wire-mode extras (cache hits, rejections, drops); `None` for
+    /// in-process replays.
+    pub frontend: Option<FrontendStats>,
+}
+
+impl ReplayOutcome {
+    /// Requests that received an answer (finite latency).
+    pub fn served(&self) -> usize {
+        self.latencies_us.iter().filter(|v| v.is_finite()).count()
+    }
+
+    /// Answered requests per wall-clock second — the round's throughput
+    /// observation.
+    pub fn rps(&self) -> f64 {
+        self.served() as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Round record for the persisted summary.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("rps", num(self.rps())),
+            ("served", num(self.served() as f64)),
+            ("wall_s", num(self.wall_s)),
+            ("latency", self.stats.to_json()),
+        ];
+        if let Some(f) = &self.frontend {
+            fields.push(("frontend", f.to_json()));
+        }
+        obj(fields)
+    }
+}
+
+/// Check a trace is replayable under `builder`: every request must fit one
+/// forward, i.e. the trace's largest row count ≤ the batching cap.
+pub fn validate(trace: &Trace, builder: &EngineBuilder) -> Result<()> {
+    let max_rows = trace.max_event_rows();
+    let cap = builder.batching.cap();
+    ensure!(
+        max_rows <= cap,
+        "trace carries requests up to {max_rows} rows but the engine's batching cap is {cap}; \
+         raise batch=/adaptive= in the engine spec or lower --max-rows"
+    );
+    Ok(())
+}
+
+/// Replay `trace` against the engine `builder` selects for `model`
+/// (replicated pool, or persistent shard team when `shards > 1`) —
+/// in-process, no sockets.
+pub fn replay(model: &SparseModel, builder: &EngineBuilder, trace: &Trace) -> Result<ReplayOutcome> {
+    validate(trace, builder)?;
+    if builder.is_sharded() {
+        let team = builder.build_persistent_sharded(model).context("building shard team")?;
+        Ok(replay_engine(&team, builder, trace))
+    } else {
+        Ok(replay_engine(model, builder, trace))
+    }
+}
+
+/// The in-process replay loop over any prebuilt [`Engine`]. Callers should
+/// [`validate`] first; an oversized request here would panic the packing
+/// invariant instead of erroring.
+pub fn replay_engine<E: Engine>(engine: &E, builder: &EngineBuilder, trace: &Trace) -> ReplayOutcome {
+    struct Req<'a> {
+        idx: usize,
+        rows: usize,
+        x: &'a [f32],
+        t_submit: Instant,
+    }
+
+    let workers = builder.workers.max(1);
+    let batching = builder.batching;
+    let cap = batching.cap();
+    let batcher = AdaptiveBatcher::new(cap);
+    let d = engine.in_width();
+    let threads = builder.threads;
+    let pool = trace.payloads(d);
+    let n = trace.events.len();
+    let injector: Injector<Req> = Injector::new();
+
+    let t_start = Instant::now();
+    let per_worker: Vec<(WorkerStats, Vec<(usize, f64)>)> = std::thread::scope(|s| {
+        let inj = &injector;
+        let pool = &pool;
+        let events = &trace.events;
+
+        // Submitter: pace to the trace's absolute schedule (open-loop —
+        // a slow engine does not slow arrivals, it grows the queue).
+        s.spawn(move || {
+            let t0 = Instant::now();
+            for (i, ev) in events.iter().enumerate() {
+                let target = t0 + Duration::from_micros(ev.at_us);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                let rows = ev.rows as usize;
+                let x = &pool[ev.payload as usize][..rows * d];
+                inj.push(Req { idx: i, rows, x, t_submit: Instant::now() });
+            }
+            inj.close();
+        });
+
+        // Workers: adaptive/fixed pop, greedy row-packing (the same loop
+        // shape as the front-end's worker_loop), latencies tagged with the
+        // originating event index.
+        let batcher = &batcher;
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut scratch = engine.scratch(cap);
+                    let mut xbuf = vec![0f32; cap * d];
+                    let mut jobs: Vec<Req> = Vec::with_capacity(cap);
+                    let mut ws = WorkerStats::default();
+                    let mut lat: Vec<(usize, f64)> = Vec::new();
+                    loop {
+                        jobs.clear();
+                        let want = match batching {
+                            Batching::Fixed(n) => n.max(1),
+                            Batching::Adaptive { .. } => batcher.next_batch(inj.len()),
+                        };
+                        if inj.pop_batch(want, &mut jobs) == 0 {
+                            break;
+                        }
+                        while !jobs.is_empty() {
+                            // pack leading jobs while their rows fit one
+                            // forward (validate() guarantees take >= 1)
+                            let mut rows = 0usize;
+                            let mut take = 0usize;
+                            while take < jobs.len() && rows + jobs[take].rows <= cap {
+                                rows += jobs[take].rows;
+                                take += 1;
+                            }
+                            let mut off = 0usize;
+                            for j in &jobs[..take] {
+                                xbuf[off * d..(off + j.rows) * d].copy_from_slice(j.x);
+                                off += j.rows;
+                            }
+                            let _ = engine.forward(&xbuf[..rows * d], rows, &mut scratch, threads);
+                            let t_done = Instant::now();
+                            ws.batches += 1;
+                            ws.served += take;
+                            for j in jobs.drain(..take) {
+                                let us =
+                                    t_done.duration_since(j.t_submit).as_secs_f64() * 1e6;
+                                ws.latencies_us.push(us);
+                                lat.push((j.idx, us));
+                            }
+                        }
+                    }
+                    (ws, lat)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("replay worker panicked")).collect()
+    });
+    let wall_s = t_start.elapsed().as_secs_f64();
+
+    let mut latencies = vec![f64::NAN; n];
+    let mut worker_stats = Vec::with_capacity(per_worker.len());
+    for (ws, lat) in per_worker {
+        for (i, us) in lat {
+            latencies[i] = us;
+        }
+        worker_stats.push(ws);
+    }
+    ReplayOutcome {
+        latencies_us: latencies,
+        stats: LatencyStats::from_workers(&worker_stats, wall_s),
+        wall_s,
+        frontend: None,
+    }
+}
+
+/// Replay `trace` through the real socket front-end: spawn it on a
+/// loopback port, fan events over `clients` connections (event `i` goes to
+/// connection `i % clients`, each pacing to the shared schedule), request
+/// via [`Client::infer_retrying`] with up to `max_retries` backoff-spaced
+/// retries. Latency is measured client-side around the whole retry loop —
+/// the latency a backpressured caller actually experiences.
+pub fn replay_wire(
+    model: &Arc<SparseModel>,
+    builder: &EngineBuilder,
+    trace: &Trace,
+    clients: usize,
+    max_retries: usize,
+) -> Result<ReplayOutcome> {
+    validate(trace, builder)?;
+    let d = model.in_width();
+    let pool = trace.payloads(d);
+    let n = trace.events.len();
+    let clients = clients.clamp(1, 64);
+
+    let handle = frontend::spawn(Arc::clone(model), "127.0.0.1:0", builder)
+        .context("spawning arena front-end")?;
+    let addr = handle.addr();
+    // connect everyone before the clock starts so connection setup is not
+    // billed to the first requests
+    let mut conns = Vec::with_capacity(clients);
+    for _ in 0..clients {
+        conns.push(Client::connect(addr).context("connecting arena client")?);
+    }
+
+    let t_start = Instant::now();
+    let lat_chunks: Vec<Vec<(usize, f64)>> = std::thread::scope(|s| {
+        let pool = &pool;
+        let events = &trace.events;
+        let handles: Vec<_> = conns
+            .into_iter()
+            .enumerate()
+            .map(|(c, mut client)| {
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    for (i, ev) in events.iter().enumerate() {
+                        if i % clients != c {
+                            continue;
+                        }
+                        let target = t_start + Duration::from_micros(ev.at_us);
+                        let now = Instant::now();
+                        if target > now {
+                            std::thread::sleep(target - now);
+                        }
+                        let rows = ev.rows as usize;
+                        let x = &pool[ev.payload as usize][..rows * d];
+                        let t_submit = Instant::now();
+                        match client.infer_retrying(rows, x, max_retries) {
+                            Ok(_) => out
+                                .push((i, t_submit.elapsed().as_secs_f64() * 1e6)),
+                            // retries exhausted or transport error: the
+                            // position stays NaN (counted, excluded)
+                            Err(_) => out.push((i, f64::NAN)),
+                        }
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("arena client panicked")).collect()
+    });
+    let wall_s = t_start.elapsed().as_secs_f64();
+    let fstats = handle.stop();
+
+    let mut latencies = vec![f64::NAN; n];
+    for chunk in lat_chunks {
+        for (i, us) in chunk {
+            latencies[i] = us;
+        }
+    }
+    Ok(ReplayOutcome {
+        latencies_us: latencies,
+        stats: fstats.latency.clone(),
+        wall_s,
+        frontend: Some(fstats),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arena::trace::{Scenario, TraceSpec};
+    use crate::inference::model::{Activation, LayerSpec, Repr};
+
+    fn tiny_model() -> SparseModel {
+        let spec = |n, act| LayerSpec {
+            n,
+            repr: Repr::Condensed,
+            sparsity: 0.8,
+            ablated_frac: 0.2,
+            activation: act,
+        };
+        SparseModel::synth(32, &[spec(24, Activation::Relu), spec(8, Activation::Identity)], 5)
+            .unwrap()
+    }
+
+    fn flood(n: usize, max_rows: usize, seed: u64) -> Trace {
+        Trace::generate(&TraceSpec {
+            scenario: Scenario::Poisson,
+            n_requests: n,
+            mean_gap_us: 0.0,
+            max_rows,
+            pool: 8,
+            seed,
+        })
+    }
+
+    #[test]
+    fn validate_rejects_oversized_rows() {
+        let t = flood(50, 16, 1);
+        let err = validate(&t, &EngineBuilder::new().fixed_batch(8)).unwrap_err();
+        assert!(format!("{err:#}").contains("cap is 8"), "{err:#}");
+        assert!(validate(&t, &EngineBuilder::new().fixed_batch(16)).is_ok());
+    }
+
+    #[test]
+    fn replay_answers_every_request_once() {
+        let m = tiny_model();
+        let t = flood(120, 4, 2);
+        let out = replay(&m, &EngineBuilder::new().workers(2).fixed_batch(8), &t).unwrap();
+        assert_eq!(out.latencies_us.len(), 120);
+        assert_eq!(out.served(), 120, "every event answered exactly once");
+        assert_eq!(out.stats.n, 120);
+        assert_eq!(out.stats.nan_samples, 0);
+        assert!(out.rps() > 0.0);
+        assert!(out.frontend.is_none());
+        // round record is valid JSON
+        let j = Json::parse(&out.to_json().to_string()).unwrap();
+        assert_eq!(j.get("served").unwrap().as_usize().unwrap(), 120);
+    }
+
+    #[test]
+    fn replay_adaptive_and_sharded_serve_all() {
+        let m = tiny_model();
+        let t = flood(80, 4, 3);
+        for b in [
+            EngineBuilder::new().workers(2).adaptive(8),
+            EngineBuilder::new().workers(1).fixed_batch(4).shards(2),
+        ] {
+            let out = replay(&m, &b, &t).unwrap();
+            assert_eq!(out.served(), 80, "{b:?}");
+        }
+    }
+
+    #[test]
+    fn replay_respects_trace_pacing() {
+        // 30 requests at 4 ms mean gaps: the replay must take roughly the
+        // trace's span (open-loop pacing), not finish instantly
+        let m = tiny_model();
+        let t = Trace::generate(&TraceSpec {
+            scenario: Scenario::Poisson,
+            n_requests: 30,
+            mean_gap_us: 4000.0,
+            max_rows: 1,
+            pool: 4,
+            seed: 8,
+        });
+        let span_s = t.events.last().unwrap().at_us as f64 / 1e6;
+        let out = replay(&m, &EngineBuilder::new().workers(1).fixed_batch(4), &t).unwrap();
+        assert!(out.wall_s >= span_s * 0.9, "wall {} vs span {span_s}", out.wall_s);
+        assert_eq!(out.served(), 30);
+    }
+}

@@ -1,0 +1,322 @@
+//! Duel scoring: fold two sides' per-round [`ReplayOutcome`]s into a
+//! [`DuelSummary`] — paired deltas with confidence intervals and a
+//! verdict.
+//!
+//! Two paired metrics, two interval flavours (see [`crate::stats::compare`]
+//! for why):
+//!
+//! * **Throughput** — per-round (B − A) answered-requests-per-second
+//!   deltas, [`t_ci`] over the handful of replicates. Rounds alternate
+//!   execution order (A-first, then B-first), so slow machine drift
+//!   cancels in the pairing.
+//! * **Latency** — per-request (A − B) µs diffs at matched trace
+//!   positions (both sides replay the *same* events), pooled across
+//!   rounds, [`bootstrap_mean_ci`] because latency diffs are skewed and
+//!   plentiful. Positive mean ⇒ B answered faster. Positions either side
+//!   failed to answer (NaN) are skipped — a pair needs both observations.
+//!
+//! The verdict is throughput-first: latency only decides when the
+//! throughput interval straddles zero. Bootstrap resampling is seeded from
+//! the trace digest, so re-scoring the same measurements reproduces the
+//! same interval bit-for-bit.
+
+use anyhow::Result;
+
+use super::replay::ReplayOutcome;
+use super::trace::Trace;
+use crate::stats::compare::{bootstrap_mean_ci, t_ci, MeanCi, Verdict};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Bootstrap resamples for the pooled latency-delta interval.
+const BOOTSTRAP_RESAMPLES: usize = 1000;
+/// Confidence level for both intervals.
+const CONFIDENCE: f64 = 0.95;
+
+/// The scored outcome of one A-vs-B duel over a shared trace.
+#[derive(Clone, Debug)]
+pub struct DuelSummary {
+    /// Scenario name (e.g. "bursty").
+    pub scenario: String,
+    /// FNV-1a digest of the replayed trace — proof both sides saw the
+    /// same schedule, and the bootstrap seed.
+    pub digest: u64,
+    pub n_requests: usize,
+    pub mean_gap_us: f64,
+    pub max_rows: usize,
+    pub seed: u64,
+    /// Engine-spec strings as the user wrote them.
+    pub a_spec: String,
+    pub b_spec: String,
+    /// Per-round throughput observations (answered req/s).
+    pub a_rps: Vec<f64>,
+    pub b_rps: Vec<f64>,
+    /// Per-round outcome records (rps, wall, latency block, frontend
+    /// counters in wire mode) for the persisted JSON.
+    pub a_rounds: Vec<Json>,
+    pub b_rounds: Vec<Json>,
+    /// t-interval over per-round (B − A) rps deltas; positive ⇒ B faster.
+    pub rps_delta: MeanCi,
+    /// Bootstrap interval over pooled per-request (A − B) latency diffs in
+    /// µs; positive ⇒ B answers sooner.
+    pub lat_saved_us: MeanCi,
+    /// Matched request pairs behind `lat_saved_us`.
+    pub paired: usize,
+    pub verdict: Verdict,
+    /// Which metric decided: "throughput", "latency", or "none".
+    pub decided_by: &'static str,
+}
+
+/// Score a finished duel: `a_rounds`/`b_rounds` are the per-round
+/// outcomes of replaying `trace` under each spec (equal length ≥ 1).
+pub fn summarize(
+    trace: &Trace,
+    a_spec: &str,
+    b_spec: &str,
+    a_rounds: &[ReplayOutcome],
+    b_rounds: &[ReplayOutcome],
+) -> Result<DuelSummary> {
+    anyhow::ensure!(
+        !a_rounds.is_empty() && a_rounds.len() == b_rounds.len(),
+        "duel needs matching non-empty round lists (got {} vs {})",
+        a_rounds.len(),
+        b_rounds.len()
+    );
+    let a_rps: Vec<f64> = a_rounds.iter().map(ReplayOutcome::rps).collect();
+    let b_rps: Vec<f64> = b_rounds.iter().map(ReplayOutcome::rps).collect();
+    let rps_deltas: Vec<f64> = a_rps.iter().zip(&b_rps).map(|(a, b)| b - a).collect();
+    let rps_delta = t_ci(&rps_deltas);
+
+    // Pool per-request paired diffs across rounds; a pair exists only
+    // where BOTH sides answered that trace position.
+    let mut diffs: Vec<f64> = Vec::new();
+    for (ra, rb) in a_rounds.iter().zip(b_rounds) {
+        for (la, lb) in ra.latencies_us.iter().zip(&rb.latencies_us) {
+            if la.is_finite() && lb.is_finite() {
+                diffs.push(la - lb);
+            }
+        }
+    }
+    let boot_seed = trace.digest() ^ trace.spec.seed;
+    let lat_saved_us = bootstrap_mean_ci(&diffs, BOOTSTRAP_RESAMPLES, CONFIDENCE, boot_seed);
+
+    let (verdict, decided_by) = match Verdict::from_ci(&rps_delta) {
+        Verdict::Inconclusive => match Verdict::from_ci(&lat_saved_us) {
+            Verdict::Inconclusive => (Verdict::Inconclusive, "none"),
+            v => (v, "latency"),
+        },
+        v => (v, "throughput"),
+    };
+
+    Ok(DuelSummary {
+        scenario: trace.spec.scenario.name().to_string(),
+        digest: trace.digest(),
+        n_requests: trace.spec.n_requests,
+        mean_gap_us: trace.spec.mean_gap_us,
+        max_rows: trace.spec.max_rows,
+        seed: trace.spec.seed,
+        a_spec: a_spec.to_string(),
+        b_spec: b_spec.to_string(),
+        a_rps,
+        b_rps,
+        a_rounds: a_rounds.iter().map(ReplayOutcome::to_json).collect(),
+        b_rounds: b_rounds.iter().map(ReplayOutcome::to_json).collect(),
+        rps_delta,
+        lat_saved_us,
+        paired: diffs.len(),
+        verdict,
+        decided_by,
+    })
+}
+
+fn ci_json(ci: &MeanCi) -> Json {
+    let fnum = |v: f64| if v.is_finite() { num(v) } else { Json::Null };
+    obj(vec![("mean", fnum(ci.mean)), ("lo", fnum(ci.lo)), ("hi", fnum(ci.hi))])
+}
+
+impl DuelSummary {
+    /// One-line result for the persisted record's `headline` field and the
+    /// `--history` listing.
+    pub fn headline(&self) -> String {
+        format!(
+            "{}: {} (rps B-A {:+.1} [{:+.1}, {:+.1}], n={} rounds)",
+            self.scenario,
+            self.verdict.label(),
+            self.rps_delta.mean,
+            self.rps_delta.lo,
+            self.rps_delta.hi,
+            self.a_rps.len(),
+        )
+    }
+
+    /// Full record. Keys `scenario`/`digest`/`n_requests`/`gap_us`/
+    /// `max_rows`/`seed`/`rounds` plus each side's `spec` are functions of
+    /// the inputs alone — the determinism tests fingerprint on them. The
+    /// `rounds`/`delta`/`verdict` blocks carry wall-clock measurements.
+    pub fn to_json(&self) -> Json {
+        let side = |spec: &str, rps: &[f64], rounds: &[Json]| {
+            obj(vec![
+                ("spec", s(spec)),
+                ("rps", arr(rps.iter().map(|&v| num(v)))),
+                ("rounds", arr(rounds.to_vec())),
+            ])
+        };
+        obj(vec![
+            ("scenario", s(&self.scenario)),
+            ("digest", s(&format!("{:016x}", self.digest))),
+            ("n_requests", num(self.n_requests as f64)),
+            ("gap_us", num(self.mean_gap_us)),
+            ("max_rows", num(self.max_rows as f64)),
+            ("seed", num(self.seed as f64)),
+            ("rounds", num(self.a_rps.len() as f64)),
+            ("a", side(&self.a_spec, &self.a_rps, &self.a_rounds)),
+            ("b", side(&self.b_spec, &self.b_rps, &self.b_rounds)),
+            (
+                "delta",
+                obj(vec![
+                    ("rps_b_minus_a", ci_json(&self.rps_delta)),
+                    ("lat_saved_us_a_minus_b", ci_json(&self.lat_saved_us)),
+                    ("paired", num(self.paired as f64)),
+                ]),
+            ),
+            (
+                "verdict",
+                obj(vec![
+                    ("result", s(self.verdict.label())),
+                    ("decided_by", s(self.decided_by)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Human-readable block for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let ci = |c: &MeanCi| format!("{:+.2} [{:+.2}, {:+.2}]", c.mean, c.lo, c.hi);
+        out.push_str(&format!(
+            "arena: scenario {} | {} requests | trace {:016x} | {} round(s)\n",
+            self.scenario,
+            self.n_requests,
+            self.digest,
+            self.a_rps.len()
+        ));
+        out.push_str(&format!("  A: {}\n     rps per round: {:?}\n", self.a_spec, rounded(&self.a_rps)));
+        out.push_str(&format!("  B: {}\n     rps per round: {:?}\n", self.b_spec, rounded(&self.b_rps)));
+        out.push_str(&format!("  throughput delta (B-A, rps): {}\n", ci(&self.rps_delta)));
+        out.push_str(&format!(
+            "  latency saved by B (A-B, us over {} pairs): {}\n",
+            self.paired,
+            ci(&self.lat_saved_us)
+        ));
+        out.push_str(&format!(
+            "  verdict: {} (decided by {})\n",
+            self.verdict.label(),
+            self.decided_by
+        ));
+        out
+    }
+}
+
+fn rounded(xs: &[f64]) -> Vec<f64> {
+    xs.iter().map(|v| (v * 10.0).round() / 10.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arena::trace::{Scenario, TraceSpec};
+    use crate::inference::server::LatencyStats;
+
+    fn trace() -> Trace {
+        Trace::generate(&TraceSpec {
+            scenario: Scenario::Poisson,
+            n_requests: 6,
+            mean_gap_us: 0.0,
+            max_rows: 2,
+            pool: 4,
+            seed: 3,
+        })
+    }
+
+    fn outcome(lat: Vec<f64>, wall_s: f64) -> ReplayOutcome {
+        ReplayOutcome {
+            stats: LatencyStats::from_workers(&[], wall_s),
+            latencies_us: lat,
+            wall_s,
+            frontend: None,
+        }
+    }
+
+    #[test]
+    fn clear_winner_on_throughput() {
+        let t = trace();
+        // B consistently ~2x the throughput of A across 3 rounds
+        let a: Vec<_> = (0..3).map(|i| outcome(vec![100.0; 6], 2.0 + 0.01 * i as f64)).collect();
+        let b: Vec<_> = (0..3).map(|i| outcome(vec![50.0; 6], 1.0 + 0.01 * i as f64)).collect();
+        let s = summarize(&t, "slow", "fast", &a, &b).unwrap();
+        assert_eq!(s.verdict, Verdict::BWins);
+        assert_eq!(s.decided_by, "throughput");
+        assert_eq!(s.paired, 18);
+        assert!(s.rps_delta.mean > 0.0 && s.rps_delta.excludes_zero());
+        assert!(s.lat_saved_us.mean > 0.0, "B also saves latency");
+        assert!(s.headline().contains("B wins"));
+    }
+
+    #[test]
+    fn latency_decides_when_throughput_ties() {
+        let t = trace();
+        // identical wall-clock (rps deltas all zero -> zero-width interval
+        // at 0 -> inconclusive) but B answers 40us sooner per request
+        let a: Vec<_> = (0..3).map(|_| outcome(vec![100.0; 6], 1.0)).collect();
+        let b: Vec<_> = (0..3).map(|_| outcome(vec![60.0; 6], 1.0)).collect();
+        let s = summarize(&t, "a", "b", &a, &b).unwrap();
+        assert_eq!(s.decided_by, "latency");
+        assert_eq!(s.verdict, Verdict::BWins);
+        assert!((s.lat_saved_us.mean - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_positions_drop_out_of_pairing() {
+        let t = trace();
+        let mut la = vec![100.0; 6];
+        la[2] = f64::NAN; // A never answered event 2
+        let mut lb = vec![100.0; 6];
+        lb[4] = f64::NAN; // B never answered event 4
+        let s = summarize(&t, "a", "b", &[outcome(la, 1.0)], &[outcome(lb, 1.0)]).unwrap();
+        assert_eq!(s.paired, 4, "6 positions minus one NaN on each side");
+        // single round: rps interval infinitely wide, latency diffs all 0
+        assert_eq!(s.verdict, Verdict::Inconclusive);
+        assert_eq!(s.decided_by, "none");
+    }
+
+    #[test]
+    fn json_roundtrips_and_fingerprint_is_deterministic() {
+        let t = trace();
+        let a = [outcome(vec![10.0; 6], 1.0), outcome(vec![11.0; 6], 1.1)];
+        let b = [outcome(vec![9.0; 6], 0.9), outcome(vec![8.0; 6], 1.0)];
+        let s1 = summarize(&t, "sa", "sb", &a, &b).unwrap();
+        let s2 = summarize(&t, "sa", "sb", &a, &b).unwrap();
+        let j1 = Json::parse(&s1.to_json().to_string()).unwrap();
+        let j2 = Json::parse(&s2.to_json().to_string()).unwrap();
+        for key in ["scenario", "digest", "n_requests", "gap_us", "max_rows", "seed", "rounds"] {
+            assert_eq!(
+                j1.get(key).unwrap().to_string(),
+                j2.get(key).unwrap().to_string(),
+                "deterministic fingerprint key {key}"
+            );
+        }
+        assert_eq!(j1.get("digest").unwrap().as_str().unwrap(), format!("{:016x}", t.digest()));
+        assert_eq!(j1.get("a").unwrap().get("spec").unwrap().as_str().unwrap(), "sa");
+        // same measurements -> same seeded bootstrap -> identical deltas
+        assert_eq!(
+            j1.get("delta").unwrap().to_string(),
+            j2.get("delta").unwrap().to_string()
+        );
+        assert!(!s1.render().is_empty());
+    }
+
+    #[test]
+    fn mismatched_rounds_error() {
+        let t = trace();
+        assert!(summarize(&t, "a", "b", &[outcome(vec![1.0; 6], 1.0)], &[]).is_err());
+    }
+}

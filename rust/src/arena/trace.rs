@@ -1,0 +1,360 @@
+//! Deterministic request-trace generators — the scenario library of the
+//! traffic arena.
+//!
+//! A [`Trace`] is a seeded, fully materialized request schedule: for each
+//! request, an absolute submit time (µs from trace start), a row count,
+//! and a payload-pool index. Both sides of an arena duel replay the
+//! *same* trace, which is what makes their per-request latency and
+//! per-round throughput differences paired observations
+//! ([`crate::stats::compare`]).
+//!
+//! Scenarios (all driven by one xoshiro [`Rng`] stream with a fixed
+//! per-event draw order, so the same seed reproduces the same schedule
+//! byte-for-byte):
+//!
+//! * [`Scenario::Poisson`] — the baseline open-loop load: exponential
+//!   inter-arrival gaps at the configured mean (same distribution and 10x
+//!   clamp as [`crate::inference::server::poisson_gap`]).
+//! * [`Scenario::Bursty`] — flash crowds: Poisson background punctuated by
+//!   bursts (geometric start, uniform 64..=128 events long) during which
+//!   gaps shrink 50x. Most events sit inside a burst, so the gap
+//!   distribution is far overdispersed vs Poisson (CV ≈ 2.6 vs 1).
+//! * [`Scenario::Diurnal`] — a day-curve ramp: the arrival rate follows a
+//!   half-sine from 25% (trace edges) to 100% (mid-trace), so a run sweeps
+//!   trough -> peak -> trough loads in one replay.
+//! * [`Scenario::HeavyTail`] — heavy-tailed batch sizes: rows per request
+//!   are Pareto(α=1.2) clamped to `[1, max_rows]` — mostly single-row
+//!   requests with rare near-cap monsters that stress packing.
+//! * [`Scenario::Adversarial`] — cache-adversarial: every request gets a
+//!   unique payload, so a result cache never hits and the full compute
+//!   path is measured (the pool scenarios re-draw from `pool` payloads and
+//!   measure cache-friendly traffic instead).
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Probability a burst starts at a non-burst event (expected ~32 quiet
+/// events between bursts).
+const BURST_START_P: f64 = 1.0 / 32.0;
+/// Burst length is uniform in `BURST_LEN_MIN..=BURST_LEN_MAX` events.
+const BURST_LEN_MIN: usize = 64;
+const BURST_LEN_MAX: usize = 128;
+/// Inside a burst the mean gap shrinks by this factor.
+const BURST_SPEEDUP: f64 = 50.0;
+/// Diurnal trough rate as a fraction of the peak rate.
+const DIURNAL_TROUGH: f64 = 0.25;
+/// Pareto shape for heavy-tailed row counts (α ≤ 2: infinite variance
+/// before the clamp — genuinely heavy).
+const HEAVY_TAIL_ALPHA: f64 = 1.2;
+
+/// A load scenario the generator can materialize.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    Poisson,
+    Bursty,
+    Diurnal,
+    HeavyTail,
+    Adversarial,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 5] = [
+        Scenario::Poisson,
+        Scenario::Bursty,
+        Scenario::Diurnal,
+        Scenario::HeavyTail,
+        Scenario::Adversarial,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Poisson => "poisson",
+            Scenario::Bursty => "bursty",
+            Scenario::Diurnal => "diurnal",
+            Scenario::HeavyTail => "heavytail",
+            Scenario::Adversarial => "adversarial",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Scenario> {
+        match s {
+            "poisson" => Ok(Scenario::Poisson),
+            "bursty" => Ok(Scenario::Bursty),
+            "diurnal" => Ok(Scenario::Diurnal),
+            "heavytail" => Ok(Scenario::HeavyTail),
+            "adversarial" => Ok(Scenario::Adversarial),
+            other => bail!(
+                "unknown scenario {other:?} (known: poisson, bursty, diurnal, heavytail, adversarial)"
+            ),
+        }
+    }
+}
+
+/// Everything that determines a trace. Same spec -> same [`Trace`],
+/// bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSpec {
+    pub scenario: Scenario,
+    pub n_requests: usize,
+    /// Mean inter-arrival gap in µs (the Poisson/background mean; bursty
+    /// and diurnal modulate around it). `0` floods.
+    pub mean_gap_us: f64,
+    /// Rows per request are drawn in `[1, max_rows]` (uniformly, except
+    /// [`Scenario::HeavyTail`]'s Pareto draw). Must be ≤ both duel
+    /// configs' batching caps ([`super::replay::validate`]).
+    pub max_rows: usize,
+    /// Distinct payloads requests draw from (cache-hit traffic);
+    /// [`Scenario::Adversarial`] ignores this and gives every request a
+    /// unique payload.
+    pub pool: usize,
+    pub seed: u64,
+}
+
+/// One scheduled request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Absolute submit time, µs from trace start.
+    pub at_us: u64,
+    /// Feature rows this request carries.
+    pub rows: u32,
+    /// Index into the payload pool ([`Trace::payloads`]).
+    pub payload: u32,
+}
+
+/// A materialized request schedule (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub spec: TraceSpec,
+    pub events: Vec<TraceEvent>,
+}
+
+/// One exponential gap draw with the same 10x-mean clamp as
+/// [`crate::inference::server::poisson_gap`] (one extreme tail draw must
+/// not stall a replay for unbounded time). Always consumes exactly one
+/// uniform draw so the generator's stream position is scenario-shape
+/// independent of the configured mean.
+fn exp_gap_us(mean_us: f64, rng: &mut Rng) -> f64 {
+    let u = rng.uniform().max(1e-12);
+    if mean_us <= 0.0 {
+        return 0.0;
+    }
+    (mean_us * -u.ln()).min(10.0 * mean_us)
+}
+
+/// Pareto(α) row count clamped to `[1, max_rows]`: `floor(u^(-1/α))`.
+fn pareto_rows(max_rows: usize, rng: &mut Rng) -> usize {
+    let u = rng.uniform().max(1e-12);
+    let r = (1.0 / u).powf(1.0 / HEAVY_TAIL_ALPHA).floor() as usize;
+    r.clamp(1, max_rows)
+}
+
+impl Trace {
+    /// Materialize the schedule for `spec`. Deterministic: one
+    /// [`Rng`] stream, fixed per-event draw order (burst state, gap, rows,
+    /// payload), accumulation in f64 µs rounded once per event.
+    pub fn generate(spec: &TraceSpec) -> Trace {
+        let mut rng = Rng::new(spec.seed);
+        let n = spec.n_requests;
+        let mean = spec.mean_gap_us.max(0.0);
+        let max_rows = spec.max_rows.max(1);
+        let pool = spec.pool.max(1);
+        let mut events = Vec::with_capacity(n);
+        let mut t_us = 0.0f64;
+        let mut burst_left = 0usize;
+        for i in 0..n {
+            let gap = match spec.scenario {
+                Scenario::Poisson | Scenario::HeavyTail | Scenario::Adversarial => {
+                    exp_gap_us(mean, &mut rng)
+                }
+                Scenario::Bursty => {
+                    if burst_left == 0 && rng.uniform() < BURST_START_P {
+                        burst_left =
+                            BURST_LEN_MIN + rng.below(BURST_LEN_MAX - BURST_LEN_MIN + 1);
+                    }
+                    if burst_left > 0 {
+                        burst_left -= 1;
+                        exp_gap_us(mean / BURST_SPEEDUP, &mut rng)
+                    } else {
+                        exp_gap_us(mean, &mut rng)
+                    }
+                }
+                Scenario::Diurnal => {
+                    // rate factor follows a half-sine over the trace:
+                    // trough at the edges, peak mid-trace; a slower rate
+                    // means a proportionally longer gap
+                    let x = if n > 1 { i as f64 / (n - 1) as f64 } else { 0.5 };
+                    let r =
+                        DIURNAL_TROUGH + (1.0 - DIURNAL_TROUGH) * (std::f64::consts::PI * x).sin();
+                    exp_gap_us(mean, &mut rng) / r
+                }
+            };
+            t_us += gap;
+            let rows = match spec.scenario {
+                Scenario::HeavyTail => pareto_rows(max_rows, &mut rng),
+                _ => 1 + rng.below(max_rows),
+            } as u32;
+            let payload = match spec.scenario {
+                Scenario::Adversarial => i as u32, // unique: every request misses the cache
+                _ => rng.below(pool) as u32,
+            };
+            events.push(TraceEvent { at_us: t_us.round() as u64, rows, payload });
+        }
+        Trace { spec: spec.clone(), events }
+    }
+
+    /// Largest row count any event carries (1 for an empty trace) — what
+    /// a replaying engine's batching cap must cover.
+    pub fn max_event_rows(&self) -> usize {
+        self.events.iter().map(|e| e.rows as usize).max().unwrap_or(1)
+    }
+
+    /// FNV-1a over the packed event stream — a cheap schedule fingerprint
+    /// for summaries and determinism tests (two traces with equal digests
+    /// replayed the same load).
+    pub fn digest(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(self.events.len() * 16);
+        for e in &self.events {
+            bytes.extend_from_slice(&e.at_us.to_le_bytes());
+            bytes.extend_from_slice(&e.rows.to_le_bytes());
+            bytes.extend_from_slice(&e.payload.to_le_bytes());
+        }
+        crate::net::fnv1a(&bytes)
+    }
+
+    /// Materialize the payload pool for input width `d`: entry `p` holds
+    /// `max_rows_referencing(p) * d` standard-normal f32s, so any event
+    /// can slice its `rows * d` prefix. Drawn from a seed-derived stream
+    /// decoupled from the schedule draws (deterministic per spec).
+    pub fn payloads(&self, d: usize) -> Vec<Vec<f32>> {
+        let pool_n = self.events.iter().map(|e| e.payload as usize + 1).max().unwrap_or(0);
+        let mut rows_need = vec![1usize; pool_n];
+        for e in &self.events {
+            let p = e.payload as usize;
+            rows_need[p] = rows_need[p].max(e.rows as usize);
+        }
+        let mut rng = Rng::new(self.spec.seed ^ 0x5EED_F00D_D00F_DEE5);
+        rows_need
+            .iter()
+            .map(|&r| (0..r * d).map(|_| rng.normal_f32()).collect())
+            .collect()
+    }
+
+    /// Inter-arrival gaps in µs (`events[i].at_us - events[i-1].at_us`;
+    /// the first gap is from t=0) — the raw material of the shape tests.
+    pub fn gaps_us(&self) -> Vec<f64> {
+        let mut prev = 0u64;
+        self.events
+            .iter()
+            .map(|e| {
+                let g = e.at_us.saturating_sub(prev) as f64;
+                prev = e.at_us;
+                g
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(scenario: Scenario, seed: u64) -> TraceSpec {
+        TraceSpec { scenario, n_requests: 500, mean_gap_us: 100.0, max_rows: 8, pool: 16, seed }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        for sc in Scenario::ALL {
+            let a = Trace::generate(&spec(sc, 42));
+            let b = Trace::generate(&spec(sc, 42));
+            assert_eq!(a, b, "{sc:?}: same spec, same trace");
+            assert_eq!(a.digest(), b.digest());
+            let c = Trace::generate(&spec(sc, 43));
+            assert_ne!(a.digest(), c.digest(), "{sc:?}: different seed, different schedule");
+        }
+    }
+
+    #[test]
+    fn scenarios_produce_distinct_schedules() {
+        let digests: Vec<u64> =
+            Scenario::ALL.iter().map(|&sc| Trace::generate(&spec(sc, 7)).digest()).collect();
+        for i in 0..digests.len() {
+            for j in (i + 1)..digests.len() {
+                assert_ne!(digests[i], digests[j], "{:?} vs {:?}", Scenario::ALL[i], Scenario::ALL[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn events_are_ordered_and_bounded() {
+        for sc in Scenario::ALL {
+            let t = Trace::generate(&spec(sc, 3));
+            assert_eq!(t.events.len(), 500);
+            let mut prev = 0u64;
+            for e in &t.events {
+                assert!(e.at_us >= prev, "{sc:?}: submit times must be non-decreasing");
+                prev = e.at_us;
+                assert!((1..=8).contains(&(e.rows as usize)), "{sc:?}: rows in [1, max_rows]");
+            }
+            assert!(t.max_event_rows() <= 8);
+        }
+    }
+
+    #[test]
+    fn adversarial_payloads_are_unique() {
+        let t = Trace::generate(&spec(Scenario::Adversarial, 9));
+        let mut seen = std::collections::HashSet::new();
+        for e in &t.events {
+            assert!(seen.insert(e.payload), "payload {} repeats — cache would hit", e.payload);
+        }
+        // pool-based scenarios reuse payloads (that's the cache-hit traffic)
+        let p = Trace::generate(&spec(Scenario::Poisson, 9));
+        let distinct: std::collections::HashSet<u32> =
+            p.events.iter().map(|e| e.payload).collect();
+        assert!(distinct.len() <= 16, "pool bound respected");
+        assert!(distinct.len() > 1, "pool actually sampled");
+    }
+
+    #[test]
+    fn payload_pool_covers_every_event() {
+        for sc in Scenario::ALL {
+            let t = Trace::generate(&spec(sc, 5));
+            let d = 3;
+            let pool = t.payloads(d);
+            for e in &t.events {
+                let p = &pool[e.payload as usize];
+                assert!(p.len() >= e.rows as usize * d, "{sc:?}: payload too small for rows");
+            }
+            // deterministic
+            assert_eq!(pool, t.payloads(d));
+        }
+    }
+
+    #[test]
+    fn parse_roundtrips_names() {
+        for sc in Scenario::ALL {
+            assert_eq!(Scenario::parse(sc.name()).unwrap(), sc);
+        }
+        assert!(Scenario::parse("flood").is_err());
+    }
+
+    #[test]
+    fn zero_mean_floods() {
+        let mut s = spec(Scenario::Poisson, 1);
+        s.mean_gap_us = 0.0;
+        let t = Trace::generate(&s);
+        assert!(t.events.iter().all(|e| e.at_us == 0), "zero mean gap = flood");
+    }
+
+    #[test]
+    fn gaps_reconstruct_times() {
+        let t = Trace::generate(&spec(Scenario::Bursty, 11));
+        let gaps = t.gaps_us();
+        let mut acc = 0.0;
+        for (g, e) in gaps.iter().zip(&t.events) {
+            acc += g;
+            assert_eq!(acc as u64, e.at_us);
+        }
+    }
+}

@@ -84,6 +84,24 @@ pub struct FrontendStats {
     pub max_forward_rows: usize,
 }
 
+impl FrontendStats {
+    /// Counter block for persisted bench/arena records.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj};
+        obj(vec![
+            ("latency", self.latency.to_json()),
+            ("served", num(self.served as f64)),
+            ("cache_hits", num(self.cache_hits as f64)),
+            ("rejected", num(self.rejected as f64)),
+            ("bad_requests", num(self.bad_requests as f64)),
+            ("dropped_responses", num(self.dropped_responses as f64)),
+            ("connections", num(self.connections as f64)),
+            ("min_forward_rows", num(self.min_forward_rows as f64)),
+            ("max_forward_rows", num(self.max_forward_rows as f64)),
+        ])
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Per-connection egress queue
 // ---------------------------------------------------------------------------

@@ -54,6 +54,12 @@ impl Batching {
 /// The EWMA is stored as f64 bits in an atomic so the controller is shared
 /// lock-free across workers; the update is racy by design (a lost update
 /// just means one pop sees a slightly stale depth estimate).
+///
+/// **Cold start**: the average is seeded from the *first observation*, not
+/// from 0.0. A server that comes up already under load used to serve its
+/// first pops at batch≈1 while the EWMA warmed up from zero toward the
+/// real depth (≈1/α pops of under-batching); now the first pop lands on
+/// the observed depth directly.
 pub struct AdaptiveBatcher {
     cap: usize,
     alpha: f64,
@@ -72,20 +78,27 @@ impl AdaptiveBatcher {
         AdaptiveBatcher {
             cap: cap.max(1),
             alpha: alpha.clamp(0.01, 1.0),
-            ewma_bits: AtomicU64::new(0f64.to_bits()),
+            // NaN = "no observation yet": the first next_batch seeds the
+            // average at the observed depth instead of decaying up from 0.
+            ewma_bits: AtomicU64::new(f64::NAN.to_bits()),
         }
     }
 
     /// Fold one queue-depth observation into the EWMA and return the batch
-    /// limit for this pop.
+    /// limit for this pop. The first observation seeds the average.
     pub fn next_batch(&self, depth: usize) -> usize {
         let prev = f64::from_bits(self.ewma_bits.load(Ordering::Relaxed));
-        let e = (1.0 - self.alpha) * prev + self.alpha * depth as f64;
+        let e = if prev.is_nan() {
+            depth as f64
+        } else {
+            (1.0 - self.alpha) * prev + self.alpha * depth as f64
+        };
         self.ewma_bits.store(e.to_bits(), Ordering::Relaxed);
         (e.ceil() as usize).clamp(1, self.cap)
     }
 
-    /// Current depth estimate (diagnostics).
+    /// Current depth estimate (diagnostics); NaN before the first
+    /// observation.
     pub fn ewma(&self) -> f64 {
         f64::from_bits(self.ewma_bits.load(Ordering::Relaxed))
     }
@@ -112,6 +125,7 @@ pub struct WorkerStats {
 
 #[derive(Clone, Debug)]
 pub struct LatencyStats {
+    /// Finite latency samples the aggregates below are computed over.
     pub n: usize,
     pub mean_us: f64,
     pub p50_us: f64,
@@ -120,15 +134,34 @@ pub struct LatencyStats {
     pub max_us: f64,
     pub throughput_rps: f64,
     pub mean_batch: f64,
+    /// Samples excluded from every aggregate because they were NaN
+    /// (a poisoned clock or a corrupted record). Nonzero means some
+    /// upstream measurement is broken — but the stats path itself must
+    /// keep serving (the old `partial_cmp(..).unwrap()` sort panicked the
+    /// merge, killing a whole arena/bench run over one bad sample).
+    pub nan_samples: usize,
 }
 
 impl LatencyStats {
     /// Merge per-worker records into aggregate statistics. Percentiles are
-    /// exact: computed over the concatenation of all workers' samples.
+    /// exact: computed over the concatenation of all workers' *finite*
+    /// samples; NaN samples are counted in [`LatencyStats::nan_samples`]
+    /// and excluded (they would otherwise poison the sort, the mean, and
+    /// every percentile). The sort uses `f64::total_cmp`, which is total
+    /// over all floats — there is no comparison that can panic here.
     pub fn from_workers(workers: &[WorkerStats], wall_s: f64) -> LatencyStats {
-        let mut sorted: Vec<f64> =
-            workers.iter().flat_map(|w| w.latencies_us.iter().copied()).collect();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut sorted: Vec<f64> = Vec::new();
+        let mut nan_samples = 0usize;
+        for w in workers {
+            for &v in &w.latencies_us {
+                if v.is_nan() {
+                    nan_samples += 1;
+                } else {
+                    sorted.push(v);
+                }
+            }
+        }
+        sorted.sort_by(f64::total_cmp);
         let n = sorted.len();
         let served: usize = workers.iter().map(|w| w.served).sum();
         let batches: usize = workers.iter().map(|w| w.batches).sum();
@@ -141,7 +174,27 @@ impl LatencyStats {
             max_us: sorted.last().copied().unwrap_or(f64::NAN),
             throughput_rps: n as f64 / wall_s.max(1e-9),
             mean_batch: served as f64 / batches.max(1) as f64,
+            nan_samples,
         }
+    }
+
+    /// The stats as a JSON object (non-finite values map to `null` so the
+    /// output is always valid JSON) — the shared shape every persisted
+    /// bench/arena record uses for a latency block.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj, Json};
+        let fnum = |v: f64| if v.is_finite() { num(v) } else { Json::Null };
+        obj(vec![
+            ("n", num(self.n as f64)),
+            ("mean_us", fnum(self.mean_us)),
+            ("p50_us", fnum(self.p50_us)),
+            ("p95_us", fnum(self.p95_us)),
+            ("p99_us", fnum(self.p99_us)),
+            ("max_us", fnum(self.max_us)),
+            ("rps", fnum(self.throughput_rps)),
+            ("mean_batch", fnum(self.mean_batch)),
+            ("nan_samples", num(self.nan_samples as f64)),
+        ])
     }
 }
 
@@ -486,6 +539,23 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_batcher_cold_start_seeds_from_first_observation() {
+        // Sudden load at startup: depth 8 with cap 16 must batch 8 on the
+        // FIRST pop. The old zero-seeded EWMA returned ceil(0.25*8)=2 and
+        // needed ~1/alpha pops to warm up to the real depth.
+        let b = AdaptiveBatcher::new(16);
+        assert!(b.ewma().is_nan(), "no observation yet");
+        assert_eq!(b.next_batch(8), 8, "first pop lands on the observed depth");
+        assert!((b.ewma() - 8.0).abs() < 1e-12, "average seeded at the observation");
+        // subsequent observations smooth as before
+        assert_eq!(b.next_batch(8), 8);
+        // cold start under idle is unchanged: seed 0 -> batch-1
+        let idle = AdaptiveBatcher::new(16);
+        assert_eq!(idle.next_batch(0), 1);
+        assert!((idle.ewma() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn percentiles_ordered() {
         let sorted: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         // interpolated: rank 49.5 -> midway between 50 and 51 (the old
@@ -552,6 +622,56 @@ mod tests {
         assert!(s.p50_us.is_nan() && s.p99_us.is_nan() && s.max_us.is_nan());
         assert!(s.mean_us.is_finite() && s.mean_batch.is_finite());
         assert_eq!(s.throughput_rps, 0.0);
+    }
+
+    #[test]
+    fn merged_stats_survive_nan_samples() {
+        // Regression: one poisoned sample used to panic the whole stats
+        // path mid-serve (`partial_cmp(..).unwrap()` in the merge sort).
+        // Now NaNs are counted and excluded; aggregates cover the finite
+        // samples only.
+        let w1 = WorkerStats {
+            latencies_us: vec![100.0, f64::NAN, 300.0],
+            served: 3,
+            batches: 3,
+        };
+        let w2 = WorkerStats { latencies_us: vec![f64::NAN, 200.0], served: 2, batches: 2 };
+        let s = LatencyStats::from_workers(&[w1, w2], 1.0);
+        assert_eq!(s.nan_samples, 2, "both poisoned samples counted");
+        assert_eq!(s.n, 3, "aggregates over the finite samples only");
+        assert_eq!(s.mean_us, 200.0);
+        assert_eq!(s.p50_us, 200.0);
+        assert_eq!(s.max_us, 300.0, "max not poisoned by NaN");
+        assert!(s.p99_us.is_finite() && s.p95_us.is_finite());
+        assert_eq!(s.throughput_rps, 3.0, "finite samples / wall");
+    }
+
+    #[test]
+    fn merged_stats_all_nan_is_empty_but_counted() {
+        let w = WorkerStats { latencies_us: vec![f64::NAN; 4], served: 4, batches: 1 };
+        let s = LatencyStats::from_workers(&[w], 1.0);
+        assert_eq!(s.nan_samples, 4);
+        assert_eq!(s.n, 0);
+        assert!(s.p50_us.is_nan() && s.max_us.is_nan(), "no finite samples to aggregate");
+        assert!(s.mean_us.is_finite(), "empty mean must not divide by zero");
+    }
+
+    #[test]
+    fn latency_stats_json_is_valid_even_when_empty() {
+        use crate::util::json::Json;
+        let s = LatencyStats::from_workers(&[], 1.0);
+        let j = s.to_json();
+        // NaN percentiles serialize as null, so the line must re-parse
+        let parsed = Json::parse(&j.to_string()).expect("valid JSON");
+        assert_eq!(parsed.get("p50_us").unwrap(), &Json::Null);
+        assert_eq!(parsed.get("n").unwrap().as_usize().unwrap(), 0);
+
+        let w = WorkerStats { latencies_us: vec![50.0], served: 1, batches: 1 };
+        let j = LatencyStats::from_workers(&[w], 2.0).to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("p50_us").unwrap().as_f64().unwrap(), 50.0);
+        assert_eq!(parsed.get("rps").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(parsed.get("nan_samples").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]

@@ -12,8 +12,9 @@
 //!   with its socket serving front-end ([`inference::frontend`] over the
 //!   [`net`] wire protocol),
 //!   plus the analysis substrates the paper's evaluation needs
-//!   ([`stats`], [`flops`]) and one harness per paper table/figure
-//!   ([`exp`]).
+//!   ([`stats`], [`flops`]), one harness per paper table/figure
+//!   ([`exp`]), and the traffic arena for head-to-head serving duels
+//!   with a persisted perf trajectory ([`arena`]).
 //! * **L2** — `python/compile/model.py`: JAX models (MLP/CNN/transformer)
 //!   lowered once to HLO text (`make artifacts`).
 //! * **L1** — `python/compile/kernels/`: Pallas kernels (the condensed
@@ -22,6 +23,7 @@
 //!
 //! Python never runs on the training or request path.
 
+pub mod arena;
 pub mod bench;
 pub mod data;
 pub mod dst;

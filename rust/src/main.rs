@@ -5,6 +5,7 @@
 //!   train [flags]        train one configuration and report
 //!   serve [flags]        run the online-inference server benchmark
 //!   serve-model [flags]  serve a multi-layer sparse model via the worker pool
+//!   arena [flags]        duel two serving configs on shared traffic; --history
 //!   check                verify artifacts load and execute
 //!   list                 list models in the artifact manifest
 
@@ -43,6 +44,13 @@ USAGE:
               [--threads T] [--gap-us G] [--stack NAME] [--adaptive]
               [--shards S] [--listen ADDR] [--queue-cap N] [--cache-cap N]
               [--egress-cap N] [--retry-ms M] [--fixed-batch]
+  srigl arena [--scenario poisson|bursty|diurnal|heavytail|adversarial]
+              [--a SPEC] [--b SPEC]   (SPEC: workers=4,adaptive=8,shards=2,...)
+              [--requests N] [--rounds R] [--gap-us G] [--max-rows M]
+              [--pool P] [--seed S] [--wire] [--clients C] [--max-retries K]
+              [--dims 256,256,128,64] [--sparsity 0.9] [--repr condensed]
+              [--label L] [--no-persist]
+  srigl arena --history     (render persisted BENCH_*.json trajectory)
   srigl check
   srigl list"
     );
@@ -62,6 +70,7 @@ fn run() -> Result<()> {
         Some("srste") => cmd_srste(&args),
         Some("serve") => cmd_serve(&args),
         Some("serve-model") => cmd_serve_model(&args),
+        Some("arena") => cmd_arena(&args),
         Some("check") => cmd_check(),
         Some("list") => cmd_list(),
         _ => {
@@ -349,6 +358,89 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
             "  workers={w:<2} p50={:>8.1}us p99={:>8.1}us mean_batch={:.1} throughput={:.0} req/s{speedup}",
             stats.p50_us, stats.p99_us, stats.mean_batch, stats.throughput_rps
         );
+    }
+    Ok(())
+}
+
+/// `srigl arena`: duel two engine specs on one shared synthetic trace and
+/// persist the scored result; `--history` renders the accumulated
+/// `BENCH_*.json` trajectory instead of running anything.
+fn cmd_arena(args: &Args) -> Result<()> {
+    use srigl::arena::{self, DuelConfig, Scenario, Trace, TraceSpec};
+
+    if args.has("history") {
+        let dir = arena::persist::bench_dir();
+        let records = arena::load_history(&dir)?;
+        print!("{}", arena::render_history(&records));
+        return Ok(());
+    }
+
+    let scenario = Scenario::parse(&args.get_or("scenario", "poisson"))?;
+    let spec = TraceSpec {
+        scenario,
+        n_requests: args.parse_or("requests", 400)?,
+        mean_gap_us: args.parse_or("gap-us", 200.0)?,
+        max_rows: args.parse_or("max-rows", 4)?,
+        pool: args.parse_or("pool", 64)?,
+        seed: args.parse_or("seed", 1)?,
+    };
+    let trace = Trace::generate(&spec);
+
+    // Same synth path as serve-model: --dims widths, uniform sparsity,
+    // one representation, Identity on the last layer.
+    let dims: Vec<usize> = args.list_or("dims", &[256usize, 256, 128, 64])?;
+    anyhow::ensure!(dims.len() >= 2, "--dims needs an input width plus >=1 layer widths");
+    let sparsity: f64 = args.parse_or("sparsity", 0.9)?;
+    let repr = Repr::parse(&args.get_or("repr", "condensed"))?;
+    let n_layers = dims.len() - 1;
+    let specs: Vec<LayerSpec> = dims[1..]
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| LayerSpec {
+            n,
+            repr,
+            sparsity,
+            ablated_frac: exp::timings::ablated_frac_for(sparsity),
+            activation: if i + 1 == n_layers { Activation::Identity } else { Activation::Relu },
+        })
+        .collect();
+    let model = std::sync::Arc::new(SparseModel::synth(dims[0], &specs, 42)?);
+
+    let a_spec = args.get_or("a", "workers=4,batch=8");
+    let b_spec = args.get_or("b", "workers=4,adaptive=8");
+    let a = arena::parse_engine_spec(&a_spec)?;
+    let b = arena::parse_engine_spec(&b_spec)?;
+    let cfg = DuelConfig {
+        rounds: args.parse_or("rounds", 3)?,
+        wire: args.has("wire"),
+        clients: args.parse_or("clients", 4)?,
+        max_retries: args.parse_or("max-retries", 8)?,
+    };
+
+    println!("model: {}", model.describe());
+    println!(
+        "trace: {} | {} requests | digest {:016x}{}",
+        scenario.name(),
+        trace.events.len(),
+        trace.digest(),
+        if cfg.wire { " | wire mode (loopback front-end)" } else { "" }
+    );
+    let summary =
+        arena::run_duel(&model, (&a_spec, &a), (&b_spec, &b), &trace, &cfg, |line| {
+            println!("  {line}")
+        })?;
+    print!("{}", summary.render());
+
+    if !args.has("no-persist") {
+        let name = format!("arena-{}", scenario.name());
+        let path = arena::persist::persist_record(
+            "arena",
+            &name,
+            &summary.headline(),
+            summary.to_json(),
+            args.get("label"),
+        )?;
+        println!("record -> {}", path.display());
     }
     Ok(())
 }

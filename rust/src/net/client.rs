@@ -60,22 +60,118 @@ impl Client {
         }
     }
 
-    /// [`Client::infer`], sleeping out `Busy` backoffs up to `max_retries`
-    /// times — the polite way to drive a backpressuring server.
+    /// [`Client::infer`], sleeping out `Busy` backoffs — the polite way to
+    /// drive a backpressuring server.
+    ///
+    /// Makes at most `1 + max_retries` attempts: the initial send plus up
+    /// to `max_retries` retries, each preceded by a [`backoff_delay`]
+    /// sleep (the server's hint clamped to
+    /// [`BACKOFF_FLOOR_MS`]..=[`BACKOFF_CAP_MS`] plus deterministic
+    /// jitter). No sleep follows the final failed attempt — the caller
+    /// gets its `TimedOut` immediately.
     pub fn infer_retrying(
         &mut self,
         rows: usize,
         x: &[f32],
         max_retries: usize,
     ) -> io::Result<Vec<f32>> {
-        for _ in 0..=max_retries {
+        // Jitter keyed off the request id about to be used: deterministic
+        // for a given client/request sequence, decorrelated across clients
+        // (each connection's ids advance with its own traffic).
+        let jitter_seed = self.next_id;
+        for attempt in 0..=max_retries {
             match self.infer(rows, x)? {
                 Reply::Output(out) => return Ok(out),
                 Reply::Busy { retry_after_ms } => {
-                    std::thread::sleep(Duration::from_millis(retry_after_ms as u64));
+                    if attempt < max_retries {
+                        std::thread::sleep(backoff_delay(
+                            retry_after_ms,
+                            attempt as u32,
+                            jitter_seed,
+                        ));
+                    }
                 }
             }
         }
         Err(io::Error::new(io::ErrorKind::TimedOut, "server still busy after retries"))
+    }
+}
+
+/// Smallest backoff a `Busy` hint can produce. A server that answers
+/// `retry_after_ms == 0` used to busy-spin the client against the full
+/// wire round-trip — re-flooding the very queue that just rejected it.
+pub const BACKOFF_FLOOR_MS: u64 = 1;
+
+/// Largest backoff a `Busy` hint can produce. A garbage or hostile hint
+/// (`u32::MAX` is ~49.7 days) used to park the client unboundedly.
+pub const BACKOFF_CAP_MS: u64 = 250;
+
+/// The deterministic backoff schedule behind [`Client::infer_retrying`]:
+/// the server's `retry_after_ms` hint clamped to
+/// [`BACKOFF_FLOOR_MS`]..=[`BACKOFF_CAP_MS`], plus up to +50% jitter
+/// derived (SplitMix64 finalizer) from `(seed, attempt)`. Deterministic so
+/// tests and arena replays reproduce exactly; jittered so clients that
+/// were rejected together don't retry in lockstep and re-flood the queue.
+pub fn backoff_delay(retry_after_ms: u32, attempt: u32, seed: u64) -> Duration {
+    let base_us = (retry_after_ms as u64).clamp(BACKOFF_FLOOR_MS, BACKOFF_CAP_MS) * 1000;
+    // SplitMix64 finalizer over (seed, attempt): cheap, stateless, and
+    // well-mixed — the same mixing the crate's Rng seeds with.
+    let mut z = seed ^ (attempt as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    let jitter_us = z % (base_us / 2 + 1);
+    Duration::from_micros(base_us + jitter_us)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_floors_zero_hint() {
+        // retry_after_ms == 0 must never busy-spin: at least the 1 ms floor
+        for attempt in 0..8 {
+            for seed in [0u64, 1, 0xDEAD] {
+                let d = backoff_delay(0, attempt, seed);
+                assert!(d >= Duration::from_millis(BACKOFF_FLOOR_MS), "{d:?}");
+                assert!(d <= Duration::from_micros(BACKOFF_FLOOR_MS * 1500), "jitter <= +50%");
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_caps_huge_hint() {
+        // u32::MAX ms is ~49.7 days; the cap bounds it to <= 250ms * 1.5
+        let d = backoff_delay(u32::MAX, 0, 7);
+        assert!(d <= Duration::from_micros(BACKOFF_CAP_MS * 1500), "{d:?}");
+        assert!(d >= Duration::from_millis(BACKOFF_CAP_MS), "base preserved under jitter");
+    }
+
+    #[test]
+    fn backoff_bounds_hold_for_ordinary_hints() {
+        for hint in [1u32, 2, 10, 100, 250] {
+            for attempt in 0..4 {
+                let d = backoff_delay(hint, attempt, 42);
+                let base = Duration::from_millis(hint as u64);
+                assert!(d >= base, "hint {hint} attempt {attempt}: {d:?} < base");
+                assert!(d <= base * 3 / 2, "hint {hint} attempt {attempt}: {d:?} > 1.5x base");
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_jitter_varies() {
+        // same (hint, attempt, seed) -> same delay, reproducibly
+        assert_eq!(backoff_delay(5, 2, 99), backoff_delay(5, 2, 99));
+        // across attempts the jitter must actually move (no lockstep):
+        // 8 attempts all colliding on one of 2501 jitter values won't happen
+        let delays: Vec<Duration> = (0..8).map(|a| backoff_delay(5, a, 99)).collect();
+        let distinct: std::collections::HashSet<_> = delays.iter().collect();
+        assert!(distinct.len() > 1, "jitter never varied: {delays:?}");
+        // and different seeds decorrelate concurrent clients
+        let a: Vec<Duration> = (0..8).map(|at| backoff_delay(5, at, 1)).collect();
+        let b: Vec<Duration> = (0..8).map(|at| backoff_delay(5, at, 2)).collect();
+        assert_ne!(a, b, "seeds must decorrelate client schedules");
     }
 }

@@ -30,7 +30,7 @@
 
 mod client;
 
-pub use client::{Client, Reply};
+pub use client::{backoff_delay, Client, Reply, BACKOFF_CAP_MS, BACKOFF_FLOOR_MS};
 
 use std::io::{self, Read, Write};
 

@@ -1,0 +1,223 @@
+//! Paired-comparison statistics for head-to-head measurements — the
+//! inference substrate behind the traffic arena's winner declaration
+//! (`srigl arena`, [`crate::arena`]).
+//!
+//! Two flavours of confidence interval, both deterministic:
+//!
+//! * [`t_ci`] — normal/t approximation for the mean of a small sample
+//!   (per-round paired throughput deltas: a handful of replicates). Uses
+//!   two-sided 95% t quantiles for df <= 30, 1.96 beyond.
+//! * [`bootstrap_mean_ci`] — percentile bootstrap for the mean of a large
+//!   sample (per-request paired latency deltas: thousands of diffs whose
+//!   distribution is skewed and heavy-tailed, where the normal
+//!   approximation is least trustworthy). Resampling is driven by the
+//!   crate's xoshiro [`Rng`], so the same seed reproduces the interval
+//!   bit-for-bit.
+//!
+//! The paired design is what gives the arena statistical teeth: both
+//! engine configs replay the *same* trace, so per-request and per-round
+//! differences cancel the shared load pattern and the interval speaks
+//! only to the config change.
+
+use crate::util::rng::Rng;
+
+/// A mean with a two-sided confidence interval.
+#[derive(Clone, Copy, Debug)]
+pub struct MeanCi {
+    pub mean: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl MeanCi {
+    /// True when the interval excludes zero — the paired delta is
+    /// distinguishable from "no difference" at the interval's level.
+    pub fn excludes_zero(&self) -> bool {
+        (self.lo > 0.0 && self.hi > 0.0) || (self.lo < 0.0 && self.hi < 0.0)
+    }
+}
+
+/// Sample mean and *unbiased* (n-1) variance; (mean, 0.0) for n < 2.
+pub fn mean_var(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    if n < 2 {
+        return (mean, 0.0);
+    }
+    let ss: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum();
+    (mean, ss / (n - 1) as f64)
+}
+
+/// Two-sided 95% t quantile for `df` degrees of freedom (1.96 beyond 30 —
+/// within 2% of the exact value there).
+fn t95(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, // 1..=10
+        2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, // 11..=20
+        2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042, // 21..=30
+    ];
+    match df {
+        0 => f64::INFINITY,
+        1..=30 => TABLE[df - 1],
+        _ => 1.96,
+    }
+}
+
+/// 95% confidence interval for the mean of `xs` under the t
+/// approximation: `mean ± t_{df} * s / sqrt(n)`. With n < 2 the interval
+/// is infinitely wide (mean ± ∞) — one replicate proves nothing, and the
+/// caller's verdict correctly degrades to "inconclusive".
+pub fn t_ci(xs: &[f64]) -> MeanCi {
+    let (mean, var) = mean_var(xs);
+    let n = xs.len();
+    if n < 2 {
+        return MeanCi { mean, lo: f64::NEG_INFINITY, hi: f64::INFINITY };
+    }
+    let half = t95(n - 1) * (var / n as f64).sqrt();
+    MeanCi { mean, lo: mean - half, hi: mean + half }
+}
+
+/// Percentile-bootstrap confidence interval for the mean of `xs` at level
+/// `conf` (e.g. 0.95): resample n-out-of-n with replacement `resamples`
+/// times, take the (α/2, 1-α/2) empirical quantiles of the resampled
+/// means. Deterministic for a given `seed`. Degenerate inputs (n < 2, or
+/// zero resamples) fall back to [`t_ci`]'s behavior at the edges.
+pub fn bootstrap_mean_ci(xs: &[f64], resamples: usize, conf: f64, seed: u64) -> MeanCi {
+    let n = xs.len();
+    let (mean, _) = mean_var(xs);
+    if n < 2 || resamples == 0 {
+        return MeanCi { mean, lo: f64::NEG_INFINITY, hi: f64::INFINITY };
+    }
+    let mut rng = Rng::new(seed);
+    let mut means = Vec::with_capacity(resamples);
+    for _ in 0..resamples {
+        let mut s = 0.0f64;
+        for _ in 0..n {
+            s += xs[rng.below(n)];
+        }
+        means.push(s / n as f64);
+    }
+    means.sort_by(f64::total_cmp);
+    let alpha = (1.0 - conf.clamp(0.0, 1.0)) / 2.0;
+    let q = |p: f64| {
+        // nearest-rank on the resampled means (they are dense enough that
+        // interpolation would change nothing material)
+        let idx = ((p * (resamples - 1) as f64).round() as usize).min(resamples - 1);
+        means[idx]
+    };
+    MeanCi { mean, lo: q(alpha), hi: q(1.0 - alpha) }
+}
+
+/// Outcome of one paired metric comparison. "Positive delta" means side B
+/// beat side A on this metric (the caller orients the sign).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// The interval excludes zero in B's favour.
+    BWins,
+    /// The interval excludes zero in A's favour.
+    AWins,
+    /// The interval straddles zero: no significant difference.
+    Inconclusive,
+}
+
+impl Verdict {
+    /// Classify an interval over (B - A) deltas where larger is better.
+    pub fn from_ci(ci: &MeanCi) -> Verdict {
+        if !ci.excludes_zero() {
+            Verdict::Inconclusive
+        } else if ci.mean > 0.0 {
+            Verdict::BWins
+        } else {
+            Verdict::AWins
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Verdict::AWins => "A wins",
+            Verdict::BWins => "B wins",
+            Verdict::Inconclusive => "no significant difference",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var_basics() {
+        assert_eq!(mean_var(&[]), (0.0, 0.0));
+        assert_eq!(mean_var(&[3.0]), (3.0, 0.0));
+        let (m, v) = mean_var(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m, 2.5);
+        assert!((v - 5.0 / 3.0).abs() < 1e-12, "unbiased variance, got {v}");
+    }
+
+    #[test]
+    fn t_ci_covers_and_shrinks() {
+        // constant sample: zero-width interval at the mean
+        let ci = t_ci(&[5.0, 5.0, 5.0, 5.0]);
+        assert_eq!((ci.mean, ci.lo, ci.hi), (5.0, 5.0, 5.0));
+        // single sample: infinitely wide, never "significant"
+        let ci1 = t_ci(&[5.0]);
+        assert!(!ci1.excludes_zero());
+        assert!(ci1.lo.is_infinite() && ci1.hi.is_infinite());
+        // n=2 of {4,6}: mean 5, s=sqrt(2), half = t(1)*sqrt(2/2) = 12.706
+        let ci2 = t_ci(&[4.0, 6.0]);
+        assert_eq!(ci2.mean, 5.0);
+        assert!((ci2.hi - ci2.mean - 12.706).abs() < 1e-9, "t(1)=12.706 at n=2");
+        // more replicates with the same spread tighten the interval
+        let ci8 = t_ci(&[4.0, 6.0, 4.0, 6.0, 4.0, 6.0, 4.0, 6.0]);
+        assert!(ci8.hi - ci8.lo < ci2.hi - ci2.lo);
+        assert!(ci8.excludes_zero(), "clearly positive mean with 8 replicates");
+    }
+
+    #[test]
+    fn t95_table_shape() {
+        assert_eq!(t95(0), f64::INFINITY);
+        assert!((t95(1) - 12.706).abs() < 1e-9);
+        assert!(t95(5) > t95(10), "quantile shrinks with df");
+        assert_eq!(t95(31), 1.96);
+        assert_eq!(t95(1000), 1.96);
+    }
+
+    #[test]
+    fn bootstrap_is_deterministic_and_sane() {
+        let xs: Vec<f64> = (0..200).map(|i| (i % 17) as f64 - 8.0 + 3.0).collect();
+        let a = bootstrap_mean_ci(&xs, 500, 0.95, 42);
+        let b = bootstrap_mean_ci(&xs, 500, 0.95, 42);
+        assert_eq!((a.lo, a.hi), (b.lo, b.hi), "same seed, same interval");
+        let c = bootstrap_mean_ci(&xs, 500, 0.95, 43);
+        assert!((a.lo, a.hi) != (c.lo, c.hi), "different seed resamples differently");
+        assert!(a.lo <= a.mean && a.mean <= a.hi, "interval brackets the sample mean");
+        assert!(a.excludes_zero(), "mean 3 with tight spread excludes zero");
+        // constant data: the interval collapses onto the constant
+        let k = bootstrap_mean_ci(&[7.0; 50], 200, 0.95, 1);
+        assert_eq!((k.mean, k.lo, k.hi), (7.0, 7.0, 7.0));
+    }
+
+    #[test]
+    fn bootstrap_degenerate_inputs_are_inconclusive() {
+        assert!(!bootstrap_mean_ci(&[], 100, 0.95, 1).excludes_zero());
+        assert!(!bootstrap_mean_ci(&[3.0], 100, 0.95, 1).excludes_zero());
+        assert!(!bootstrap_mean_ci(&[1.0, 2.0], 0, 0.95, 1).excludes_zero());
+    }
+
+    #[test]
+    fn verdict_orientation() {
+        assert_eq!(Verdict::from_ci(&MeanCi { mean: 5.0, lo: 2.0, hi: 8.0 }), Verdict::BWins);
+        assert_eq!(Verdict::from_ci(&MeanCi { mean: -5.0, lo: -8.0, hi: -2.0 }), Verdict::AWins);
+        assert_eq!(
+            Verdict::from_ci(&MeanCi { mean: 1.0, lo: -1.0, hi: 3.0 }),
+            Verdict::Inconclusive
+        );
+        assert_eq!(
+            Verdict::from_ci(&MeanCi { mean: 0.0, lo: f64::NEG_INFINITY, hi: f64::INFINITY }),
+            Verdict::Inconclusive
+        );
+    }
+}

@@ -3,10 +3,12 @@
 //! and ITOP-rate tracking (Figs. 14-17).
 
 pub mod ablation;
+pub mod compare;
 pub mod itop;
 pub mod variance;
 
 pub use ablation::{active_neuron_fraction, LayerTopology};
+pub use compare::{bootstrap_mean_ci, mean_var, t_ci, MeanCi, Verdict};
 pub use itop::ItopTracker;
 pub use variance::{simulate_var, var_bernoulli, var_const_fan_in, var_const_per_layer, SparsityType};
 

@@ -493,6 +493,57 @@ fn socket_sharded_engine_matches_replicated_bits() {
     assert_eq!(stats.bad_requests, 0);
 }
 
+/// A full wire-mode arena duel over the loopback front-end: both sides
+/// replay the same cache-adversarial trace through real sockets and the
+/// retrying client. Every request must get answered (the retry budget
+/// covers transient Busy), both sides must serve the identical schedule,
+/// and the summary must carry the front-end counters.
+#[test]
+fn socket_arena_wire_duel() {
+    use srigl::arena::{run_duel, DuelConfig, Scenario, Trace, TraceSpec};
+
+    let model = test_model(Repr::Condensed);
+    let trace = Trace::generate(&TraceSpec {
+        scenario: Scenario::Adversarial,
+        n_requests: 80,
+        mean_gap_us: 100.0,
+        max_rows: 4,
+        pool: 8,
+        seed: 13,
+    });
+    let a = EngineBuilder::new()
+        .workers(1)
+        .fixed_batch(8)
+        .queue_capacity(256)
+        .cache_capacity(64)
+        .retry_after_ms(1);
+    let b = EngineBuilder::new()
+        .workers(2)
+        .adaptive(8)
+        .queue_capacity(256)
+        .cache_capacity(64)
+        .retry_after_ms(1);
+    let cfg = DuelConfig { rounds: 2, wire: true, clients: 3, max_retries: 50 };
+    let summary =
+        run_duel(&model, ("w1-fixed", &a), ("w2-adaptive", &b), &trace, &cfg, |_| {}).unwrap();
+
+    assert_eq!(summary.paired, 2 * 80, "every request answered on both sides, both rounds");
+    let j = summary.to_json();
+    for side in ["a", "b"] {
+        let rounds = j.get(side).unwrap().get("rounds").unwrap();
+        let srigl::util::json::Json::Arr(rounds) = rounds else { panic!("rounds not an array") };
+        assert_eq!(rounds.len(), 2);
+        for round in rounds {
+            assert_eq!(round.get("served").unwrap().as_usize().unwrap(), 80);
+            let fe = round.get("frontend").unwrap();
+            // adversarial payloads are unique: the result cache never hits
+            assert_eq!(fe.get("cache_hits").unwrap().as_usize().unwrap(), 0);
+            assert_eq!(fe.get("bad_requests").unwrap().as_usize().unwrap(), 0);
+            assert_eq!(fe.get("connections").unwrap().as_usize().unwrap(), 3);
+        }
+    }
+}
+
 /// Multi-row requests round-trip with row-major layout preserved.
 #[test]
 fn socket_multi_row_request_roundtrips() {
