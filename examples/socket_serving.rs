@@ -78,7 +78,7 @@ fn main() -> Result<()> {
         stats.cache_hits,
         stats.rejected,
         stats.dropped_responses,
-        stats.connections,
+        stats.connections_total,
         stats.latency.mean_batch
     );
     println!(

@@ -44,7 +44,8 @@ use crate::inference::SparseModel;
 
 /// Parse an engine-spec string like `"workers=4,adaptive=8,shards=2"`
 /// into an [`EngineBuilder`]. Keys: `workers`, `batch` (fixed), `adaptive`
-/// (cap), `shards`, `threads`, `queue`, `cache`, `egress`, `retry` (ms).
+/// (cap), `shards`, `threads`, `queue`, `cache`, `egress`, `retry` (ms),
+/// `conns` (live-connection cap; 0 = unlimited).
 /// Unknown keys error with the known list — a typo must not silently
 /// bench the defaults.
 pub fn parse_engine_spec(spec: &str) -> Result<EngineBuilder> {
@@ -71,9 +72,10 @@ pub fn parse_engine_spec(spec: &str) -> Result<EngineBuilder> {
             "cache" => b.cache_capacity(n),
             "egress" => b.egress_capacity(n),
             "retry" => b.retry_after_ms(n as u32),
+            "conns" => b.max_connections(n),
             other => bail!(
                 "engine spec: unknown key {other:?} (known: workers, batch, adaptive, \
-                 shards, threads, queue, cache, egress, retry)"
+                 shards, threads, queue, cache, egress, retry, conns)"
             ),
         };
     }
@@ -159,7 +161,7 @@ mod tests {
     #[test]
     fn engine_spec_parses_every_key() {
         let b = parse_engine_spec(
-            "workers=2,adaptive=16,shards=3,threads=2,queue=99,cache=0,egress=7,retry=5",
+            "workers=2,adaptive=16,shards=3,threads=2,queue=99,cache=0,egress=7,retry=5,conns=32",
         )
         .unwrap();
         assert_eq!(b.workers, 2);
@@ -170,6 +172,7 @@ mod tests {
         assert_eq!(b.cache_capacity, 0);
         assert_eq!(b.egress_capacity, 7);
         assert_eq!(b.retry_after_ms, 5);
+        assert_eq!(b.max_connections, 32);
 
         let fixed = parse_engine_spec("batch=4").unwrap();
         assert_eq!(fixed.batching, Batching::Fixed(4));

@@ -159,8 +159,10 @@ pub fn persist_record(
 /// just reports where the record went (or why it didn't).
 pub fn persist_bench_summary(name: &str, summary: &Json) {
     match persist_record("bench", name, &format!("bench {name}"), summary.clone(), None) {
-        Ok(path) => eprintln!("bench record -> {}", path.display()),
-        Err(e) => eprintln!("bench record for {name} not persisted: {e:#}"),
+        Ok(path) => crate::util::log::info("bench", &format!("bench record -> {}", path.display())),
+        Err(e) => {
+            crate::util::log::warn("bench", &format!("bench record for {name} not persisted: {e:#}"))
+        }
     }
 }
 

@@ -53,6 +53,10 @@ pub struct ReplayOutcome {
     /// Wire-mode extras (cache hits, rejections, drops); `None` for
     /// in-process replays.
     pub frontend: Option<FrontendStats>,
+    /// Wire-mode scrape of the live `/metrics` endpoint taken just before
+    /// shutdown, parsed into a series -> value object
+    /// ([`crate::obs::parse_exposition`]); `None` in-process.
+    pub metrics: Option<Json>,
 }
 
 impl ReplayOutcome {
@@ -77,6 +81,9 @@ impl ReplayOutcome {
         ];
         if let Some(f) = &self.frontend {
             fields.push(("frontend", f.to_json()));
+        }
+        if let Some(m) = &self.metrics {
+            fields.push(("metrics", m.clone()));
         }
         obj(fields)
     }
@@ -220,6 +227,7 @@ pub fn replay_engine<E: Engine>(engine: &E, builder: &EngineBuilder, trace: &Tra
         stats: LatencyStats::from_workers(&worker_stats, wall_s),
         wall_s,
         frontend: None,
+        metrics: None,
     }
 }
 
@@ -242,8 +250,12 @@ pub fn replay_wire(
     let n = trace.events.len();
     let clients = clients.clamp(1, 64);
 
-    let handle = frontend::spawn(Arc::clone(model), "127.0.0.1:0", builder)
-        .context("spawning arena front-end")?;
+    // A live metrics endpoint rides along on every wire replay: the round
+    // record persists a scrape of it, so the BENCH trajectory carries the
+    // same counters an operator would see in production.
+    let handle =
+        frontend::spawn_with_metrics(Arc::clone(model), "127.0.0.1:0", builder, Some("127.0.0.1:0"))
+            .context("spawning arena front-end")?;
     let addr = handle.addr();
     // connect everyone before the clock starts so connection setup is not
     // billed to the first requests
@@ -289,6 +301,11 @@ pub fn replay_wire(
         handles.into_iter().map(|h| h.join().expect("arena client panicked")).collect()
     });
     let wall_s = t_start.elapsed().as_secs_f64();
+    // scrape while the endpoint is still up (stop() tears it down)
+    let metrics = handle
+        .metrics_addr()
+        .and_then(|a| crate::obs::scrape(a).ok())
+        .map(|text| crate::obs::parse_exposition(&text));
     let fstats = handle.stop();
 
     let mut latencies = vec![f64::NAN; n];
@@ -302,6 +319,7 @@ pub fn replay_wire(
         stats: fstats.latency.clone(),
         wall_s,
         frontend: Some(fstats),
+        metrics,
     })
 }
 

@@ -243,6 +243,7 @@ mod tests {
             latencies_us: lat,
             wall_s,
             frontend: None,
+            metrics: None,
         }
     }
 

@@ -439,9 +439,12 @@ struct AbortOnPanic(usize);
 impl Drop for AbortOnPanic {
     fn drop(&mut self) {
         if std::thread::panicking() {
-            eprintln!(
-                "srigl-shard-{}: panic inside a shard job; team state is unrecoverable, aborting",
-                self.0
+            crate::util::log::warn(
+                "shard",
+                &format!(
+                    "srigl-shard-{}: panic inside a shard job; team state is unrecoverable, aborting",
+                    self.0
+                ),
             );
             std::process::abort();
         }
@@ -588,6 +591,11 @@ pub struct EngineBuilder {
     pub threads: usize,
     /// Backoff hint sent with `Busy` rejections.
     pub retry_after_ms: u32,
+    /// Live-connection cap; `0` means unlimited. The front-end's accept
+    /// loop refuses connections beyond this with a best-effort `Busy`
+    /// frame before any reader thread is spawned (counted in the
+    /// `connections_rejected` metric).
+    pub max_connections: usize,
 }
 
 impl Default for EngineBuilder {
@@ -601,6 +609,7 @@ impl Default for EngineBuilder {
             egress_capacity: 64,
             threads: 1,
             retry_after_ms: 2,
+            max_connections: 0,
         }
     }
 }
@@ -630,6 +639,7 @@ impl EngineBuilder {
             queue_capacity: knobs.queue_capacity,
             cache_capacity: knobs.cache_capacity,
             egress_capacity: knobs.egress_capacity,
+            max_connections: knobs.max_connections,
             ..b
         }
     }
@@ -683,6 +693,12 @@ impl EngineBuilder {
 
     pub fn retry_after_ms(mut self, ms: u32) -> EngineBuilder {
         self.retry_after_ms = ms;
+        self
+    }
+
+    /// Cap live connections (`0` = unlimited); see the field docs.
+    pub fn max_connections(mut self, n: usize) -> EngineBuilder {
+        self.max_connections = n;
         self
     }
 
@@ -864,6 +880,7 @@ mod tests {
             adaptive: false,
             max_batch: 4,
             shards: 3,
+            max_connections: 5,
         };
         let b = EngineBuilder::from_knobs(&knobs).workers(2).threads(2).retry_after_ms(9);
         assert_eq!(b.batching, Batching::Fixed(4));
@@ -875,6 +892,8 @@ mod tests {
         assert_eq!(b.workers, 2);
         assert_eq!(b.threads, 2);
         assert_eq!(b.retry_after_ms, 9);
+        assert_eq!(b.max_connections, 5);
+        assert_eq!(EngineBuilder::new().max_connections, 0, "default: unlimited");
     }
 
     #[test]

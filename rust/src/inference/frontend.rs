@@ -54,6 +54,7 @@ use super::engine::{Engine, EngineBuilder};
 use super::server::{AdaptiveBatcher, Batching, LatencyStats, WorkerStats};
 use super::SparseModel;
 use crate::net::{fnv1a_f32, read_request, write_response, ResponseBody, ResponseFrame};
+use crate::obs::{self, Counter, Gauge, Histogram, MetricsServer, Registry};
 use crate::util::lru::LruCache;
 use crate::util::threadpool::{Injector, QueueFull};
 
@@ -75,8 +76,14 @@ pub struct FrontendStats {
     /// headroom allowed). Nonzero means some client is reading slower
     /// than it submits.
     pub dropped_responses: usize,
-    /// Connections accepted over the run.
-    pub connections: usize,
+    /// Connections accepted over the run (cumulative).
+    pub connections_total: usize,
+    /// Connections still open when the run ended (readers alive). Zero
+    /// after a clean `stop()` — teardown waits for every reader.
+    pub connections_active: usize,
+    /// Connections refused at accept because `max_connections` was
+    /// reached (each got a best-effort Busy frame, never a reader).
+    pub connections_rejected: usize,
     /// Smallest / largest packed forward (rows) any worker ran — under a
     /// trickle these collapse to 1/1; under a flood the max approaches the
     /// batching cap (how the adaptive batcher shows up in the numbers).
@@ -95,7 +102,12 @@ impl FrontendStats {
             ("rejected", num(self.rejected as f64)),
             ("bad_requests", num(self.bad_requests as f64)),
             ("dropped_responses", num(self.dropped_responses as f64)),
-            ("connections", num(self.connections as f64)),
+            // legacy key (pre-split consumers read "connections"): the
+            // cumulative count, alongside the three explicit series
+            ("connections", num(self.connections_total as f64)),
+            ("connections_total", num(self.connections_total as f64)),
+            ("connections_active", num(self.connections_active as f64)),
+            ("connections_rejected", num(self.connections_rejected as f64)),
             ("min_forward_rows", num(self.min_forward_rows as f64)),
             ("max_forward_rows", num(self.max_forward_rows as f64)),
         ])
@@ -129,7 +141,9 @@ enum SendOutcome {
 }
 
 struct EgressInner {
-    q: std::collections::VecDeque<ResponseFrame>,
+    /// Each frame carries its enqueue instant so the writer can record
+    /// the egress-wait stage (time a response sat behind the socket).
+    q: std::collections::VecDeque<(ResponseFrame, Instant)>,
     /// Jobs enqueued for this connection and not yet answered.
     inflight: usize,
     /// The reader has exited; close once the last in-flight job answers.
@@ -171,12 +185,13 @@ impl Egress {
     /// following the retry-on-Busy protocol would resend a malformed
     /// request forever.
     fn send(&self, frame: ResponseFrame) -> SendOutcome {
+        let now = Instant::now();
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             return SendOutcome::Gone;
         }
         if g.q.len() < self.capacity {
-            g.q.push_back(frame);
+            g.q.push_back((frame, now));
             drop(g);
             self.cv.notify_all();
             return SendOutcome::Queued;
@@ -184,14 +199,17 @@ impl Egress {
         if g.q.len() < self.capacity + EGRESS_BUSY_HEADROOM {
             let outcome = match frame.body {
                 ResponseBody::Output { .. } => {
-                    g.q.push_back(ResponseFrame {
-                        id: frame.id,
-                        body: ResponseBody::Busy { retry_after_ms: self.retry_after_ms },
-                    });
+                    g.q.push_back((
+                        ResponseFrame {
+                            id: frame.id,
+                            body: ResponseBody::Busy { retry_after_ms: self.retry_after_ms },
+                        },
+                        now,
+                    ));
                     SendOutcome::ConvertedBusy
                 }
                 _ => {
-                    g.q.push_back(frame);
+                    g.q.push_back((frame, now));
                     SendOutcome::Queued
                 }
             };
@@ -242,7 +260,7 @@ impl Egress {
     }
 
     /// Blocking pop for the writer thread; `None` once closed and drained.
-    fn recv(&self) -> Option<ResponseFrame> {
+    fn recv(&self) -> Option<(ResponseFrame, Instant)> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(f) = g.q.pop_front() {
@@ -256,7 +274,7 @@ impl Egress {
     }
 
     /// Non-blocking pop (writer batching between flushes).
-    fn try_recv(&self) -> Option<ResponseFrame> {
+    fn try_recv(&self) -> Option<(ResponseFrame, Instant)> {
         self.inner.lock().unwrap().q.pop_front()
     }
 }
@@ -300,17 +318,127 @@ impl Drop for GateTicket {
     }
 }
 
+/// One family for every serve-path stage so a single scrape shows where
+/// the time goes; the stage rides a label.
+const STAGE_FAMILY: &str = "srigl_stage_latency_us";
+const STAGE_HELP: &str = "Per-stage request timing in microseconds \
+(ingress -> queue_wait -> batch_assembly -> forward -> egress_wait; \
+stage=\"total\" is submit-to-forward-done, the LatencyStats sample).";
+
+/// Live frontend metric handles, registered on the spawn's [`Registry`].
+/// These ARE the counters (not mirrors): the serve path bumps them
+/// inline and teardown reads the same atomics into [`FrontendStats`], so
+/// a live scrape and the end-of-run stats can never disagree.
+struct FrontendMetrics {
+    served: Arc<Counter>,
+    batches: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    rejected: Arc<Counter>,
+    bad_requests: Arc<Counter>,
+    dropped_responses: Arc<Counter>,
+    connections_total: Arc<Counter>,
+    connections_active: Arc<Gauge>,
+    connections_rejected: Arc<Counter>,
+    forward_rows_min: Arc<Gauge>,
+    forward_rows_max: Arc<Gauge>,
+    /// Frame-parsed -> handed off (cache answer or queue push). One
+    /// shared instance: readers come and go with connections, so
+    /// per-reader registration would grow the registry unboundedly.
+    ingress: Arc<Histogram>,
+    /// Response enqueued -> writer dequeued (time sat behind the
+    /// socket). Shared across writers for the same reason.
+    egress_wait: Arc<Histogram>,
+}
+
+impl FrontendMetrics {
+    fn register(r: &Registry) -> FrontendMetrics {
+        FrontendMetrics {
+            served: r.counter(
+                "srigl_requests_served_total",
+                "Requests answered by the worker pool.",
+            ),
+            batches: r.counter(
+                "srigl_forward_batches_total",
+                "Packed forward passes run by the pool.",
+            ),
+            cache_hits: r.counter(
+                "srigl_cache_hits_total",
+                "Requests answered straight from the result cache.",
+            ),
+            rejected: r.counter(
+                "srigl_requests_rejected_total",
+                "Requests rejected with Busy (bounded ingress queue full).",
+            ),
+            bad_requests: r.counter(
+                "srigl_bad_requests_total",
+                "Malformed requests answered with Error.",
+            ),
+            dropped_responses: r.counter(
+                "srigl_dropped_responses_total",
+                "Computed responses a slow client failed to absorb (converted to Busy or dropped).",
+            ),
+            connections_total: r.counter(
+                "srigl_connections_total",
+                "Connections accepted over the run.",
+            ),
+            connections_active: r.gauge(
+                "srigl_connections_active",
+                "Connections currently open (reader thread running).",
+            ),
+            connections_rejected: r.counter(
+                "srigl_connections_rejected_total",
+                "Connections refused at accept because max_connections was reached.",
+            ),
+            forward_rows_min: r.gauge(
+                "srigl_forward_rows_min",
+                "Smallest packed forward (rows) any worker ran; 0 until the first forward.",
+            ),
+            forward_rows_max: r.gauge(
+                "srigl_forward_rows_max",
+                "Largest packed forward (rows) any worker ran.",
+            ),
+            ingress: r.histogram_with(STAGE_FAMILY, STAGE_HELP, &[("stage", "ingress")]),
+            egress_wait: r.histogram_with(STAGE_FAMILY, STAGE_HELP, &[("stage", "egress_wait")]),
+        }
+    }
+}
+
+/// Per-worker stage histograms (workers are a fixed, small set, so each
+/// gets its own contention-free instance; the registry merges same-label
+/// instances at scrape).
+struct StageHists {
+    queue_wait: Arc<Histogram>,
+    assembly: Arc<Histogram>,
+    forward: Arc<Histogram>,
+    /// Submit -> forward-done: records exactly the samples that feed
+    /// `WorkerStats::latencies_us`, so the aggregate histogram percentile
+    /// agrees with the exact end-of-run `LatencyStats` to within one
+    /// bucket's resolution.
+    total: Arc<Histogram>,
+}
+
+impl StageHists {
+    fn register(r: &Registry) -> StageHists {
+        let h = |stage| r.histogram_with(STAGE_FAMILY, STAGE_HELP, &[("stage", stage)]);
+        StageHists {
+            queue_wait: h("queue_wait"),
+            assembly: h("batch_assembly"),
+            forward: h("forward"),
+            total: h("total"),
+        }
+    }
+}
+
 /// Engine-independent control plane: everything [`FrontendHandle`] and the
 /// teardown sequence need, with no generic parameter so the handle type
 /// stays plain.
 struct Control {
     cfg: EngineBuilder,
     shutdown: AtomicBool,
-    cache_hits: AtomicUsize,
-    rejected: AtomicUsize,
-    bad_requests: AtomicUsize,
-    dropped_responses: AtomicUsize,
-    connections: AtomicUsize,
+    /// The spawn's metric registry (served by the optional `/metrics`
+    /// endpoint; also where each worker registers its stage histograms).
+    registry: Arc<Registry>,
+    metrics: FrontendMetrics,
     /// Live connection streams (clones) so shutdown can unblock readers.
     conns: Mutex<HashMap<u64, TcpStream>>,
     /// Live egress queues so teardown can force-close connections whose
@@ -327,7 +455,7 @@ impl Control {
     /// (Busy/Error) are not "responses a slow client failed to absorb".
     fn count_send(&self, outcome: SendOutcome) {
         if matches!(outcome, SendOutcome::ConvertedBusy | SendOutcome::Dropped) {
-            self.dropped_responses.fetch_add(1, Ordering::Relaxed);
+            self.metrics.dropped_responses.inc();
         }
     }
 }
@@ -359,12 +487,22 @@ pub struct FrontendHandle {
     addr: SocketAddr,
     ctrl: Arc<Control>,
     join: Option<JoinHandle<FrontendStats>>,
+    /// The optional `/metrics` endpoint; stopped after the serve thread
+    /// joins so the final counter state stays scrapeable until `stop()`
+    /// returns.
+    metrics: Option<MetricsServer>,
 }
 
 impl FrontendHandle {
     /// The bound address (resolves port 0 to the real port).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The metrics endpoint's bound address, when one was requested
+    /// (resolves port 0 to the real port).
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics.as_ref().map(|m| m.addr())
     }
 
     /// Stop accepting, hang up on clients, drain the queue, and return the
@@ -392,7 +530,11 @@ impl FrontendHandle {
             });
         }
         let _ = TcpStream::connect(addr);
-        Some(join.join())
+        let res = join.join();
+        if let Some(m) = self.metrics.as_mut() {
+            m.stop();
+        }
+        Some(res)
     }
 }
 
@@ -413,11 +555,32 @@ impl Drop for FrontendHandle {
 /// ([`super::engine::PersistentShardedEngine`], the
 /// `serve-model --listen --shards N` path).
 pub fn spawn(model: Arc<SparseModel>, addr: &str, builder: &EngineBuilder) -> Result<FrontendHandle> {
+    spawn_with_metrics(model, addr, builder, None)
+}
+
+/// [`spawn`] plus an optional live metrics endpoint: when `metrics_addr`
+/// is `Some` (e.g. `"127.0.0.1:0"`), a plaintext HTTP/1.1 `GET /metrics`
+/// responder (Prometheus text format — see docs/METRICS.md) serves the
+/// spawn's registry on its own listener, and the per-layer engine facts
+/// (repr, stored weights, measured GFLOP/s) are registered as labeled
+/// gauges. The `serve-model --metrics ADDR` and wire-mode arena paths.
+pub fn spawn_with_metrics(
+    model: Arc<SparseModel>,
+    addr: &str,
+    builder: &EngineBuilder,
+    metrics_addr: Option<&str>,
+) -> Result<FrontendHandle> {
+    let registry = Arc::new(Registry::new());
+    if metrics_addr.is_some() {
+        // only when scrapeable: the per-layer GFLOP/s probe costs a few
+        // milliseconds per layer, which metric-less spawns must not pay
+        obs::facts::register_model_facts(&registry, &model, builder.max_batch(), builder.threads);
+    }
     if builder.is_sharded() {
         let team = builder.build_persistent_sharded(&model).context("building shard team")?;
-        spawn_engine(Arc::new(team), addr, builder)
+        spawn_engine_on(Arc::new(team), addr, builder, registry, metrics_addr)
     } else {
-        spawn_engine(Arc::new(builder.build_replicated(model)), addr, builder)
+        spawn_engine_on(Arc::new(builder.build_replicated(model)), addr, builder, registry, metrics_addr)
     }
 }
 
@@ -430,17 +593,41 @@ pub fn spawn_engine<E: Engine + 'static>(
     addr: &str,
     builder: &EngineBuilder,
 ) -> Result<FrontendHandle> {
+    spawn_engine_with_metrics(engine, addr, builder, None)
+}
+
+/// [`spawn_engine`] plus the optional `/metrics` endpoint (engine-fact
+/// gauges for custom engines are the caller's business — the model-aware
+/// per-layer facts come from [`spawn_with_metrics`]).
+pub fn spawn_engine_with_metrics<E: Engine + 'static>(
+    engine: Arc<E>,
+    addr: &str,
+    builder: &EngineBuilder,
+    metrics_addr: Option<&str>,
+) -> Result<FrontendHandle> {
+    spawn_engine_on(engine, addr, builder, Arc::new(Registry::new()), metrics_addr)
+}
+
+fn spawn_engine_on<E: Engine + 'static>(
+    engine: Arc<E>,
+    addr: &str,
+    builder: &EngineBuilder,
+    registry: Arc<Registry>,
+    metrics_addr: Option<&str>,
+) -> Result<FrontendHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let bound = listener.local_addr().context("resolving bound address")?;
     let cap = builder.batching.cap();
+    let metrics = FrontendMetrics::register(&registry);
+    let metrics_server = match metrics_addr {
+        Some(a) => Some(obs::http::serve(a, Arc::clone(&registry))?),
+        None => None,
+    };
     let ctrl = Arc::new(Control {
         cfg: *builder,
         shutdown: AtomicBool::new(false),
-        cache_hits: AtomicUsize::new(0),
-        rejected: AtomicUsize::new(0),
-        bad_requests: AtomicUsize::new(0),
-        dropped_responses: AtomicUsize::new(0),
-        connections: AtomicUsize::new(0),
+        registry,
+        metrics,
         conns: Mutex::new(HashMap::new()),
         egresses: Mutex::new(HashMap::new()),
         next_conn_id: AtomicUsize::new(0),
@@ -459,7 +646,7 @@ pub fn spawn_engine<E: Engine + 'static>(
         .name("srigl-frontend".into())
         .spawn(move || serve_loop(listener, shared))
         .context("spawning front-end thread")?;
-    Ok(FrontendHandle { addr: bound, ctrl, join: Some(join) })
+    Ok(FrontendHandle { addr: bound, ctrl, join: Some(join), metrics: metrics_server })
 }
 
 /// Acceptor body: runs on the dedicated front-end thread until shutdown,
@@ -471,9 +658,10 @@ fn serve_loop<E: Engine>(listener: TcpListener, shared: Arc<Shared<E>>) -> Front
     let worker_handles: Vec<JoinHandle<(WorkerStats, usize, usize)>> = (0..ctrl.cfg.workers)
         .map(|w| {
             let shared = Arc::clone(&shared);
+            let stages = StageHists::register(&ctrl.registry);
             std::thread::Builder::new()
                 .name(format!("srigl-worker-{w}"))
-                .spawn(move || worker_loop(&shared))
+                .spawn(move || worker_loop(&shared, &stages))
                 .expect("spawning pool worker")
         })
         .collect();
@@ -495,10 +683,32 @@ fn serve_loop<E: Engine>(listener: TcpListener, shared: Arc<Shared<E>>) -> Front
         if ctrl.shutdown.load(Ordering::SeqCst) {
             break; // the wake-up connection from stop()
         }
-        ctrl.connections.fetch_add(1, Ordering::Relaxed);
+        let max_conns = ctrl.cfg.max_connections;
+        if max_conns > 0 && ctrl.metrics.connections_active.get() >= max_conns as u64 {
+            // Over the cap: refuse BEFORE spawning a reader, with a
+            // best-effort Busy frame (id 0, the reserved control id) so
+            // a protocol-following client backs off and retries instead
+            // of diagnosing a silent hang-up.
+            ctrl.metrics.connections_rejected.inc();
+            let _ = write_response(
+                &mut (&stream),
+                &ResponseFrame {
+                    id: 0,
+                    body: ResponseBody::Busy { retry_after_ms: ctrl.cfg.retry_after_ms },
+                },
+            );
+            let _ = stream.shutdown(Shutdown::Both);
+            continue;
+        }
+        ctrl.metrics.connections_total.inc();
         let conn_id = ctrl.next_conn_id.fetch_add(1, Ordering::Relaxed) as u64;
         let Ok(registry_clone) = stream.try_clone() else { continue };
         ctrl.conns.lock().unwrap().insert(conn_id, registry_clone);
+        // The active gauge covers exactly the reader's lifetime: inc
+        // here (before the cap check can run again), dec when the
+        // reader exits — the admission slot a new connection competes
+        // for.
+        ctrl.metrics.connections_active.inc();
         let ticket = Gate::enter(&ctrl.readers);
         let reader_shared = Arc::clone(&shared);
         // The conns entry is removed by the connection's WRITER thread (the
@@ -510,9 +720,11 @@ fn serve_loop<E: Engine>(listener: TcpListener, shared: Arc<Shared<E>>) -> Front
             .spawn(move || {
                 let _ticket = ticket; // decrements the gate on exit/panic
                 reader_loop(stream, &reader_shared, conn_id);
+                reader_shared.ctrl.metrics.connections_active.dec();
             });
         if spawned.is_err() {
             ctrl.conns.lock().unwrap().remove(&conn_id);
+            ctrl.metrics.connections_active.dec();
         }
     }
 
@@ -546,11 +758,13 @@ fn serve_loop<E: Engine>(listener: TcpListener, shared: Arc<Shared<E>>) -> Front
     FrontendStats {
         latency: LatencyStats::from_workers(&worker_stats, t_start.elapsed().as_secs_f64()),
         served,
-        cache_hits: ctrl.cache_hits.load(Ordering::Relaxed),
-        rejected: ctrl.rejected.load(Ordering::Relaxed),
-        bad_requests: ctrl.bad_requests.load(Ordering::Relaxed),
-        dropped_responses: ctrl.dropped_responses.load(Ordering::Relaxed),
-        connections: ctrl.connections.load(Ordering::Relaxed),
+        cache_hits: ctrl.metrics.cache_hits.get() as usize,
+        rejected: ctrl.metrics.rejected.get() as usize,
+        bad_requests: ctrl.metrics.bad_requests.get() as usize,
+        dropped_responses: ctrl.metrics.dropped_responses.get() as usize,
+        connections_total: ctrl.metrics.connections_total.get() as usize,
+        connections_active: ctrl.metrics.connections_active.get() as usize,
+        connections_rejected: ctrl.metrics.connections_rejected.get() as usize,
         min_forward_rows: if max_rows == 0 { 0 } else { min_rows },
         max_forward_rows: max_rows,
     }
@@ -562,12 +776,14 @@ fn serve_loop<E: Engine>(listener: TcpListener, shared: Arc<Shared<E>>) -> Front
 /// (or the socket dies), then unregisters the egress.
 fn writer_loop(stream: TcpStream, egress: Arc<Egress>, ctrl: Arc<Control>, conn_id: u64) {
     let mut w = std::io::BufWriter::new(stream);
-    'outer: while let Some(frame) = egress.recv() {
+    'outer: while let Some((frame, t_enq)) = egress.recv() {
+        ctrl.metrics.egress_wait.record(t_enq.elapsed());
         if write_response(&mut w, &frame).is_err() {
             break;
         }
         // Opportunistically coalesce queued frames into one flush.
-        while let Some(frame) = egress.try_recv() {
+        while let Some((frame, t_enq)) = egress.try_recv() {
+            ctrl.metrics.egress_wait.record(t_enq.elapsed());
             if write_response(&mut w, &frame).is_err() {
                 break 'outer;
             }
@@ -629,7 +845,7 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
             Err(e) => {
                 match e.kind() {
                     std::io::ErrorKind::InvalidData => {
-                        ctrl.bad_requests.fetch_add(1, Ordering::Relaxed);
+                        ctrl.metrics.bad_requests.inc();
                         // control frame: not a computed response, so an
                         // overflow here is not a "dropped response"
                         let _ = egress.send(ResponseFrame {
@@ -640,16 +856,20 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
                     std::io::ErrorKind::UnexpectedEof => {
                         // truncated frame: the peer died mid-write; count
                         // it, but there is nobody left to answer
-                        ctrl.bad_requests.fetch_add(1, Ordering::Relaxed);
+                        ctrl.metrics.bad_requests.inc();
                     }
                     _ => {} // transport error (reset/shutdown): not a bad request
                 }
                 break;
             }
         };
+        // Ingress stage: frame fully read -> handed off (cache answer or
+        // queue push). Excludes the blocking frame read itself — time
+        // waiting for client bytes is the client's, not the server's.
+        let t_ingress = Instant::now();
         let rows = req.rows as usize;
         if rows == 0 || rows > cap || req.payload.len() != rows * d {
-            ctrl.bad_requests.fetch_add(1, Ordering::Relaxed);
+            ctrl.metrics.bad_requests.inc();
             let msg = format!(
                 "bad request: rows={rows} payload={} (need 1..={cap} rows of width {d})",
                 req.payload.len()
@@ -671,11 +891,12 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
             if let Some(data) = verified {
                 c.touch(&hash);
                 drop(c);
-                ctrl.cache_hits.fetch_add(1, Ordering::Relaxed);
+                ctrl.metrics.cache_hits.inc();
                 let frame = ResponseFrame {
                     id: req.id,
                     body: ResponseBody::Output { rows: req.rows, data },
                 };
+                ctrl.metrics.ingress.record(t_ingress.elapsed());
                 ctrl.count_send(egress.send(frame));
                 continue;
             }
@@ -689,8 +910,9 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
             t_submit: Instant::now(),
         };
         job.egress.job_started();
+        ctrl.metrics.ingress.record(t_ingress.elapsed());
         if let Err(QueueFull(job)) = shared.injector.push_bounded(job) {
-            ctrl.rejected.fetch_add(1, Ordering::Relaxed);
+            ctrl.metrics.rejected.inc();
             // already counted as `rejected`; the Busy control frame must
             // not also count as a dropped response
             let _ = job.egress.send(ResponseFrame {
@@ -706,7 +928,7 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
 /// Pool worker: adaptive pop, greedy row-packing, forward, route results
 /// through each job's egress queue (never a blocking socket write).
 /// Returns (stats, min packed rows, max packed rows).
-fn worker_loop<E: Engine>(shared: &Shared<E>) -> (WorkerStats, usize, usize) {
+fn worker_loop<E: Engine>(shared: &Shared<E>, stages: &StageHists) -> (WorkerStats, usize, usize) {
     let engine = &*shared.engine;
     let ctrl = &shared.ctrl;
     let d = engine.in_width();
@@ -727,9 +949,14 @@ fn worker_loop<E: Engine>(shared: &Shared<E>) -> (WorkerStats, usize, usize) {
         if shared.injector.pop_batch(want, &mut jobs) == 0 {
             break;
         }
+        let t_pop = Instant::now();
+        for job in &jobs {
+            stages.queue_wait.record(t_pop.duration_since(job.t_submit));
+        }
         while !jobs.is_empty() {
             // pack leading jobs while their rows fit one forward (every
             // job has rows <= cap, enforced at ingress, so take >= 1)
+            let t_pack = Instant::now();
             let mut rows = 0usize;
             let mut take = 0usize;
             while take < jobs.len() && rows + jobs[take].rows <= cap {
@@ -741,18 +968,28 @@ fn worker_loop<E: Engine>(shared: &Shared<E>) -> (WorkerStats, usize, usize) {
                 xbuf[off * d..(off + job.rows) * d].copy_from_slice(&job.x);
                 off += job.rows;
             }
+            let t_fwd = Instant::now();
+            stages.assembly.record(t_fwd.duration_since(t_pack));
             let out = engine.forward(&xbuf[..rows * d], rows, &mut scratch, threads);
             let t_done = Instant::now();
+            stages.forward.record(t_done.duration_since(t_fwd));
             min_rows = min_rows.min(rows);
             max_rows = max_rows.max(rows);
+            ctrl.metrics.forward_rows_min.record_min_nonzero(rows as u64);
+            ctrl.metrics.forward_rows_max.record_max(rows as u64);
             ws.batches += 1;
             ws.served += take;
+            ctrl.metrics.batches.inc();
+            ctrl.metrics.served.add(take as u64);
             let mut off = 0usize;
             for job in jobs.drain(..take) {
                 let data = out[off * ow..(off + job.rows) * ow].to_vec();
                 off += job.rows;
-                ws.latencies_us
-                    .push(t_done.duration_since(job.t_submit).as_secs_f64() * 1e6);
+                // one sample, two sinks: the exact end-of-run LatencyStats
+                // and the live stage="total" histogram stay consistent
+                let us = t_done.duration_since(job.t_submit).as_secs_f64() * 1e6;
+                ws.latencies_us.push(us);
+                stages.total.record_us(us);
                 // Insert BEFORE responding: once a client holds the answer
                 // it may resend the same payload, which must then hit.
                 if let Some(cache) = &shared.cache {
@@ -792,9 +1029,9 @@ mod tests {
         assert_eq!(e.send(out_frame(100)), SendOutcome::Dropped);
 
         // the writer sees the data frames first, then the Busy hints
-        assert_eq!(e.try_recv().unwrap(), out_frame(1));
-        assert_eq!(e.try_recv().unwrap(), out_frame(2));
-        let busy = e.try_recv().unwrap();
+        assert_eq!(e.try_recv().unwrap().0, out_frame(1));
+        assert_eq!(e.try_recv().unwrap().0, out_frame(2));
+        let busy = e.try_recv().unwrap().0;
         assert_eq!(busy.id, 3);
         assert_eq!(busy.body, ResponseBody::Busy { retry_after_ms: 7 });
         // draining reopens capacity for data frames
@@ -812,9 +1049,9 @@ mod tests {
         assert_eq!(e.send(err.clone()), SendOutcome::Queued, "control frame uses headroom");
         let busy = ResponseFrame { id: 3, body: ResponseBody::Busy { retry_after_ms: 99 } };
         assert_eq!(e.send(busy.clone()), SendOutcome::Queued);
-        assert_eq!(e.try_recv().unwrap(), out_frame(1));
-        assert_eq!(e.try_recv().unwrap(), err, "Error delivered verbatim");
-        assert_eq!(e.try_recv().unwrap(), busy, "Busy keeps its own hint (99, not 7)");
+        assert_eq!(e.try_recv().unwrap().0, out_frame(1));
+        assert_eq!(e.try_recv().unwrap().0, err, "Error delivered verbatim");
+        assert_eq!(e.try_recv().unwrap().0, busy, "Busy keeps its own hint (99, not 7)");
     }
 
     #[test]
@@ -828,7 +1065,7 @@ mod tests {
         e.job_finished(); // last job out + reader gone -> closed
         assert_eq!(e.send(out_frame(2)), SendOutcome::Gone);
         // queued frames still drain after close...
-        assert_eq!(e.recv().unwrap(), out_frame(1));
+        assert_eq!(e.recv().unwrap().0, out_frame(1));
         // ...then recv reports closed
         assert!(e.recv().is_none());
     }
@@ -855,6 +1092,6 @@ mod tests {
         let h = std::thread::spawn(move || e2.recv());
         std::thread::sleep(std::time::Duration::from_millis(20));
         assert_eq!(e.send(out_frame(5)), SendOutcome::Queued);
-        assert_eq!(h.join().unwrap().unwrap(), out_frame(5));
+        assert_eq!(h.join().unwrap().unwrap().0, out_frame(5));
     }
 }

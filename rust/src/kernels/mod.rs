@@ -121,12 +121,18 @@ pub fn selected() -> KernelKind {
         if let Ok(v) = std::env::var("SRIGL_KERNEL") {
             match KernelKind::parse(&v) {
                 Some(k) if k.available() => return k,
-                Some(k) => eprintln!(
-                    "SRIGL_KERNEL={v}: {} not available on this CPU, auto-detecting instead",
-                    k.name()
+                Some(k) => crate::util::log::warn(
+                    "kernels",
+                    &format!(
+                        "SRIGL_KERNEL={v}: {} not available on this CPU, auto-detecting instead",
+                        k.name()
+                    ),
                 ),
-                None => eprintln!(
-                    "SRIGL_KERNEL={v}: unknown kernel (scalar|portable|avx2), auto-detecting instead"
+                None => crate::util::log::warn(
+                    "kernels",
+                    &format!(
+                        "SRIGL_KERNEL={v}: unknown kernel (scalar|portable|avx2), auto-detecting instead"
+                    ),
                 ),
             }
         }

@@ -10,7 +10,8 @@
 //!   bottoming out in the runtime-dispatched SIMD microkernels of
 //!   [`kernels`])
 //!   with its socket serving front-end ([`inference::frontend`] over the
-//!   [`net`] wire protocol),
+//!   [`net`] wire protocol) and live metrics layer ([`obs`]: lock-light
+//!   counters/histograms behind a plaintext `GET /metrics` endpoint),
 //!   plus the analysis substrates the paper's evaluation needs
 //!   ([`stats`], [`flops`]), one harness per paper table/figure
 //!   ([`exp`]), and the traffic arena for head-to-head serving duels
@@ -32,6 +33,7 @@ pub mod flops;
 pub mod inference;
 pub mod kernels;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod sparsity;
 pub mod stats;

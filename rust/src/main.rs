@@ -44,6 +44,7 @@ USAGE:
               [--threads T] [--gap-us G] [--stack NAME] [--adaptive]
               [--shards S] [--listen ADDR] [--queue-cap N] [--cache-cap N]
               [--egress-cap N] [--retry-ms M] [--fixed-batch]
+              [--metrics ADDR] [--max-conns N]
   srigl arena [--scenario poisson|bursty|diurnal|heavytail|adversarial]
               [--a SPEC] [--b SPEC]   (SPEC: workers=4,adaptive=8,shards=2,...)
               [--requests N] [--rounds R] [--gap-us G] [--max-rows M]
@@ -235,10 +236,10 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
     let threads: usize = args.parse_or("threads", 1)?;
     let gap = std::time::Duration::from_micros(args.parse_or("gap-us", 0u64)?);
 
-    let (model, knobs) = if let Some(name) = args.get("stack") {
+    let (model, knobs, stack_metrics) = if let Some(name) = args.get("stack") {
         let man = Manifest::load_default()?;
         let entry = man.stack(name)?;
-        (SparseModel::from_stack(entry)?, entry.serve)
+        (SparseModel::from_stack(entry)?, entry.serve, entry.metrics.clone())
     } else {
         let dims: Vec<usize> = args.list_or("dims", &[3072usize, 768, 768, 256])?;
         anyhow::ensure!(dims.len() >= 2, "--dims needs an input width plus >=1 layer widths");
@@ -260,7 +261,7 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
                 activation: if i + 1 == n_layers { Activation::Identity } else { Activation::Relu },
             });
         }
-        (SparseModel::synth(dims[0], &specs, 42)?, ServeKnobs::default())
+        (SparseModel::synth(dims[0], &specs, 42)?, ServeKnobs::default(), None)
     };
     let max_batch: usize = args.parse_or("max-batch", knobs.max_batch)?;
     // In-process benches only go adaptive on an explicit flag (the PR-1
@@ -283,7 +284,8 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
         .queue_capacity(args.parse_or("queue-cap", knobs.queue_capacity)?)
         .cache_capacity(args.parse_or("cache-cap", knobs.cache_capacity)?)
         .egress_capacity(args.parse_or("egress-cap", knobs.egress_capacity)?)
-        .retry_after_ms(args.parse_or("retry-ms", 2)?);
+        .retry_after_ms(args.parse_or("retry-ms", 2)?)
+        .max_connections(args.parse_or("max-conns", knobs.max_connections)?);
 
     if let Some(addr) = args.get("listen") {
         let adaptive = adaptive || (knobs.adaptive && !args.has("fixed-batch"));
@@ -292,7 +294,9 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
         } else {
             builder.fixed_batch(max_batch)
         };
-        return serve_listen(model, addr, &builder);
+        // CLI --metrics wins; else the stack's "serve": {"metrics": ...}.
+        let metrics = args.get("metrics").map(str::to_string).or(stack_metrics);
+        return serve_listen(model, addr, &builder, metrics.as_deref());
     }
 
     if shards > 1 {
@@ -482,9 +486,15 @@ fn report_kernel_selection(model: &SparseModel, batch: usize, threads: usize) {
 /// `serve-model --listen ADDR`: run the socket front-end until killed.
 /// The builder (manifest knobs + CLI overrides) is the single source of
 /// serving configuration.
-fn serve_listen(model: SparseModel, addr: &str, builder: &EngineBuilder) -> Result<()> {
+fn serve_listen(
+    model: SparseModel,
+    addr: &str,
+    builder: &EngineBuilder,
+    metrics: Option<&str>,
+) -> Result<()> {
     println!("serving model: {}", model.describe());
-    let handle = frontend::spawn(std::sync::Arc::new(model), addr, builder)?;
+    let handle =
+        frontend::spawn_with_metrics(std::sync::Arc::new(model), addr, builder, metrics)?;
     println!(
         "listening on {} — {} workers, {} batching (cap {}), queue cap {}, cache {} entries, \
          egress cap {}{}",
@@ -504,6 +514,12 @@ fn serve_listen(model: SparseModel, addr: &str, builder: &EngineBuilder) -> Resu
             String::new()
         }
     );
+    if let Some(m) = handle.metrics_addr() {
+        println!("metrics: http://{m}/metrics (Prometheus text; docs/METRICS.md)");
+    }
+    if builder.max_connections > 0 {
+        println!("connection cap: {} (over-cap connects get Busy)", builder.max_connections);
+    }
     println!("wire format: docs/WIRE.md; stop with Ctrl-C");
     handle.run_forever();
     Ok(())

@@ -1,0 +1,106 @@
+//! Startup engine facts exported as labeled gauges: the process-wide
+//! microkernel selection, model storage footprint, and — per layer — the
+//! representation, shape, stored weights, and a quick measured GFLOP/s
+//! estimate at the serving batch cap. Same accounting as the
+//! `serve-model` startup banner (2 FLOPs per stored weight per example;
+//! ablated neurons store nothing, so compact forms are credited only for
+//! work they actually do): a few milliseconds per layer at registration
+//! buys a scrape that shows *which* kernel a deployment is actually
+//! running and how fast each layer moves.
+
+use std::time::Duration;
+
+use super::Registry;
+use crate::bench::bench;
+use crate::inference::SparseModel;
+
+/// Register the model/kernel fact gauges on `registry`. Called once at
+/// spawn when a metrics endpoint is enabled (the GFLOP/s probe costs a
+/// few ms per layer, which metric-less test spawns must not pay).
+pub fn register_model_facts(registry: &Registry, model: &SparseModel, batch: usize, threads: usize) {
+    registry.const_gauge(
+        "srigl_kernel_info",
+        "Process-wide microkernel selection; the value is always 1 (facts ride the labels).",
+        &[("selection", &crate::kernels::describe_selection())],
+        1.0,
+    );
+    registry.const_gauge(
+        "srigl_engine_storage_bytes",
+        "Bytes the model's layer representations occupy (weights + indices + biases).",
+        &[],
+        model.storage_bytes() as f64,
+    );
+    let batch = batch.max(1);
+    for (i, layer) in model.layers().iter().enumerate() {
+        let k = layer.kernel();
+        let stored: usize = layer.row_weights().iter().sum();
+        let flops = 2.0 * stored as f64 * batch as f64;
+        let x = vec![0.1f32; batch * k.in_width()];
+        let mut out = vec![0f32; batch * k.out_width()];
+        let m = bench("layer", 3, Duration::from_millis(2), || {
+            k.forward(&x, batch, &mut out, threads);
+        });
+        let layer_label = i.to_string();
+        let labels: &[(&str, &str)] = &[("layer", &layer_label), ("repr", k.name())];
+        registry.const_gauge(
+            "srigl_layer_stored_weights",
+            "Stored weights per layer (ablated neurons store nothing in compact forms).",
+            labels,
+            stored as f64,
+        );
+        registry.const_gauge(
+            "srigl_layer_est_gflops",
+            "Measured GFLOP/s per layer at the serving batch cap (quick startup probe).",
+            labels,
+            flops / m.median_s().max(1e-12) / 1e9,
+        );
+        registry.const_gauge(
+            "srigl_layer_out_width",
+            "Output width per layer (active neurons for compact representations).",
+            labels,
+            k.out_width() as f64,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::timings::ablated_frac_for;
+    use crate::inference::{Activation, LayerSpec, Repr};
+
+    #[test]
+    fn model_facts_register_per_layer_gauges() {
+        let spec = |n, act| LayerSpec {
+            n,
+            repr: Repr::Condensed,
+            sparsity: 0.9,
+            ablated_frac: ablated_frac_for(0.9),
+            activation: act,
+        };
+        let model = SparseModel::synth(
+            32,
+            &[spec(24, Activation::Relu), spec(8, Activation::Identity)],
+            3,
+        )
+        .unwrap();
+        let r = Registry::new();
+        register_model_facts(&r, &model, 4, 1);
+        let text = r.render();
+        assert!(text.contains("srigl_kernel_info{selection=\"kernel="), "{text}");
+        assert!(text.contains("srigl_engine_storage_bytes "), "{text}");
+        for layer in ["0", "1"] {
+            let needle = format!("srigl_layer_stored_weights{{layer=\"{layer}\",repr=\"condensed\"}}");
+            assert!(text.contains(&needle), "missing {needle} in:\n{text}");
+        }
+        // GFLOP/s is measured, so only its presence and positivity are
+        // asserted
+        let j = crate::obs::parse_exposition(&text);
+        let g = j
+            .get("srigl_layer_est_gflops{layer=\"0\",repr=\"condensed\"}")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(g > 0.0, "gflops must be positive, got {g}");
+    }
+}

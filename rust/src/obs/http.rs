@@ -1,0 +1,162 @@
+//! Hand-rolled plaintext `GET /metrics` endpoint (zero dependencies).
+//!
+//! One dedicated listener thread serves HTTP/1.1 requests serially:
+//! scrapes are rare (seconds apart), tiny (one rendered string), and must
+//! never compete with the serving data path for threads or locks — the
+//! responder only takes the registry mutex long enough to snapshot.
+//! Anything that is not `GET /metrics` gets a 404; malformed or stalled
+//! peers are bounded by a read timeout and an 8 KiB header cap.
+//!
+//! [`scrape`] is the matching minimal client, used by wire-mode arena
+//! replay (persisting live snapshots into `BENCH_*.json`) and the socket
+//! tests.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::Registry;
+
+/// Maximum request-head bytes read before answering; a scraper's GET line
+/// plus headers fits in a fraction of this.
+const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// Running metrics endpoint. Stop it explicitly with
+/// [`MetricsServer::stop`] or let Drop do the same.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Bind `addr` (e.g. `"127.0.0.1:0"`) and serve `registry.render()` at
+/// `/metrics` until stopped.
+pub fn serve(addr: &str, registry: Arc<Registry>) -> Result<MetricsServer> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding metrics endpoint {addr}"))?;
+    let bound = listener.local_addr().context("resolving metrics address")?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&shutdown);
+    let join = std::thread::Builder::new()
+        .name("srigl-metrics".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if flag.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(mut stream) = stream else { continue };
+                let _ = respond(&mut stream, &registry);
+            }
+        })
+        .context("spawning metrics thread")?;
+    Ok(MetricsServer { addr: bound, shutdown, join: Some(join) })
+}
+
+fn respond(stream: &mut TcpStream, registry: &Registry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < MAX_HEAD_BYTES {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+    }
+    let line = String::from_utf8_lossy(&head);
+    let line = line.lines().next().unwrap_or("");
+    let mut parts = line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let (status, ctype, body) = if method == "GET" && path == "/metrics" {
+        ("200 OK", "text/plain; version=0.0.4; charset=utf-8", registry.render())
+    } else {
+        ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string())
+    };
+    let header = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+impl MetricsServer {
+    /// The bound address (resolves port 0 to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener thread and join it. Idempotent.
+    pub fn stop(&mut self) {
+        let Some(join) = self.join.take() else { return };
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        let _ = join.join();
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Minimal scrape client: `GET /metrics`, return the body. Fails on any
+/// non-200 status.
+pub fn scrape(addr: SocketAddr) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to metrics at {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream
+        .write_all(b"GET /metrics HTTP/1.1\r\nHost: srigl\r\nConnection: close\r\n\r\n")
+        .context("sending scrape request")?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).context("reading scrape response")?;
+    let text = String::from_utf8_lossy(&raw);
+    let Some((head, body)) = text.split_once("\r\n\r\n") else {
+        bail!("malformed scrape response (no header terminator)");
+    };
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains(" 200 ") {
+        bail!("scrape failed: {status}");
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_serves_render_and_404s_elsewhere() {
+        let registry = Arc::new(Registry::new());
+        let c = registry.counter("srigl_test_total", "Test counter.");
+        c.add(9);
+        let mut srv = serve("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+
+        // live values, scraped twice (values move between scrapes)
+        let body = scrape(srv.addr()).unwrap();
+        assert!(body.contains("srigl_test_total 9"), "{body}");
+        c.add(1);
+        let body = scrape(srv.addr()).unwrap();
+        assert!(body.contains("srigl_test_total 10"), "{body}");
+
+        // non-/metrics path → 404
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.write_all(b"GET /other HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut resp = Vec::new();
+        s.read_to_end(&mut resp).unwrap();
+        assert!(String::from_utf8_lossy(&resp).starts_with("HTTP/1.1 404"), "{resp:?}");
+
+        srv.stop();
+        srv.stop(); // idempotent
+        assert!(scrape(srv.addr()).is_err(), "listener gone after stop");
+    }
+}

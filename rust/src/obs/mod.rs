@@ -1,0 +1,358 @@
+//! Live observability: lock-light metric primitives, a registry with a
+//! Prometheus-text renderer, and a hand-rolled `GET /metrics` endpoint.
+//!
+//! The serving stack ([`crate::inference::frontend`]) historically merged
+//! all its counters at `stop()` — a live server under load was a black
+//! box. This module closes that gap without adding dependencies or hot-
+//! path locks:
+//!
+//! * [`Counter`] / [`Gauge`] — one relaxed `AtomicU64` each. The frontend
+//!   holds `Arc` handles and bumps them inline; the scrape path reads the
+//!   same atomics, so the endpoint and the end-of-run
+//!   `FrontendStats` can never disagree.
+//! * [`Histogram`] — fixed log-scale (1-2-5) microsecond buckets,
+//!   allocation-free `record` (one array scan + two relaxed adds), with
+//!   mergeable [`HistogramSnapshot`]s so per-worker instances aggregate at
+//!   scrape time instead of contending at record time.
+//! * [`Registry`] ([`registry`]) — owns metric metadata (name, help,
+//!   labels) and renders the Prometheus text exposition format
+//!   deterministically (registration order, `BTreeMap`-free hot path).
+//! * [`MetricsServer`] ([`http`]) — a zero-dependency HTTP/1.1 responder
+//!   on its own listener thread, wired into `frontend::spawn_engine` and
+//!   `serve-model --metrics ADDR`; [`scrape`] is the matching client used
+//!   by the arena so perf-trajectory records and production deployments
+//!   share one metric namespace (docs/METRICS.md).
+//! * [`facts`] — per-layer engine gauges (repr/kernel, stored weights,
+//!   measured GFLOP/s) registered from the model at spawn.
+
+pub mod facts;
+pub mod http;
+pub mod registry;
+
+pub use http::{scrape, MetricsServer};
+pub use registry::{parse_exposition, Registry};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Monotonic counter. Relaxed ordering: metric reads need no
+/// happens-before edge with the work they count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down gauge (e.g. live connections). `dec` saturates at zero so a
+/// teardown race can never wrap to u64::MAX in a scrape.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
+    }
+
+    /// Raise the gauge to `v` if larger (a live running-max, e.g. the
+    /// biggest packed forward seen).
+    pub fn record_max(&self, v: u64) {
+        let _ = self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Lower the gauge to `v` if smaller, treating 0 as "no data yet" (a
+    /// live running-min over values that are never legitimately zero,
+    /// e.g. packed forward rows, which are always >= 1).
+    pub fn record_min_nonzero(&self, v: u64) {
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            if cur == 0 || v < cur {
+                Some(v)
+            } else {
+                None
+            }
+        });
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Upper bounds (inclusive, microseconds) of the finite histogram
+/// buckets: a 1-2-5 log scale from 1us to 5s. One extra overflow bucket
+/// catches everything above. ~21 buckets keep the record-path scan inside
+/// one cache line pair while still resolving percentiles to better than
+/// 2.5x anywhere in the range.
+pub const BUCKET_BOUNDS_US: [f64; 21] = [
+    1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1e3, 2e3, 5e3, 1e4, 2e4, 5e4, 1e5,
+    2e5, 5e5, 1e6, 2e6, 5e6,
+];
+
+/// Total bucket count including the +Inf overflow bucket.
+pub const BUCKETS: usize = BUCKET_BOUNDS_US.len() + 1;
+
+/// Fixed-bucket latency histogram. `record_us` is allocation-free and
+/// lock-free: a linear scan over [`BUCKET_BOUNDS_US`] plus two relaxed
+/// atomic adds, cheap enough for the per-request serve path.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    /// Sum kept in integer nanoseconds so it can live in one AtomicU64
+    /// (f64 sums would need a CAS loop); rendered back as microseconds.
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation in microseconds. Non-finite values are
+    /// dropped (a NaN must not poison the sum); negatives clamp to 0.
+    pub fn record_us(&self, us: f64) {
+        if !us.is_finite() {
+            return;
+        }
+        let us = us.max(0.0);
+        let idx = BUCKET_BOUNDS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(BUCKET_BOUNDS_US.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add((us * 1e3).round() as u64, Ordering::Relaxed);
+    }
+
+    /// Record one observed duration.
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    /// Point-in-time copy; cheap (22 relaxed loads). Not atomic across
+    /// buckets — a scrape racing a record may be off by the in-flight
+    /// sample, which monotonicity tests must (and do) tolerate.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            counts: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum_us: self.sum_ns.load(Ordering::Relaxed) as f64 / 1e3,
+        }
+    }
+}
+
+/// Owned, mergeable histogram state — what the scrape path aggregates
+/// across per-worker [`Histogram`] instances.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket (non-cumulative) counts; the last entry is the overflow
+    /// bucket above the largest finite bound.
+    pub counts: [u64; BUCKETS],
+    /// Sum of all observations, microseconds.
+    pub sum_us: f64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> HistogramSnapshot {
+        HistogramSnapshot { counts: [0; BUCKETS], sum_us: 0.0 }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Total observation count.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Fold another snapshot in (per-worker aggregation at scrape).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum_us += other.sum_us;
+    }
+
+    /// Estimate the p-th percentile (0..=100) in microseconds by linear
+    /// interpolation inside the winning bucket. Uses the same rank
+    /// convention as `inference::server`'s exact percentile
+    /// (`rank = p/100 * (n-1)`), so against the same samples the two
+    /// agree to within one bucket's width. NaN when empty; observations
+    /// in the overflow bucket report the largest finite bound.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
+        let mut before = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if rank < (before + c) as f64 {
+                let lo = if i == 0 { 0.0 } else { BUCKET_BOUNDS_US[i - 1] };
+                let hi = BUCKET_BOUNDS_US[i.min(BUCKET_BOUNDS_US.len() - 1)];
+                let frac = ((rank + 1.0 - before as f64) / c as f64).clamp(0.0, 1.0);
+                return lo + (hi - lo) * frac;
+            }
+            before += c;
+        }
+        // rank <= n-1 < n guarantees the loop returned; unreachable with
+        // a consistent snapshot, but a racing copy should not panic.
+        BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.dec();
+        g.dec(); // saturates, never wraps
+        assert_eq!(g.get(), 0);
+        g.set(42);
+        assert_eq!(g.get(), 42);
+
+        let mx = Gauge::new();
+        mx.record_max(3);
+        mx.record_max(1);
+        assert_eq!(mx.get(), 3);
+        let mn = Gauge::new();
+        mn.record_min_nonzero(5); // 0 means "no data", so 5 replaces it
+        mn.record_min_nonzero(7);
+        mn.record_min_nonzero(2);
+        assert_eq!(mn.get(), 2);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_le_inclusive() {
+        let h = Histogram::new();
+        // a value exactly on a bound lands IN that bound's bucket
+        // (Prometheus `le` semantics), just past it in the next
+        h.record_us(10.0);
+        h.record_us(10.000001);
+        let s = h.snapshot();
+        let i10 = BUCKET_BOUNDS_US.iter().position(|&b| b == 10.0).unwrap();
+        assert_eq!(s.counts[i10], 1, "10.0 belongs to le=10");
+        assert_eq!(s.counts[i10 + 1], 1, "10.000001 belongs to le=20");
+    }
+
+    #[test]
+    fn histogram_edges_zero_overflow_nan() {
+        let h = Histogram::new();
+        h.record_us(0.0); // first bucket
+        h.record_us(-3.0); // clamps to first bucket
+        h.record_us(9e99); // overflow bucket
+        h.record_us(f64::NAN); // dropped
+        h.record_us(f64::INFINITY); // dropped
+        let s = h.snapshot();
+        assert_eq!(s.counts[0], 2);
+        assert_eq!(s.counts[BUCKETS - 1], 1);
+        assert_eq!(s.count(), 3);
+    }
+
+    #[test]
+    fn snapshot_merge_equals_recording_into_one() {
+        // property: record a seeded stream split across two histograms;
+        // merging their snapshots must equal recording it all into one
+        let mut rng = Rng::new(977);
+        let (a, b, all) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for i in 0..4000 {
+            // span the full bucket range: ~1e-1 .. ~1e7 us
+            let us = 10f64.powf(rng.uniform() * 8.0 - 1.0);
+            if i % 2 == 0 { &a } else { &b }.record_us(us);
+            all.record_us(us);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged, all.snapshot());
+        assert_eq!(merged.count(), 4000);
+    }
+
+    #[test]
+    fn percentile_tracks_exact_within_bucket_resolution() {
+        // the acceptance bound for the serving integration: histogram
+        // percentiles vs the exact sorted-sample percentile, within the
+        // winning bucket's width
+        let mut rng = Rng::new(31);
+        let h = Histogram::new();
+        let mut xs: Vec<f64> = Vec::new();
+        for _ in 0..5000 {
+            let us = 10f64.powf(rng.uniform() * 4.0); // 1us .. 10ms
+            h.record_us(us);
+            xs.push(us);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = h.snapshot();
+        for p in [50.0, 95.0, 99.0] {
+            let rank = p / 100.0 * (xs.len() - 1) as f64;
+            let exact = xs[rank.floor() as usize]
+                + (xs[rank.ceil() as usize] - xs[rank.floor() as usize]) * rank.fract();
+            let est = s.percentile(p);
+            // the bucket containing the exact value: [lo, hi]
+            let i = BUCKET_BOUNDS_US.iter().position(|&b| exact <= b).unwrap();
+            let lo = if i == 0 { 0.0 } else { BUCKET_BOUNDS_US[i - 1] };
+            let hi = BUCKET_BOUNDS_US[i];
+            assert!(
+                est >= lo - 1e-9 && est <= hi + 1e-9,
+                "p{p}: est {est} outside bucket [{lo}, {hi}] of exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn percentile_empty_and_single() {
+        assert!(HistogramSnapshot::default().percentile(50.0).is_nan());
+        let h = Histogram::new();
+        h.record_us(30.0);
+        let p = h.snapshot().percentile(99.0);
+        assert!((20.0..=50.0).contains(&p), "single sample stays in its bucket, got {p}");
+    }
+}

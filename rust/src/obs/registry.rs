@@ -1,0 +1,362 @@
+//! Metric registry + Prometheus text exposition renderer.
+//!
+//! Registration hands back `Arc` handles ([`super::Counter`] /
+//! [`super::Gauge`] / [`super::Histogram`]) that the hot path bumps with
+//! relaxed atomics; the registry's mutex is touched only at registration
+//! and scrape time, never per request. Registering the same histogram
+//! family name + label set more than once is the intended idiom for
+//! per-worker instances: each worker records into its own allocation and
+//! the renderer merges the snapshots into one series at scrape.
+//!
+//! Output is the Prometheus text format (version 0.0.4): `# HELP` /
+//! `# TYPE` once per family, series in registration order, `le` buckets
+//! cumulative with a closing `+Inf`. Ordering is deterministic so the
+//! golden test below can assert the exact bytes.
+
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+use super::{Counter, Gauge, Histogram, HistogramSnapshot, BUCKET_BOUNDS_US};
+use crate::util::json::{num, Json};
+
+enum Value {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    /// Fixed at registration (per-layer facts, kernel info).
+    Const(f64),
+    Histogram(Arc<Histogram>),
+}
+
+struct Metric {
+    name: String,
+    help: String,
+    labels: Vec<(String, String)>,
+    value: Value,
+}
+
+/// See the module docs. Cheap to share (`Arc<Registry>`); all methods
+/// take `&self`.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Vec<Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn push(&self, name: &str, help: &str, labels: &[(&str, &str)], value: Value) {
+        self.inner.lock().unwrap().push(Metric {
+            name: name.to_string(),
+            help: help.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            value,
+        });
+    }
+
+    /// Register an unlabeled counter and return its live handle.
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        self.counter_with(name, help, &[])
+    }
+
+    pub fn counter_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let c = Arc::new(Counter::new());
+        self.push(name, help, labels, Value::Counter(Arc::clone(&c)));
+        c
+    }
+
+    /// Register an unlabeled gauge and return its live handle.
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        self.gauge_with(name, help, &[])
+    }
+
+    pub fn gauge_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::new());
+        self.push(name, help, labels, Value::Gauge(Arc::clone(&g)));
+        g
+    }
+
+    /// Register a gauge whose value is fixed at registration time
+    /// (startup facts: stored weights, measured GFLOP/s, kernel info).
+    pub fn const_gauge(&self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.push(name, help, labels, Value::Const(value));
+    }
+
+    /// Register a histogram instance. Same name + labels may be
+    /// registered many times (one per worker); scrapes merge them.
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::new());
+        self.push(name, help, labels, Value::Histogram(Arc::clone(&h)));
+        h
+    }
+
+    /// Render the full exposition text. Families appear in first-
+    /// registration order; histogram instances sharing name + labels are
+    /// merged into one series.
+    pub fn render(&self) -> String {
+        enum Snap {
+            Scalar(f64),
+            Hist(HistogramSnapshot),
+        }
+        struct Series {
+            name: String,
+            labels: Vec<(String, String)>,
+            snap: Snap,
+        }
+
+        let metrics = self.inner.lock().unwrap();
+        // Snapshot pass: merge same-(name, labels) histogram instances,
+        // preserving first-occurrence order for everything.
+        let mut series: Vec<Series> = Vec::with_capacity(metrics.len());
+        let mut families: Vec<(String, String, &'static str)> = Vec::new(); // (name, help, type)
+        for m in metrics.iter() {
+            let ty = match m.value {
+                Value::Counter(_) => "counter",
+                Value::Gauge(_) | Value::Const(_) => "gauge",
+                Value::Histogram(_) => "histogram",
+            };
+            if !families.iter().any(|(n, _, _)| *n == m.name) {
+                families.push((m.name.clone(), m.help.clone(), ty));
+            }
+            match &m.value {
+                Value::Counter(c) => series.push(Series {
+                    name: m.name.clone(),
+                    labels: m.labels.clone(),
+                    snap: Snap::Scalar(c.get() as f64),
+                }),
+                Value::Gauge(g) => series.push(Series {
+                    name: m.name.clone(),
+                    labels: m.labels.clone(),
+                    snap: Snap::Scalar(g.get() as f64),
+                }),
+                Value::Const(v) => series.push(Series {
+                    name: m.name.clone(),
+                    labels: m.labels.clone(),
+                    snap: Snap::Scalar(*v),
+                }),
+                Value::Histogram(h) => {
+                    let snap = h.snapshot();
+                    match series.iter_mut().find(|s| {
+                        s.name == m.name
+                            && s.labels == m.labels
+                            && matches!(s.snap, Snap::Hist(_))
+                    }) {
+                        Some(Series { snap: Snap::Hist(acc), .. }) => acc.merge(&snap),
+                        _ => series.push(Series {
+                            name: m.name.clone(),
+                            labels: m.labels.clone(),
+                            snap: Snap::Hist(snap),
+                        }),
+                    }
+                }
+            }
+        }
+        drop(metrics);
+
+        let mut out = String::new();
+        for (name, help, ty) in &families {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {ty}");
+            for s in series.iter().filter(|s| s.name == *name) {
+                match &s.snap {
+                    Snap::Scalar(v) => {
+                        let _ =
+                            writeln!(out, "{name}{} {}", labels_text(&s.labels, &[]), fmt_num(*v));
+                    }
+                    Snap::Hist(h) => {
+                        let mut cum = 0u64;
+                        for (i, &c) in h.counts.iter().enumerate() {
+                            cum += c;
+                            let le = if i < BUCKET_BOUNDS_US.len() {
+                                fmt_num(BUCKET_BOUNDS_US[i])
+                            } else {
+                                "+Inf".to_string()
+                            };
+                            let _ = writeln!(
+                                out,
+                                "{name}_bucket{} {cum}",
+                                labels_text(&s.labels, &[("le", &le)])
+                            );
+                        }
+                        let _ = writeln!(
+                            out,
+                            "{name}_sum{} {}",
+                            labels_text(&s.labels, &[]),
+                            fmt_num(h.sum_us)
+                        );
+                        let _ =
+                            writeln!(out, "{name}_count{} {cum}", labels_text(&s.labels, &[]));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// `{k="v",...}` (empty string when there are no labels), with `extra`
+/// pairs appended — used for the histogram `le` label.
+fn labels_text(labels: &[(String, String)], extra: &[(&str, &str)]) -> String {
+    if labels.is_empty() && extra.is_empty() {
+        return String::new();
+    }
+    let mut s = String::from("{");
+    let mut first = true;
+    for (k, v) in labels
+        .iter()
+        .map(|(k, v)| (k.as_str(), v.as_str()))
+        .chain(extra.iter().copied())
+    {
+        if !first {
+            s.push(',');
+        }
+        first = false;
+        let _ = write!(s, "{k}=\"{}\"", escape_label(v));
+    }
+    s.push('}');
+    s
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Integral values print without a fraction (`le="500"`, `served 12`),
+/// everything else via f64 Display.
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() && v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Parse exposition text back into a flat JSON object mapping each series
+/// line (`name{labels}` exactly as rendered) to its numeric value —
+/// what wire-mode arena rounds persist into `BENCH_*.json` so trajectory
+/// records and live scrapes share one namespace. Comment and malformed
+/// lines are skipped.
+pub fn parse_exposition(text: &str) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((key, val)) = line.rsplit_once(' ') else { continue };
+        let Ok(v) = val.parse::<f64>() else { continue };
+        m.insert(key.to_string(), num(v));
+    }
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_exposition_format() {
+        // the exact bytes are the contract: metric names, label order,
+        // cumulative le buckets, +Inf, _sum/_count — stable across runs
+        let r = Registry::new();
+        let c = r.counter("srigl_requests_served_total", "Requests answered by the pool.");
+        c.add(3);
+        let g = r.gauge_with(
+            "srigl_connections_active",
+            "Live connections.",
+            &[("proto", "tcp")],
+        );
+        g.set(2);
+        r.const_gauge("srigl_layer_stored_weights", "Stored weights.", &[("layer", "0")], 128.0);
+        let h = r.histogram_with(
+            "srigl_stage_latency_us",
+            "Per-stage latency.",
+            &[("stage", "forward")],
+        );
+        h.record_us(1.5); // le=2
+        h.record_us(40.0); // le=50
+        h.record_us(40.0); // le=50
+
+        let text = r.render();
+        let expected = "\
+# HELP srigl_requests_served_total Requests answered by the pool.
+# TYPE srigl_requests_served_total counter
+srigl_requests_served_total 3
+# HELP srigl_connections_active Live connections.
+# TYPE srigl_connections_active gauge
+srigl_connections_active{proto=\"tcp\"} 2
+# HELP srigl_layer_stored_weights Stored weights.
+# TYPE srigl_layer_stored_weights gauge
+srigl_layer_stored_weights{layer=\"0\"} 128
+# HELP srigl_stage_latency_us Per-stage latency.
+# TYPE srigl_stage_latency_us histogram
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"1\"} 0
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"2\"} 1
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"5\"} 1
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"10\"} 1
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"20\"} 1
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"50\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"100\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"200\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"500\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"1000\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"2000\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"5000\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"10000\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"20000\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"50000\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"100000\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"200000\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"500000\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"1000000\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"2000000\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"5000000\"} 3
+srigl_stage_latency_us_bucket{stage=\"forward\",le=\"+Inf\"} 3
+srigl_stage_latency_us_sum{stage=\"forward\"} 81.5
+srigl_stage_latency_us_count{stage=\"forward\"} 3
+";
+        assert_eq!(text, expected);
+    }
+
+    #[test]
+    fn same_family_histograms_merge_per_label_set() {
+        // per-worker idiom: two instances under one (name, labels) merge;
+        // a different label set stays its own series under one family
+        // header
+        let r = Registry::new();
+        let w0 = r.histogram_with("h_us", "h", &[("stage", "total")]);
+        let w1 = r.histogram_with("h_us", "h", &[("stage", "total")]);
+        let q = r.histogram_with("h_us", "h", &[("stage", "queue")]);
+        w0.record_us(1.0);
+        w1.record_us(1.0);
+        q.record_us(3.0);
+        let text = r.render();
+        assert_eq!(text.matches("# TYPE h_us histogram").count(), 1);
+        assert!(text.contains("h_us_count{stage=\"total\"} 2"), "merged: {text}");
+        assert!(text.contains("h_us_count{stage=\"queue\"} 1"), "separate: {text}");
+    }
+
+    #[test]
+    fn label_values_escape_quotes_and_backslashes() {
+        let r = Registry::new();
+        r.const_gauge("g", "g", &[("k", "a\"b\\c")], 1.0);
+        assert!(r.render().contains("g{k=\"a\\\"b\\\\c\"} 1"));
+    }
+
+    #[test]
+    fn parse_exposition_round_trips_series_lines() {
+        let r = Registry::new();
+        let c = r.counter("srigl_x_total", "x");
+        c.add(7);
+        r.const_gauge("srigl_y", "y", &[("layer", "1")], 2.5);
+        let j = parse_exposition(&r.render());
+        assert_eq!(j.get("srigl_x_total").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(j.get("srigl_y{layer=\"1\"}").unwrap().as_f64().unwrap(), 2.5);
+    }
+}

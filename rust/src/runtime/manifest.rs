@@ -105,6 +105,8 @@ pub struct ServeKnobs {
     /// Tensor-parallel shards per forward; `1` (default) = replicated
     /// workers (a persistent shard team is engaged when > 1).
     pub shards: usize,
+    /// Live-connection cap for the accept loop; `0` (default) = unlimited.
+    pub max_connections: usize,
 }
 
 impl Default for ServeKnobs {
@@ -116,6 +118,7 @@ impl Default for ServeKnobs {
             adaptive: true,
             max_batch: 8,
             shards: 1,
+            max_connections: 0,
         }
     }
 }
@@ -132,6 +135,9 @@ pub struct StackEntry {
     pub layers: Vec<StackLayerSpec>,
     /// Front-end defaults for this stack (absent section -> defaults).
     pub serve: ServeKnobs,
+    /// Optional metrics-endpoint bind address (`"serve": {"metrics": ...}`);
+    /// `serve-model --metrics` overrides.
+    pub metrics: Option<String>,
 }
 
 #[derive(Clone, Debug)]
@@ -225,7 +231,9 @@ fn parse_stack(name: &str, s: &Json) -> Result<StackEntry> {
         });
     }
     let mut serve = ServeKnobs::default();
+    let mut metrics = None;
     if let Some(k) = s.opt("serve") {
+        metrics = k.opt("metrics").map(|v| v.as_str().map(str::to_string)).transpose()?;
         serve = ServeKnobs {
             queue_capacity: k
                 .opt("queue_capacity")
@@ -249,6 +257,11 @@ fn parse_stack(name: &str, s: &Json) -> Result<StackEntry> {
                 .transpose()?
                 .unwrap_or(serve.max_batch),
             shards: k.opt("shards").map(|v| v.as_usize()).transpose()?.unwrap_or(serve.shards),
+            max_connections: k
+                .opt("max_connections")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(serve.max_connections),
         };
     }
     Ok(StackEntry {
@@ -257,6 +270,7 @@ fn parse_stack(name: &str, s: &Json) -> Result<StackEntry> {
         seed: s.opt("seed").map(|v| v.as_usize()).transpose()?.unwrap_or(0) as u64,
         layers,
         serve,
+        metrics,
     })
 }
 
@@ -326,6 +340,7 @@ mod tests {
         assert_eq!(e.layers[1].activation, "relu", "activation defaults to relu");
         assert_eq!(e.layers[2].activation, "identity");
         assert_eq!(e.serve, ServeKnobs::default(), "no serve section -> defaults");
+        assert_eq!(e.metrics, None, "no serve section -> no metrics endpoint");
     }
 
     #[test]
@@ -334,7 +349,8 @@ mod tests {
             "d_in": 16,
             "layers": [{"n": 8, "repr": "dense", "sparsity": 0.5}],
             "serve": {"queue_capacity": 64, "cache_capacity": 0, "egress_capacity": 16,
-                      "adaptive": false, "max_batch": 4, "shards": 4}
+                      "adaptive": false, "max_batch": 4, "shards": 4,
+                      "max_connections": 128, "metrics": "127.0.0.1:9900"}
         }"#;
         let e = parse_stack("s", &Json::parse(src).unwrap()).unwrap();
         assert_eq!(
@@ -345,9 +361,11 @@ mod tests {
                 egress_capacity: 16,
                 adaptive: false,
                 max_batch: 4,
-                shards: 4
+                shards: 4,
+                max_connections: 128
             }
         );
+        assert_eq!(e.metrics.as_deref(), Some("127.0.0.1:9900"));
     }
 
     #[test]
@@ -365,6 +383,8 @@ mod tests {
         assert_eq!(e.serve.egress_capacity, d.egress_capacity, "absent egress knob -> default");
         assert_eq!(e.serve.adaptive, d.adaptive);
         assert_eq!(e.serve.shards, 1, "absent shards knob means replicated");
+        assert_eq!(e.serve.max_connections, 0, "absent cap means unlimited");
+        assert_eq!(e.metrics, None);
     }
 
     #[test]

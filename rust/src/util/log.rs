@@ -1,0 +1,99 @@
+//! Minimal leveled stderr logger (zero dependencies).
+//!
+//! `SRIGL_LOG=warn|info|debug` selects the level once per process
+//! (default `info`); messages print as
+//! `[<unix-seconds>.<millis> LEVEL target] message`. Serving paths use
+//! this instead of bare `eprintln!` so operators can silence startup
+//! chatter (`SRIGL_LOG=warn`) without losing fault reports.
+
+use std::sync::OnceLock;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Severity, ordered so `Warn < Info < Debug` filters naturally.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Warn,
+    Info,
+    Debug,
+}
+
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+
+    /// Parse an `SRIGL_LOG` value; `None` for anything unrecognized (the
+    /// caller falls back to the default rather than erroring at runtime).
+    pub fn parse(v: &str) -> Option<Level> {
+        match v.trim().to_ascii_lowercase().as_str() {
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// The process log level: `SRIGL_LOG`, read once; default [`Level::Info`].
+pub fn level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        std::env::var("SRIGL_LOG").ok().and_then(|v| Level::parse(&v)).unwrap_or(Level::Info)
+    })
+}
+
+/// Whether a message at `l` would print — guard expensive formatting.
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Emit one timestamped line to stderr if `l` passes the filter.
+pub fn log(l: Level, target: &str, msg: &str) {
+    if !enabled(l) {
+        return;
+    }
+    let now = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    eprintln!("[{}.{:03} {:<5} {target}] {msg}", now.as_secs(), now.subsec_millis(), l.label());
+}
+
+/// Faults and degradations (always on).
+pub fn warn(target: &str, msg: &str) {
+    log(Level::Warn, target, msg);
+}
+
+/// Lifecycle events worth seeing by default.
+pub fn info(target: &str, msg: &str) {
+    log(Level::Info, target, msg);
+}
+
+/// Diagnostics, off by default.
+pub fn debug(target: &str, msg: &str) {
+    log(Level::Debug, target, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_known_levels_case_insensitively() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("WARNING"), Some(Level::Warn));
+        assert_eq!(Level::parse(" Info "), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("trace"), None);
+        assert_eq!(Level::parse(""), None);
+    }
+
+    #[test]
+    fn ordering_matches_filter_semantics() {
+        // enabled(l) means l <= level(): warn passes every filter, debug
+        // only the debug filter
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod log;
 pub mod lru;
 pub mod rng;
 pub mod threadpool;

@@ -88,7 +88,8 @@ fn socket_outputs_match_direct_forward_across_clients() {
     });
 
     let stats = handle.stop();
-    assert_eq!(stats.connections, 3);
+    assert_eq!(stats.connections_total, 3);
+    assert_eq!(stats.connections_active, 0, "all readers exited before the stats were read");
     assert_eq!(
         stats.served + stats.cache_hits,
         3 * 30,
@@ -348,7 +349,7 @@ fn socket_slow_client_blocks_only_its_own_connection() {
     drop(fast);
 
     let stats = handle.stop();
-    assert_eq!(stats.connections, 2);
+    assert_eq!(stats.connections_total, 2);
     assert_eq!(stats.rejected, 0, "the flood fits the ingress queue");
     assert_eq!(stats.served, n_slow + 20, "every request was computed — none stalled a worker");
     assert!(
@@ -539,9 +540,181 @@ fn socket_arena_wire_duel() {
             // adversarial payloads are unique: the result cache never hits
             assert_eq!(fe.get("cache_hits").unwrap().as_usize().unwrap(), 0);
             assert_eq!(fe.get("bad_requests").unwrap().as_usize().unwrap(), 0);
+            // the legacy key and its split successors agree
             assert_eq!(fe.get("connections").unwrap().as_usize().unwrap(), 3);
+            assert_eq!(fe.get("connections_total").unwrap().as_usize().unwrap(), 3);
+            assert_eq!(fe.get("connections_active").unwrap().as_usize().unwrap(), 0);
+            // every wire round persists a /metrics scrape consistent with
+            // the front-end counters (adversarial trace: no cache hits)
+            let m = round.get("metrics").unwrap();
+            assert_eq!(
+                m.get("srigl_requests_served_total").unwrap().as_f64().unwrap() as usize,
+                80,
+                "scraped served counter matches the round"
+            );
+            assert_eq!(m.get("srigl_connections_total").unwrap().as_f64().unwrap() as usize, 3);
         }
     }
+}
+
+/// The `/metrics` endpoint scrapes live while requests are in flight:
+/// counters are monotonic across scrapes, agree exactly with the answered
+/// request count at each quiescent point, and the final `FrontendStats`
+/// match the last scrape. Per-layer engine facts ride along.
+#[test]
+fn socket_metrics_endpoint_scrapes_live_and_matches_final_stats() {
+    use srigl::obs::{parse_exposition, scrape};
+
+    let model = test_model(Repr::Condensed);
+    let handle = frontend::spawn_with_metrics(
+        Arc::clone(&model),
+        "127.0.0.1:0",
+        &EngineBuilder::new()
+            .workers(2)
+            .adaptive(8)
+            .queue_capacity(256)
+            .cache_capacity(0) // every request computes: served is exact
+            .retry_after_ms(1),
+        Some("127.0.0.1:0"),
+    )
+    .unwrap();
+    let maddr = handle.metrics_addr().expect("metrics endpoint requested at spawn");
+
+    let mut client = Client::connect(handle.addr()).unwrap();
+    let mut rng = Rng::new(0xB0B);
+    let mut fire = |client: &mut Client, n: usize| {
+        for _ in 0..n {
+            let x: Vec<f32> = (0..D_IN).map(|_| rng.normal_f32()).collect();
+            client.infer_retrying(1, &x, 50).expect("infer");
+        }
+    };
+    fire(&mut client, 10);
+    let s1 = parse_exposition(&scrape(maddr).unwrap());
+    fire(&mut client, 15);
+    let text2 = scrape(maddr).unwrap();
+    let s2 = parse_exposition(&text2);
+
+    // the sync client has every answer before each scrape, so the served
+    // counter is exact (and monotonic across scrapes)
+    let served = |s: &srigl::util::json::Json| {
+        s.get("srigl_requests_served_total").unwrap().as_f64().unwrap() as usize
+    };
+    assert_eq!(served(&s1), 10);
+    assert_eq!(served(&s2), 25);
+    assert_eq!(
+        s2.get("srigl_connections_active").unwrap().as_f64().unwrap() as usize,
+        1,
+        "the client is still connected at scrape time"
+    );
+    // the stage=total histogram saw exactly the served requests
+    assert_eq!(
+        s2.get("srigl_stage_latency_us_count{stage=\"total\"}").unwrap().as_f64().unwrap()
+            as usize,
+        25
+    );
+    // one series from every exported counter family, plus engine facts
+    for needle in [
+        "srigl_forward_batches_total",
+        "srigl_cache_hits_total",
+        "srigl_requests_rejected_total",
+        "srigl_bad_requests_total",
+        "srigl_dropped_responses_total",
+        "srigl_connections_total",
+        "srigl_connections_rejected_total",
+        "srigl_forward_rows_min",
+        "srigl_forward_rows_max",
+        "srigl_engine_storage_bytes",
+    ] {
+        assert!(s2.get(needle).is_ok(), "{needle} missing from the exposition");
+    }
+    assert!(text2.contains("srigl_kernel_info{"), "kernel selection fact");
+    assert!(
+        text2.contains("srigl_layer_stored_weights{layer=\"0\",repr=\"condensed\"}"),
+        "per-layer facts"
+    );
+    assert!(text2.contains("srigl_layer_est_gflops{"), "per-layer throughput estimate");
+    assert!(
+        text2.contains("srigl_stage_latency_us_bucket{stage=\"forward\",le=\"+Inf\"}"),
+        "stage histogram exports cumulative buckets"
+    );
+
+    drop(client);
+    let stats = handle.stop();
+    assert_eq!(stats.served, 25, "final stats agree with the last scrape");
+    assert_eq!(stats.connections_total, 1);
+    assert_eq!(stats.connections_active, 0, "reader exit released the live-connection gauge");
+}
+
+/// With `max_connections: 1`, a second concurrent connection is refused at
+/// accept with a well-formed Busy frame (id 0 — no request was read) and
+/// then closed; once the first client hangs up, the slot frees and a new
+/// connection is admitted. Refusals are counted separately from admits.
+#[test]
+fn socket_connection_cap_refuses_then_readmits() {
+    let model = test_model(Repr::Condensed);
+    let handle = frontend::spawn(
+        Arc::clone(&model),
+        "127.0.0.1:0",
+        &EngineBuilder::new()
+            .workers(1)
+            .fixed_batch(4)
+            .queue_capacity(64)
+            .cache_capacity(0)
+            .retry_after_ms(9)
+            .max_connections(1),
+    )
+    .unwrap();
+    let addr = handle.addr();
+    let x = vec![0.5f32; D_IN];
+
+    // client A takes the only slot and is served normally
+    let mut a = Client::connect(addr).unwrap();
+    let got = a.infer_retrying(1, &x, 50).expect("admitted client served");
+    assert_bits_eq(&got, &model.forward_vec(&x, 1, 1), "client A");
+
+    // client B is over the cap: Busy with the configured hint, then EOF
+    let mut b = TcpStream::connect(addr).unwrap();
+    let resp = read_response(&mut b).unwrap().expect("refusal frame");
+    assert_eq!(resp.id, 0, "no request was read — the refusal uses the control id");
+    assert_eq!(resp.body, ResponseBody::Busy { retry_after_ms: 9 });
+    assert!(read_response(&mut b).unwrap().is_none(), "refused connection is closed");
+    drop(b);
+
+    // after A hangs up the slot frees; a retrying connect gets admitted
+    // (the reader notices EOF asynchronously, hence the retry loop)
+    drop(a);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let mut c = TcpStream::connect(addr).unwrap();
+        // the server may refuse-and-shutdown before this write lands
+        let _ = write_request(&mut c, &RequestFrame { id: 7, rows: 1, payload: x.clone() });
+        match read_response(&mut c) {
+            Ok(Some(resp)) if resp.id == 7 => {
+                match resp.body {
+                    ResponseBody::Output { rows, data } => {
+                        assert_eq!(rows, 1);
+                        assert_bits_eq(&data, &model.forward_vec(&x, 1, 1), "readmitted client");
+                    }
+                    other => panic!("expected output after readmission, got {other:?}"),
+                }
+                break;
+            }
+            _ => {
+                // still refused (Busy id 0, EOF, or broken pipe)
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "slot never freed after the first client hung up"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        }
+    }
+
+    let stats = handle.stop();
+    assert_eq!(stats.served, 2, "one request from A, one from the readmitted client");
+    assert_eq!(stats.connections_total, 2, "only A and the readmitted client were admitted");
+    assert!(stats.connections_rejected >= 1, "client B (at least) was refused");
+    assert_eq!(stats.bad_requests, 0);
 }
 
 /// Multi-row requests round-trip with row-major layout preserved.
