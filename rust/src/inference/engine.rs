@@ -30,13 +30,33 @@
 //! [`SparseModel`] and [`ShardedModel`] also implement [`Engine`]
 //! directly, so tests and harnesses can drive any execution path through
 //! one generic interface.
+//!
+//! ## Epochs — live model swap (RCU-style)
+//!
+//! The three long-lived engines ([`ReplicatedEngine`],
+//! [`ScopedShardedEngine`], [`PersistentShardedEngine`], and the
+//! [`SwappableEngine`] umbrella over them) do **not** hold their stack by
+//! value: they hold an [`EpochCell`] that publishes one immutable
+//! [`ModelEpoch`] at a time. Every workspace ([`EpochScratch`] /
+//! [`ShardedEpochScratch`]) carries the `Arc` of the stack it was built
+//! for, and `forward` computes with **the scratch's** stack — so a forward
+//! is atomic on its epoch *by construction*: a concurrent
+//! [`Engine::swap`] publishes a new epoch for future scratches while
+//! in-flight forwards keep the old stack alive through their `Arc`
+//! (classic read-copy-update). Callers opt in to new epochs at batch
+//! boundaries via [`Engine::ensure_current`], which rebuilds a stale
+//! scratch against the current epoch. Swaps must preserve the input
+//! width (connections validate request shape against it once) and must
+//! carry a strictly increasing epoch id (the result cache uses the id as
+//! its staleness generation — see `docs/RELOAD.md`).
 
-use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use super::model::{Scratch, SparseModel};
+use super::model::{ModelEpoch, Scratch, SparseModel};
 use super::server::Batching;
 use super::shard::{SharedBuf, ShardedModel, ShardedScratch};
 use super::LinearKernel;
@@ -78,6 +98,80 @@ pub trait Engine: Send + Sync {
 
     /// Bytes of model storage behind this engine (weights+indices+bias).
     fn storage_bytes(&self) -> usize;
+
+    /// The epoch id currently published. Immutable engines are forever at
+    /// epoch 0.
+    fn epoch(&self) -> u64 {
+        0
+    }
+
+    /// Atomically publish a new stack. In-flight forwards finish on the
+    /// epoch their scratch was built for; future
+    /// [`Engine::ensure_current`] calls pick up the new one. Returns the
+    /// published epoch id. The default (immutable engines) refuses.
+    ///
+    /// Contract enforced by swappable implementations: the new stack's
+    /// input width must equal the current one (connections validate
+    /// request shape against [`Engine::in_width`] once at accept), and
+    /// `epoch.id` must be strictly greater than the current id (the
+    /// result cache uses the id as its staleness generation).
+    fn swap(&self, epoch: ModelEpoch) -> Result<u64> {
+        let _ = epoch;
+        bail!("this engine does not support live model swap")
+    }
+
+    /// Rebuild `scratch` against the current epoch if it was built for an
+    /// older one, and return the epoch id the scratch is now pinned to —
+    /// the epoch the next [`Engine::forward`] through this scratch will
+    /// compute under, even if a swap lands in between. Immutable engines
+    /// never rebuild. Call this at batch boundaries, never mid-forward.
+    fn ensure_current(&self, scratch: &mut Self::Scratch, max_batch: usize) -> u64 {
+        let _ = (scratch, max_batch);
+        self.epoch()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EpochCell — the one-slot RCU publication point
+// ---------------------------------------------------------------------------
+
+/// One atomically published `(epoch id, Arc<stack>)` pair. Readers either
+/// take a consistent snapshot (`current`, for building scratches) or a
+/// lock-free id peek (`epoch`, for the per-request staleness checks on the
+/// serving hot path). `publish` enforces strictly increasing ids.
+struct EpochCell<T> {
+    cur: RwLock<(u64, Arc<T>)>,
+    /// Shadow of the published id so `epoch()` never touches the lock.
+    id: AtomicU64,
+}
+
+impl<T> EpochCell<T> {
+    fn new(id: u64, v: Arc<T>) -> EpochCell<T> {
+        EpochCell { cur: RwLock::new((id, Arc::clone(&v))), id: AtomicU64::new(id) }
+    }
+
+    fn epoch(&self) -> u64 {
+        self.id.load(Ordering::Acquire)
+    }
+
+    /// Consistent `(id, stack)` snapshot.
+    fn current(&self) -> (u64, Arc<T>) {
+        let g = self.cur.read().unwrap();
+        (g.0, Arc::clone(&g.1))
+    }
+
+    /// Publish `(id, v)`; fails without publishing unless `id` is
+    /// strictly greater than the current id (two racing swaps serialize
+    /// on the write lock and the loser errors out).
+    fn publish(&self, id: u64, v: Arc<T>) -> Result<()> {
+        let mut g = self.cur.write().unwrap();
+        if id <= g.0 {
+            bail!("epoch id {id} is not greater than the published epoch {}", g.0);
+        }
+        *g = (id, v);
+        self.id.store(id, Ordering::Release);
+        Ok(())
+    }
 }
 
 impl Engine for SparseModel {
@@ -146,48 +240,103 @@ impl Engine for ShardedModel {
 // ReplicatedEngine
 // ---------------------------------------------------------------------------
 
+/// Workspace for [`ReplicatedEngine`]: a plain [`Scratch`] pinned to the
+/// epoch it was sized for. The carried `Arc` both keeps the old stack
+/// alive while a forward drains on it and is the stack the forward runs —
+/// so a concurrent swap can never pair a new model with an old-sized
+/// buffer.
+pub struct EpochScratch {
+    epoch: u64,
+    model: Arc<SparseModel>,
+    inner: Scratch,
+}
+
+impl EpochScratch {
+    /// The epoch this workspace (and the next forward through it) is
+    /// pinned to.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
 /// The replicate-everything strategy: each serving worker owns a full
 /// [`Scratch`] and runs whole forwards on the shared model. Parallelism
-/// lives *across* requests.
+/// lives *across* requests. The model is epoch-published, so
+/// [`Engine::swap`] hot-swaps the stack under traffic.
 pub struct ReplicatedEngine {
-    model: Arc<SparseModel>,
+    cell: EpochCell<SparseModel>,
 }
 
 impl ReplicatedEngine {
     pub fn new(model: Arc<SparseModel>) -> ReplicatedEngine {
-        ReplicatedEngine { model }
+        ReplicatedEngine { cell: EpochCell::new(0, model) }
     }
 
-    pub fn model(&self) -> &Arc<SparseModel> {
-        &self.model
+    /// The currently published stack.
+    pub fn model(&self) -> Arc<SparseModel> {
+        self.cell.current().1
     }
 }
 
 impl Engine for ReplicatedEngine {
-    type Scratch = Scratch;
+    type Scratch = EpochScratch;
 
-    fn scratch(&self, max_batch: usize) -> Scratch {
-        self.model.make_scratch(max_batch)
+    fn scratch(&self, max_batch: usize) -> EpochScratch {
+        let (epoch, model) = self.cell.current();
+        EpochScratch { epoch, inner: model.make_scratch(max_batch), model }
     }
 
-    fn forward<'s>(&self, x: &[f32], batch: usize, s: &'s mut Scratch, threads: usize) -> &'s [f32] {
-        self.model.forward(x, batch, s, threads)
+    fn forward<'s>(
+        &self,
+        x: &[f32],
+        batch: usize,
+        s: &'s mut EpochScratch,
+        threads: usize,
+    ) -> &'s [f32] {
+        // The scratch's stack, not the cell's: atomic on its epoch even
+        // if a swap lands mid-forward.
+        s.model.forward(x, batch, &mut s.inner, threads)
     }
 
     fn in_width(&self) -> usize {
-        self.model.in_width()
+        self.cell.current().1.in_width()
     }
 
     fn out_width(&self) -> usize {
-        self.model.out_width()
+        self.cell.current().1.out_width()
     }
 
     fn describe(&self) -> String {
-        self.model.describe()
+        self.cell.current().1.describe()
     }
 
     fn storage_bytes(&self) -> usize {
-        self.model.storage_bytes()
+        self.cell.current().1.storage_bytes()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.cell.epoch()
+    }
+
+    fn swap(&self, epoch: ModelEpoch) -> Result<u64> {
+        let cur = self.cell.current().1;
+        if epoch.model.in_width() != cur.in_width() {
+            bail!(
+                "swap changes input width {} -> {}; connections validate shape against the \
+                 accept-time width, so this must be a restart",
+                cur.in_width(),
+                epoch.model.in_width()
+            );
+        }
+        self.cell.publish(epoch.id, epoch.model)?;
+        Ok(epoch.id)
+    }
+
+    fn ensure_current(&self, scratch: &mut EpochScratch, max_batch: usize) -> u64 {
+        if scratch.epoch != self.cell.epoch() {
+            *scratch = self.scratch(max_batch);
+        }
+        scratch.epoch
     }
 }
 
@@ -245,6 +394,133 @@ impl Engine for KernelEngine<'_> {
 }
 
 // ---------------------------------------------------------------------------
+// ScopedShardedEngine — swappable scoped-spawn sharding
+// ---------------------------------------------------------------------------
+
+/// Workspace for the sharded swappable engines ([`ScopedShardedEngine`]
+/// and [`PersistentShardedEngine`]): a [`ShardedScratch`] pinned to the
+/// epoch's sharded stack. Same atomicity argument as [`EpochScratch`];
+/// additionally the persistent team's raw job pointers point into the
+/// `Arc` held here, which is what keeps them valid across a swap.
+pub struct ShardedEpochScratch {
+    epoch: u64,
+    model: Arc<ShardedModel>,
+    inner: ShardedScratch,
+}
+
+impl ShardedEpochScratch {
+    /// The epoch this workspace (and the next forward through it) is
+    /// pinned to.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+/// Tensor-parallel sharding via the scoped-spawn reference forward
+/// ([`ShardedModel::forward`]), behind an epoch cell so the stack can be
+/// swapped under traffic. A swap re-plans: the incoming [`SparseModel`]
+/// is re-cut into the same number of shards with a fresh
+/// weight-balanced [`super::shard::ShardPlan`].
+///
+/// This exists mainly as the executable specification for swap semantics
+/// — the epoch-conformance suite pins [`PersistentShardedEngine`]
+/// bit-for-bit against it under concurrent swaps.
+pub struct ScopedShardedEngine {
+    cell: EpochCell<ShardedModel>,
+    shards: usize,
+}
+
+impl ScopedShardedEngine {
+    /// Shard `model` with a stored-weight-balanced plan. Fails like
+    /// [`ShardedModel::from_model`].
+    pub fn from_model(model: &SparseModel, shards: usize) -> Result<ScopedShardedEngine> {
+        let sharded = Arc::new(ShardedModel::from_model(model, shards)?);
+        Ok(ScopedShardedEngine { cell: EpochCell::new(0, sharded), shards })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+}
+
+/// Shared swap path for the two sharded engines: re-plan the incoming
+/// stack into `shards` cuts, refuse input-width changes, publish.
+fn swap_sharded(
+    cell: &EpochCell<ShardedModel>,
+    shards: usize,
+    epoch: ModelEpoch,
+) -> Result<u64> {
+    let cur = cell.current().1;
+    if epoch.model.in_width() != cur.in_width() {
+        bail!(
+            "swap changes input width {} -> {}; connections validate shape against the \
+             accept-time width, so this must be a restart",
+            cur.in_width(),
+            epoch.model.in_width()
+        );
+    }
+    // Re-plan first: a stack too narrow for the shard count must leave
+    // the old epoch serving.
+    let sharded = Arc::new(ShardedModel::from_model(&epoch.model, shards)?);
+    crate::util::log::info(
+        "engine",
+        &format!("epoch {}: re-planned {}", epoch.id, sharded.plan().summary()),
+    );
+    cell.publish(epoch.id, sharded)?;
+    Ok(epoch.id)
+}
+
+impl Engine for ScopedShardedEngine {
+    type Scratch = ShardedEpochScratch;
+
+    fn scratch(&self, max_batch: usize) -> ShardedEpochScratch {
+        let (epoch, model) = self.cell.current();
+        ShardedEpochScratch { epoch, inner: model.make_scratch(max_batch), model }
+    }
+
+    fn forward<'s>(
+        &self,
+        x: &[f32],
+        batch: usize,
+        s: &'s mut ShardedEpochScratch,
+        threads: usize,
+    ) -> &'s [f32] {
+        s.model.forward(x, batch, &mut s.inner, threads)
+    }
+
+    fn in_width(&self) -> usize {
+        self.cell.current().1.in_width()
+    }
+
+    fn out_width(&self) -> usize {
+        self.cell.current().1.out_width()
+    }
+
+    fn describe(&self) -> String {
+        format!("{} (scoped spawn, swappable)", self.cell.current().1.describe())
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.cell.current().1.storage_bytes()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.cell.epoch()
+    }
+
+    fn swap(&self, epoch: ModelEpoch) -> Result<u64> {
+        swap_sharded(&self.cell, self.shards, epoch)
+    }
+
+    fn ensure_current(&self, scratch: &mut ShardedEpochScratch, max_batch: usize) -> u64 {
+        if scratch.epoch != self.cell.epoch() {
+            *scratch = self.scratch(max_batch);
+        }
+        scratch.epoch
+    }
+}
+
+// ---------------------------------------------------------------------------
 // PersistentShardedEngine — the long-lived shard team
 // ---------------------------------------------------------------------------
 
@@ -253,6 +529,11 @@ impl Engine for KernelEngine<'_> {
 /// scratch borrowed (and the team's job mutex held) until every shard has
 /// arrived at the completion latch.
 struct ForwardJob {
+    /// The epoch's sharded stack this job computes with — every job is
+    /// re-stamped with the submitting scratch's model, so the team
+    /// threads never hold a stack themselves and a swap takes effect at
+    /// the next job boundary with zero team coordination.
+    model: *const ShardedModel,
     x: *const f32,
     x_len: usize,
     batch: usize,
@@ -266,7 +547,9 @@ struct ForwardJob {
 // SAFETY: the pointers are only dereferenced while the submitting
 // `forward` call blocks on the completion latch (see above), so the
 // pointed-to data outlives every access and `stage` is touched by exactly
-// one shard thread.
+// one shard thread. `model` points into the `Arc<ShardedModel>` held by
+// the submitting scratch, which the blocked `forward` keeps borrowed for
+// the same window.
 unsafe impl Send for ForwardJob {}
 
 enum ShardJob {
@@ -364,8 +647,16 @@ struct TeamShared {
 /// batching/packing parallelism, not forward parallelism. Stop/start
 /// lifecycle: the team parks when idle and is torn down (Stop message per
 /// mailbox + join) when the engine drops.
+///
+/// The stack is epoch-published: the team threads hold **no** model —
+/// every job carries a pointer to the submitting scratch's epoch stack
+/// (see [`ForwardJob::model`]), so a swap never touches the team. An
+/// in-flight job drains on its old epoch behind the completion latch; the
+/// team threads, barrier, and mailboxes all survive the swap (the
+/// thread-constancy conformance test still holds across swaps).
 pub struct PersistentShardedEngine {
-    model: Arc<ShardedModel>,
+    cell: EpochCell<ShardedModel>,
+    shards: usize,
     shared: Arc<TeamShared>,
     team: Vec<JoinHandle<()>>,
     /// Serializes forwards: exactly one job owns the team at a time.
@@ -392,24 +683,30 @@ impl PersistentShardedEngine {
         });
         let mut team = Vec::with_capacity(shards);
         for si in 0..shards {
-            let model = Arc::clone(&model);
             let shared = Arc::clone(&shared);
             let handle = std::thread::Builder::new()
                 .name(format!("srigl-shard-{si}"))
-                .spawn(move || shard_thread(&model, &shared, si))
+                .spawn(move || shard_thread(&shared, si))
                 .map_err(|e| anyhow::anyhow!("spawning shard thread {si}: {e}"))?;
             team.push(handle);
         }
-        Ok(PersistentShardedEngine { model, shared, team, job: Mutex::new(()) })
+        Ok(PersistentShardedEngine {
+            cell: EpochCell::new(0, model),
+            shards,
+            shared,
+            team,
+            job: Mutex::new(()),
+        })
     }
 
     pub fn shards(&self) -> usize {
-        self.model.shards()
+        self.shards
     }
 
-    /// The scoped-spawn reference model this team executes.
-    pub fn sharded(&self) -> &ShardedModel {
-        &self.model
+    /// The currently published scoped-spawn reference model this team
+    /// executes.
+    pub fn sharded(&self) -> Arc<ShardedModel> {
+        self.cell.current().1
     }
 
     /// Number of long-lived team threads (== shards for the team's whole
@@ -451,7 +748,7 @@ impl Drop for AbortOnPanic {
     }
 }
 
-fn shard_thread(model: &ShardedModel, shared: &TeamShared, si: usize) {
+fn shard_thread(shared: &TeamShared, si: usize) {
     loop {
         match shared.mailboxes[si].take() {
             ShardJob::Stop => return,
@@ -460,9 +757,11 @@ fn shard_thread(model: &ShardedModel, shared: &TeamShared, si: usize) {
                 *shared.last_tid[si].lock().unwrap() = Some(std::thread::current().id());
                 // SAFETY: the coordinator blocks on the completion latch
                 // (holding the job mutex) until this shard arrives, so the
-                // input, the ping-pong buffers, and this shard's private
-                // staging slice all outlive the accesses below; `stage` is
-                // referenced by this thread only.
+                // epoch's model (kept alive by the submitting scratch's
+                // `Arc`), the input, the ping-pong buffers, and this
+                // shard's private staging slice all outlive the accesses
+                // below; `stage` is referenced by this thread only.
+                let model = unsafe { &*job.model };
                 let x = unsafe { std::slice::from_raw_parts(job.x, job.x_len) };
                 let stage = unsafe { std::slice::from_raw_parts_mut(job.stage, job.stage_len) };
                 let (buf_a, buf_b) = unsafe { (&*job.buf_a, &*job.buf_b) };
@@ -474,40 +773,49 @@ fn shard_thread(model: &ShardedModel, shared: &TeamShared, si: usize) {
 }
 
 impl Engine for PersistentShardedEngine {
-    type Scratch = ShardedScratch;
+    type Scratch = ShardedEpochScratch;
 
-    fn scratch(&self, max_batch: usize) -> ShardedScratch {
-        self.model.make_scratch(max_batch)
+    fn scratch(&self, max_batch: usize) -> ShardedEpochScratch {
+        let (epoch, model) = self.cell.current();
+        ShardedEpochScratch { epoch, inner: model.make_scratch(max_batch), model }
     }
 
     fn forward<'s>(
         &self,
         x: &[f32],
         batch: usize,
-        s: &'s mut ShardedScratch,
+        s: &'s mut ShardedEpochScratch,
         threads: usize,
     ) -> &'s [f32] {
+        // The scratch's epoch stack, not the cell's: the job is atomic on
+        // the epoch the scratch was built for, and the `Arc` held by the
+        // scratch keeps that stack alive while the team drains it even if
+        // a swap publishes a successor mid-job.
+        let ShardedEpochScratch { model, inner, .. } = s;
         assert!(batch >= 1, "batch must be >= 1");
         assert!(
-            batch <= s.max_batch(),
+            batch <= inner.max_batch(),
             "batch {batch} exceeds scratch capacity {}",
-            s.max_batch()
+            inner.max_batch()
         );
-        assert_eq!(x.len(), batch * self.model.in_width(), "input size mismatch");
-        let shards = self.model.shards();
+        assert_eq!(x.len(), batch * model.in_width(), "input size mismatch");
+        let shards = model.shards();
+        assert_eq!(shards, self.team.len(), "epoch re-plan must preserve the shard count");
         // Validate the scratch COORDINATOR-SIDE before any job is posted:
         // a too-small workspace (built from a different model) must panic
         // here, not inside a team thread where unwinding would wedge the
         // barrier and the latch.
-        self.model.assert_scratch_fits(s, batch);
+        model.assert_scratch_fits(inner, batch);
         // One job owns the team at a time (concurrent pool workers queue
         // here); the guard is held until every shard reports done, which
         // is what keeps the raw pointers below valid.
         let _job = self.job.lock().unwrap();
-        let buf_a: *const SharedBuf = &s.a;
-        let buf_b: *const SharedBuf = &s.b;
-        for (si, stage) in s.stage.iter_mut().enumerate() {
+        let model_ptr: *const ShardedModel = Arc::as_ptr(model);
+        let buf_a: *const SharedBuf = &inner.a;
+        let buf_b: *const SharedBuf = &inner.b;
+        for (si, stage) in inner.stage.iter_mut().enumerate() {
             self.shared.mailboxes[si].put(ShardJob::Forward(ForwardJob {
+                model: model_ptr,
                 x: x.as_ptr(),
                 x_len: x.len(),
                 batch,
@@ -521,23 +829,38 @@ impl Engine for PersistentShardedEngine {
         self.shared.done.wait_and_reset(shards);
         // SAFETY: every shard arrived at the latch — no write is in
         // flight, and we hold &mut scratch.
-        unsafe { self.model.final_buf(s).read(batch * self.model.out_width()) }
+        unsafe { model.final_buf(inner).read(batch * model.out_width()) }
     }
 
     fn in_width(&self) -> usize {
-        self.model.in_width()
+        self.cell.current().1.in_width()
     }
 
     fn out_width(&self) -> usize {
-        self.model.out_width()
+        self.cell.current().1.out_width()
     }
 
     fn describe(&self) -> String {
-        format!("{} (persistent team)", self.model.describe())
+        format!("{} (persistent team)", self.cell.current().1.describe())
     }
 
     fn storage_bytes(&self) -> usize {
-        self.model.storage_bytes()
+        self.cell.current().1.storage_bytes()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.cell.epoch()
+    }
+
+    fn swap(&self, epoch: ModelEpoch) -> Result<u64> {
+        swap_sharded(&self.cell, self.shards, epoch)
+    }
+
+    fn ensure_current(&self, scratch: &mut ShardedEpochScratch, max_batch: usize) -> u64 {
+        if scratch.epoch != self.cell.epoch() {
+            *scratch = self.scratch(max_batch);
+        }
+        scratch.epoch
     }
 }
 
@@ -549,6 +872,136 @@ impl Drop for PersistentShardedEngine {
         }
         for handle in self.team.drain(..) {
             let _ = handle.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SwappableEngine — one umbrella over every hot-swappable strategy
+// ---------------------------------------------------------------------------
+
+/// The serving front door for live-reloadable deployments: one concrete
+/// type over every swappable strategy, so `serve-model --reload`, the
+/// SIGHUP watcher, and `srigl train --serve` all hold an
+/// `Arc<SwappableEngine>` and call [`Engine::swap`] without caring which
+/// execution strategy is underneath. Built by
+/// [`EngineBuilder::build_swappable`].
+pub enum SwappableEngine {
+    Replicated(ReplicatedEngine),
+    Scoped(ScopedShardedEngine),
+    Persistent(PersistentShardedEngine),
+}
+
+/// Workspace for [`SwappableEngine`] — mirrors the engine variant. A
+/// scratch only ever returns to the engine that built it (workers own
+/// their scratch), so a variant mismatch is a logic bug and panics.
+pub enum SwappableScratch {
+    Replicated(EpochScratch),
+    Sharded(ShardedEpochScratch),
+}
+
+impl SwappableScratch {
+    /// The epoch this workspace is pinned to.
+    pub fn epoch(&self) -> u64 {
+        match self {
+            SwappableScratch::Replicated(s) => s.epoch(),
+            SwappableScratch::Sharded(s) => s.epoch(),
+        }
+    }
+}
+
+impl Engine for SwappableEngine {
+    type Scratch = SwappableScratch;
+
+    fn scratch(&self, max_batch: usize) -> SwappableScratch {
+        match self {
+            SwappableEngine::Replicated(e) => SwappableScratch::Replicated(e.scratch(max_batch)),
+            SwappableEngine::Scoped(e) => SwappableScratch::Sharded(e.scratch(max_batch)),
+            SwappableEngine::Persistent(e) => SwappableScratch::Sharded(e.scratch(max_batch)),
+        }
+    }
+
+    fn forward<'s>(
+        &self,
+        x: &[f32],
+        batch: usize,
+        s: &'s mut SwappableScratch,
+        threads: usize,
+    ) -> &'s [f32] {
+        match (self, s) {
+            (SwappableEngine::Replicated(e), SwappableScratch::Replicated(s)) => {
+                e.forward(x, batch, s, threads)
+            }
+            (SwappableEngine::Scoped(e), SwappableScratch::Sharded(s)) => {
+                e.forward(x, batch, s, threads)
+            }
+            (SwappableEngine::Persistent(e), SwappableScratch::Sharded(s)) => {
+                e.forward(x, batch, s, threads)
+            }
+            _ => panic!("SwappableScratch does not match its SwappableEngine variant"),
+        }
+    }
+
+    fn in_width(&self) -> usize {
+        match self {
+            SwappableEngine::Replicated(e) => e.in_width(),
+            SwappableEngine::Scoped(e) => e.in_width(),
+            SwappableEngine::Persistent(e) => e.in_width(),
+        }
+    }
+
+    fn out_width(&self) -> usize {
+        match self {
+            SwappableEngine::Replicated(e) => e.out_width(),
+            SwappableEngine::Scoped(e) => e.out_width(),
+            SwappableEngine::Persistent(e) => e.out_width(),
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            SwappableEngine::Replicated(e) => e.describe(),
+            SwappableEngine::Scoped(e) => e.describe(),
+            SwappableEngine::Persistent(e) => e.describe(),
+        }
+    }
+
+    fn storage_bytes(&self) -> usize {
+        match self {
+            SwappableEngine::Replicated(e) => e.storage_bytes(),
+            SwappableEngine::Scoped(e) => e.storage_bytes(),
+            SwappableEngine::Persistent(e) => e.storage_bytes(),
+        }
+    }
+
+    fn epoch(&self) -> u64 {
+        match self {
+            SwappableEngine::Replicated(e) => e.epoch(),
+            SwappableEngine::Scoped(e) => e.epoch(),
+            SwappableEngine::Persistent(e) => e.epoch(),
+        }
+    }
+
+    fn swap(&self, epoch: ModelEpoch) -> Result<u64> {
+        match self {
+            SwappableEngine::Replicated(e) => e.swap(epoch),
+            SwappableEngine::Scoped(e) => e.swap(epoch),
+            SwappableEngine::Persistent(e) => e.swap(epoch),
+        }
+    }
+
+    fn ensure_current(&self, scratch: &mut SwappableScratch, max_batch: usize) -> u64 {
+        match (self, scratch) {
+            (SwappableEngine::Replicated(e), SwappableScratch::Replicated(s)) => {
+                e.ensure_current(s, max_batch)
+            }
+            (SwappableEngine::Scoped(e), SwappableScratch::Sharded(s)) => {
+                e.ensure_current(s, max_batch)
+            }
+            (SwappableEngine::Persistent(e), SwappableScratch::Sharded(s)) => {
+                e.ensure_current(s, max_batch)
+            }
+            _ => panic!("SwappableScratch does not match its SwappableEngine variant"),
         }
     }
 }
@@ -724,6 +1177,21 @@ impl EngineBuilder {
     pub fn build_persistent_sharded(&self, model: &SparseModel) -> Result<PersistentShardedEngine> {
         PersistentShardedEngine::from_model(model, self.shards.max(1))
     }
+
+    /// Build the hot-swappable umbrella engine: the persistent shard team
+    /// when `shards > 1`, the replicated engine otherwise — the same
+    /// strategy selection as the immutable build paths, behind one type
+    /// that supports [`Engine::swap`].
+    pub fn build_swappable(&self, model: Arc<SparseModel>) -> Result<SwappableEngine> {
+        if self.is_sharded() {
+            Ok(SwappableEngine::Persistent(PersistentShardedEngine::from_model(
+                &model,
+                self.shards,
+            )?))
+        } else {
+            Ok(SwappableEngine::Replicated(ReplicatedEngine::new(model)))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -733,7 +1201,7 @@ mod tests {
     use crate::inference::LayerBundle;
     use crate::util::rng::Rng;
 
-    fn model3(repr: Repr) -> SparseModel {
+    fn model3_seed(repr: Repr, seed: u64) -> SparseModel {
         let spec = |n, act| LayerSpec {
             n,
             repr,
@@ -748,9 +1216,13 @@ mod tests {
                 spec(32, Activation::Relu),
                 spec(16, Activation::Identity),
             ],
-            11,
+            seed,
         )
         .unwrap()
+    }
+
+    fn model3(repr: Repr) -> SparseModel {
+        model3_seed(repr, 11)
     }
 
     fn run<E: Engine>(e: &E, x: &[f32], batch: usize) -> Vec<f32> {
@@ -894,6 +1366,114 @@ mod tests {
         assert_eq!(b.retry_after_ms, 9);
         assert_eq!(b.max_connections, 5);
         assert_eq!(EngineBuilder::new().max_connections, 0, "default: unlimited");
+    }
+
+    #[test]
+    fn swap_publishes_new_epoch_and_stale_scratch_stays_atomic() {
+        let m0 = Arc::new(model3_seed(Repr::Condensed, 11));
+        let m1 = Arc::new(model3_seed(Repr::Condensed, 23));
+        let engine = ReplicatedEngine::new(Arc::clone(&m0));
+        assert_eq!(engine.epoch(), 0);
+        let mut s = engine.scratch(2);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..2 * 64).map(|_| rng.normal_f32()).collect();
+
+        assert_eq!(engine.swap(ModelEpoch::new(1, Arc::clone(&m1))).unwrap(), 1);
+        assert_eq!(engine.epoch(), 1);
+        // The stale scratch keeps computing on its pinned epoch...
+        let got_old = engine.forward(&x, 2, &mut s, 1).to_vec();
+        assert_bits_eq(&got_old, &m0.forward_vec(&x, 2, 1), "stale scratch = epoch 0");
+        assert_eq!(s.epoch(), 0);
+        // ...until ensure_current rebuilds it at a batch boundary.
+        assert_eq!(engine.ensure_current(&mut s, 2), 1);
+        assert_eq!(s.epoch(), 1);
+        let got_new = engine.forward(&x, 2, &mut s, 1).to_vec();
+        assert_bits_eq(&got_new, &m1.forward_vec(&x, 2, 1), "rebuilt scratch = epoch 1");
+    }
+
+    #[test]
+    fn swap_rejects_width_change_and_stale_ids() {
+        let m = Arc::new(model3(Repr::Condensed));
+        let engine = ReplicatedEngine::new(Arc::clone(&m));
+        // non-monotonic id
+        assert!(engine.swap(ModelEpoch::new(0, Arc::clone(&m))).is_err());
+        // input-width change
+        let narrow = Arc::new(
+            SparseModel::synth(
+                32,
+                &[LayerSpec {
+                    n: 16,
+                    repr: Repr::Condensed,
+                    sparsity: 0.9,
+                    ablated_frac: 0.0,
+                    activation: Activation::Identity,
+                }],
+                5,
+            )
+            .unwrap(),
+        );
+        assert!(engine.swap(ModelEpoch::new(1, narrow)).is_err());
+        assert_eq!(engine.epoch(), 0, "failed swaps must not publish");
+        // immutable engines refuse outright
+        assert!(m.swap(ModelEpoch::new(1, Arc::clone(&m))).is_err());
+    }
+
+    #[test]
+    fn persistent_team_swaps_without_respawning_threads() {
+        let m0 = model3_seed(Repr::Condensed, 11);
+        let m1 = Arc::new(model3_seed(Repr::Condensed, 23));
+        let team = PersistentShardedEngine::from_model(&m0, 2).unwrap();
+        let mut s = team.scratch(4);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..4 * 64).map(|_| rng.normal_f32()).collect();
+        let _ = team.forward(&x, 4, &mut s, 1);
+        let tids_before = team.last_shard_threads();
+
+        assert_eq!(team.swap(ModelEpoch::new(1, Arc::clone(&m1))).unwrap(), 1);
+        assert_eq!(team.ensure_current(&mut s, 4), 1);
+        let got = team.forward(&x, 4, &mut s, 1).to_vec();
+        assert_bits_eq(&got, &m1.forward_vec(&x, 4, 1), "post-swap team = new stack");
+        assert_eq!(team.last_shard_threads(), tids_before, "swap must not respawn the team");
+        assert_eq!(team.team_size(), 2);
+        // a stack too narrow for the shard count leaves the old epoch up
+        let narrow = Arc::new(
+            SparseModel::synth(
+                64,
+                &[LayerSpec {
+                    n: 1,
+                    repr: Repr::Condensed,
+                    sparsity: 0.5,
+                    ablated_frac: 0.0,
+                    activation: Activation::Identity,
+                }],
+                5,
+            )
+            .unwrap(),
+        );
+        assert!(team.swap(ModelEpoch::new(2, narrow)).is_err());
+        assert_eq!(team.epoch(), 1);
+    }
+
+    #[test]
+    fn swappable_umbrella_dispatches_and_swaps() {
+        let m0 = Arc::new(model3_seed(Repr::Condensed, 11));
+        let m1 = Arc::new(model3_seed(Repr::Condensed, 23));
+        let mut rng = Rng::new(8);
+        let x: Vec<f32> = (0..2 * 64).map(|_| rng.normal_f32()).collect();
+        for builder in [EngineBuilder::new(), EngineBuilder::new().shards(2)] {
+            let e = builder.build_swappable(Arc::clone(&m0)).unwrap();
+            assert_bits_eq(&run(&e, &x, 2), &m0.forward_vec(&x, 2, 1), "epoch 0");
+            assert_eq!(e.swap(ModelEpoch::new(1, Arc::clone(&m1))).unwrap(), 1);
+            let mut s = e.scratch(2);
+            assert_eq!(s.epoch(), 1);
+            let got = e.forward(&x, 2, &mut s, 1).to_vec();
+            assert_bits_eq(&got, &m1.forward_vec(&x, 2, 1), "epoch 1");
+        }
+        let scoped = ScopedShardedEngine::from_model(&m0, 2).unwrap();
+        assert_eq!(scoped.shards(), 2);
+        assert_bits_eq(&run(&scoped, &x, 2), &m0.forward_vec(&x, 2, 1), "scoped epoch 0");
+        assert_eq!(scoped.swap(ModelEpoch::new(1, Arc::clone(&m1))).unwrap(), 1);
+        assert_bits_eq(&run(&scoped, &x, 2), &m1.forward_vec(&x, 2, 1), "scoped epoch 1");
     }
 
     #[test]

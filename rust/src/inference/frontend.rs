@@ -40,6 +40,13 @@
 //! The front-end is generic over [`Engine`], so each worker's scratch has
 //! exactly the engine's associated type — the old `ServeEngine` /
 //! `EngineScratch` runtime mismatch panic is now unrepresentable.
+//!
+//! **Live model swap** ([`spawn_swappable`]): the engine publishes
+//! immutable epochs; workers pin an epoch per batch
+//! (`Engine::ensure_current`), cache entries carry the epoch they were
+//! computed on, and a `reload` wire control frame / `SIGHUP` /
+//! [`FrontendHandle::publish_model`] moves traffic to a new stack with
+//! zero dropped requests. See `docs/RELOAD.md`.
 
 use std::collections::HashMap;
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -48,12 +55,16 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use super::engine::{Engine, EngineBuilder};
+use super::engine::{Engine, EngineBuilder, SwappableEngine};
+use super::model::ModelEpoch;
 use super::server::{AdaptiveBatcher, Batching, LatencyStats, WorkerStats};
 use super::SparseModel;
-use crate::net::{fnv1a_f32, read_request, write_response, ResponseBody, ResponseFrame};
+use crate::net::{
+    fnv1a_f32, read_request, write_response, Incoming, ResponseBody, ResponseFrame,
+    CONTROL_OP_RELOAD,
+};
 use crate::obs::{self, Counter, Gauge, Histogram, MetricsServer, Registry};
 use crate::util::lru::LruCache;
 use crate::util::threadpool::{Injector, QueueFull};
@@ -161,10 +172,18 @@ struct Egress {
     cv: Condvar,
     capacity: usize,
     retry_after_ms: u32,
+    /// Optional live depth gauge (`srigl_egress_depth{conn=...}`),
+    /// updated on every push/pop so a scrape shows which connection is
+    /// reading slower than it submits.
+    depth: Option<Arc<Gauge>>,
 }
 
 impl Egress {
     fn new(capacity: usize, retry_after_ms: u32) -> Egress {
+        Egress::with_gauge(capacity, retry_after_ms, None)
+    }
+
+    fn with_gauge(capacity: usize, retry_after_ms: u32, depth: Option<Arc<Gauge>>) -> Egress {
         Egress {
             inner: Mutex::new(EgressInner {
                 q: std::collections::VecDeque::new(),
@@ -175,6 +194,13 @@ impl Egress {
             cv: Condvar::new(),
             capacity: capacity.max(1),
             retry_after_ms,
+            depth,
+        }
+    }
+
+    fn note_depth(&self, n: usize) {
+        if let Some(g) = &self.depth {
+            g.set(n as u64);
         }
     }
 
@@ -192,7 +218,9 @@ impl Egress {
         }
         if g.q.len() < self.capacity {
             g.q.push_back((frame, now));
+            let n = g.q.len();
             drop(g);
+            self.note_depth(n);
             self.cv.notify_all();
             return SendOutcome::Queued;
         }
@@ -213,7 +241,9 @@ impl Egress {
                     SendOutcome::Queued
                 }
             };
+            let n = g.q.len();
             drop(g);
+            self.note_depth(n);
             self.cv.notify_all();
             return outcome;
         }
@@ -264,6 +294,9 @@ impl Egress {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(f) = g.q.pop_front() {
+                let n = g.q.len();
+                drop(g);
+                self.note_depth(n);
                 return Some(f);
             }
             if g.closed {
@@ -275,7 +308,14 @@ impl Egress {
 
     /// Non-blocking pop (writer batching between flushes).
     fn try_recv(&self) -> Option<(ResponseFrame, Instant)> {
-        self.inner.lock().unwrap().q.pop_front()
+        let mut g = self.inner.lock().unwrap();
+        let f = g.q.pop_front();
+        if f.is_some() {
+            let n = g.q.len();
+            drop(g);
+            self.note_depth(n);
+        }
+        f
     }
 }
 
@@ -341,6 +381,10 @@ struct FrontendMetrics {
     connections_rejected: Arc<Counter>,
     forward_rows_min: Arc<Gauge>,
     forward_rows_max: Arc<Gauge>,
+    /// Jobs waiting in the shared ingress queue, sampled after every
+    /// reader push and worker pop — a live scrape shows the backlog the
+    /// adaptive batcher is reacting to.
+    queue_depth: Arc<Gauge>,
     /// Frame-parsed -> handed off (cache answer or queue push). One
     /// shared instance: readers come and go with connections, so
     /// per-reader registration would grow the registry unboundedly.
@@ -397,6 +441,10 @@ impl FrontendMetrics {
                 "srigl_forward_rows_max",
                 "Largest packed forward (rows) any worker ran.",
             ),
+            queue_depth: r.gauge(
+                "srigl_queue_depth",
+                "Jobs waiting in the shared ingress queue (sampled at reader push / worker pop).",
+            ),
             ingress: r.histogram_with(STAGE_FAMILY, STAGE_HELP, &[("stage", "ingress")]),
             egress_wait: r.histogram_with(STAGE_FAMILY, STAGE_HELP, &[("stage", "egress_wait")]),
         }
@@ -429,11 +477,38 @@ impl StageHists {
     }
 }
 
+/// Publish hook installed by [`spawn_swappable`]: hand it a model and it
+/// swaps the engine to the next epoch, bumps the epoch gauge, and (when a
+/// metrics endpoint is live) republishes the per-layer fact gauges.
+/// `Arc` rather than `Box` so the reload hook can compose with it.
+pub type PublishFn = Arc<dyn Fn(Arc<SparseModel>) -> Result<u64> + Send + Sync>;
+
+/// Reload hook: re-read the model from its configured source (manifest
+/// dir, synth spec, ...) and publish it. Driven by the wire control frame
+/// and by `FrontendHandle::reload_now` (the SIGHUP path).
+type ReloadFn = Arc<dyn Fn() -> Result<u64> + Send + Sync>;
+
+/// Where a reloadable front-end re-reads its model from
+/// (`spawn_swappable`'s `source`); composed with the publish hook to form
+/// the reload hook.
+pub type ReloadSource = Box<dyn Fn() -> Result<Arc<SparseModel>> + Send + Sync>;
+
+/// Swap hooks threaded into the control plane. Empty for the classic
+/// immutable spawns — the serve path only pays for what it uses.
+#[derive(Default)]
+struct Hooks {
+    publish: Option<PublishFn>,
+    reload: Option<ReloadFn>,
+}
+
 /// Engine-independent control plane: everything [`FrontendHandle`] and the
 /// teardown sequence need, with no generic parameter so the handle type
 /// stays plain.
 struct Control {
     cfg: EngineBuilder,
+    /// Live-swap hooks; `None` on immutable spawns (then a reload control
+    /// frame answers `Error` and `publish_model` bails).
+    hooks: Hooks,
     shutdown: AtomicBool,
     /// The spawn's metric registry (served by the optional `/metrics`
     /// endpoint; also where each worker registers its stage histograms).
@@ -465,8 +540,12 @@ impl Control {
 struct Shared<E: Engine> {
     engine: Arc<E>,
     injector: Injector<Job>,
-    /// hash -> (input bits, output); input kept to defeat hash collisions.
-    cache: Option<Mutex<LruCache<u64, (Vec<f32>, Vec<f32>)>>>,
+    /// hash -> (epoch generation, input bits, output); the input defeats
+    /// hash collisions, the generation defeats cross-epoch hits — a reader
+    /// only answers from an entry whose generation equals the engine's
+    /// current epoch, so a response is never a stale stack's output.
+    /// Immutable engines report epoch 0 forever, making the check free.
+    cache: Option<Mutex<LruCache<u64, (u64, Vec<f32>, Vec<f32>)>>>,
     batcher: AdaptiveBatcher,
     ctrl: Arc<Control>,
 }
@@ -503,6 +582,29 @@ impl FrontendHandle {
     /// (resolves port 0 to the real port).
     pub fn metrics_addr(&self) -> Option<SocketAddr> {
         self.metrics.as_ref().map(|m| m.addr())
+    }
+
+    /// Publish `model` as the next epoch on a swappable spawn: in-flight
+    /// forwards finish on the epoch they started on; workers pick up the
+    /// new stack at their next batch; cache entries from older epochs stop
+    /// hitting. Bails on spawns without swap support (everything but
+    /// [`spawn_swappable`]) and on a model whose input width differs from
+    /// the serving stack's. The `srigl train --serve` path.
+    pub fn publish_model(&self, model: Arc<SparseModel>) -> Result<u64> {
+        match &self.ctrl.hooks.publish {
+            Some(publish) => publish(model),
+            None => bail!("this front-end was not spawned swappable (use spawn_swappable)"),
+        }
+    }
+
+    /// Re-read the model from the spawn's [`ReloadSource`] and publish it
+    /// as the next epoch. Bails when no source was configured. The SIGHUP
+    /// path (`serve-model --reload`).
+    pub fn reload_now(&self) -> Result<u64> {
+        match &self.ctrl.hooks.reload {
+            Some(reload) => reload(),
+            None => bail!("no reload source configured (spawn_swappable's `source` was None)"),
+        }
     }
 
     /// Stop accepting, hang up on clients, drain the queue, and return the
@@ -578,10 +680,80 @@ pub fn spawn_with_metrics(
     }
     if builder.is_sharded() {
         let team = builder.build_persistent_sharded(&model).context("building shard team")?;
-        spawn_engine_on(Arc::new(team), addr, builder, registry, metrics_addr)
+        spawn_engine_on(Arc::new(team), addr, builder, registry, metrics_addr, Hooks::default())
     } else {
-        spawn_engine_on(Arc::new(builder.build_replicated(model)), addr, builder, registry, metrics_addr)
+        spawn_engine_on(
+            Arc::new(builder.build_replicated(model)),
+            addr,
+            builder,
+            registry,
+            metrics_addr,
+            Hooks::default(),
+        )
     }
+}
+
+/// [`spawn_with_metrics`] on a live-swappable engine
+/// ([`SwappableEngine`]: persistent shard team when `builder.shards > 1`,
+/// replicated otherwise). The returned handle accepts
+/// [`FrontendHandle::publish_model`]; when `source` is `Some`, the wire
+/// `reload` control frame and [`FrontendHandle::reload_now`] re-read the
+/// model from it and publish the result as the next epoch
+/// (`serve-model --reload`; see docs/RELOAD.md).
+///
+/// Swaps are atomic per response: every forward runs entirely on the
+/// epoch its worker pinned at the batch boundary, and the result cache
+/// only answers from entries stamped with the current epoch.
+pub fn spawn_swappable(
+    model: Arc<SparseModel>,
+    addr: &str,
+    builder: &EngineBuilder,
+    metrics_addr: Option<&str>,
+    source: Option<ReloadSource>,
+) -> Result<FrontendHandle> {
+    let registry = Arc::new(Registry::new());
+    let metrics_enabled = metrics_addr.is_some();
+    if metrics_enabled {
+        obs::facts::register_model_facts(&registry, &model, builder.max_batch(), builder.threads);
+    }
+    let engine = Arc::new(builder.build_swappable(model).context("building swappable engine")?);
+    let epoch_gauge = registry.gauge(
+        "srigl_model_epoch",
+        "Epoch id of the stack currently serving; bumps on each live swap.",
+    );
+    epoch_gauge.set(engine.epoch());
+    // The publish hook serializes swaps (two concurrent publishes must not
+    // race for the same next-epoch id) and keeps gauge + fact metrics in
+    // step with the engine.
+    let cfg = *builder;
+    let publish: PublishFn = {
+        let engine = Arc::clone(&engine);
+        let registry = Arc::clone(&registry);
+        let swap_lock = Mutex::new(());
+        Arc::new(move |model: Arc<SparseModel>| -> Result<u64> {
+            let _serialized = swap_lock.lock().unwrap();
+            let id = engine.epoch() + 1;
+            let epoch = engine.swap(ModelEpoch::new(id, Arc::clone(&model)))?;
+            epoch_gauge.set(epoch);
+            if metrics_enabled {
+                obs::facts::republish_model_facts(&registry, &model, cfg.max_batch(), cfg.threads);
+            }
+            crate::util::log::info("frontend", &format!("serving model epoch {epoch}"));
+            Ok(epoch)
+        })
+    };
+    let reload: Option<ReloadFn> = source.map(|src| {
+        let publish = Arc::clone(&publish);
+        Arc::new(move || -> Result<u64> { publish(src()?) }) as ReloadFn
+    });
+    spawn_engine_on(
+        engine,
+        addr,
+        builder,
+        registry,
+        metrics_addr,
+        Hooks { publish: Some(publish), reload },
+    )
 }
 
 /// Bind `addr` and serve a pre-built [`Engine`] (any implementation —
@@ -605,7 +777,7 @@ pub fn spawn_engine_with_metrics<E: Engine + 'static>(
     builder: &EngineBuilder,
     metrics_addr: Option<&str>,
 ) -> Result<FrontendHandle> {
-    spawn_engine_on(engine, addr, builder, Arc::new(Registry::new()), metrics_addr)
+    spawn_engine_on(engine, addr, builder, Arc::new(Registry::new()), metrics_addr, Hooks::default())
 }
 
 fn spawn_engine_on<E: Engine + 'static>(
@@ -614,6 +786,7 @@ fn spawn_engine_on<E: Engine + 'static>(
     builder: &EngineBuilder,
     registry: Arc<Registry>,
     metrics_addr: Option<&str>,
+    hooks: Hooks,
 ) -> Result<FrontendHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let bound = listener.local_addr().context("resolving bound address")?;
@@ -625,6 +798,7 @@ fn spawn_engine_on<E: Engine + 'static>(
     };
     let ctrl = Arc::new(Control {
         cfg: *builder,
+        hooks,
         shutdown: AtomicBool::new(false),
         registry,
         metrics,
@@ -798,6 +972,8 @@ fn writer_loop(stream: TcpStream, egress: Arc<Egress>, ctrl: Arc<Control>, conn_
     let _ = std::io::Write::flush(&mut w);
     ctrl.egresses.lock().unwrap().remove(&conn_id);
     ctrl.conns.lock().unwrap().remove(&conn_id);
+    // The connection is gone; its depth series goes with it.
+    ctrl.registry.retract("srigl_egress_depth", &[("conn", &conn_id.to_string())]);
 }
 
 fn bits_eq(a: &[f32], b: &[f32]) -> bool {
@@ -817,8 +993,20 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
         ctrl.conns.lock().unwrap().remove(&conn_id);
         return;
     };
-    let egress =
-        Arc::new(Egress::new(ctrl.cfg.egress_capacity, ctrl.cfg.retry_after_ms));
+    // Per-connection egress depth gauge: registered for the connection's
+    // lifetime, retracted by its writer on exit so the registry doesn't
+    // grow without bound as connections come and go.
+    let conn_label = conn_id.to_string();
+    let depth_gauge = ctrl.registry.gauge_with(
+        "srigl_egress_depth",
+        "Responses queued behind this connection's socket (a reading-slower-than-submitting client).",
+        &[("conn", &conn_label)],
+    );
+    let egress = Arc::new(Egress::with_gauge(
+        ctrl.cfg.egress_capacity,
+        ctrl.cfg.retry_after_ms,
+        Some(depth_gauge),
+    ));
     ctrl.egresses.lock().unwrap().insert(conn_id, Arc::clone(&egress));
     let wticket = Gate::enter(&ctrl.writers);
     let wegress = Arc::clone(&egress);
@@ -839,8 +1027,8 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
     let d = shared.engine.in_width();
     let cap = ctrl.cfg.batching.cap();
     loop {
-        let req = match read_request(&mut rd) {
-            Ok(Some(req)) => req,
+        let incoming = match read_request(&mut rd) {
+            Ok(Some(incoming)) => incoming,
             Ok(None) => break, // clean EOF (client hung up between frames)
             Err(e) => {
                 match e.kind() {
@@ -863,6 +1051,39 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
                 break;
             }
         };
+        let req = match incoming {
+            Incoming::Request(req) => req,
+            Incoming::Control { id, op } => {
+                // Control plane rides the reader thread: a reload blocks
+                // only this connection's reads, never the worker pool.
+                if op == CONTROL_OP_RELOAD {
+                    match &ctrl.hooks.reload {
+                        Some(reload) => {
+                            let body = match reload() {
+                                Ok(epoch) => ResponseBody::Epoch(epoch),
+                                Err(e) => ResponseBody::Error(format!("reload failed: {e:#}")),
+                            };
+                            let _ = egress.send(ResponseFrame { id, body });
+                        }
+                        None => {
+                            let _ = egress.send(ResponseFrame {
+                                id,
+                                body: ResponseBody::Error(
+                                    "reload not enabled on this server".into(),
+                                ),
+                            });
+                        }
+                    }
+                } else {
+                    ctrl.metrics.bad_requests.inc();
+                    let _ = egress.send(ResponseFrame {
+                        id,
+                        body: ResponseBody::Error(format!("unknown control opcode {op}")),
+                    });
+                }
+                continue;
+            }
+        };
         // Ingress stage: frame fully read -> handed off (cache answer or
         // queue push). Excludes the blocking frame read itself — time
         // waiting for client bytes is the client's, not the server's.
@@ -879,14 +1100,19 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
         }
         let hash = fnv1a_f32(&req.payload);
         if let Some(cache) = &shared.cache {
+            let epoch = shared.engine.epoch();
             let mut c = cache.lock().unwrap();
             // peek, verify, then promote: a plain `get` would bump a hash-
             // *colliding* entry to most-recently-used before the bits_eq
-            // check rejects it, polluting the recency order
+            // check rejects it, polluting the recency order. The epoch
+            // stamp must match too — an entry computed on a swapped-out
+            // stack is a miss, never a stale answer.
             let verified = match c.peek(&hash) {
-                Some((input, output)) if bits_eq(input, &req.payload) => Some(output.clone()),
-                _ => None, // miss, or FNV collision: recompute (the worker's
-                           // insert overwrites the colliding entry)
+                Some((gen, input, output)) if *gen == epoch && bits_eq(input, &req.payload) => {
+                    Some(output.clone())
+                }
+                _ => None, // miss, FNV collision, or dead epoch: recompute
+                           // (the worker's insert overwrites the entry)
             };
             if let Some(data) = verified {
                 c.touch(&hash);
@@ -920,6 +1146,8 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
                 body: ResponseBody::Busy { retry_after_ms: ctrl.cfg.retry_after_ms },
             });
             job.egress.job_finished();
+        } else {
+            ctrl.metrics.queue_depth.set(shared.injector.len() as u64);
         }
     }
     egress.reader_done();
@@ -931,8 +1159,11 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
 fn worker_loop<E: Engine>(shared: &Shared<E>, stages: &StageHists) -> (WorkerStats, usize, usize) {
     let engine = &*shared.engine;
     let ctrl = &shared.ctrl;
+    // The input width is a swap invariant (Engine::swap rejects a model
+    // that changes it), so `d` and `xbuf` are safe to size once. The
+    // output width is NOT — it is re-derived from each forward's actual
+    // output, so a swap that changes it is picked up with the epoch.
     let d = engine.in_width();
-    let ow = engine.out_width();
     let cap = ctrl.cfg.batching.cap();
     let threads = ctrl.cfg.threads;
     let mut scratch = engine.scratch(cap);
@@ -949,6 +1180,11 @@ fn worker_loop<E: Engine>(shared: &Shared<E>, stages: &StageHists) -> (WorkerSta
         if shared.injector.pop_batch(want, &mut jobs) == 0 {
             break;
         }
+        ctrl.metrics.queue_depth.set(shared.injector.len() as u64);
+        // Batch boundary: adopt the current epoch (rebuilds this worker's
+        // scratch iff a swap landed since the last batch). Every job
+        // popped here runs — and is cache-stamped — on exactly `gen`.
+        let gen = engine.ensure_current(&mut scratch, cap);
         let t_pop = Instant::now();
         for job in &jobs {
             stages.queue_wait.record(t_pop.duration_since(job.t_submit));
@@ -973,6 +1209,10 @@ fn worker_loop<E: Engine>(shared: &Shared<E>, stages: &StageHists) -> (WorkerSta
             let out = engine.forward(&xbuf[..rows * d], rows, &mut scratch, threads);
             let t_done = Instant::now();
             stages.forward.record(t_done.duration_since(t_fwd));
+            // Derived from THIS forward's output, so it always matches the
+            // epoch the scratch is pinned to — even right after a swap
+            // that changed the stack's output width.
+            let ow = out.len() / rows;
             min_rows = min_rows.min(rows);
             max_rows = max_rows.max(rows);
             ctrl.metrics.forward_rows_min.record_min_nonzero(rows as u64);
@@ -992,8 +1232,11 @@ fn worker_loop<E: Engine>(shared: &Shared<E>, stages: &StageHists) -> (WorkerSta
                 stages.total.record_us(us);
                 // Insert BEFORE responding: once a client holds the answer
                 // it may resend the same payload, which must then hit.
+                // Stamped with the epoch this batch ran on, so a reader
+                // after a swap treats it as a miss rather than serving a
+                // dead stack's output.
                 if let Some(cache) = &shared.cache {
-                    cache.lock().unwrap().insert(job.hash, (job.x, data.clone()));
+                    cache.lock().unwrap().insert(job.hash, (gen, job.x, data.clone()));
                 }
                 let frame = ResponseFrame {
                     id: job.id,

@@ -32,9 +32,12 @@ pub mod model;
 pub mod server;
 pub mod shard;
 
-pub use engine::{Engine, EngineBuilder, KernelEngine, PersistentShardedEngine, ReplicatedEngine};
+pub use engine::{
+    Engine, EngineBuilder, EpochScratch, KernelEngine, PersistentShardedEngine, ReplicatedEngine,
+    ScopedShardedEngine, ShardedEpochScratch, SwappableEngine, SwappableScratch,
+};
 pub use frontend::{FrontendHandle, FrontendStats};
-pub use model::{Activation, LayerSpec, ModelLayer, Repr, Scratch, SparseModel};
+pub use model::{Activation, LayerSpec, ModelEpoch, ModelLayer, Repr, Scratch, SparseModel};
 pub use shard::{ShardPlan, ShardPlanError, ShardedModel, ShardedScratch};
 
 use crate::kernels::{self, Microkernel};

@@ -30,6 +30,8 @@
 //! * [`SparseModel::from_stack`] — from a `runtime::manifest` stack
 //!   description (`"stacks"` section of artifacts/manifest.json).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::{
@@ -260,6 +262,28 @@ pub struct LayerSpec {
     pub sparsity: f64,
     pub ablated_frac: f64,
     pub activation: Activation,
+}
+
+/// One immutable published generation of a serving stack: the stack itself
+/// behind an [`Arc`] plus the monotonically increasing epoch id under which
+/// it serves. Swappable engines ([`crate::inference::SwappableEngine`] and
+/// its members) publish a `ModelEpoch` atomically; in-flight forwards keep
+/// the previous epoch's `Arc` alive until they drain (RCU-style), so a swap
+/// never mixes two stacks inside one response.
+///
+/// Sharded engines derive their [`crate::inference::ShardPlan`] from
+/// `model` at publish time — the plan is a pure function of the stack and
+/// the shard count, so it is not carried here.
+#[derive(Clone)]
+pub struct ModelEpoch {
+    pub id: u64,
+    pub model: Arc<SparseModel>,
+}
+
+impl ModelEpoch {
+    pub fn new(id: u64, model: Arc<SparseModel>) -> Self {
+        Self { id, model }
+    }
 }
 
 /// A stack of sparse linear layers sharing one double-buffered forward.

@@ -131,6 +131,18 @@ impl ShardPlan {
         self.cuts[layer][shard]..self.cuts[layer][shard + 1]
     }
 
+    /// One-line description of the partition — `shards x layers` plus each
+    /// layer's cut points. Logged when a live swap re-plans the stack
+    /// (`docs/RELOAD.md`) so operators can see how the new epoch was cut.
+    pub fn summary(&self) -> String {
+        let cuts: Vec<String> = self
+            .cuts
+            .iter()
+            .map(|c| c.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("/"))
+            .collect();
+        format!("plan {}x{} cuts [{}]", self.shards, self.cuts.len(), cuts.join(" "))
+    }
+
     /// Largest shard cost divided by ideal (total/S) cost for one layer —
     /// 1.0 is perfect balance. Diagnostics for the bench/docs.
     pub fn imbalance(&self, model: &SparseModel, layer: usize) -> f64 {

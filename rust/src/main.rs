@@ -9,6 +9,8 @@
 //!   check                verify artifacts load and execute
 //!   list                 list models in the artifact manifest
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use srigl::data;
@@ -20,6 +22,7 @@ use srigl::runtime::{Manifest, Runtime};
 use srigl::sparsity::Distribution;
 use srigl::train::{LrSchedule, Method, Session, TrainConfig};
 use srigl::util::cli::Args;
+use srigl::util::log;
 
 fn main() {
     if let Err(e) = run() {
@@ -37,6 +40,8 @@ USAGE:
   srigl exp --list
   srigl train --model cnn_proxy --method srigl --sparsity 0.9 [--steps N]
               [--gamma 0.3] [--no-ablation] [--dist erk|uniform] [--seed S]
+              [--serve ADDR] [--publish-every N] [--serve-repr R]
+              (--serve streams checkpoints into a live front-end as epochs)
   srigl serve [--sparsity 0.9] [--requests N] [--batched MAX]
   srigl serve-model [--dims 3072,768,768,256]
               [--repr condensed|condensed-tiled|dense|csr|structured|mixed]
@@ -44,7 +49,9 @@ USAGE:
               [--threads T] [--gap-us G] [--stack NAME] [--adaptive]
               [--shards S] [--listen ADDR] [--queue-cap N] [--cache-cap N]
               [--egress-cap N] [--retry-ms M] [--fixed-batch]
-              [--metrics ADDR] [--max-conns N]
+              [--metrics ADDR] [--max-conns N] [--reload]
+              (--reload: SIGHUP or a wire control frame re-reads the model
+               source and swaps it in as a new epoch; docs/RELOAD.md)
   srigl arena [--scenario poisson|bursty|diurnal|heavytail|adversarial]
               [--a SPEC] [--b SPEC]   (SPEC: workers=4,adaptive=8,shards=2,...)
               [--requests N] [--rounds R] [--gap-us G] [--max-rows M]
@@ -126,6 +133,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         sparsity * 100.0,
         tr.entry.param_count
     );
+    if let Some(addr) = args.get("serve") {
+        return train_and_serve(args, tr, addr, steps);
+    }
     let rep = tr.run()?;
     if let Some(dir) = args.get("save") {
         tr.checkpoint(steps).save(std::path::Path::new(dir))?;
@@ -153,6 +163,45 @@ fn cmd_train(args: &Args) -> Result<()> {
             top.active_neurons, top.neurons, top.fan_in_mean, top.fan_in_max
         );
     }
+    Ok(())
+}
+
+/// `srigl train --serve ADDR`: run the training loop on the main thread
+/// while a swappable front-end serves the stack; every `--publish-every`
+/// steps the current weights are exported and published as a new epoch,
+/// so traffic moves to fresher snapshots without a restart or a dropped
+/// request. Exits (and stops serving) when training completes.
+fn train_and_serve(args: &Args, mut tr: srigl::train::Trainer, addr: &str, steps: usize) -> Result<()> {
+    let repr = Repr::parse(&args.get_or("serve-repr", "condensed"))?;
+    let every: usize = args.parse_or("publish-every", (steps / 4).max(1))?;
+    anyhow::ensure!(every >= 1, "--publish-every must be >= 1");
+    let builder = EngineBuilder::new()
+        .workers(args.parse_or("serve-workers", 2)?)
+        .adaptive(args.parse_or("max-batch", 8)?);
+    let first = Arc::new(tr.export_model(repr)?);
+    let handle = frontend::spawn_swappable(first, addr, &builder, args.get("metrics"), None)?;
+    log::info(
+        "train",
+        &format!("serving snapshots on {} (publish every {every} steps)", handle.addr()),
+    );
+    for step in 0..steps {
+        let loss = tr.step(step)?;
+        if tr.is_update_step(step) {
+            let _ = tr.update_topology(step)?;
+        }
+        if (step + 1) % every == 0 || step + 1 == steps {
+            let epoch = handle.publish_model(Arc::new(tr.export_model(repr)?))?;
+            log::info(
+                "train",
+                &format!("step {}: loss {loss:.4} -> published epoch {epoch}", step + 1),
+            );
+        }
+    }
+    let stats = handle.stop();
+    println!(
+        "trained {steps} steps; front-end served {} requests ({} cache hits) across live epochs",
+        stats.served, stats.cache_hits
+    );
     Ok(())
 }
 
@@ -236,10 +285,12 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
     let threads: usize = args.parse_or("threads", 1)?;
     let gap = std::time::Duration::from_micros(args.parse_or("gap-us", 0u64)?);
 
-    let (model, knobs, stack_metrics) = if let Some(name) = args.get("stack") {
-        let man = Manifest::load_default()?;
-        let entry = man.stack(name)?;
-        (SparseModel::from_stack(entry)?, entry.serve, entry.metrics.clone())
+    // The model's origin is kept as a re-loadable source (not just a
+    // one-shot construction) so `--listen --reload` can re-read it — the
+    // manifest entry may have been retrained/republished in place — and
+    // swap the result in as a new epoch without dropping a request.
+    let source = if let Some(name) = args.get("stack") {
+        ModelSource::Stack(name.to_string())
     } else {
         let dims: Vec<usize> = args.list_or("dims", &[3072usize, 768, 768, 256])?;
         anyhow::ensure!(dims.len() >= 2, "--dims needs an input width plus >=1 layer widths");
@@ -261,8 +312,17 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
                 activation: if i + 1 == n_layers { Activation::Identity } else { Activation::Relu },
             });
         }
-        (SparseModel::synth(dims[0], &specs, 42)?, ServeKnobs::default(), None)
+        ModelSource::Synth { d_in: dims[0], specs }
     };
+    let (knobs, stack_metrics) = match &source {
+        ModelSource::Stack(name) => {
+            let man = Manifest::load_default()?;
+            let entry = man.stack(name)?;
+            (entry.serve, entry.metrics.clone())
+        }
+        ModelSource::Synth { .. } => (ServeKnobs::default(), None),
+    };
+    let model = source.load()?;
     let max_batch: usize = args.parse_or("max-batch", knobs.max_batch)?;
     // In-process benches only go adaptive on an explicit flag (the PR-1
     // Poisson path stays byte-identical by default); the listen path
@@ -296,7 +356,10 @@ fn cmd_serve_model(args: &Args) -> Result<()> {
         };
         // CLI --metrics wins; else the stack's "serve": {"metrics": ...}.
         let metrics = args.get("metrics").map(str::to_string).or(stack_metrics);
-        return serve_listen(model, addr, &builder, metrics.as_deref());
+        let reload: Option<frontend::ReloadSource> = args
+            .has("reload")
+            .then(move || Box::new(move || Ok(Arc::new(source.load()?))) as frontend::ReloadSource);
+        return serve_listen(model, addr, &builder, metrics.as_deref(), reload);
     }
 
     if shards > 1 {
@@ -449,6 +512,57 @@ fn cmd_arena(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Where `serve-model` got its model from, kept so `--reload` can get it
+/// again: a manifest stack is re-read from disk (picking up a retrain
+/// that republished the entry in place); a synth spec re-derives the same
+/// deterministic stack (epoch bumps, bits identical — still useful for
+/// exercising the swap path end to end).
+enum ModelSource {
+    Stack(String),
+    Synth { d_in: usize, specs: Vec<LayerSpec> },
+}
+
+impl ModelSource {
+    fn load(&self) -> Result<SparseModel> {
+        match self {
+            ModelSource::Stack(name) => {
+                let man = Manifest::load_default()?;
+                SparseModel::from_stack(man.stack(name)?)
+            }
+            ModelSource::Synth { d_in, specs } => SparseModel::synth(*d_in, specs, 42),
+        }
+    }
+}
+
+/// SIGHUP-to-flag bridge for `serve-model --listen --reload`. A signal
+/// handler may only do async-signal-safe work, so it sets one atomic; the
+/// serve loop polls it and runs the actual (allocating, locking) reload.
+#[cfg(unix)]
+mod sighup {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static PENDING: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_hup(_sig: i32) {
+        PENDING.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the handler (raw libc `signal` — no new dependency).
+    pub fn install() {
+        const SIGHUP: i32 = 1;
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        unsafe {
+            signal(SIGHUP, on_hup as usize);
+        }
+    }
+
+    pub fn take() -> bool {
+        PENDING.swap(false, Ordering::SeqCst)
+    }
+}
+
 /// Print the process-wide microkernel selection and, per layer, the
 /// representation, shape, stored weights, and a quick measured GFLOP/s
 /// estimate at the serving batch cap (2 FLOPs per stored weight per
@@ -458,9 +572,15 @@ fn cmd_arena(args: &Args) -> Result<()> {
 /// per-layer throughput across machines.
 fn report_kernel_selection(model: &SparseModel, batch: usize, threads: usize) {
     use srigl::bench::bench;
-    println!(
-        "kernel dispatch: {} (SRIGL_KERNEL=scalar|portable|avx2 overrides)",
-        srigl::kernels::describe_selection()
+    if !log::enabled(log::Level::Info) {
+        return; // quieted: skip the per-layer probe entirely
+    }
+    log::info(
+        "kernel",
+        &format!(
+            "dispatch: {} (SRIGL_KERNEL=scalar|portable|avx2 overrides)",
+            srigl::kernels::describe_selection()
+        ),
     );
     let batch = batch.max(1);
     for (i, layer) in model.layers().iter().enumerate() {
@@ -472,13 +592,16 @@ fn report_kernel_selection(model: &SparseModel, batch: usize, threads: usize) {
         let m = bench("layer", 5, std::time::Duration::from_millis(4), || {
             k.forward(&x, batch, &mut out, threads);
         });
-        println!(
-            "  layer {i}: {:<15} {:>5}x{:<5} {:>9} stored weights, est {:>7.2} GFLOP/s @ batch {batch}",
-            k.name(),
-            k.out_width(),
-            k.in_width(),
-            stored,
-            flops / m.median_s().max(1e-12) / 1e9
+        log::info(
+            "kernel",
+            &format!(
+                "layer {i}: {:<15} {:>5}x{:<5} {:>9} stored weights, est {:>7.2} GFLOP/s @ batch {batch}",
+                k.name(),
+                k.out_width(),
+                k.in_width(),
+                stored,
+                flops / m.median_s().max(1e-12) / 1e9
+            ),
         );
     }
 }
@@ -491,38 +614,73 @@ fn serve_listen(
     addr: &str,
     builder: &EngineBuilder,
     metrics: Option<&str>,
+    reload: Option<frontend::ReloadSource>,
 ) -> Result<()> {
-    println!("serving model: {}", model.describe());
-    let handle =
-        frontend::spawn_with_metrics(std::sync::Arc::new(model), addr, builder, metrics)?;
-    println!(
-        "listening on {} — {} workers, {} batching (cap {}), queue cap {}, cache {} entries, \
-         egress cap {}{}",
-        handle.addr(),
-        builder.workers,
-        match builder.batching {
-            srigl::inference::server::Batching::Adaptive { .. } => "adaptive",
-            srigl::inference::server::Batching::Fixed(_) => "fixed",
-        },
-        builder.max_batch(),
-        builder.queue_capacity,
-        builder.cache_capacity,
-        builder.egress_capacity,
-        if builder.is_sharded() {
-            format!(", {} shards/forward (persistent team)", builder.shards)
-        } else {
-            String::new()
-        }
+    log::info("serve", &format!("serving model: {}", model.describe()));
+    let reloadable = reload.is_some();
+    let handle = if reloadable {
+        frontend::spawn_swappable(Arc::new(model), addr, builder, metrics, reload)?
+    } else {
+        frontend::spawn_with_metrics(Arc::new(model), addr, builder, metrics)?
+    };
+    log::info(
+        "serve",
+        &format!(
+            "listening on {} — {} workers, {} batching (cap {}), queue cap {}, cache {} entries, \
+             egress cap {}{}",
+            handle.addr(),
+            builder.workers,
+            match builder.batching {
+                srigl::inference::server::Batching::Adaptive { .. } => "adaptive",
+                srigl::inference::server::Batching::Fixed(_) => "fixed",
+            },
+            builder.max_batch(),
+            builder.queue_capacity,
+            builder.cache_capacity,
+            builder.egress_capacity,
+            if builder.is_sharded() {
+                format!(", {} shards/forward (persistent team)", builder.shards)
+            } else {
+                String::new()
+            }
+        ),
     );
     if let Some(m) = handle.metrics_addr() {
-        println!("metrics: http://{m}/metrics (Prometheus text; docs/METRICS.md)");
+        log::info("serve", &format!("metrics: http://{m}/metrics (Prometheus text; docs/METRICS.md)"));
     }
     if builder.max_connections > 0 {
-        println!("connection cap: {} (over-cap connects get Busy)", builder.max_connections);
+        log::info(
+            "serve",
+            &format!("connection cap: {} (over-cap connects get Busy)", builder.max_connections),
+        );
     }
-    println!("wire format: docs/WIRE.md; stop with Ctrl-C");
-    handle.run_forever();
-    Ok(())
+    log::info("serve", "wire format: docs/WIRE.md; stop with Ctrl-C");
+    if !reloadable {
+        handle.run_forever();
+        return Ok(());
+    }
+    #[cfg(not(unix))]
+    {
+        log::info("serve", "reload enabled via wire control frame (no SIGHUP on this platform)");
+        handle.run_forever();
+        return Ok(());
+    }
+    #[cfg(unix)]
+    {
+        sighup::install();
+        log::info("serve", "reload enabled: SIGHUP or a wire control frame swaps in a new epoch");
+        // Poll the signal flag on the main thread (the acceptor runs on its
+        // own thread); the handle stays here so reload_now can use it.
+        loop {
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            if sighup::take() {
+                match handle.reload_now() {
+                    Ok(epoch) => log::info("serve", &format!("SIGHUP reload -> epoch {epoch}")),
+                    Err(e) => log::warn("serve", &format!("SIGHUP reload failed: {e:#}")),
+                }
+            }
+        }
+    }
 }
 
 fn cmd_check() -> Result<()> {

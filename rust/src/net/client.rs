@@ -7,7 +7,7 @@ use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
-use super::{read_response, write_request, RequestFrame, ResponseBody};
+use super::{read_response, write_control, write_request, RequestFrame, ResponseBody, CONTROL_OP_RELOAD};
 
 /// What the server said about one request.
 #[derive(Clone, Debug, PartialEq)]
@@ -57,6 +57,39 @@ impl Client {
             ResponseBody::Output { data, .. } => Ok(Reply::Output(data)),
             ResponseBody::Busy { retry_after_ms } => Ok(Reply::Busy { retry_after_ms }),
             ResponseBody::Error(msg) => Err(io::Error::new(io::ErrorKind::InvalidInput, msg)),
+            ResponseBody::Epoch(e) => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected Epoch({e}) answer to an inference request"),
+            )),
+        }
+    }
+
+    /// Ask the server to reload its stack and publish a new epoch
+    /// (a [`CONTROL_OP_RELOAD`] control frame); blocks for the answer and
+    /// returns the epoch now serving. Servers spawned without a reload
+    /// source answer `Error`, which surfaces as `InvalidInput` (the
+    /// connection stays usable).
+    pub fn reload(&mut self) -> io::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        write_control(&mut self.writer, id, CONTROL_OP_RELOAD)?;
+        self.writer.flush()?;
+        let resp = read_response(&mut self.reader)?.ok_or_else(|| {
+            io::Error::new(io::ErrorKind::ConnectionAborted, "server closed mid-request")
+        })?;
+        if resp.id != id {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("response id {} for control {id} (sync client)", resp.id),
+            ));
+        }
+        match resp.body {
+            ResponseBody::Epoch(e) => Ok(e),
+            ResponseBody::Error(msg) => Err(io::Error::new(io::ErrorKind::InvalidInput, msg)),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected {other:?} answer to a reload control frame"),
+            )),
         }
     }
 

@@ -12,14 +12,21 @@
 //! f32[rows*d]  # row-major features, d = model input width
 //! ```
 //!
+//! **Control** (client -> server): the request framing with
+//! `rows == u32::MAX` ([`CONTROL_SENTINEL`]) and a 1-byte opcode in place
+//! of the payload (`len` is therefore exactly 13). Opcode 1
+//! ([`CONTROL_OP_RELOAD`]) asks the server to reload its stack and publish
+//! a new epoch; success is answered with status 3 (see docs/RELOAD.md).
+//!
 //! **Response** (server -> client):
 //! ```text
 //! u32 len      # bytes after this field
 //! u64 id       # echoes the request id
-//! u8  status   # 0 = Ok, 1 = Busy (backpressure), 2 = Error
+//! u8  status   # 0 = Ok, 1 = Busy (backpressure), 2 = Error, 3 = Epoch
 //! status 0:  u32 rows, f32[rows*out_width]
 //! status 1:  u32 retry_after_ms
 //! status 2:  utf-8 message (len - 9 bytes)
+//! status 3:  u64 epoch   # control frame succeeded; stack now at this epoch
 //! ```
 //!
 //! Responses carry the request id because a pipelined connection may be
@@ -42,6 +49,17 @@ pub const MAX_FRAME_BYTES: usize = 64 << 20;
 pub const STATUS_OK: u8 = 0;
 pub const STATUS_BUSY: u8 = 1;
 pub const STATUS_ERROR: u8 = 2;
+pub const STATUS_EPOCH: u8 = 3;
+
+/// `rows` value reserved for control frames: no real request can carry
+/// `u32::MAX` rows (the 64 MiB frame cap caps rows far lower), so the
+/// sentinel cleanly retrofits control traffic onto the request framing.
+pub const CONTROL_SENTINEL: u32 = u32::MAX;
+
+/// Control opcode: reload the serving stack from its manifest source and
+/// publish it as a new epoch (`serve-model --reload`; docs/RELOAD.md).
+/// Answered with [`ResponseBody::Epoch`] on success.
+pub const CONTROL_OP_RELOAD: u8 = 1;
 
 /// One inference request: `rows` feature rows, row-major.
 #[derive(Clone, Debug, PartialEq)]
@@ -49,6 +67,14 @@ pub struct RequestFrame {
     pub id: u64,
     pub rows: u32,
     pub payload: Vec<f32>,
+}
+
+/// One parsed client frame: a normal inference request, or a control
+/// frame (`rows == `[`CONTROL_SENTINEL`], 1-byte opcode body).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Incoming {
+    Request(RequestFrame),
+    Control { id: u64, op: u8 },
 }
 
 /// One server response, tagged by the request id it answers.
@@ -66,6 +92,9 @@ pub enum ResponseBody {
     Busy { retry_after_ms: u32 },
     /// Malformed or unservable request (shape mismatch, oversized batch).
     Error(String),
+    /// A control frame succeeded; the stack now serves at this epoch
+    /// (answers [`CONTROL_OP_RELOAD`]). Failures answer `Error`.
+    Epoch(u64),
 }
 
 /// FNV-1a over a byte slice — the result-cache key; the serving front-end
@@ -158,10 +187,22 @@ pub fn write_request<W: Write>(w: &mut W, req: &RequestFrame) -> io::Result<()> 
     w.write_all(&buf)
 }
 
-/// Read one request frame; `Ok(None)` on clean EOF (client hung up between
-/// frames). Shape validation (rows x d) is the server's job — the wire
-/// layer only enforces framing.
-pub fn read_request<R: Read>(r: &mut R) -> io::Result<Option<RequestFrame>> {
+/// Write one control frame (the request framing with
+/// `rows == `[`CONTROL_SENTINEL`] and a 1-byte opcode body).
+pub fn write_control<W: Write>(w: &mut W, id: u64, op: u8) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(4 + 13);
+    buf.extend_from_slice(&13u32.to_le_bytes());
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.extend_from_slice(&CONTROL_SENTINEL.to_le_bytes());
+    buf.push(op);
+    w.write_all(&buf)
+}
+
+/// Read one request or control frame; `Ok(None)` on clean EOF (client
+/// hung up between frames). Shape validation (rows x d) is the server's
+/// job — the wire layer only enforces framing; likewise an unknown
+/// control opcode parses fine and the server answers `Error`.
+pub fn read_request<R: Read>(r: &mut R) -> io::Result<Option<Incoming>> {
     let Some(len) = frame_len(r)? else {
         return Ok(None);
     };
@@ -175,8 +216,17 @@ pub fn read_request<R: Read>(r: &mut R) -> io::Result<Option<RequestFrame>> {
     r.read_exact(&mut body)?;
     let id = u64::from_le_bytes(body[0..8].try_into().unwrap());
     let rows = u32::from_le_bytes(body[8..12].try_into().unwrap());
+    if rows == CONTROL_SENTINEL {
+        if body.len() != 13 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("control frame of {} bytes (need exactly 13: header + opcode)", body.len()),
+            ));
+        }
+        return Ok(Some(Incoming::Control { id, op: body[12] }));
+    }
     let payload = f32s_from_le(&body[12..])?;
-    Ok(Some(RequestFrame { id, rows, payload }))
+    Ok(Some(Incoming::Request(RequestFrame { id, rows, payload })))
 }
 
 /// Write one response frame (single `write_all`; see [`write_request`]).
@@ -185,6 +235,7 @@ pub fn write_response<W: Write>(w: &mut W, resp: &ResponseFrame) -> io::Result<(
         ResponseBody::Output { data, .. } => 13 + data.len() * 4,
         ResponseBody::Busy { .. } => 13,
         ResponseBody::Error(msg) => 9 + msg.len(),
+        ResponseBody::Epoch(_) => 17,
     };
     let mut buf = Vec::with_capacity(4 + body_len);
     buf.extend_from_slice(&(body_len as u32).to_le_bytes());
@@ -202,6 +253,10 @@ pub fn write_response<W: Write>(w: &mut W, resp: &ResponseFrame) -> io::Result<(
         ResponseBody::Error(msg) => {
             buf.push(STATUS_ERROR);
             buf.extend_from_slice(msg.as_bytes());
+        }
+        ResponseBody::Epoch(epoch) => {
+            buf.push(STATUS_EPOCH);
+            buf.extend_from_slice(&epoch.to_le_bytes());
         }
     }
     w.write_all(&buf)
@@ -238,6 +293,12 @@ pub fn read_response<R: Read>(r: &mut R) -> io::Result<Option<ResponseFrame>> {
             ResponseBody::Busy { retry_after_ms: u32::from_le_bytes(rest.try_into().unwrap()) }
         }
         STATUS_ERROR => ResponseBody::Error(String::from_utf8_lossy(rest).into_owned()),
+        STATUS_EPOCH => {
+            if rest.len() != 8 {
+                return Err(io::Error::new(io::ErrorKind::InvalidData, "Epoch frame malformed"));
+            }
+            ResponseBody::Epoch(u64::from_le_bytes(rest.try_into().unwrap()))
+        }
         other => {
             return Err(io::Error::new(
                 io::ErrorKind::InvalidData,
@@ -260,7 +321,24 @@ mod tests {
         write_request(&mut buf, &req).unwrap();
         assert_eq!(buf.len(), 4 + 12 + 16);
         let got = read_request(&mut Cursor::new(&buf)).unwrap().unwrap();
-        assert_eq!(got, req);
+        assert_eq!(got, Incoming::Request(req));
+    }
+
+    #[test]
+    fn control_roundtrip_and_malformed_length() {
+        let mut buf = Vec::new();
+        write_control(&mut buf, 77, CONTROL_OP_RELOAD).unwrap();
+        assert_eq!(buf.len(), 4 + 13);
+        let got = read_request(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(got, Incoming::Control { id: 77, op: CONTROL_OP_RELOAD });
+        // A sentinel-rows frame with payload bytes beyond the opcode is
+        // malformed: no real request can carry u32::MAX rows.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&16u32.to_le_bytes());
+        bad.extend_from_slice(&77u64.to_le_bytes());
+        bad.extend_from_slice(&CONTROL_SENTINEL.to_le_bytes());
+        bad.extend_from_slice(&[1, 2, 3, 4]);
+        assert!(read_request(&mut Cursor::new(&bad)).is_err());
     }
 
     #[test]
@@ -269,6 +347,7 @@ mod tests {
             ResponseFrame { id: 1, body: ResponseBody::Output { rows: 1, data: vec![9.0, -1.0] } },
             ResponseFrame { id: 2, body: ResponseBody::Busy { retry_after_ms: 7 } },
             ResponseFrame { id: 3, body: ResponseBody::Error("bad shape".into()) },
+            ResponseFrame { id: 4, body: ResponseBody::Epoch(0x0123_4567_89AB_CDEF) },
         ];
         for f in &frames {
             let mut buf = Vec::new();
@@ -287,7 +366,10 @@ mod tests {
         }
         let mut cur = Cursor::new(&buf);
         for id in 0..3u64 {
-            let got = read_request(&mut cur).unwrap().unwrap();
+            let got = match read_request(&mut cur).unwrap().unwrap() {
+                Incoming::Request(req) => req,
+                other => panic!("expected a request, got {other:?}"),
+            };
             assert_eq!(got.id, id);
             assert_eq!(got.payload, vec![id as f32]);
         }

@@ -63,6 +63,34 @@ pub fn register_model_facts(registry: &Registry, model: &SparseModel, batch: usi
     }
 }
 
+/// The fact families [`register_model_facts`] owns — retracted wholesale
+/// on republication so a scrape never mixes layers of two epochs.
+const FACT_FAMILIES: [&str; 5] = [
+    "srigl_kernel_info",
+    "srigl_engine_storage_bytes",
+    "srigl_layer_stored_weights",
+    "srigl_layer_est_gflops",
+    "srigl_layer_out_width",
+];
+
+/// Replace the fact gauges with ones describing `model` — called after a
+/// live model swap so `stored_weights`/`est_gflops` never describe a dead
+/// epoch. Retract-then-register is atomic enough for scrapes: the
+/// registry mutex serializes each retraction against `render`, and the
+/// brief window where a family is absent only under-reports (it can never
+/// show stale values as current).
+pub fn republish_model_facts(
+    registry: &Registry,
+    model: &SparseModel,
+    batch: usize,
+    threads: usize,
+) {
+    for family in FACT_FAMILIES {
+        registry.retract_family(family);
+    }
+    register_model_facts(registry, model, batch, threads);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,5 +130,38 @@ mod tests {
             .as_f64()
             .unwrap();
         assert!(g > 0.0, "gflops must be positive, got {g}");
+    }
+
+    #[test]
+    fn republish_replaces_stale_layer_facts() {
+        let spec = |n, act| LayerSpec {
+            n,
+            repr: Repr::Condensed,
+            sparsity: 0.9,
+            ablated_frac: 0.0,
+            activation: act,
+        };
+        let three = SparseModel::synth(
+            32,
+            &[spec(24, Activation::Relu), spec(16, Activation::Relu), spec(8, Activation::Identity)],
+            3,
+        )
+        .unwrap();
+        let two = SparseModel::synth(
+            32,
+            &[spec(24, Activation::Relu), spec(8, Activation::Identity)],
+            5,
+        )
+        .unwrap();
+        let r = Registry::new();
+        register_model_facts(&r, &three, 4, 1);
+        assert!(r.render().contains("layer=\"2\""), "three-layer epoch shows layer 2");
+        republish_model_facts(&r, &two, 4, 1);
+        let text = r.render();
+        assert!(!text.contains("layer=\"2\""), "dead epoch's layer 2 must vanish:\n{text}");
+        assert!(text.contains("layer=\"1\""), "{text}");
+        let j = crate::obs::parse_exposition(&text);
+        let bytes = j.get("srigl_engine_storage_bytes").unwrap().as_f64().unwrap();
+        assert_eq!(bytes, two.storage_bytes() as f64, "storage describes the live epoch");
     }
 }

@@ -96,6 +96,31 @@ impl Registry {
         h
     }
 
+    /// Remove every metric registered under `name` (all label sets).
+    /// Live handles returned at registration keep working — they just no
+    /// longer render. Used to refresh per-epoch engine facts on a live
+    /// model swap: retract the family, then re-register it from the new
+    /// stack (`docs/RELOAD.md`).
+    pub fn retract_family(&self, name: &str) {
+        self.inner.lock().unwrap().retain(|m| m.name != name);
+    }
+
+    /// Remove the metrics matching `name` + exact `labels`. Used for
+    /// per-connection series (e.g. egress-depth gauges) that must leave
+    /// the scrape when their connection closes, or the registry would
+    /// grow without bound under connection churn.
+    pub fn retract(&self, name: &str, labels: &[(&str, &str)]) {
+        self.inner.lock().unwrap().retain(|m| {
+            m.name != name
+                || m.labels.len() != labels.len()
+                || !m
+                    .labels
+                    .iter()
+                    .zip(labels)
+                    .all(|((k, v), (lk, lv))| k == lk && v == lv)
+        });
+    }
+
     /// Render the full exposition text. Families appear in first-
     /// registration order; histogram instances sharing name + labels are
     /// merged into one series.
@@ -340,6 +365,28 @@ srigl_stage_latency_us_count{stage=\"forward\"} 3
         assert_eq!(text.matches("# TYPE h_us histogram").count(), 1);
         assert!(text.contains("h_us_count{stage=\"total\"} 2"), "merged: {text}");
         assert!(text.contains("h_us_count{stage=\"queue\"} 1"), "separate: {text}");
+    }
+
+    #[test]
+    fn retract_family_and_labeled_series() {
+        let r = Registry::new();
+        let g0 = r.gauge_with("srigl_egress_depth", "d", &[("conn", "0")]);
+        let g1 = r.gauge_with("srigl_egress_depth", "d", &[("conn", "1")]);
+        r.const_gauge("srigl_layer_stored_weights", "w", &[("layer", "0")], 7.0);
+        g0.set(3);
+        g1.set(5);
+        // exact-label retraction drops one series, keeps the sibling
+        r.retract("srigl_egress_depth", &[("conn", "0")]);
+        let text = r.render();
+        assert!(!text.contains("conn=\"0\""), "{text}");
+        assert!(text.contains("srigl_egress_depth{conn=\"1\"} 5"), "{text}");
+        // the live handle of a retracted series keeps working (no panic)
+        g0.set(9);
+        // family retraction clears every label set; re-registration renders
+        r.retract_family("srigl_layer_stored_weights");
+        assert!(!r.render().contains("srigl_layer_stored_weights"), "family gone");
+        r.const_gauge("srigl_layer_stored_weights", "w", &[("layer", "0")], 9.0);
+        assert!(r.render().contains("srigl_layer_stored_weights{layer=\"0\"} 9"));
     }
 
     #[test]

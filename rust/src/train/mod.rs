@@ -528,6 +528,14 @@ impl Trainer {
         }
     }
 
+    /// Whether `step` is a scheduled topology-update step (and the method
+    /// has a topology to update) — exposed so external step-loops
+    /// (`srigl train --serve` streaming snapshots into a live front-end)
+    /// can mirror [`Trainer::run`]'s update cadence exactly.
+    pub fn is_update_step(&self, step: usize) -> bool {
+        self.cfg.method != Method::Dense && self.schedule.is_update_step(step)
+    }
+
     /// Full run: steps + scheduled topology updates + final eval.
     pub fn run(&mut self) -> Result<TrainReport> {
         let t0 = std::time::Instant::now();

@@ -1,0 +1,244 @@
+//! Epoch conformance suite: under a live model swap, **every** forward is
+//! bit-for-bit identical to exactly one epoch's stack — the one its
+//! scratch is pinned to — and never a blend of two. Pinned across all
+//! three swappable strategies ([`ReplicatedEngine`] via the
+//! [`SwappableEngine`] umbrella, [`ScopedShardedEngine`], and the
+//! persistent shard team), under both a deterministic swap script and a
+//! concurrent flood with swaps landing mid-traffic.
+//!
+//! The mechanism under test (see `rust/src/inference/engine.rs`): each
+//! workspace carries the `Arc` of the stack it was built for and forwards
+//! compute with the *scratch's* stack, so atomicity per forward holds by
+//! construction; [`Engine::ensure_current`] is the only place a worker
+//! opts in to a newer epoch, and it reports the epoch the next forward
+//! will compute under. If any engine ever read the published stack
+//! mid-forward, the bit-exact oracle comparison here would catch the mix.
+
+use std::sync::Arc;
+
+use srigl::inference::model::{Activation, LayerSpec, Repr, SparseModel};
+use srigl::inference::{
+    Engine, EngineBuilder, ModelEpoch, ScopedShardedEngine, SwappableEngine,
+};
+use srigl::util::rng::Rng;
+
+const D_IN: usize = 64;
+
+fn stack(seed: u64) -> SparseModel {
+    let widths = [48usize, 32, 16];
+    let specs: Vec<LayerSpec> = widths
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| LayerSpec {
+            n,
+            repr: Repr::Condensed,
+            sparsity: 0.9,
+            ablated_frac: 0.25,
+            activation: if i + 1 == widths.len() { Activation::Identity } else { Activation::Relu },
+        })
+        .collect();
+    SparseModel::synth(D_IN, &specs, seed).unwrap()
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: idx {i}: {g} vs {w} (must be bit-for-bit)");
+    }
+}
+
+/// Epoch seeds: index == epoch id. Different seeds make the stacks'
+/// outputs differ, so a cross-epoch mix cannot masquerade as a match.
+const EPOCH_SEEDS: [u64; 4] = [11, 23, 37, 51];
+
+/// The three swappable strategies behind one umbrella type. Scoped is
+/// constructed directly (the builder picks persistent for `shards > 1`).
+fn engines(epoch0: &Arc<SparseModel>) -> Vec<(&'static str, SwappableEngine)> {
+    vec![
+        ("replicated", EngineBuilder::new().build_swappable(Arc::clone(epoch0)).unwrap()),
+        (
+            "scoped",
+            SwappableEngine::Scoped(ScopedShardedEngine::from_model(epoch0, 2).unwrap()),
+        ),
+        ("persistent", EngineBuilder::new().shards(2).build_swappable(Arc::clone(epoch0)).unwrap()),
+    ]
+}
+
+/// Deterministic swap script: a stale scratch keeps serving its pinned
+/// epoch bit-for-bit after the swap publishes; `ensure_current` is the
+/// only transition point, and afterwards the same scratch serves the new
+/// epoch bit-for-bit. Exercised across batch sizes including the tiled
+/// full-tile path (64) and a remainder (7).
+#[test]
+fn stale_scratch_serves_old_epoch_until_ensure_current() {
+    let models: Vec<Arc<SparseModel>> =
+        EPOCH_SEEDS.iter().map(|&s| Arc::new(stack(s))).collect();
+    for &batch in &[1usize, 7, 64] {
+        let mut rng = Rng::new(0xEC ^ batch as u64);
+        let x: Vec<f32> = (0..batch * D_IN).map(|_| rng.normal_f32()).collect();
+        // Fresh engines per batch size: each walks the whole epoch chain.
+        for (name, engine) in engines(&models[0]) {
+            let mut stale = engine.scratch(batch);
+            for (id, model) in models.iter().enumerate().skip(1) {
+                let prev = engine.epoch();
+                assert_eq!(
+                    engine.swap(ModelEpoch::new(id as u64, Arc::clone(model))).unwrap(),
+                    id as u64,
+                    "{name}: swap returns the published id"
+                );
+                // The stale scratch is still pinned to the previous epoch.
+                assert_eq!(stale.epoch(), prev, "{name} b{batch}: scratch pins its epoch");
+                let got_old = engine.forward(&x, batch, &mut stale, 1).to_vec();
+                assert_bits_eq(
+                    &got_old,
+                    &models[prev as usize].forward_vec(&x, batch, 1),
+                    &format!("{name} b{batch}: stale scratch == epoch {prev} oracle"),
+                );
+                // ensure_current is the one transition point.
+                assert_eq!(engine.ensure_current(&mut stale, batch), id as u64);
+                assert_eq!(stale.epoch(), id as u64);
+                let got_new = engine.forward(&x, batch, &mut stale, 1).to_vec();
+                assert_bits_eq(
+                    &got_new,
+                    &models[id].forward_vec(&x, batch, 1),
+                    &format!("{name} b{batch}: rebuilt scratch == epoch {id} oracle"),
+                );
+            }
+        }
+    }
+}
+
+/// The conformance bar from the reload design: swaps land **mid-flood**
+/// from a dedicated thread while reader threads hammer forwards, and every
+/// single response is bit-for-bit one epoch's oracle — the epoch
+/// `ensure_current` reported for that scratch — never a mix, even while
+/// the persistent team re-plans shards under traffic.
+#[test]
+fn concurrent_swaps_never_mix_epochs() {
+    let models: Vec<Arc<SparseModel>> =
+        EPOCH_SEEDS.iter().map(|&s| Arc::new(stack(s))).collect();
+    // Precompute each epoch's oracle per (batch, input) so reader threads
+    // compare without recomputing references under the clock.
+    let batches = [1usize, 3];
+    let mut oracles: Vec<Vec<Vec<f32>>> = Vec::new(); // [epoch][batch_idx]
+    let inputs: Vec<Vec<f32>> = batches
+        .iter()
+        .map(|&b| {
+            let mut rng = Rng::new(0xF10D ^ b as u64);
+            (0..b * D_IN).map(|_| rng.normal_f32()).collect()
+        })
+        .collect();
+    for m in &models {
+        oracles.push(
+            batches.iter().zip(&inputs).map(|(&b, x)| m.forward_vec(x, b, 1)).collect(),
+        );
+    }
+
+    for (name, engine) in engines(&models[0]) {
+        let engine = Arc::new(engine);
+        std::thread::scope(|s| {
+            // Swapper: publish epochs 1..=3 spaced out so readers run
+            // before, during, and after each publication.
+            {
+                let engine = Arc::clone(&engine);
+                let models = &models;
+                s.spawn(move || {
+                    for (id, m) in models.iter().enumerate().skip(1) {
+                        std::thread::sleep(std::time::Duration::from_millis(15));
+                        engine
+                            .swap(ModelEpoch::new(id as u64, Arc::clone(m)))
+                            .expect("mid-flood swap");
+                    }
+                });
+            }
+            for t in 0..4usize {
+                let engine = Arc::clone(&engine);
+                let oracles = &oracles;
+                let inputs = &inputs;
+                s.spawn(move || {
+                    let cap = *batches.iter().max().unwrap();
+                    let mut scratch = engine.scratch(cap);
+                    for i in 0..400usize {
+                        let bi = (i + t) % batches.len();
+                        let batch = batches[bi];
+                        // Batch boundary: opt in to whatever epoch is
+                        // current; the return pins what the next forward
+                        // must compute under even if a swap lands now.
+                        let pinned = engine.ensure_current(&mut scratch, cap);
+                        assert_eq!(pinned, scratch.epoch(), "{name}: pin == scratch epoch");
+                        let got =
+                            engine.forward(&inputs[bi], batch, &mut scratch, 1).to_vec();
+                        assert_bits_eq(
+                            &got,
+                            &oracles[pinned as usize][bi],
+                            &format!("{name} reader {t} iter {i}: epoch {pinned} b{batch}"),
+                        );
+                    }
+                });
+            }
+        });
+        // Flood is over: everyone converges on the final epoch.
+        assert_eq!(engine.epoch(), (models.len() - 1) as u64, "{name}: final epoch");
+        let mut s = engine.scratch(1);
+        assert_eq!(engine.ensure_current(&mut s, 1), 3);
+        let got = engine.forward(&inputs[0], 1, &mut s, 1).to_vec();
+        assert_bits_eq(&got, &oracles[3][0], &format!("{name}: settled on epoch 3"));
+    }
+}
+
+/// Failed swaps (stale id, input-width change, un-shardable stack) must
+/// leave the published epoch — and its bit-exact outputs — untouched.
+#[test]
+fn failed_swaps_leave_the_published_epoch_serving() {
+    let m0 = Arc::new(stack(EPOCH_SEEDS[0]));
+    let m1 = Arc::new(stack(EPOCH_SEEDS[1]));
+    let mut rng = Rng::new(0xBAD);
+    let x: Vec<f32> = (0..2 * D_IN).map(|_| rng.normal_f32()).collect();
+    let narrow_in = Arc::new(
+        SparseModel::synth(
+            32,
+            &[LayerSpec {
+                n: 16,
+                repr: Repr::Condensed,
+                sparsity: 0.9,
+                ablated_frac: 0.0,
+                activation: Activation::Identity,
+            }],
+            5,
+        )
+        .unwrap(),
+    );
+    let one_neuron = Arc::new(
+        SparseModel::synth(
+            D_IN,
+            &[LayerSpec {
+                n: 1,
+                repr: Repr::Condensed,
+                sparsity: 0.5,
+                ablated_frac: 0.0,
+                activation: Activation::Identity,
+            }],
+            5,
+        )
+        .unwrap(),
+    );
+    for (name, engine) in engines(&m0) {
+        assert_eq!(engine.swap(ModelEpoch::new(1, Arc::clone(&m1))).unwrap(), 1);
+        // Stale and duplicate ids refuse without publishing.
+        assert!(engine.swap(ModelEpoch::new(1, Arc::clone(&m0))).is_err(), "{name}: dup id");
+        assert!(engine.swap(ModelEpoch::new(0, Arc::clone(&m0))).is_err(), "{name}: stale id");
+        // Input-width changes refuse (connections validated shape once).
+        assert!(engine.swap(ModelEpoch::new(2, Arc::clone(&narrow_in))).is_err(), "{name}");
+        // Sharded strategies also refuse stacks too narrow to re-plan.
+        if name != "replicated" {
+            assert!(
+                engine.swap(ModelEpoch::new(2, Arc::clone(&one_neuron))).is_err(),
+                "{name}: un-shardable stack must not publish"
+            );
+        }
+        assert_eq!(engine.epoch(), 1, "{name}: failed swaps leave epoch 1");
+        let mut s = engine.scratch(2);
+        let got = engine.forward(&x, 2, &mut s, 1).to_vec();
+        assert_bits_eq(&got, &m1.forward_vec(&x, 2, 1), &format!("{name}: epoch 1 still serves"));
+    }
+}

@@ -717,6 +717,202 @@ fn socket_connection_cap_refuses_then_readmits() {
     assert_eq!(stats.bad_requests, 0);
 }
 
+/// Same dims as [`test_model`] but a different seed: a distinct stack to
+/// swap in, whose outputs differ so cross-epoch mixes cannot hide.
+fn test_model_seed(repr: Repr, seed: u64) -> Arc<SparseModel> {
+    let spec = |n, act| LayerSpec {
+        n,
+        repr,
+        sparsity: 0.9,
+        ablated_frac: 0.25,
+        activation: act,
+    };
+    Arc::new(
+        SparseModel::synth(
+            D_IN,
+            &[
+                spec(48, Activation::Relu),
+                spec(32, Activation::Relu),
+                spec(D_OUT, Activation::Identity),
+            ],
+            seed,
+        )
+        .unwrap(),
+    )
+}
+
+/// The epoch conformance bar, over real sockets: a swap lands while 3
+/// client threads flood a cache-enabled front-end with a small payload
+/// pool (maximizing cache traffic), and every single response is
+/// bit-for-bit one epoch's oracle — never a mix. After the flood, replays
+/// of the pool must all serve the NEW stack: a cross-epoch cache hit
+/// would surface here as an old-epoch answer, bit-exactly caught.
+#[test]
+fn socket_swap_mid_flood_never_mixes_epochs() {
+    let m0 = test_model(Repr::Condensed);
+    let m1 = test_model_seed(Repr::Condensed, 29);
+    let handle = frontend::spawn_swappable(
+        Arc::clone(&m0),
+        "127.0.0.1:0",
+        &EngineBuilder::new()
+            .workers(2)
+            .adaptive(4)
+            .queue_capacity(256)
+            .cache_capacity(64) // cache ON: the generation check is under test
+            .retry_after_ms(1),
+        None,
+        None,
+    )
+    .unwrap();
+    let addr = handle.addr();
+
+    // Small payload pool, reused by every thread: lots of cache hits.
+    let mut rng = Rng::new(0x3CA9);
+    let pool: Vec<Vec<f32>> =
+        (0..6).map(|_| (0..D_IN).map(|_| rng.normal_f32()).collect()).collect();
+    let oracle0: Vec<Vec<f32>> = pool.iter().map(|x| m0.forward_vec(x, 1, 1)).collect();
+    let oracle1: Vec<Vec<f32>> = pool.iter().map(|x| m1.forward_vec(x, 1, 1)).collect();
+    let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+
+    let n_per_client = 40usize;
+    std::thread::scope(|s| {
+        for t in 0..3usize {
+            let (pool, oracle0, oracle1) = (&pool, &oracle0, &oracle1);
+            s.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                for req in 0..n_per_client {
+                    let pi = (req + t) % pool.len();
+                    let got = client.infer_retrying(1, &pool[pi], 50).expect("infer");
+                    let is0 = bits(&got) == bits(&oracle0[pi]);
+                    let is1 = bits(&got) == bits(&oracle1[pi]);
+                    assert!(
+                        is0 ^ is1,
+                        "client {t} req {req}: response must be exactly one epoch's \
+                         oracle (old={is0} new={is1}) — never a mix"
+                    );
+                }
+            });
+        }
+        // Mid-flood: publish the new stack while all 3 clients hammer.
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert_eq!(handle.publish_model(Arc::clone(&m1)).unwrap(), 1, "swap lands mid-flood");
+    });
+
+    // Quiescent replay of the whole pool: every answer must now be the
+    // new stack's — a stale cache entry (epoch-0 generation) serving here
+    // would be a cross-epoch cache hit.
+    let mut client = Client::connect(addr).unwrap();
+    for (pi, x) in pool.iter().enumerate() {
+        let got = client.infer_retrying(1, x, 50).unwrap();
+        assert_bits_eq(&got, &oracle1[pi], &format!("post-swap replay payload {pi}"));
+    }
+    drop(client);
+
+    let stats = handle.stop();
+    assert_eq!(stats.connections_total, 4, "3 flood clients + 1 replay client");
+    assert_eq!(stats.connections_active, 0, "swap must not leak connection accounting");
+    assert_eq!(
+        stats.served + stats.cache_hits,
+        3 * n_per_client + pool.len(),
+        "every request answered exactly once across the swap (rejected={})",
+        stats.rejected
+    );
+    assert_eq!(stats.bad_requests, 0);
+}
+
+/// The wire reload path end to end: a control frame makes the server pull
+/// the next stack from its [`frontend::ReloadSource`], answers with the
+/// new epoch id, and subsequent inference serves the new stack. The
+/// `/metrics` endpoint tracks `srigl_model_epoch` and exports the new
+/// depth gauges. A server spawned without reload support answers the
+/// control frame with a well-formed Error and the connection survives.
+#[test]
+fn socket_wire_reload_bumps_epoch_and_gauges() {
+    use srigl::obs::{parse_exposition, scrape};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    const SEEDS: [u64; 3] = [17, 29, 43];
+    let models: Vec<Arc<SparseModel>> =
+        SEEDS.iter().map(|&s| test_model_seed(Repr::Condensed, s)).collect();
+
+    let calls = Arc::new(AtomicUsize::new(0));
+    let source: frontend::ReloadSource = {
+        let models = models.clone();
+        let calls = Arc::clone(&calls);
+        Box::new(move || {
+            let i = 1 + calls.fetch_add(1, Ordering::Relaxed);
+            Ok(Arc::clone(&models[i % models.len()]))
+        })
+    };
+    let handle = frontend::spawn_swappable(
+        Arc::clone(&models[0]),
+        "127.0.0.1:0",
+        &EngineBuilder::new()
+            .workers(1)
+            .fixed_batch(4)
+            .queue_capacity(64)
+            .cache_capacity(16)
+            .retry_after_ms(1),
+        Some("127.0.0.1:0"),
+        Some(source),
+    )
+    .unwrap();
+    let maddr = handle.metrics_addr().expect("metrics endpoint requested at spawn");
+
+    let mut client = Client::connect(handle.addr()).unwrap();
+    let mut rng = Rng::new(0xE11);
+    let x: Vec<f32> = (0..D_IN).map(|_| rng.normal_f32()).collect();
+
+    let got = client.infer_retrying(1, &x, 50).unwrap();
+    assert_bits_eq(&got, &models[0].forward_vec(&x, 1, 1), "epoch 0 serves the boot stack");
+    let s0 = parse_exposition(&scrape(maddr).unwrap());
+    assert_eq!(s0.get("srigl_model_epoch").unwrap().as_f64().unwrap() as u64, 0);
+
+    // Wire reload #1: the server pulls models[1] and publishes epoch 1.
+    assert_eq!(client.reload().expect("wire reload"), 1);
+    let got = client.infer_retrying(1, &x, 50).unwrap();
+    assert_bits_eq(&got, &models[1].forward_vec(&x, 1, 1), "epoch 1 serves the reloaded stack");
+
+    // Wire reload #2 over the same connection.
+    assert_eq!(client.reload().expect("second wire reload"), 2);
+    let got = client.infer_retrying(1, &x, 50).unwrap();
+    assert_bits_eq(&got, &models[2].forward_vec(&x, 1, 1), "epoch 2");
+
+    let text = scrape(maddr).unwrap();
+    let s = parse_exposition(&text);
+    assert_eq!(s.get("srigl_model_epoch").unwrap().as_f64().unwrap() as u64, 2, "gauge tracks");
+    assert!(s.get("srigl_queue_depth").is_ok(), "ingress depth gauge exported");
+    assert!(
+        text.contains("srigl_egress_depth{conn="),
+        "per-connection egress depth gauge exported while the client is live"
+    );
+    // Facts were republished for the new epoch, not the dead boot stack.
+    assert!(text.contains("srigl_layer_stored_weights{"), "per-layer facts survive reload");
+
+    drop(client);
+    let stats = handle.stop();
+    assert_eq!(stats.served + stats.cache_hits, 3, "controls are not served requests");
+    assert_eq!(stats.bad_requests, 0, "a supported control frame is not a bad request");
+    assert_eq!(calls.load(Ordering::Relaxed), 2, "one source pull per reload");
+
+    // Control frames against a non-reloadable spawn: well-formed Error,
+    // connection survives.
+    let m = test_model(Repr::Condensed);
+    let plain = frontend::spawn(
+        Arc::clone(&m),
+        "127.0.0.1:0",
+        &EngineBuilder::new().workers(1).fixed_batch(4).queue_capacity(64).cache_capacity(0),
+    )
+    .unwrap();
+    let mut client = Client::connect(plain.addr()).unwrap();
+    let err = client.reload().expect_err("immutable spawn must refuse reload");
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput, "{err}");
+    let got = client.infer_retrying(1, &x, 50).expect("connection survives the refusal");
+    assert_bits_eq(&got, &m.forward_vec(&x, 1, 1), "post-refusal inference");
+    drop(client);
+    plain.stop();
+}
+
 /// Multi-row requests round-trip with row-major layout preserved.
 #[test]
 fn socket_multi_row_request_roundtrips() {
