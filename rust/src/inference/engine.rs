@@ -50,9 +50,15 @@
 //! carry a strictly increasing epoch id (the result cache uses the id as
 //! its staleness generation — see `docs/RELOAD.md`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Barrier, Condvar, Mutex, RwLock};
+use std::sync::{Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
+
+// The epoch cell and the shard team's mailbox/latch handoff are
+// model-checked (rust/tests/loom_models.rs), so their primitives come
+// from the shim: std normally, loom under `--cfg loom`. The rest of the
+// engine (job serialization, tid bookkeeping, the per-layer Barrier)
+// stays on std::sync — not modeled.
+use crate::util::sync as ssync;
 
 use anyhow::{bail, Result};
 
@@ -139,37 +145,50 @@ pub trait Engine: Send + Sync {
 /// take a consistent snapshot (`current`, for building scratches) or a
 /// lock-free id peek (`epoch`, for the per-request staleness checks on the
 /// serving hot path). `publish` enforces strictly increasing ids.
-struct EpochCell<T> {
-    cur: RwLock<(u64, Arc<T>)>,
+///
+/// The coherence invariant — a reader that peeked `epoch()` and then takes
+/// a snapshot never sees a snapshot id *older* than the peek — is
+/// model-checked in `rust/tests/loom_models.rs` (the shadow id is stored
+/// only *after* the locked pair is updated, so the shadow can trail the
+/// lock but never lead it). `pub` so the model can drive it directly.
+///
+/// Lock poisoning: both closures recover with `into_inner` — the guarded
+/// pair is updated by single assignment after all fallible work, so a
+/// panicked publisher can never leave it torn.
+pub struct EpochCell<T> {
+    cur: ssync::RwLock<(u64, Arc<T>)>,
     /// Shadow of the published id so `epoch()` never touches the lock.
-    id: AtomicU64,
+    id: ssync::atomic::AtomicU64,
 }
 
 impl<T> EpochCell<T> {
-    fn new(id: u64, v: Arc<T>) -> EpochCell<T> {
-        EpochCell { cur: RwLock::new((id, Arc::clone(&v))), id: AtomicU64::new(id) }
+    pub fn new(id: u64, v: Arc<T>) -> EpochCell<T> {
+        EpochCell {
+            cur: ssync::RwLock::new((id, Arc::clone(&v))),
+            id: ssync::atomic::AtomicU64::new(id),
+        }
     }
 
-    fn epoch(&self) -> u64 {
-        self.id.load(Ordering::Acquire)
+    pub fn epoch(&self) -> u64 {
+        self.id.load(ssync::atomic::Ordering::Acquire)
     }
 
     /// Consistent `(id, stack)` snapshot.
-    fn current(&self) -> (u64, Arc<T>) {
-        let g = self.cur.read().unwrap();
+    pub fn current(&self) -> (u64, Arc<T>) {
+        let g = self.cur.read().unwrap_or_else(|poisoned| poisoned.into_inner());
         (g.0, Arc::clone(&g.1))
     }
 
     /// Publish `(id, v)`; fails without publishing unless `id` is
     /// strictly greater than the current id (two racing swaps serialize
     /// on the write lock and the loser errors out).
-    fn publish(&self, id: u64, v: Arc<T>) -> Result<()> {
-        let mut g = self.cur.write().unwrap();
+    pub fn publish(&self, id: u64, v: Arc<T>) -> Result<()> {
+        let mut g = self.cur.write().unwrap_or_else(|poisoned| poisoned.into_inner());
         if id <= g.0 {
             bail!("epoch id {id} is not greater than the published epoch {}", g.0);
         }
         *g = (id, v);
-        self.id.store(id, Ordering::Release);
+        self.id.store(id, ssync::atomic::Ordering::Release);
         Ok(())
     }
 }
@@ -560,49 +579,63 @@ enum ShardJob {
 /// One shard's parking spot: a single-slot mailbox. The shard thread
 /// sleeps on the condvar until the coordinator posts a job; the job mutex
 /// plus the completion latch guarantee the slot is empty at every post.
-struct Mailbox {
-    slot: Mutex<Option<ShardJob>>,
-    cv: Condvar,
+///
+/// Generic over the job type (and `pub`) so `rust/tests/loom_models.rs`
+/// can model the post → run → latch handoff with its own probe jobs.
+/// Lock poisoning recovers with `into_inner`: every mutation is a single
+/// slot assignment, so the state can never be torn (team threads
+/// additionally run under [`AbortOnPanic`], which turns any shard panic
+/// into an abort before poison propagates).
+pub struct Mailbox<T> {
+    slot: ssync::Mutex<Option<T>>,
+    cv: ssync::Condvar,
 }
 
-impl Mailbox {
-    fn new() -> Mailbox {
-        Mailbox { slot: Mutex::new(None), cv: Condvar::new() }
+impl<T> Mailbox<T> {
+    pub fn new() -> Mailbox<T> {
+        Mailbox { slot: ssync::Mutex::new(None), cv: ssync::Condvar::new() }
     }
 
-    fn put(&self, job: ShardJob) {
-        let mut g = self.slot.lock().unwrap();
+    pub fn put(&self, job: T) {
+        let mut g = self.slot.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         debug_assert!(g.is_none(), "mailbox must be empty (jobs are serialized)");
         *g = Some(job);
         drop(g);
         self.cv.notify_one();
     }
 
-    fn take(&self) -> ShardJob {
-        let mut g = self.slot.lock().unwrap();
+    pub fn take(&self) -> T {
+        let mut g = self.slot.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         loop {
             if let Some(job) = g.take() {
                 return job;
             }
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait(g).unwrap_or_else(|poisoned| poisoned.into_inner());
         }
     }
 }
 
+impl<T> Default for Mailbox<T> {
+    fn default() -> Mailbox<T> {
+        Mailbox::new()
+    }
+}
+
 /// Counts shard arrivals at the end of a job; the coordinator blocks here
-/// instead of joining threads.
-struct DoneLatch {
-    n: Mutex<usize>,
-    cv: Condvar,
+/// instead of joining threads. `pub` for the loom models; poisoning
+/// recovers with `into_inner` (single-counter state, never torn).
+pub struct DoneLatch {
+    n: ssync::Mutex<usize>,
+    cv: ssync::Condvar,
 }
 
 impl DoneLatch {
-    fn new() -> DoneLatch {
-        DoneLatch { n: Mutex::new(0), cv: Condvar::new() }
+    pub fn new() -> DoneLatch {
+        DoneLatch { n: ssync::Mutex::new(0), cv: ssync::Condvar::new() }
     }
 
-    fn arrive(&self) {
-        let mut g = self.n.lock().unwrap();
+    pub fn arrive(&self) {
+        let mut g = self.n.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         *g += 1;
         drop(g);
         self.cv.notify_all();
@@ -612,18 +645,24 @@ impl DoneLatch {
     /// because the team mutex serializes jobs: no shard can arrive for
     /// job N+1 before the coordinator posts it, which happens after this
     /// returns.
-    fn wait_and_reset(&self, target: usize) {
-        let mut g = self.n.lock().unwrap();
+    pub fn wait_and_reset(&self, target: usize) {
+        let mut g = self.n.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         while *g < target {
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait(g).unwrap_or_else(|poisoned| poisoned.into_inner());
         }
         *g = 0;
     }
 }
 
+impl Default for DoneLatch {
+    fn default() -> DoneLatch {
+        DoneLatch::new()
+    }
+}
+
 /// State shared between the coordinator and the team threads.
 struct TeamShared {
-    mailboxes: Vec<Mailbox>,
+    mailboxes: Vec<Mailbox<ShardJob>>,
     /// Reused across layers AND jobs (std's `Barrier` resets itself once
     /// all participants pass) — the same per-layer rendezvous as the
     /// scoped reference implementation.
@@ -721,7 +760,11 @@ impl PersistentShardedEngine {
     /// forward would mint fresh `ThreadId`s, which Rust guarantees are
     /// never reused within a process.
     pub fn last_shard_threads(&self) -> Vec<Option<std::thread::ThreadId>> {
-        self.shared.last_tid.iter().map(|m| *m.lock().unwrap()).collect()
+        self.shared
+            .last_tid
+            .iter()
+            .map(|m| *m.lock().unwrap_or_else(|poisoned| poisoned.into_inner()))
+            .collect()
     }
 }
 
@@ -754,7 +797,8 @@ fn shard_thread(shared: &TeamShared, si: usize) {
             ShardJob::Stop => return,
             ShardJob::Forward(job) => {
                 let _abort_guard = AbortOnPanic(si);
-                *shared.last_tid[si].lock().unwrap() = Some(std::thread::current().id());
+                *shared.last_tid[si].lock().unwrap_or_else(|poisoned| poisoned.into_inner()) =
+                    Some(std::thread::current().id());
                 // SAFETY: the coordinator blocks on the completion latch
                 // (holding the job mutex) until this shard arrives, so the
                 // epoch's model (kept alive by the submitting scratch's
@@ -808,8 +852,19 @@ impl Engine for PersistentShardedEngine {
         model.assert_scratch_fits(inner, batch);
         // One job owns the team at a time (concurrent pool workers queue
         // here); the guard is held until every shard reports done, which
-        // is what keeps the raw pointers below valid.
-        let _job = self.job.lock().unwrap();
+        // is what keeps the raw pointers below valid. A poisoned job
+        // mutex means a coordinator panicked with the team mid-job —
+        // mailbox slots and the latch count are then unknowable, so abort
+        // loudly (the shard-side twin of AbortOnPanic) instead of
+        // wedging every future forward.
+        let _job = self.job.lock().unwrap_or_else(|_poisoned| {
+            crate::util::log::warn(
+                "engine",
+                "shard-team job mutex poisoned (coordinator panicked mid-job); \
+                 team state is unrecoverable, aborting",
+            );
+            std::process::abort();
+        });
         let model_ptr: *const ShardedModel = Arc::as_ptr(model);
         let buf_a: *const SharedBuf = &inner.a;
         let buf_b: *const SharedBuf = &inner.b;

@@ -55,6 +55,12 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+// The Egress queue is model-checked (rust/tests/loom_models.rs), so its
+// primitives come from the shim: std normally, loom under `--cfg loom`.
+// The rest of the front-end (control plane, gates, cache) stays on
+// std::sync — it is not modeled, and loom types only work inside a model.
+use crate::util::sync as ssync;
+
 use anyhow::{bail, Context, Result};
 
 use super::engine::{Engine, EngineBuilder, SwappableEngine};
@@ -137,7 +143,7 @@ const EGRESS_BUSY_HEADROOM: usize = 32;
 
 /// What happened to a frame handed to [`Egress::send`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum SendOutcome {
+pub enum SendOutcome {
     /// Queued for the writer thread.
     Queued,
     /// Queue full: the frame was replaced by a `Busy` hint (counts as a
@@ -167,10 +173,16 @@ struct EgressInner {
 /// the reader's cache-hit/error paths) and this connection's single writer
 /// thread. The bound is what keeps a slow client's memory footprint — and
 /// its ability to stall a worker — finite.
-struct Egress {
-    inner: Mutex<EgressInner>,
-    cv: Condvar,
+///
+/// `pub` (and shim-backed) so `rust/tests/loom_models.rs` can model-check
+/// the overflow accounting and the close-vs-drain race exhaustively.
+pub struct Egress {
+    inner: ssync::Mutex<EgressInner>,
+    cv: ssync::Condvar,
     capacity: usize,
+    /// Slots past `capacity` reserved for Busy conversions; see
+    /// [`EGRESS_BUSY_HEADROOM`].
+    headroom: usize,
     retry_after_ms: u32,
     /// Optional live depth gauge (`srigl_egress_depth{conn=...}`),
     /// updated on every push/pop so a scrape shows which connection is
@@ -183,19 +195,42 @@ impl Egress {
         Egress::with_gauge(capacity, retry_after_ms, None)
     }
 
+    /// [`Egress::new`] with an explicit Busy headroom instead of the
+    /// serving default ([`EGRESS_BUSY_HEADROOM`]). The model-checking
+    /// constructor: loom models use `headroom = 1` so the overflow ladder
+    /// (Queued → ConvertedBusy → Dropped) is reachable in a few steps.
+    pub fn with_headroom(capacity: usize, headroom: usize, retry_after_ms: u32) -> Egress {
+        let mut e = Egress::with_gauge(capacity, retry_after_ms, None);
+        e.headroom = headroom;
+        e
+    }
+
     fn with_gauge(capacity: usize, retry_after_ms: u32, depth: Option<Arc<Gauge>>) -> Egress {
         Egress {
-            inner: Mutex::new(EgressInner {
+            inner: ssync::Mutex::new(EgressInner {
                 q: std::collections::VecDeque::new(),
                 inflight: 0,
                 reader_done: false,
                 closed: false,
             }),
-            cv: Condvar::new(),
+            cv: ssync::Condvar::new(),
             capacity: capacity.max(1),
+            headroom: EGRESS_BUSY_HEADROOM,
             retry_after_ms,
             depth,
         }
+    }
+
+    /// Lock the egress state, recovering from poison with a warning: every
+    /// mutation below keeps the queue structurally consistent before any
+    /// panic-capable code runs, so a panicked producer degrades this one
+    /// connection instead of cascading panics through every thread that
+    /// routes a response to it.
+    fn lock_inner(&self) -> ssync::MutexGuard<'_, EgressInner> {
+        self.inner.lock().unwrap_or_else(|poisoned| {
+            crate::util::log::warn("frontend", "egress mutex poisoned; recovering");
+            poisoned.into_inner()
+        })
     }
 
     fn note_depth(&self, n: usize) {
@@ -210,9 +245,9 @@ impl Egress {
     /// verbatim — an Error must never morph into Busy, or a client
     /// following the retry-on-Busy protocol would resend a malformed
     /// request forever.
-    fn send(&self, frame: ResponseFrame) -> SendOutcome {
+    pub fn send(&self, frame: ResponseFrame) -> SendOutcome {
         let now = Instant::now();
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock_inner();
         if g.closed {
             return SendOutcome::Gone;
         }
@@ -224,7 +259,7 @@ impl Egress {
             self.cv.notify_all();
             return SendOutcome::Queued;
         }
-        if g.q.len() < self.capacity + EGRESS_BUSY_HEADROOM {
+        if g.q.len() < self.capacity + self.headroom {
             let outcome = match frame.body {
                 ResponseBody::Output { .. } => {
                     g.q.push_back((
@@ -251,15 +286,15 @@ impl Egress {
     }
 
     /// A job for this connection entered the shared queue.
-    fn job_started(&self) {
-        self.inner.lock().unwrap().inflight += 1;
+    pub fn job_started(&self) {
+        self.lock_inner().inflight += 1;
     }
 
     /// A job for this connection was answered (or rejected). Closes the
     /// queue once the reader is gone and nothing is outstanding, letting
     /// the writer drain and exit.
-    fn job_finished(&self) {
-        let mut g = self.inner.lock().unwrap();
+    pub fn job_finished(&self) {
+        let mut g = self.lock_inner();
         g.inflight -= 1;
         if g.reader_done && g.inflight == 0 {
             g.closed = true;
@@ -269,8 +304,8 @@ impl Egress {
     }
 
     /// The reader exited (EOF, framing error, shutdown).
-    fn reader_done(&self) {
-        let mut g = self.inner.lock().unwrap();
+    pub fn reader_done(&self) {
+        let mut g = self.lock_inner();
         g.reader_done = true;
         if g.inflight == 0 {
             g.closed = true;
@@ -282,16 +317,16 @@ impl Egress {
     /// Force-close (teardown path for jobs that will never be answered,
     /// e.g. a drained-but-unserved queue with zero workers). Queued frames
     /// are still drained by the writer before it exits.
-    fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
+    pub fn close(&self) {
+        let mut g = self.lock_inner();
         g.closed = true;
         drop(g);
         self.cv.notify_all();
     }
 
     /// Blocking pop for the writer thread; `None` once closed and drained.
-    fn recv(&self) -> Option<(ResponseFrame, Instant)> {
-        let mut g = self.inner.lock().unwrap();
+    pub fn recv(&self) -> Option<(ResponseFrame, Instant)> {
+        let mut g = self.lock_inner();
         loop {
             if let Some(f) = g.q.pop_front() {
                 let n = g.q.len();
@@ -302,13 +337,16 @@ impl Egress {
             if g.closed {
                 return None;
             }
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait(g).unwrap_or_else(|poisoned| {
+                crate::util::log::warn("frontend", "egress mutex poisoned; recovering");
+                poisoned.into_inner()
+            });
         }
     }
 
     /// Non-blocking pop (writer batching between flushes).
-    fn try_recv(&self) -> Option<(ResponseFrame, Instant)> {
-        let mut g = self.inner.lock().unwrap();
+    pub fn try_recv(&self) -> Option<(ResponseFrame, Instant)> {
+        let mut g = self.lock_inner();
         let f = g.q.pop_front();
         if f.is_some() {
             let n = g.q.len();
@@ -323,6 +361,21 @@ impl Egress {
 // Shared state
 // ---------------------------------------------------------------------------
 
+/// Lock a control-plane mutex, recovering from poison with a warning.
+/// The maps these mutexes guard (`conns`, `egresses`, gate counters) are
+/// structurally consistent at every await-free critical section, so after
+/// a worker/reader/writer panic the right degradation is "that connection
+/// dies", not "every thread that touches the map panics too".
+fn lock_unpoisoned<'a, T>(m: &'a Mutex<T>, what: &str) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|poisoned| {
+        crate::util::log::warn(
+            "frontend",
+            &format!("{what} mutex poisoned by a panicked thread; recovering"),
+        );
+        poisoned.into_inner()
+    })
+}
+
 /// Counts live threads of one kind so shutdown can wait for them without
 /// collecting an unbounded Vec of join handles (connections come and go).
 struct Gate {
@@ -336,14 +389,17 @@ impl Gate {
     }
 
     fn enter(gate: &Arc<Gate>) -> GateTicket {
-        *gate.n.lock().unwrap() += 1;
+        *lock_unpoisoned(&gate.n, "gate") += 1;
         GateTicket(Arc::clone(gate))
     }
 
     fn wait_idle(&self) {
-        let mut g = self.n.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.n, "gate");
         while *g > 0 {
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait(g).unwrap_or_else(|poisoned| {
+                crate::util::log::warn("frontend", "gate mutex poisoned; recovering");
+                poisoned.into_inner()
+            });
         }
     }
 }
@@ -353,7 +409,7 @@ struct GateTicket(Arc<Gate>);
 
 impl Drop for GateTicket {
     fn drop(&mut self) {
-        *self.0.n.lock().unwrap() -= 1;
+        *lock_unpoisoned(&self.0.n, "gate") -= 1;
         self.0.cv.notify_all();
     }
 }
@@ -611,13 +667,17 @@ impl FrontendHandle {
     /// run's statistics.
     pub fn stop(mut self) -> FrontendStats {
         self.shutdown_and_join()
-            .expect("handle already joined")
-            .expect("frontend thread panicked")
+            .expect("handle already joined") // lint:allow-unwrap caller-facing API misuse, not a serve-path thread
+            .expect("frontend thread panicked") // lint:allow-unwrap propagate the acceptor's panic to the owning (main) thread
     }
 
     /// Serve until the process dies (the `serve-model --listen` path).
     pub fn run_forever(mut self) -> FrontendStats {
-        self.join.take().expect("handle not yet joined").join().expect("frontend thread panicked")
+        self.join
+            .take()
+            .expect("handle not yet joined") // lint:allow-unwrap caller-facing API misuse, not a serve-path thread
+            .join()
+            .expect("frontend thread panicked") // lint:allow-unwrap propagate the acceptor's panic to the owning (main) thread
     }
 
     fn shutdown_and_join(&mut self) -> Option<std::thread::Result<FrontendStats>> {
@@ -731,7 +791,9 @@ pub fn spawn_swappable(
         let registry = Arc::clone(&registry);
         let swap_lock = Mutex::new(());
         Arc::new(move |model: Arc<SparseModel>| -> Result<u64> {
-            let _serialized = swap_lock.lock().unwrap();
+            // Poison recovery is trivially sound here: the lock guards no
+            // data, only mutual exclusion of concurrent publishes.
+            let _serialized = swap_lock.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
             let id = engine.epoch() + 1;
             let epoch = engine.swap(ModelEpoch::new(id, Arc::clone(&model)))?;
             epoch_gauge.set(epoch);
@@ -836,7 +898,7 @@ fn serve_loop<E: Engine>(listener: TcpListener, shared: Arc<Shared<E>>) -> Front
             std::thread::Builder::new()
                 .name(format!("srigl-worker-{w}"))
                 .spawn(move || worker_loop(&shared, &stages))
-                .expect("spawning pool worker")
+                .expect("spawning pool worker") // lint:allow-unwrap startup resource exhaustion; no clients are connected yet
         })
         .collect();
 
@@ -877,7 +939,7 @@ fn serve_loop<E: Engine>(listener: TcpListener, shared: Arc<Shared<E>>) -> Front
         ctrl.metrics.connections_total.inc();
         let conn_id = ctrl.next_conn_id.fetch_add(1, Ordering::Relaxed) as u64;
         let Ok(registry_clone) = stream.try_clone() else { continue };
-        ctrl.conns.lock().unwrap().insert(conn_id, registry_clone);
+        lock_unpoisoned(&ctrl.conns, "conns").insert(conn_id, registry_clone);
         // The active gauge covers exactly the reader's lifetime: inc
         // here (before the cap check can run again), dec when the
         // reader exits — the admission slot a new connection competes
@@ -897,7 +959,7 @@ fn serve_loop<E: Engine>(listener: TcpListener, shared: Arc<Shared<E>>) -> Front
                 reader_shared.ctrl.metrics.connections_active.dec();
             });
         if spawned.is_err() {
-            ctrl.conns.lock().unwrap().remove(&conn_id);
+            lock_unpoisoned(&ctrl.conns, "conns").remove(&conn_id);
             ctrl.metrics.connections_active.dec();
         }
     }
@@ -905,7 +967,7 @@ fn serve_loop<E: Engine>(listener: TcpListener, shared: Arc<Shared<E>>) -> Front
     // Teardown, in dependency order:
     // 1. hang up on every live connection so blocked readers (and writers
     //    stuck on a full socket) unblock...
-    for (_, c) in ctrl.conns.lock().unwrap().iter() {
+    for (_, c) in lock_unpoisoned(&ctrl.conns, "conns").iter() {
         let _ = c.shutdown(Shutdown::Both);
     }
     ctrl.readers.wait_idle();
@@ -915,15 +977,25 @@ fn serve_loop<E: Engine>(listener: TcpListener, shared: Arc<Shared<E>>) -> Front
     let mut worker_stats = Vec::with_capacity(worker_handles.len());
     let (mut min_rows, mut max_rows) = (usize::MAX, 0usize);
     for h in worker_handles {
-        let (ws, lo, hi) = h.join().expect("pool worker panicked");
-        min_rows = min_rows.min(lo);
-        max_rows = max_rows.max(hi);
-        worker_stats.push(ws);
+        // A panicked worker must not cascade: its batches are lost (and
+        // their jobs' clients hang up or time out), but the remaining
+        // workers' stats and every other connection still drain cleanly.
+        match h.join() {
+            Ok((ws, lo, hi)) => {
+                min_rows = min_rows.min(lo);
+                max_rows = max_rows.max(hi);
+                worker_stats.push(ws);
+            }
+            Err(_) => crate::util::log::warn(
+                "frontend",
+                "a pool worker panicked; its stats are lost and its in-flight jobs unanswered",
+            ),
+        }
     }
     // 3. ...then force-close any egress still open (a connection whose
     //    queued jobs could never be answered — e.g. zero workers) and wait
     //    for the writers to drain and exit.
-    for (_, e) in ctrl.egresses.lock().unwrap().iter() {
+    for (_, e) in lock_unpoisoned(&ctrl.egresses, "egresses").iter() {
         e.close();
     }
     ctrl.writers.wait_idle();
@@ -970,8 +1042,8 @@ fn writer_loop(stream: TcpStream, egress: Arc<Egress>, ctrl: Arc<Control>, conn_
     // then unregister the connection (the writer is the last one out).
     egress.close();
     let _ = std::io::Write::flush(&mut w);
-    ctrl.egresses.lock().unwrap().remove(&conn_id);
-    ctrl.conns.lock().unwrap().remove(&conn_id);
+    lock_unpoisoned(&ctrl.egresses, "egresses").remove(&conn_id);
+    lock_unpoisoned(&ctrl.conns, "conns").remove(&conn_id);
     // The connection is gone; its depth series goes with it.
     ctrl.registry.retract("srigl_egress_depth", &[("conn", &conn_id.to_string())]);
 }
@@ -990,7 +1062,7 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
     let _ = stream.set_nodelay(true);
     let ctrl = &shared.ctrl;
     let Ok(wstream) = stream.try_clone() else {
-        ctrl.conns.lock().unwrap().remove(&conn_id);
+        lock_unpoisoned(&ctrl.conns, "conns").remove(&conn_id);
         return;
     };
     // Per-connection egress depth gauge: registered for the connection's
@@ -1007,7 +1079,7 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
         ctrl.cfg.retry_after_ms,
         Some(depth_gauge),
     ));
-    ctrl.egresses.lock().unwrap().insert(conn_id, Arc::clone(&egress));
+    lock_unpoisoned(&ctrl.egresses, "egresses").insert(conn_id, Arc::clone(&egress));
     let wticket = Gate::enter(&ctrl.writers);
     let wegress = Arc::clone(&egress);
     let wctrl = Arc::clone(ctrl);
@@ -1018,8 +1090,8 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
             writer_loop(wstream, wegress, wctrl, conn_id);
         });
     if spawned.is_err() {
-        ctrl.egresses.lock().unwrap().remove(&conn_id);
-        ctrl.conns.lock().unwrap().remove(&conn_id);
+        lock_unpoisoned(&ctrl.egresses, "egresses").remove(&conn_id);
+        lock_unpoisoned(&ctrl.conns, "conns").remove(&conn_id);
         return;
     }
 
@@ -1099,9 +1171,11 @@ fn reader_loop<E: Engine>(stream: TcpStream, shared: &Shared<E>, conn_id: u64) {
             continue;
         }
         let hash = fnv1a_f32(&req.payload);
-        if let Some(cache) = &shared.cache {
+        // A cache poisoned by a worker that panicked mid-insert has an
+        // untrustworthy LRU recency order — treat it as a permanent miss
+        // (correct, just slower) rather than panicking every reader.
+        if let Some(Ok(mut c)) = shared.cache.as_ref().map(|cache| cache.lock()) {
             let epoch = shared.engine.epoch();
-            let mut c = cache.lock().unwrap();
             // peek, verify, then promote: a plain `get` would bump a hash-
             // *colliding* entry to most-recently-used before the bits_eq
             // check rejects it, polluting the recency order. The epoch
@@ -1234,9 +1308,11 @@ fn worker_loop<E: Engine>(shared: &Shared<E>, stages: &StageHists) -> (WorkerSta
                 // it may resend the same payload, which must then hit.
                 // Stamped with the epoch this batch ran on, so a reader
                 // after a swap treats it as a miss rather than serving a
-                // dead stack's output.
-                if let Some(cache) = &shared.cache {
-                    cache.lock().unwrap().insert(job.hash, (gen, job.x, data.clone()));
+                // dead stack's output. A poisoned cache (another worker
+                // panicked mid-insert) is skipped: readers already treat
+                // it as a permanent miss, so inserts are wasted anyway.
+                if let Some(Ok(mut c)) = shared.cache.as_ref().map(|cache| cache.lock()) {
+                    c.insert(job.hash, (gen, job.x, data.clone()));
                 }
                 let frame = ResponseFrame {
                     id: job.id,

@@ -221,8 +221,11 @@ impl SharedBuf {
     #[allow(clippy::mut_from_ref)]
     unsafe fn region_mut(&self, start: usize, len: usize) -> &mut [f32] {
         debug_assert!(start + len <= self.cells.len());
-        // UnsafeCell<f32> is repr(transparent) over f32
-        std::slice::from_raw_parts_mut(self.cells.as_ptr().add(start) as *mut f32, len)
+        // SAFETY: UnsafeCell<f32> is repr(transparent) over f32, the
+        // range is in bounds (callers pass plan-derived ranges; debug
+        // asserted above), and exclusivity of `start..start+len` is the
+        // caller's contract.
+        unsafe { std::slice::from_raw_parts_mut(self.cells.as_ptr().add(start) as *mut f32, len) }
     }
 
     /// # Safety
@@ -230,7 +233,10 @@ impl SharedBuf {
     /// completed behind a barrier).
     pub(crate) unsafe fn read(&self, len: usize) -> &[f32] {
         debug_assert!(len <= self.cells.len());
-        std::slice::from_raw_parts(self.cells.as_ptr() as *const f32, len)
+        // SAFETY: UnsafeCell<f32> is repr(transparent) over f32, `len` is
+        // within the allocation, and quiescence of `0..len` is the
+        // caller's contract.
+        unsafe { std::slice::from_raw_parts(self.cells.as_ptr() as *const f32, len) }
     }
 
     pub(crate) fn capacity(&self) -> usize {
@@ -449,12 +455,12 @@ impl ShardedModel {
             // same ping-pong parity as the replicated forward:
             // layer 0 writes `a`, layer 1 writes `b`, ...
             let (dst, src) = if li % 2 == 0 { (buf_a, buf_b) } else { (buf_b, buf_a) };
-            // SAFETY: the barrier at the end of the previous iteration
-            // ordered every shard's writes to `src` before this read;
-            // nobody writes `src` this phase.
             let src: &[f32] = if li == 0 {
                 x
             } else {
+                // SAFETY: the barrier at the end of the previous iteration
+                // ordered every shard's writes to `src` before this read;
+                // nobody writes `src` this phase.
                 unsafe { src.read(batch * layer.in_width()) }
             };
             if sw > 0 {

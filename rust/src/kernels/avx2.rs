@@ -33,31 +33,36 @@ const _: () = assert!(TILE == 8, "avx2 tile kernels assume an 8-wide tile");
 #[target_feature(enable = "avx2")]
 #[target_feature(enable = "fma")]
 pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len().min(b.len());
-    let mut acc0 = _mm256_setzero_ps();
-    let mut acc1 = _mm256_setzero_ps();
-    let mut i = 0usize;
-    while i + 16 <= n {
-        let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
-        let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
-        acc0 = _mm256_fmadd_ps(a0, b0, acc0);
-        let a1 = _mm256_loadu_ps(a.as_ptr().add(i + 8));
-        let b1 = _mm256_loadu_ps(b.as_ptr().add(i + 8));
-        acc1 = _mm256_fmadd_ps(a1, b1, acc1);
-        i += 16;
+    // SAFETY: AVX2+FMA present per the fn contract; every load is kept in
+    // bounds of both slices by the `i + 16 <= n` / `i + 8 <= n` guards
+    // (n = min of the lengths), and the unchecked tail reads `i < n`.
+    unsafe {
+        let n = a.len().min(b.len());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
+            let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc0 = _mm256_fmadd_ps(a0, b0, acc0);
+            let a1 = _mm256_loadu_ps(a.as_ptr().add(i + 8));
+            let b1 = _mm256_loadu_ps(b.as_ptr().add(i + 8));
+            acc1 = _mm256_fmadd_ps(a1, b1, acc1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
+            let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc0 = _mm256_fmadd_ps(a0, b0, acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s = a.get_unchecked(i).mul_add(*b.get_unchecked(i), s);
+            i += 1;
+        }
+        s
     }
-    if i + 8 <= n {
-        let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
-        let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
-        acc0 = _mm256_fmadd_ps(a0, b0, acc0);
-        i += 8;
-    }
-    let mut s = hsum(_mm256_add_ps(acc0, acc1));
-    while i < n {
-        s = a.get_unchecked(i).mul_add(*b.get_unchecked(i), s);
-        i += 1;
-    }
-    s
 }
 
 /// Gather-MAC over separate value/index streams via `vgatherdps`.
@@ -69,36 +74,41 @@ pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
 #[target_feature(enable = "avx2")]
 #[target_feature(enable = "fma")]
 pub unsafe fn gather(vals: &[f32], idx: &[u32], xb: &[f32]) -> f32 {
-    let n = vals.len().min(idx.len());
-    let mut acc0 = _mm256_setzero_ps();
-    let mut acc1 = _mm256_setzero_ps();
-    let mut i = 0usize;
-    while i + 16 <= n {
-        let j0 = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
-        let v0 = _mm256_loadu_ps(vals.as_ptr().add(i));
-        let x0 = _mm256_i32gather_ps::<4>(xb.as_ptr(), j0);
-        acc0 = _mm256_fmadd_ps(v0, x0, acc0);
-        let j1 = _mm256_loadu_si256(idx.as_ptr().add(i + 8) as *const __m256i);
-        let v1 = _mm256_loadu_ps(vals.as_ptr().add(i + 8));
-        let x1 = _mm256_i32gather_ps::<4>(xb.as_ptr(), j1);
-        acc1 = _mm256_fmadd_ps(v1, x1, acc1);
-        i += 16;
+    // SAFETY: AVX2+FMA present per the fn contract; stream loads stay in
+    // bounds by the `i + 16/8 <= n` guards, and every gathered lane reads
+    // `xb[idx[i]]` with `idx[i] < xb.len()` per the fn contract.
+    unsafe {
+        let n = vals.len().min(idx.len());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let j0 = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
+            let v0 = _mm256_loadu_ps(vals.as_ptr().add(i));
+            let x0 = _mm256_i32gather_ps::<4>(xb.as_ptr(), j0);
+            acc0 = _mm256_fmadd_ps(v0, x0, acc0);
+            let j1 = _mm256_loadu_si256(idx.as_ptr().add(i + 8) as *const __m256i);
+            let v1 = _mm256_loadu_ps(vals.as_ptr().add(i + 8));
+            let x1 = _mm256_i32gather_ps::<4>(xb.as_ptr(), j1);
+            acc1 = _mm256_fmadd_ps(v1, x1, acc1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            let j0 = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
+            let v0 = _mm256_loadu_ps(vals.as_ptr().add(i));
+            let x0 = _mm256_i32gather_ps::<4>(xb.as_ptr(), j0);
+            acc0 = _mm256_fmadd_ps(v0, x0, acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s = vals
+                .get_unchecked(i)
+                .mul_add(*xb.get_unchecked(*idx.get_unchecked(i) as usize), s);
+            i += 1;
+        }
+        s
     }
-    if i + 8 <= n {
-        let j0 = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
-        let v0 = _mm256_loadu_ps(vals.as_ptr().add(i));
-        let x0 = _mm256_i32gather_ps::<4>(xb.as_ptr(), j0);
-        acc0 = _mm256_fmadd_ps(v0, x0, acc0);
-        i += 8;
-    }
-    let mut s = hsum(_mm256_add_ps(acc0, acc1));
-    while i < n {
-        s = vals
-            .get_unchecked(i)
-            .mul_add(*xb.get_unchecked(*idx.get_unchecked(i) as usize), s);
-        i += 1;
-    }
-    s
 }
 
 /// The batch-tiled condensed hot loop: for each interleaved (idx, value)
@@ -116,32 +126,45 @@ pub unsafe fn gather(vals: &[f32], idx: &[u32], xb: &[f32]) -> f32 {
 #[target_feature(enable = "avx2")]
 #[target_feature(enable = "fma")]
 pub unsafe fn tile_mac(row: &[IdxVal], xt: &[f32], acc0: &mut [f32; TILE], acc1: &mut [f32; TILE]) {
-    let mut a0 = _mm256_loadu_ps(acc0.as_ptr());
-    let mut a1 = _mm256_loadu_ps(acc1.as_ptr());
-    let mut it = row.chunks_exact(2);
-    for p in &mut it {
-        let x0 = _mm256_loadu_ps(xt.as_ptr().add(p[0].idx as usize * TILE));
-        a0 = _mm256_fmadd_ps(_mm256_set1_ps(p[0].v), x0, a0);
-        let x1 = _mm256_loadu_ps(xt.as_ptr().add(p[1].idx as usize * TILE));
-        a1 = _mm256_fmadd_ps(_mm256_set1_ps(p[1].v), x1, a1);
+    // SAFETY: AVX2+FMA present per the fn contract; each 8-wide load at
+    // `idx * TILE` is in bounds because `xt` holds `(max idx + 1) * TILE`
+    // floats per the fn contract, and the accumulators are exactly TILE
+    // (== 8) wide by their types.
+    unsafe {
+        let mut a0 = _mm256_loadu_ps(acc0.as_ptr());
+        let mut a1 = _mm256_loadu_ps(acc1.as_ptr());
+        let mut it = row.chunks_exact(2);
+        for p in &mut it {
+            let x0 = _mm256_loadu_ps(xt.as_ptr().add(p[0].idx as usize * TILE));
+            a0 = _mm256_fmadd_ps(_mm256_set1_ps(p[0].v), x0, a0);
+            let x1 = _mm256_loadu_ps(xt.as_ptr().add(p[1].idx as usize * TILE));
+            a1 = _mm256_fmadd_ps(_mm256_set1_ps(p[1].v), x1, a1);
+        }
+        if let [p] = it.remainder() {
+            let x0 = _mm256_loadu_ps(xt.as_ptr().add(p.idx as usize * TILE));
+            a0 = _mm256_fmadd_ps(_mm256_set1_ps(p.v), x0, a0);
+        }
+        _mm256_storeu_ps(acc0.as_mut_ptr(), a0);
+        _mm256_storeu_ps(acc1.as_mut_ptr(), a1);
     }
-    if let [p] = it.remainder() {
-        let x0 = _mm256_loadu_ps(xt.as_ptr().add(p.idx as usize * TILE));
-        a0 = _mm256_fmadd_ps(_mm256_set1_ps(p.v), x0, a0);
-    }
-    _mm256_storeu_ps(acc0.as_mut_ptr(), a0);
-    _mm256_storeu_ps(acc1.as_mut_ptr(), a1);
 }
 
 /// Fixed-order horizontal sum: low128 + high128, then pairwise within
 /// the quad.
+///
+/// # Safety
+/// AVX2 must be available (inherited from every caller's contract).
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn hsum(v: __m256) -> f32 {
-    let lo = _mm256_castps256_ps128(v);
-    let hi = _mm256_extractf128_ps::<1>(v);
-    let q = _mm_add_ps(lo, hi);
-    let d = _mm_add_ps(q, _mm_movehl_ps(q, q));
-    let s = _mm_add_ss(d, _mm_shuffle_ps::<0b01>(d, d));
-    _mm_cvtss_f32(s)
+    // SAFETY: register-only lane arithmetic — the only precondition is
+    // AVX2 availability, which the fn contract inherits from its callers.
+    unsafe {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let q = _mm_add_ps(lo, hi);
+        let d = _mm_add_ps(q, _mm_movehl_ps(q, q));
+        let s = _mm_add_ss(d, _mm_shuffle_ps::<0b01>(d, d));
+        _mm_cvtss_f32(s)
+    }
 }

@@ -204,10 +204,14 @@ impl Microkernel {
         debug_assert_eq!(vals.len(), idx.len());
         debug_assert!(idx.iter().all(|&j| (j as usize) < xb.len()));
         match self.kind {
-            KernelKind::Scalar => scalar::gather(vals, idx, xb),
-            KernelKind::Portable => portable::gather(vals, idx, xb),
+            // SAFETY: this fn's contract (`idx` in bounds of `xb`) is
+            // exactly each implementation's contract, forwarded verbatim;
+            // the Avx2 arm is only constructible when AVX2+FMA are
+            // runtime-detected (`KernelKind::available`).
+            KernelKind::Scalar => unsafe { scalar::gather(vals, idx, xb) },
+            KernelKind::Portable => unsafe { portable::gather(vals, idx, xb) },
             #[cfg(target_arch = "x86_64")]
-            KernelKind::Avx2 => avx2::gather(vals, idx, xb),
+            KernelKind::Avx2 => unsafe { avx2::gather(vals, idx, xb) },
             #[cfg(not(target_arch = "x86_64"))]
             KernelKind::Avx2 => unreachable!("avx2 is never selected on this architecture"),
         }
@@ -348,6 +352,8 @@ mod tests {
             let naive: f32 =
                 vals.iter().zip(&idx).map(|(v, &j)| v * xb[j as usize]).sum();
             for kind in available_kinds() {
+                // SAFETY: idx was drawn from `rng.below(d)`, so every
+                // element is `< d == xb.len()`.
                 let got = unsafe { Microkernel::of(kind).gather(&vals, &idx, &xb) };
                 assert!(
                     (got - naive).abs() < 1e-4 * (1.0 + naive.abs()),

@@ -41,12 +41,14 @@ pub unsafe fn gather(vals: &[f32], idx: &[u32], xb: &[f32]) -> f32 {
     let mut ii = idx.chunks_exact(TILE);
     for (v8, i8) in (&mut vi).zip(&mut ii) {
         for l in 0..TILE {
-            acc[l] += v8[l] * *xb.get_unchecked(i8[l] as usize);
+            // SAFETY: fn contract — every `idx` element is `< xb.len()`.
+            acc[l] += v8[l] * unsafe { *xb.get_unchecked(i8[l] as usize) };
         }
     }
     let mut s = reduce(&acc);
     for (v, i) in vi.remainder().iter().zip(ii.remainder()) {
-        s += v * *xb.get_unchecked(*i as usize);
+        // SAFETY: fn contract — every `idx` element is `< xb.len()`.
+        s += v * unsafe { *xb.get_unchecked(*i as usize) };
     }
     s
 }

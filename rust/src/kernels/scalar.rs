@@ -37,14 +37,18 @@ pub unsafe fn gather(vals: &[f32], idx: &[u32], xb: &[f32]) -> f32 {
     let mut vi = vals.chunks_exact(4);
     let mut ii = idx.chunks_exact(4);
     for (v4, i4) in (&mut vi).zip(&mut ii) {
-        acc[0] += v4[0] * *xb.get_unchecked(i4[0] as usize);
-        acc[1] += v4[1] * *xb.get_unchecked(i4[1] as usize);
-        acc[2] += v4[2] * *xb.get_unchecked(i4[2] as usize);
-        acc[3] += v4[3] * *xb.get_unchecked(i4[3] as usize);
+        // SAFETY: fn contract — every `idx` element is `< xb.len()`.
+        unsafe {
+            acc[0] += v4[0] * *xb.get_unchecked(i4[0] as usize);
+            acc[1] += v4[1] * *xb.get_unchecked(i4[1] as usize);
+            acc[2] += v4[2] * *xb.get_unchecked(i4[2] as usize);
+            acc[3] += v4[3] * *xb.get_unchecked(i4[3] as usize);
+        }
     }
     let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
     for (v, i) in vi.remainder().iter().zip(ii.remainder()) {
-        s += v * *xb.get_unchecked(*i as usize);
+        // SAFETY: fn contract — every `idx` element is `< xb.len()`.
+        s += v * unsafe { *xb.get_unchecked(*i as usize) };
     }
     s
 }

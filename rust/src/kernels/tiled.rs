@@ -140,12 +140,21 @@ pub fn forward_tiled(
 pub unsafe fn gather_pairs(row: &[IdxVal], xb: &[f32], kind: KernelKind) -> f32 {
     match kind {
         // f32::mul_add is IEEE fusedMultiplyAdd — bit-identical to the
-        // vfmadd lanes of the AVX2 tile path
-        KernelKind::Avx2 => gather_pairs_fma(row, xb),
-        _ => gather_pairs_muladd(row, xb),
+        // vfmadd lanes of the AVX2 tile path.
+        // SAFETY: both implementations carry this fn's exact contract
+        // (every `record.idx < xb.len()`), forwarded verbatim.
+        KernelKind::Avx2 => unsafe { gather_pairs_fma(row, xb) },
+        _ => unsafe { gather_pairs_muladd(row, xb) },
     }
 }
 
+/// Tile-lane dispatch between the AVX2 broadcast-FMA kernel and the
+/// autovectorized multiply-add lanes.
+///
+/// # Safety
+/// Every `record.idx as usize * TILE + TILE` must be `<= xt.len()`; the
+/// Avx2 kind additionally requires AVX2+FMA (guaranteed by the
+/// [`Microkernel`] dispatch invariant).
 #[inline]
 unsafe fn tile_mac(
     row: &[IdxVal],
@@ -156,8 +165,10 @@ unsafe fn tile_mac(
 ) {
     match kind {
         #[cfg(target_arch = "x86_64")]
-        KernelKind::Avx2 => super::avx2::tile_mac(row, xt, acc0, acc1),
-        _ => tile_mac_muladd(row, xt, acc0, acc1),
+        // SAFETY: both implementations carry this fn's exact contract,
+        // forwarded verbatim; Avx2 is only selectable when detected.
+        KernelKind::Avx2 => unsafe { super::avx2::tile_mac(row, xt, acc0, acc1) },
+        _ => unsafe { tile_mac_muladd(row, xt, acc0, acc1) },
     }
 }
 
@@ -178,44 +189,59 @@ unsafe fn tile_mac_muladd(
         let j0 = p[0].idx as usize * TILE;
         let v0 = p[0].v;
         for l in 0..TILE {
-            acc0[l] += v0 * *xt.get_unchecked(j0 + l);
+            // SAFETY: fn contract — `idx * TILE + TILE <= xt.len()`.
+            acc0[l] += v0 * unsafe { *xt.get_unchecked(j0 + l) };
         }
         let j1 = p[1].idx as usize * TILE;
         let v1 = p[1].v;
         for l in 0..TILE {
-            acc1[l] += v1 * *xt.get_unchecked(j1 + l);
+            // SAFETY: fn contract — `idx * TILE + TILE <= xt.len()`.
+            acc1[l] += v1 * unsafe { *xt.get_unchecked(j1 + l) };
         }
     }
     if let [p] = it.remainder() {
         let j = p.idx as usize * TILE;
         for l in 0..TILE {
-            acc0[l] += p.v * *xt.get_unchecked(j + l);
+            // SAFETY: fn contract — `idx * TILE + TILE <= xt.len()`.
+            acc0[l] += p.v * unsafe { *xt.get_unchecked(j + l) };
         }
     }
 }
 
+/// Multiply-then-add row kernel (scalar/portable association).
+///
+/// # Safety
+/// Every `record.idx as usize` must be `< xb.len()`.
 unsafe fn gather_pairs_muladd(row: &[IdxVal], xb: &[f32]) -> f32 {
     let (mut a0, mut a1) = (0f32, 0f32);
     let mut it = row.chunks_exact(2);
     for p in &mut it {
-        a0 += p[0].v * *xb.get_unchecked(p[0].idx as usize);
-        a1 += p[1].v * *xb.get_unchecked(p[1].idx as usize);
+        // SAFETY: fn contract — every `record.idx` is `< xb.len()`.
+        a0 += p[0].v * unsafe { *xb.get_unchecked(p[0].idx as usize) };
+        a1 += p[1].v * unsafe { *xb.get_unchecked(p[1].idx as usize) };
     }
     if let [p] = it.remainder() {
-        a0 += p.v * *xb.get_unchecked(p.idx as usize);
+        // SAFETY: fn contract — every `record.idx` is `< xb.len()`.
+        a0 += p.v * unsafe { *xb.get_unchecked(p.idx as usize) };
     }
     a0 + a1
 }
 
+/// Fused multiply-add row kernel (AVX2 association).
+///
+/// # Safety
+/// Every `record.idx as usize` must be `< xb.len()`.
 unsafe fn gather_pairs_fma(row: &[IdxVal], xb: &[f32]) -> f32 {
     let (mut a0, mut a1) = (0f32, 0f32);
     let mut it = row.chunks_exact(2);
     for p in &mut it {
-        a0 = p[0].v.mul_add(*xb.get_unchecked(p[0].idx as usize), a0);
-        a1 = p[1].v.mul_add(*xb.get_unchecked(p[1].idx as usize), a1);
+        // SAFETY: fn contract — every `record.idx` is `< xb.len()`.
+        a0 = p[0].v.mul_add(unsafe { *xb.get_unchecked(p[0].idx as usize) }, a0);
+        a1 = p[1].v.mul_add(unsafe { *xb.get_unchecked(p[1].idx as usize) }, a1);
     }
     if let [p] = it.remainder() {
-        a0 = p.v.mul_add(*xb.get_unchecked(p.idx as usize), a0);
+        // SAFETY: fn contract — every `record.idx` is `< xb.len()`.
+        a0 = p.v.mul_add(unsafe { *xb.get_unchecked(p.idx as usize) }, a0);
     }
     a0 + a1
 }

@@ -24,6 +24,11 @@
 //!
 //! Python never runs on the training or request path.
 
+// Every unsafe operation must sit in an explicit `unsafe {}` block even
+// inside `unsafe fn`, so each site is visible to `srigl lint`'s
+// SAFETY-comment rule (docs/ANALYSIS.md).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod arena;
 pub mod bench;
 pub mod data;
@@ -32,6 +37,7 @@ pub mod exp;
 pub mod flops;
 pub mod inference;
 pub mod kernels;
+pub mod lint;
 pub mod net;
 pub mod obs;
 pub mod runtime;

@@ -1,0 +1,649 @@
+//! `srigl lint` — repo-specific static checks for the unsafe serving core.
+//!
+//! A zero-dependency source scanner (no syn, no rustc plumbing — the
+//! offline build can't take either) that enforces four rules the generic
+//! toolchain can't express, over every `.rs` file under `rust/`:
+//!
+//! * **safety-comment** — every `unsafe` token (blocks, fns, impls, in
+//!   tests too) must be justified by a `// SAFETY:` comment on the same
+//!   line or in the contiguous comment/attribute block directly above it
+//!   (a `/// # Safety` doc section also counts, for `unsafe fn`
+//!   signatures).
+//! * **serve-unwrap** — no `.unwrap()` / `.expect(` on the serving paths
+//!   (`inference/frontend.rs`, `net/mod.rs`) outside `#[cfg(test)]`: a
+//!   panic there kills a connection thread and poisons shared locks. A
+//!   site that is genuinely infallible or startup-only carries a trailing
+//!   `// lint:allow-unwrap <reason>` marker — the reason is mandatory
+//!   prose for the reviewer, the marker is what the scanner honors.
+//! * **print-macro** — no bare `println!`/`eprintln!`/`print!`/`eprint!`
+//!   outside `#[cfg(test)]`, except in the CLI surface (`main.rs`), the
+//!   leveled logger itself (`util/log.rs`), harness/bench output
+//!   (`exp/`, `bench/`), integration-test binaries (`rust/tests/`, which
+//!   have no `#[cfg(test)]` regions to mask), and this reporter. Library
+//!   code logs through `util::log` so `SRIGL_LOG` filtering works.
+//! * **wire-consts** — the protocol constants in `net/mod.rs` must match
+//!   the byte-level spec in `docs/WIRE.md` (status bytes, frame cap,
+//!   control sentinel, reload opcode), so the document can't silently
+//!   drift from the implementation.
+//!
+//! The scanner lexes each file just enough to be trustworthy: string and
+//! char literals are blanked (including raw strings like the `r#"..."#`
+//! fixtures in `util/json.rs`) and comments are separated from code, so
+//! an `unsafe` inside a string or a `println!` inside a doc comment never
+//! trips a rule. See docs/ANALYSIS.md for the full rationale and the CI
+//! wiring (`lint` is a blocking job).
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One rule violation at a source location.
+#[derive(Debug)]
+pub struct Violation {
+    pub file: PathBuf,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file.display(), self.line, self.rule, self.msg)
+    }
+}
+
+/// Files (relative to the repo root, `/`-separated) where `.unwrap()` /
+/// `.expect(` need justification: the request-serving paths.
+const SERVE_PATHS: &[&str] = &["rust/src/inference/frontend.rs", "rust/src/net/mod.rs"];
+
+/// Marker that exempts one line from the serve-unwrap rule; must be
+/// followed by a reason in the same comment.
+const ALLOW_UNWRAP: &str = "lint:allow-unwrap";
+
+/// Files/dirs (relative, `/`-separated) whose job is terminal output and
+/// may therefore use print macros directly.
+const PRINT_ALLOWED: &[&str] = &[
+    "rust/src/main.rs",     // CLI surface
+    "rust/src/util/log.rs", // the logger's own sink
+    "rust/src/lint.rs",     // this reporter
+    "rust/src/exp/",        // paper-table harness output
+    "rust/src/bench/",      // bench banners
+    "rust/tests/",          // integration binaries print skip notices; no #[cfg(test)] to mask
+];
+
+/// Run every rule over the repo rooted at `root`; violations are sorted
+/// by file then line.
+pub fn run(root: &Path) -> Result<Vec<Violation>> {
+    let rust_dir = root.join("rust");
+    if !rust_dir.is_dir() {
+        bail!("{} has no rust/ directory (pass --root REPO)", root.display());
+    }
+    let mut files = Vec::new();
+    collect_rs(&rust_dir, &mut files)?;
+    files.sort();
+
+    let mut out = Vec::new();
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = rel_slashed(path, root);
+        let sc = scrub(&src);
+        let in_test = test_mask(&sc.code);
+        check_safety_comments(path, &sc, &mut out);
+        if SERVE_PATHS.contains(&rel.as_str()) {
+            check_serve_unwraps(path, &sc, &in_test, &mut out);
+        }
+        if !PRINT_ALLOWED.iter().any(|p| rel == *p || (p.ends_with('/') && rel.starts_with(p))) {
+            check_print_macros(path, &sc, &in_test, &mut out);
+        }
+    }
+    check_wire_consts(root, &mut out)?;
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(out)
+}
+
+/// CLI entry for `srigl lint`: print a report, fail if anything fired.
+pub fn cmd(root: &Path) -> Result<()> {
+    let violations = run(root)?;
+    if violations.is_empty() {
+        println!("lint: clean ({})", rules_summary());
+        return Ok(());
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    bail!("lint: {} violation(s)", violations.len());
+}
+
+fn rules_summary() -> &'static str {
+    "safety-comment, serve-unwrap, print-macro, wire-consts"
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_slashed(path: &Path, root: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+// ---------------------------------------------------------------------------
+// Lexing: split each line into code (literals blanked) and comment text
+// ---------------------------------------------------------------------------
+
+struct Scrubbed {
+    /// Per-line code with comments removed and string/char contents
+    /// blanked (delimiters kept, so brace counting still works).
+    code: Vec<String>,
+    /// Per-line comment text (line + block + doc comments, concatenated).
+    comment: Vec<String>,
+}
+
+fn scrub(src: &str) -> Scrubbed {
+    enum Mode {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(usize),
+    }
+    let b: Vec<char> = src.chars().collect();
+    let mut code = Vec::new();
+    let mut comment = Vec::new();
+    let mut cl = String::new();
+    let mut cm = String::new();
+    let mut mode = Mode::Code;
+    let mut prev_ident = false; // last emitted code char was ident-ish (an `r` after one can't open a raw string)
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            code.push(std::mem::take(&mut cl));
+            comment.push(std::mem::take(&mut cm));
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Code;
+            }
+            prev_ident = false;
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = b.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if !prev_ident && (c == 'r' || (c == 'b' && next == Some('r'))) && {
+                    // raw (byte) string: r"..."  r#"..."#  br#"..."#
+                    let mut j = i + if c == 'b' { 2 } else { 1 };
+                    while b.get(j) == Some(&'#') {
+                        j += 1;
+                    }
+                    b.get(j) == Some(&'"')
+                } {
+                    let start = i + if c == 'b' { 2 } else { 1 };
+                    let mut j = start;
+                    while b.get(j) == Some(&'#') {
+                        j += 1;
+                    }
+                    cl.push('"');
+                    mode = Mode::RawStr(j - start);
+                    i = j + 1;
+                } else if c == '"' {
+                    cl.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if c == '\'' {
+                    // char literal vs lifetime
+                    if next == Some('\\') {
+                        cl.push_str("''");
+                        i += 2; // consume '\ then skip to the closing quote
+                        while i < b.len() && b[i] != '\'' {
+                            i += 1;
+                        }
+                        i += 1;
+                    } else if b.get(i + 2) == Some(&'\'') {
+                        cl.push_str("''");
+                        i += 3;
+                    } else {
+                        cl.push('\''); // lifetime marker
+                        i += 1;
+                    }
+                    prev_ident = false;
+                } else {
+                    prev_ident = c.is_alphanumeric() || c == '_';
+                    cl.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                cm.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                let next = b.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    cm.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // keep line accounting for escaped-newline continuations
+                    i += if b.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    cl.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && (1..=hashes).all(|k| b.get(i + k) == Some(&'#')) {
+                    cl.push('"');
+                    mode = Mode::Code;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    code.push(cl);
+    comment.push(cm);
+    Scrubbed { code, comment }
+}
+
+/// Standalone-token match: `tok` in `line` with non-ident chars (or line
+/// edges) on both sides — `unsafe` matches, `unsafe_op_in_unsafe_fn`
+/// doesn't.
+fn has_token(line: &str, tok: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(tok) {
+        let at = from + pos;
+        let before_ok = at == 0
+            || !line[..at].chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let after = at + tok.len();
+        let after_ok = after >= line.len()
+            || !line[after..].chars().next().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + tok.len();
+    }
+    false
+}
+
+/// Per-line mask: true where the line sits inside a `#[cfg(test)]` item
+/// (the attribute line itself through the item's closing brace).
+fn test_mask(code: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let mut i = 0;
+    while i < code.len() {
+        if !code[i].contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut started = false;
+        let mut j = i;
+        while j < code.len() {
+            mask[j] = true;
+            for ch in code[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if started && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+fn is_safety_comment(comment: &str) -> bool {
+    comment.contains("SAFETY") || comment.contains("# Safety")
+}
+
+fn check_safety_comments(path: &Path, sc: &Scrubbed, out: &mut Vec<Violation>) {
+    for (i, line) in sc.code.iter().enumerate() {
+        if !has_token(line, "unsafe") {
+            continue;
+        }
+        if is_safety_comment(&sc.comment[i]) {
+            continue;
+        }
+        // Walk up through the contiguous comment/attribute/blank block.
+        // Lines that themselves contain `unsafe` are part of the same
+        // cluster (e.g. four raw-pointer derefs in a row) and share one
+        // justification.
+        let mut ok = false;
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            if is_safety_comment(&sc.comment[j]) {
+                ok = true;
+                break;
+            }
+            let c = sc.code[j].trim();
+            if !(c.is_empty() || c.starts_with('#') || has_token(c, "unsafe")) {
+                break; // hit real code without finding a justification
+            }
+        }
+        if !ok {
+            out.push(Violation {
+                file: path.to_path_buf(),
+                line: i + 1,
+                rule: "safety-comment",
+                msg: "`unsafe` without a `// SAFETY:` justification on this line or \
+                      directly above it"
+                    .into(),
+            });
+        }
+    }
+}
+
+fn check_serve_unwraps(path: &Path, sc: &Scrubbed, in_test: &[bool], out: &mut Vec<Violation>) {
+    for (i, line) in sc.code.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        let hit = if line.contains(".unwrap()") {
+            Some(".unwrap()")
+        } else if line.contains(".expect(") {
+            Some(".expect(...)")
+        } else {
+            None
+        };
+        let Some(what) = hit else { continue };
+        if sc.comment[i].contains(ALLOW_UNWRAP) {
+            continue;
+        }
+        out.push(Violation {
+            file: path.to_path_buf(),
+            line: i + 1,
+            rule: "serve-unwrap",
+            msg: format!(
+                "{what} on a serving path: handle the error (util::log + degrade) or mark \
+                 the line `// {ALLOW_UNWRAP} <reason>` if it is provably infallible"
+            ),
+        });
+    }
+}
+
+fn check_print_macros(path: &Path, sc: &Scrubbed, in_test: &[bool], out: &mut Vec<Violation>) {
+    const MACROS: &[&str] = &["println!", "eprintln!", "print!", "eprint!"];
+    for (i, line) in sc.code.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        for m in MACROS {
+            if has_token(line, &m[..m.len() - 1]) && line.contains(m) {
+                out.push(Violation {
+                    file: path.to_path_buf(),
+                    line: i + 1,
+                    rule: "print-macro",
+                    msg: format!("bare `{m}` in library code: use `util::log` so `SRIGL_LOG` \
+                                  level filtering applies"),
+                });
+                break;
+            }
+        }
+    }
+}
+
+// --- wire-consts -----------------------------------------------------------
+
+/// `pub const NAME: _ = EXPR;` in `src` → (value, 1-based line).
+fn const_value(src: &str, name: &str) -> Option<(u64, usize)> {
+    for (i, raw) in src.lines().enumerate() {
+        let t = raw.trim();
+        let Some(rest) = t.strip_prefix("pub const ") else { continue };
+        let Some((decl, val)) = rest.split_once('=') else { continue };
+        if decl.split(':').next().map(str::trim) != Some(name) {
+            continue;
+        }
+        return eval_const(val.trim().trim_end_matches(';')).map(|v| (v, i + 1));
+    }
+    None
+}
+
+/// Evaluate the tiny const-expression language the wire module uses:
+/// integer literals (decimal/hex, `_` separators), `u32::MAX`, `A << B`.
+fn eval_const(expr: &str) -> Option<u64> {
+    let e = expr.trim();
+    if e == "u32::MAX" {
+        return Some(u64::from(u32::MAX));
+    }
+    if let Some((a, b)) = e.split_once("<<") {
+        return parse_int(a)?.checked_shl(parse_int(b)? as u32);
+    }
+    parse_int(e)
+}
+
+fn parse_int(s: &str) -> Option<u64> {
+    let s = s.trim().replace('_', "");
+    match s.strip_prefix("0x") {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse().ok(),
+    }
+}
+
+/// First `<number> MiB` mention in the doc, as bytes.
+fn doc_mib_cap(doc: &str) -> Option<u64> {
+    let at = doc.find(" MiB")?;
+    let digits: String = doc[..at]
+        .chars()
+        .rev()
+        .take_while(|c| c.is_ascii_digit())
+        .collect::<Vec<_>>()
+        .into_iter()
+        .rev()
+        .collect();
+    parse_int(&digits)?.checked_shl(20)
+}
+
+/// Single digit `d` such that `doc` contains `pat(d)`.
+fn doc_digit(doc: &str, pat: impl Fn(u64) -> String) -> Option<u64> {
+    (0..=9).find(|&d| doc.contains(&pat(d)))
+}
+
+fn check_wire_consts(root: &Path, out: &mut Vec<Violation>) -> Result<()> {
+    let net_path = root.join("rust/src/net/mod.rs");
+    let doc_path = root.join("docs/WIRE.md");
+    let net = fs::read_to_string(&net_path)
+        .with_context(|| format!("reading {}", net_path.display()))?;
+    let doc = fs::read_to_string(&doc_path)
+        .with_context(|| format!("reading {}", doc_path.display()))?;
+
+    let mut expect = |name: &str, documented: Option<u64>, doc_desc: &str| {
+        let Some(want) = documented else {
+            out.push(Violation {
+                file: doc_path.clone(),
+                line: 1,
+                rule: "wire-consts",
+                msg: format!("docs/WIRE.md no longer documents {doc_desc} (expected for `{name}`)"),
+            });
+            return;
+        };
+        match const_value(&net, name) {
+            Some((got, _)) if got == want => {}
+            Some((got, line)) => out.push(Violation {
+                file: net_path.clone(),
+                line,
+                rule: "wire-consts",
+                msg: format!("`{name}` = {got} but docs/WIRE.md documents {doc_desc} = {want}"),
+            }),
+            None => out.push(Violation {
+                file: net_path.clone(),
+                line: 1,
+                rule: "wire-consts",
+                msg: format!("`pub const {name}` not found but docs/WIRE.md documents {doc_desc}"),
+            }),
+        }
+    };
+
+    expect("MAX_FRAME_BYTES", doc_mib_cap(&doc), "the frame cap");
+    expect("STATUS_OK", doc_digit(&doc, |d| format!("`{d}` Ok")), "status Ok");
+    expect("STATUS_BUSY", doc_digit(&doc, |d| format!("`{d}` Busy")), "status Busy");
+    expect("STATUS_ERROR", doc_digit(&doc, |d| format!("`{d}` Error")), "status Error");
+    expect("STATUS_EPOCH", doc_digit(&doc, |d| format!("`{d}` Epoch")), "status Epoch");
+    expect(
+        "CONTROL_OP_RELOAD",
+        doc_digit(&doc, |d| format!("opcode {d} (reload)")),
+        "the reload opcode",
+    );
+    expect(
+        "CONTROL_SENTINEL",
+        doc.contains("rows == u32::MAX").then(|| u64::from(u32::MAX)),
+        "the control sentinel (`rows == u32::MAX`)",
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lines(src: &str) -> Scrubbed {
+        scrub(src)
+    }
+
+    #[test]
+    fn scrub_separates_comments_and_blanks_literals() {
+        let sc = lines("let x = \"unsafe println!\"; // SAFETY: not really\nlet y = 'u';\n");
+        assert!(!sc.code[0].contains("unsafe"), "string contents blanked: {}", sc.code[0]);
+        assert!(sc.comment[0].contains("SAFETY"));
+        assert_eq!(sc.code[1], "let y = '';");
+    }
+
+    #[test]
+    fn scrub_handles_raw_strings_and_lifetimes() {
+        let sc = lines("let j = r#\"{\"k\": \"unsafe\"}\"#;\nfn f<'a>(x: &'a str) {}\n");
+        assert!(!sc.code[0].contains("unsafe"));
+        assert!(sc.code[0].ends_with(';'), "raw string closed: {}", sc.code[0]);
+        assert!(sc.code[1].contains("<'a>"), "lifetimes survive: {}", sc.code[1]);
+    }
+
+    #[test]
+    fn scrub_tracks_multiline_and_nested_comments() {
+        let sc = lines("/* outer /* inner */ still comment */ code();\n// tail\n");
+        assert_eq!(sc.code[0].trim(), "code();");
+        assert!(sc.comment[1].contains("tail"));
+    }
+
+    #[test]
+    fn scrub_survives_escaped_newline_in_string() {
+        let sc = lines("let s = \"a \\\n   b\";\nafter();\n");
+        assert_eq!(sc.code.len(), 3, "line accounting preserved");
+        assert_eq!(sc.code[2].trim(), "after();");
+    }
+
+    #[test]
+    fn token_matching_respects_word_boundaries() {
+        assert!(has_token("unsafe impl Send for X {}", "unsafe"));
+        assert!(!has_token("#![deny(unsafe_op_in_unsafe_fn)]", "unsafe"));
+        assert!(has_token("eprintln!(\"x\")", "eprintln"));
+        assert!(!has_token("writeln!(f)", "println"));
+    }
+
+    #[test]
+    fn safety_rule_accepts_adjacent_and_trailing_justifications() {
+        let ok = "// SAFETY: bounds checked above\nunsafe { go() };\n\
+                  let x = unsafe { f() }; // SAFETY: f is pure\n\
+                  /// docs\n/// # Safety\n/// caller promises\npub unsafe fn g() {}\n";
+        let sc = lines(ok);
+        let mut out = Vec::new();
+        check_safety_comments(Path::new("x.rs"), &sc, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+
+        let bad = "let first = 1;\nunsafe { go() };\n";
+        let mut out = Vec::new();
+        check_safety_comments(Path::new("x.rs"), &lines(bad), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 2);
+    }
+
+    #[test]
+    fn serve_unwrap_rule_honors_tests_and_markers() {
+        let src = "fn f() {\n    a.lock().unwrap();\n    b.expect(\"up\"); // lint:allow-unwrap startup only\n}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        let sc = lines(src);
+        let mask = test_mask(&sc.code);
+        let mut out = Vec::new();
+        check_serve_unwraps(Path::new("x.rs"), &sc, &mask, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 2);
+    }
+
+    #[test]
+    fn print_rule_skips_tests_and_doc_comments() {
+        let src = "/// println! in docs is fine\nfn f() { crate::util::log::info(\"a\", \"b\"); }\nfn g() { println!(\"no\"); }\n#[cfg(test)]\nmod tests { fn t() { println!(\"ok\"); } }\n";
+        let sc = lines(src);
+        let mask = test_mask(&sc.code);
+        let mut out = Vec::new();
+        check_print_macros(Path::new("x.rs"), &sc, &mask, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 3);
+    }
+
+    #[test]
+    fn const_mini_evaluator() {
+        assert_eq!(eval_const("64 << 20"), Some(64 << 20));
+        assert_eq!(eval_const("u32::MAX"), Some(u64::from(u32::MAX)));
+        assert_eq!(eval_const("0xFF"), Some(255));
+        assert_eq!(eval_const("1_000"), Some(1000));
+        let src = "pub const MAX_FRAME_BYTES: usize = 64 << 20;\n";
+        assert_eq!(const_value(src, "MAX_FRAME_BYTES"), Some((64 << 20, 1)));
+    }
+
+    /// The rules hold over this repo itself — the in-process equivalent
+    /// of the CI `lint` job, so `cargo test` alone catches a regression.
+    #[test]
+    fn repo_is_lint_clean() {
+        // CARGO_MANIFEST_DIR is the repo root (the crate lives at the top
+        // level with sources under rust/).
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let violations = run(&root).expect("lint run");
+        assert!(
+            violations.is_empty(),
+            "lint violations:\n{}",
+            violations.iter().map(|v| format!("  {v}\n")).collect::<String>()
+        );
+    }
+}

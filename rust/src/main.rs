@@ -8,6 +8,7 @@
 //!   arena [flags]        duel two serving configs on shared traffic; --history
 //!   check                verify artifacts load and execute
 //!   list                 list models in the artifact manifest
+//!   lint [--root DIR]    repo-specific static checks (docs/ANALYSIS.md)
 
 use std::sync::Arc;
 
@@ -60,7 +61,9 @@ USAGE:
               [--label L] [--no-persist]
   srigl arena --history     (render persisted BENCH_*.json trajectory)
   srigl check
-  srigl list"
+  srigl list
+  srigl lint [--root DIR]   (SAFETY comments, serve-path unwraps, print
+              macros, wire-constant drift; blocking in CI — docs/ANALYSIS.md)"
     );
 }
 
@@ -81,6 +84,7 @@ fn run() -> Result<()> {
         Some("arena") => cmd_arena(&args),
         Some("check") => cmd_check(),
         Some("list") => cmd_list(),
+        Some("lint") => srigl::lint::cmd(std::path::Path::new(&args.get_or("root", "."))),
         _ => {
             usage();
             Ok(())
@@ -553,6 +557,10 @@ mod sighup {
         extern "C" {
             fn signal(signum: i32, handler: usize) -> usize;
         }
+        // SAFETY: `signal` is async-signal-safe to install at startup;
+        // `on_hup` is `extern "C"`, matches the handler ABI, and only
+        // touches a lock-free static AtomicBool, which is the entire set
+        // of operations POSIX permits inside a signal handler.
         unsafe {
             signal(SIGHUP, on_hup as usize);
         }

@@ -214,8 +214,8 @@ pub fn read_request<R: Read>(r: &mut R) -> io::Result<Option<Incoming>> {
     }
     let mut body = vec![0u8; len];
     r.read_exact(&mut body)?;
-    let id = u64::from_le_bytes(body[0..8].try_into().unwrap());
-    let rows = u32::from_le_bytes(body[8..12].try_into().unwrap());
+    let id = u64::from_le_bytes(body[0..8].try_into().unwrap()); // lint:allow-unwrap infallible: 8-byte slice of a >=12-byte buffer
+    let rows = u32::from_le_bytes(body[8..12].try_into().unwrap()); // lint:allow-unwrap infallible: fixed-width slice
     if rows == CONTROL_SENTINEL {
         if body.len() != 13 {
             return Err(io::Error::new(
@@ -275,7 +275,7 @@ pub fn read_response<R: Read>(r: &mut R) -> io::Result<Option<ResponseFrame>> {
     }
     let mut body = vec![0u8; len];
     r.read_exact(&mut body)?;
-    let id = u64::from_le_bytes(body[0..8].try_into().unwrap());
+    let id = u64::from_le_bytes(body[0..8].try_into().unwrap()); // lint:allow-unwrap infallible: 8-byte slice of a >=9-byte buffer
     let status = body[8];
     let rest = &body[9..];
     let body = match status {
@@ -283,21 +283,21 @@ pub fn read_response<R: Read>(r: &mut R) -> io::Result<Option<ResponseFrame>> {
             if rest.len() < 4 {
                 return Err(io::Error::new(io::ErrorKind::InvalidData, "Ok frame missing rows"));
             }
-            let rows = u32::from_le_bytes(rest[0..4].try_into().unwrap());
+            let rows = u32::from_le_bytes(rest[0..4].try_into().unwrap()); // lint:allow-unwrap infallible: length checked above
             ResponseBody::Output { rows, data: f32s_from_le(&rest[4..])? }
         }
         STATUS_BUSY => {
             if rest.len() != 4 {
                 return Err(io::Error::new(io::ErrorKind::InvalidData, "Busy frame malformed"));
             }
-            ResponseBody::Busy { retry_after_ms: u32::from_le_bytes(rest.try_into().unwrap()) }
+            ResponseBody::Busy { retry_after_ms: u32::from_le_bytes(rest.try_into().unwrap()) } // lint:allow-unwrap infallible: length checked above
         }
         STATUS_ERROR => ResponseBody::Error(String::from_utf8_lossy(rest).into_owned()),
         STATUS_EPOCH => {
             if rest.len() != 8 {
                 return Err(io::Error::new(io::ErrorKind::InvalidData, "Epoch frame malformed"));
             }
-            ResponseBody::Epoch(u64::from_le_bytes(rest.try_into().unwrap()))
+            ResponseBody::Epoch(u64::from_le_bytes(rest.try_into().unwrap())) // lint:allow-unwrap infallible: length checked above
         }
         other => {
             return Err(io::Error::new(

@@ -1,0 +1,74 @@
+//! Sync-primitive shim: `std::sync` in normal builds, `loom::sync`
+//! under `--cfg loom`.
+//!
+//! The concurrency core (the [`crate::util::threadpool`] injector, the
+//! frontend's `Egress` bounded queue, the engine's `EpochCell`
+//! publish/shadow-read pair, and the persistent shard team's
+//! mailbox + completion latch) imports its primitives from here instead
+//! of from `std::sync` directly. A normal build re-exports the std
+//! types unchanged — zero cost, identical semantics. A build with
+//! `RUSTFLAGS="--cfg loom"` swaps in the vendored loom model checker's
+//! types, whose every operation is a scheduler decision point, so
+//! `rust/tests/loom_models.rs` can exhaustively explore interleavings
+//! (see docs/ANALYSIS.md for the models and the checker's bounds).
+//!
+//! Rules for ported code:
+//! * import `Mutex`/`Condvar`/`RwLock`/`Arc`/`atomic::*` from this
+//!   module, never from `std::sync`;
+//! * do not use timed waits (`wait_timeout`) or spurious-wakeup
+//!   assumptions in the modeled fast paths — loom's condvar wakeups are
+//!   exact, and a lost notify surfaces as a model deadlock;
+//! * `UnsafeCell` uses the closure API (`with`/`with_mut`) under both
+//!   cfgs so each access is a decision point under loom.
+
+#[cfg(not(loom))]
+pub use std::sync::{
+    Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{
+        fence, AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+    };
+}
+
+/// Closure-API `UnsafeCell` matching `loom::cell::UnsafeCell`, so code
+/// is source-identical under both cfgs.
+#[cfg(not(loom))]
+#[derive(Debug)]
+pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+#[cfg(not(loom))]
+impl<T> UnsafeCell<T> {
+    pub fn new(t: T) -> UnsafeCell<T> {
+        UnsafeCell(std::cell::UnsafeCell::new(t))
+    }
+
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        f(self.0.get())
+    }
+
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        f(self.0.get())
+    }
+
+    pub fn into_inner(self) -> T {
+        self.0.into_inner()
+    }
+}
+
+#[cfg(loom)]
+pub use loom::sync::{
+    Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use loom::sync::atomic::{
+        fence, AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+    };
+}
+
+#[cfg(loom)]
+pub use loom::cell::UnsafeCell;

@@ -4,7 +4,10 @@
 //! work queue feeding the worker-pool inference server.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+
+// Shimmed primitives: std normally, loom under `--cfg loom` so the loom
+// models in rust/tests/loom_models.rs can check the Injector exhaustively.
+use crate::util::sync::{Condvar, Mutex};
 
 /// Run `f(chunk_index, range)` over `n` items split into `threads` nearly
 /// equal contiguous ranges, in parallel via scoped threads. `threads == 1`

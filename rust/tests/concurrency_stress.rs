@@ -1,0 +1,221 @@
+//! Std-threaded stress mirrors of the loom models.
+//!
+//! Each test replays a `rust/tests/loom_models.rs` scenario with real OS
+//! parallelism at a scale loom cannot reach (4 threads × 1000
+//! iterations): loom proves the invariant over ALL interleavings of a
+//! tiny schedule, these tests hammer ONE large schedule on real hardware
+//! where weak-memory effects and genuine contention exist. The pairing is
+//! deliberate — a failure here with a green loom run points at something
+//! outside the model (memory ordering, a scale-dependent path), which is
+//! exactly the triage signal docs/ANALYSIS.md documents.
+//!
+//! Excluded from `--cfg loom` builds: these use std threads/atomics
+//! directly and would be meaningless (and non-compiling) under the
+//! mocked runtime.
+#![cfg(not(loom))]
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use srigl::inference::engine::{DoneLatch, EpochCell, Mailbox};
+use srigl::inference::frontend::{Egress, SendOutcome};
+use srigl::net::{ResponseBody, ResponseFrame};
+use srigl::util::threadpool::Injector;
+
+const THREADS: usize = 4;
+const ITERS: usize = 1000;
+
+fn out_frame(id: u64) -> ResponseFrame {
+    ResponseFrame { id, body: ResponseBody::Output { rows: 1, data: vec![1.0] } }
+}
+
+/// Mirror of `injector_bounded_counts_every_item_once`: 4 producers race
+/// 1000 bounded pushes each against a draining consumer on a capacity-8
+/// queue; the accepted/rejected/consumed conservation law must hold at
+/// full contention.
+#[test]
+fn stress_injector_bounded_conservation() {
+    let inj: Arc<Injector<u64>> = Arc::new(Injector::with_capacity(8));
+    let accepted = Arc::new(AtomicU64::new(0));
+    let producers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let (inj, accepted) = (Arc::clone(&inj), Arc::clone(&accepted));
+            thread::spawn(move || {
+                for i in 0..ITERS {
+                    if inj.push_bounded((t * ITERS + i) as u64).is_ok() {
+                        accepted.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            })
+        })
+        .collect();
+    let consumer = {
+        let inj = Arc::clone(&inj);
+        thread::spawn(move || {
+            let (mut consumed, mut buf) = (0u64, Vec::new());
+            loop {
+                buf.clear();
+                let n = inj.pop_batch(16, &mut buf);
+                if n == 0 {
+                    break;
+                }
+                consumed += n as u64;
+            }
+            consumed
+        })
+    };
+    for p in producers {
+        p.join().unwrap();
+    }
+    inj.close();
+    let consumed = consumer.join().unwrap();
+    assert_eq!(consumed, accepted.load(Ordering::Relaxed), "every accepted item consumed once");
+}
+
+/// Mirror of `egress_overflow_headroom_counting`: 4 workers push 1000
+/// responses each through a small egress while the writer drains; the
+/// outcome tally must account for every frame and the writer must receive
+/// exactly the enqueued ones.
+#[test]
+fn stress_egress_overflow_conservation() {
+    let e = Arc::new(Egress::with_headroom(8, 4, 7));
+    let (queued, busy, dropped) =
+        (Arc::new(AtomicU64::new(0)), Arc::new(AtomicU64::new(0)), Arc::new(AtomicU64::new(0)));
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let e = Arc::clone(&e);
+            let (queued, busy, dropped) =
+                (Arc::clone(&queued), Arc::clone(&busy), Arc::clone(&dropped));
+            thread::spawn(move || {
+                for i in 0..ITERS {
+                    e.job_started();
+                    match e.send(out_frame((t * ITERS + i) as u64)) {
+                        SendOutcome::Queued => queued.fetch_add(1, Ordering::Relaxed),
+                        SendOutcome::ConvertedBusy => busy.fetch_add(1, Ordering::Relaxed),
+                        SendOutcome::Dropped => dropped.fetch_add(1, Ordering::Relaxed),
+                        SendOutcome::Gone => panic!("egress closed while jobs in flight"),
+                    };
+                    e.job_finished();
+                }
+            })
+        })
+        .collect();
+    let writer = {
+        let e = Arc::clone(&e);
+        thread::spawn(move || {
+            let mut received = 0u64;
+            while e.recv().is_some() {
+                received += 1;
+            }
+            received
+        })
+    };
+    for w in workers {
+        w.join().unwrap();
+    }
+    e.reader_done();
+    let received = writer.join().unwrap();
+    let (q, b, d) =
+        (queued.load(Ordering::Relaxed), busy.load(Ordering::Relaxed), dropped.load(Ordering::Relaxed));
+    assert_eq!(q + b + d, (THREADS * ITERS) as u64, "every send has exactly one outcome");
+    assert_eq!(received, q + b, "writer drains exactly the enqueued frames");
+}
+
+/// Mirror of `epoch_shadow_never_leads_published`: one publisher walks
+/// the epoch through 1000 generations while 4 readers continuously check
+/// shadow-vs-snapshot coherence under real parallelism.
+#[test]
+fn stress_epoch_shadow_coherence() {
+    let cell = Arc::new(EpochCell::new(0, Arc::new(0u64)));
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let (cell, stop) = (Arc::clone(&cell), Arc::clone(&stop));
+            thread::spawn(move || {
+                let mut checks = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let shadow = cell.epoch();
+                    let (id, v) = cell.current();
+                    assert!(id >= shadow, "snapshot id {id} older than peeked shadow {shadow}");
+                    assert_eq!(*v, id, "snapshot pairs id with that id's stack");
+                    checks += 1;
+                }
+                checks
+            })
+        })
+        .collect();
+    for id in 1..=ITERS as u64 {
+        cell.publish(id, Arc::new(id)).unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        assert!(r.join().unwrap() > 0, "reader made progress");
+    }
+    assert_eq!(cell.epoch(), ITERS as u64);
+}
+
+/// A probe job mirroring the loom mailbox models' use-after-free
+/// detector: raw pointer into the coordinator's stack plus a liveness
+/// flag cleared once the latch releases the coordinator.
+enum ProbeJob {
+    Run { data: *const u64, valid: Arc<AtomicBool> },
+    Stop,
+}
+
+// SAFETY: `data` is only dereferenced while the posting coordinator
+// blocks on the completion latch, which keeps the pointed-to stack slot
+// alive; the `valid` flag turns any violation of that protocol into a
+// deterministic assertion failure instead of UB.
+unsafe impl Send for ProbeJob {}
+
+/// Mirror of the two mailbox/latch models at scale: 2 shards × 1000
+/// rounds of post → run → arrive → reset, with the use-after-free probe
+/// armed on every round.
+#[test]
+fn stress_mailbox_latch_rounds() {
+    const SHARDS: usize = 2;
+    let mbs: Vec<Arc<Mailbox<ProbeJob>>> = (0..SHARDS).map(|_| Arc::new(Mailbox::new())).collect();
+    let latch = Arc::new(DoneLatch::new());
+    let sum = Arc::new(AtomicU64::new(0));
+    let shards: Vec<_> = mbs
+        .iter()
+        .map(|mb| {
+            let (mb, latch, sum) = (Arc::clone(mb), Arc::clone(&latch), Arc::clone(&sum));
+            thread::spawn(move || loop {
+                match mb.take() {
+                    ProbeJob::Stop => return,
+                    ProbeJob::Run { data, valid } => {
+                        assert!(
+                            valid.load(Ordering::SeqCst),
+                            "use-after-free: shard dereferenced a reclaimed job"
+                        );
+                        // SAFETY: the coordinator is blocked on the latch
+                        // until `arrive` below, so `data`'s stack slot is
+                        // still alive here.
+                        sum.fetch_add(unsafe { *data }, Ordering::SeqCst);
+                        latch.arrive();
+                    }
+                }
+            })
+        })
+        .collect();
+    let mut expect = 0u64;
+    for round in 1..=ITERS as u64 {
+        let x: u64 = round; // stack storage the jobs point into
+        let valid = Arc::new(AtomicBool::new(true));
+        for mb in &mbs {
+            mb.put(ProbeJob::Run { data: &x, valid: Arc::clone(&valid) });
+        }
+        latch.wait_and_reset(SHARDS);
+        valid.store(false, Ordering::SeqCst); // x is dead to the shards now
+        expect += SHARDS as u64 * round;
+    }
+    for mb in &mbs {
+        mb.put(ProbeJob::Stop);
+    }
+    for s in shards {
+        s.join().unwrap();
+    }
+    assert_eq!(sum.load(Ordering::SeqCst), expect, "every round ran on every shard exactly once");
+}

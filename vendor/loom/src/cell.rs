@@ -1,0 +1,31 @@
+//! `loom::cell::UnsafeCell` — closure-based access (`with`/`with_mut`)
+//! so every access is a scheduler decision point. Unlike crates.io
+//! loom, the vendored checker does not track concurrent-access
+//! violations inside the closures (execution is fully serialized, so
+//! closures can never overlap); protocol races around the cell are
+//! still explored via the decision points.
+
+use crate::rt;
+
+#[derive(Debug)]
+pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+impl<T> UnsafeCell<T> {
+    pub fn new(t: T) -> UnsafeCell<T> {
+        UnsafeCell(std::cell::UnsafeCell::new(t))
+    }
+
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        rt::yield_point();
+        f(self.0.get())
+    }
+
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        rt::yield_point();
+        f(self.0.get())
+    }
+
+    pub fn into_inner(self) -> T {
+        self.0.into_inner()
+    }
+}

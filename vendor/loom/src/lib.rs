@@ -1,0 +1,35 @@
+//! A vendored, offline, loom-API-compatible **bounded model checker**.
+//!
+//! The build container has no network and no crates.io index, so the
+//! real [`loom`](https://docs.rs/loom) crate cannot be added as a
+//! dependency. This crate implements the subset of loom's API that the
+//! `srigl` concurrency models use — [`model`], [`thread`], [`sync`],
+//! [`cell`] — on top of a CHESS-style scheduler (`rt`):
+//!
+//! * every loom-managed thread is a real OS thread, but exactly one
+//!   runs at a time;
+//! * every sync operation is a decision point; the decision sequence is
+//!   explored depth-first across repeated executions;
+//! * context switches away from a runnable thread ("preemptions") are
+//!   bounded (`LOOM_MAX_PREEMPTIONS`, default 2) — exploration is
+//!   exhaustive *within that bound*, the standard CHESS trade-off;
+//! * a state where no thread can run is reported as a deadlock with a
+//!   per-thread blocked-reason dump, which is how lost wakeups and
+//!   lost notifications are caught.
+//!
+//! **Honest limitations versus crates.io loom** (documented in the
+//! repo's `docs/ANALYSIS.md`): memory orderings are collapsed to
+//! sequential consistency (no Relaxed/Acquire/Release reordering), and
+//! `cell::UnsafeCell` does not track concurrent-access violations
+//! (serialized execution makes closure overlap impossible). The shim in
+//! `rust/src/util/sync.rs` keeps the ported code source-compatible with
+//! the real loom, so this crate can be swapped for it in an online
+//! environment without touching the models.
+
+mod rt;
+
+pub mod cell;
+pub mod sync;
+pub mod thread;
+
+pub use rt::model;

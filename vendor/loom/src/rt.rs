@@ -1,0 +1,443 @@
+//! The bounded scheduler behind [`crate::model`].
+//!
+//! Execution model: every loom-managed thread is a real OS thread, but
+//! **exactly one runs at a time** — all others park on one condvar until
+//! the scheduler hands them the baton. Every synchronization operation
+//! (lock attempt, condvar block, atomic access, cell access, spawn,
+//! yield) is a *decision point*: the scheduler picks which runnable
+//! thread continues. The decision sequence of one execution is recorded
+//! as a path; [`advance`] backtracks depth-first over untried
+//! alternatives, so repeated executions enumerate every schedule —
+//! subject to a CHESS-style *preemption bound* (switching away from a
+//! thread that could have continued costs one preemption; forced
+//! switches, when the current thread blocked or finished, are free).
+//!
+//! Within the preemption bound the exploration is exhaustive at
+//! sync-operation granularity under sequentially-consistent memory;
+//! see `docs/ANALYSIS.md` in the parent repo for exactly what that does
+//! and does not cover compared to crates.io loom.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as OsCondvar, Mutex as OsMutex};
+
+/// Sentinel panic payload used to unwind parked threads when an
+/// execution aborts (assertion failure or deadlock elsewhere).
+pub(crate) struct AbortToken;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Run {
+    Ready,
+    Blocked(&'static str),
+    Finished,
+}
+
+struct ThreadSlot {
+    run: Run,
+    /// A wakeup that arrived before the target actually parked
+    /// (unblock/park races are resolved with a permit, like a parker).
+    permit: bool,
+    /// Threads blocked in `join` on this one.
+    joiners: Vec<usize>,
+}
+
+/// One scheduling decision: which thread was chosen, out of which
+/// runnable set, while which thread held the baton. Only decision
+/// points with ≥ 2 runnable threads are recorded — single-candidate
+/// handoffs are forced and carry no exploration value.
+#[derive(Clone)]
+pub(crate) struct Choice {
+    pub chosen: usize,
+    pub enabled: Vec<usize>,
+    pub prev: usize,
+    pub prev_enabled: bool,
+}
+
+struct State {
+    threads: Vec<ThreadSlot>,
+    active: usize,
+    replay: Vec<Choice>,
+    path: Vec<Choice>,
+    depth: usize,
+    live: usize,
+    abort: bool,
+    failure: Option<Box<dyn Any + Send>>,
+}
+
+pub(crate) struct Scheduler {
+    st: OsMutex<State>,
+    cv: OsCondvar,
+    done_cv: OsCondvar,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<(Arc<Scheduler>, usize)>> = const { RefCell::new(None) };
+}
+
+pub(crate) fn set_ctx(sched: Arc<Scheduler>, tid: usize) {
+    CTX.with(|c| *c.borrow_mut() = Some((sched, tid)));
+}
+
+fn ctx() -> (Arc<Scheduler>, usize) {
+    CTX.with(|c| {
+        c.borrow()
+            .clone()
+            .expect("loom primitives may only be used inside loom::model")
+    })
+}
+
+/// Decision point: the current thread stays runnable; the scheduler may
+/// keep it running or preempt it.
+pub(crate) fn yield_point() {
+    let (s, me) = ctx();
+    s.yield_point(me);
+}
+
+/// Park the current thread until another thread calls [`unblock`] on it.
+pub(crate) fn block(why: &'static str) {
+    let (s, me) = ctx();
+    s.block(me, why);
+}
+
+/// Make `tid` runnable again (or hand it a permit if it has not parked
+/// yet). Does not transfer control; `tid` becomes a candidate at the
+/// next decision point.
+pub(crate) fn unblock(tid: usize) {
+    let (s, _) = ctx();
+    s.unblock(tid);
+}
+
+pub(crate) fn current_tid() -> usize {
+    ctx().1
+}
+
+pub(crate) fn current_sched() -> Arc<Scheduler> {
+    ctx().0
+}
+
+impl Scheduler {
+    fn new(replay: Vec<Choice>) -> Scheduler {
+        Scheduler {
+            st: OsMutex::new(State {
+                threads: Vec::new(),
+                active: 0,
+                replay,
+                path: Vec::new(),
+                depth: 0,
+                live: 0,
+                abort: false,
+                failure: None,
+            }),
+            cv: OsCondvar::new(),
+            done_cv: OsCondvar::new(),
+        }
+    }
+
+    /// Register a new thread; returns its id. The baton is not moved.
+    pub(crate) fn register(&self) -> usize {
+        let mut s = self.st.lock().unwrap();
+        s.threads.push(ThreadSlot { run: Run::Ready, permit: false, joiners: Vec::new() });
+        s.live += 1;
+        s.threads.len() - 1
+    }
+
+    /// Pick the next thread to run. `prev` is the thread that held the
+    /// baton (it may itself be runnable, blocked, or finished).
+    fn schedule(&self, s: &mut State, prev: usize) {
+        if s.abort {
+            self.cv.notify_all();
+            return;
+        }
+        let enabled: Vec<usize> = s
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.run == Run::Ready)
+            .map(|(i, _)| i)
+            .collect();
+        if enabled.is_empty() {
+            if s.live > 0 {
+                let report: Vec<String> = s
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .map(|(i, t)| format!("thread {i}: {:?}", t.run))
+                    .collect();
+                s.failure.get_or_insert_with(|| {
+                    Box::new(format!("loom: deadlock — no runnable thread ({})", report.join(", ")))
+                });
+                s.abort = true;
+                self.cv.notify_all();
+                self.done_cv.notify_all();
+            }
+            return;
+        }
+        let prev_enabled = enabled.contains(&prev);
+        let chosen = if enabled.len() == 1 {
+            // Forced handoff: not a decision, not recorded.
+            enabled[0]
+        } else {
+            let d = s.depth;
+            let chosen = if d < s.replay.len() {
+                let c = s.replay[d].chosen;
+                if !enabled.contains(&c) {
+                    s.failure.get_or_insert_with(|| {
+                        Box::new(
+                            "loom: schedule replay diverged — the model is nondeterministic \
+                             (avoid wall-clock, RNG, or iteration-order dependence)"
+                                .to_string(),
+                        )
+                    });
+                    s.abort = true;
+                    self.cv.notify_all();
+                    self.done_cv.notify_all();
+                    return;
+                }
+                c
+            } else if prev_enabled {
+                prev
+            } else {
+                enabled[0]
+            };
+            s.path.push(Choice { chosen, enabled, prev, prev_enabled });
+            s.depth += 1;
+            chosen
+        };
+        s.active = chosen;
+        self.cv.notify_all();
+    }
+
+    fn yield_point(&self, me: usize) {
+        let mut s = self.st.lock().unwrap();
+        if !s.abort {
+            self.schedule(&mut s, me);
+        }
+        while !s.abort && s.active != me {
+            s = self.cv.wait(s).unwrap();
+        }
+        if s.abort {
+            drop(s);
+            panic::panic_any(AbortToken);
+        }
+    }
+
+    fn block(&self, me: usize, why: &'static str) {
+        let mut s = self.st.lock().unwrap();
+        if !s.abort {
+            if s.threads[me].permit {
+                s.threads[me].permit = false; // wakeup already arrived: stay runnable
+            } else {
+                s.threads[me].run = Run::Blocked(why);
+            }
+            self.schedule(&mut s, me);
+        }
+        while !s.abort && s.active != me {
+            s = self.cv.wait(s).unwrap();
+        }
+        if s.abort {
+            drop(s);
+            panic::panic_any(AbortToken);
+        }
+    }
+
+    fn unblock(&self, tid: usize) {
+        let mut s = self.st.lock().unwrap();
+        match s.threads[tid].run {
+            Run::Blocked(_) => s.threads[tid].run = Run::Ready,
+            Run::Ready => s.threads[tid].permit = true,
+            Run::Finished => {}
+        }
+    }
+
+    fn unblock_locked(s: &mut State, tid: usize) {
+        match s.threads[tid].run {
+            Run::Blocked(_) => s.threads[tid].run = Run::Ready,
+            Run::Ready => s.threads[tid].permit = true,
+            Run::Finished => {}
+        }
+    }
+
+    /// Called by a thread wrapper after its closure returned normally.
+    pub(crate) fn finish(&self, me: usize) {
+        let mut s = self.st.lock().unwrap();
+        s.threads[me].run = Run::Finished;
+        s.live -= 1;
+        let joiners = std::mem::take(&mut s.threads[me].joiners);
+        for j in joiners {
+            Self::unblock_locked(&mut s, j);
+        }
+        if s.live == 0 {
+            self.done_cv.notify_all();
+        } else {
+            self.schedule(&mut s, me);
+        }
+    }
+
+    /// Called by a thread wrapper after its closure panicked. The first
+    /// real failure is kept; everything else is woken up to drain.
+    pub(crate) fn fail(&self, me: usize, payload: Box<dyn Any + Send>) {
+        let mut s = self.st.lock().unwrap();
+        if !payload.is::<AbortToken>() {
+            s.failure.get_or_insert(payload);
+        }
+        s.abort = true;
+        s.threads[me].run = Run::Finished;
+        s.live -= 1;
+        self.cv.notify_all();
+        self.done_cv.notify_all();
+    }
+
+    /// Block the current thread until `target` finishes.
+    pub(crate) fn join_thread(&self, me: usize, target: usize) {
+        loop {
+            {
+                let mut s = self.st.lock().unwrap();
+                if s.abort {
+                    drop(s);
+                    panic::panic_any(AbortToken);
+                }
+                if s.threads[target].run == Run::Finished {
+                    return;
+                }
+                s.threads[target].joiners.push(me);
+            }
+            block("join");
+        }
+    }
+
+    fn wait_all_done(&self) {
+        let mut s = self.st.lock().unwrap();
+        while s.live > 0 {
+            s = self.done_cv.wait(s).unwrap();
+        }
+    }
+
+    fn take_results(&self) -> (Vec<Choice>, Option<Box<dyn Any + Send>>) {
+        let mut s = self.st.lock().unwrap();
+        (std::mem::take(&mut s.path), s.failure.take())
+    }
+}
+
+/// Total preemptions along `path` plus the one implied by appending
+/// `cand` to a decision with context `(prev, prev_enabled)`.
+fn preemptions_with(path: &[Choice], prev: usize, prev_enabled: bool, cand: usize) -> usize {
+    let base: usize =
+        path.iter().filter(|c| c.prev_enabled && c.chosen != c.prev).count();
+    base + usize::from(prev_enabled && cand != prev)
+}
+
+/// Depth-first backtracking: mutate `path` into the next unexplored
+/// schedule prefix, or return false when the (preemption-bounded) space
+/// is exhausted.
+fn advance(path: &mut Vec<Choice>, max_preemptions: usize) -> bool {
+    while let Some(last) = path.pop() {
+        let pos = last
+            .enabled
+            .iter()
+            .position(|&t| t == last.chosen)
+            .expect("chosen thread must be in its own enabled set");
+        for &cand in &last.enabled[pos + 1..] {
+            if preemptions_with(path, last.prev, last.prev_enabled, cand) <= max_preemptions {
+                path.push(Choice { chosen: cand, ..last.clone() });
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Run `f` under every schedule reachable within the preemption bound
+/// (`LOOM_MAX_PREEMPTIONS`, default 2). Panics on the first failing
+/// schedule, on deadlock, or if the space exceeds
+/// `LOOM_MAX_ITERATIONS` (default 500_000 — a model that large should
+/// be shrunk, not silently truncated).
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let max_preemptions = env_usize("LOOM_MAX_PREEMPTIONS", 2);
+    let max_iterations = env_usize("LOOM_MAX_ITERATIONS", 500_000);
+    let f = Arc::new(f);
+    let mut prefix: Vec<Choice> = Vec::new();
+    let mut iterations: usize = 0;
+    loop {
+        iterations += 1;
+        if iterations > max_iterations {
+            panic!(
+                "loom: exceeded LOOM_MAX_ITERATIONS ({max_iterations}) without exhausting \
+                 the schedule space — shrink the model or raise the limit"
+            );
+        }
+        let sched = Arc::new(Scheduler::new(std::mem::take(&mut prefix)));
+        let tid0 = sched.register();
+        debug_assert_eq!(tid0, 0);
+        let (s2, f2) = (Arc::clone(&sched), Arc::clone(&f));
+        let main = std::thread::spawn(move || {
+            set_ctx(Arc::clone(&s2), 0);
+            match panic::catch_unwind(AssertUnwindSafe(|| f2())) {
+                Ok(()) => s2.finish(0),
+                Err(p) => s2.fail(0, p),
+            }
+        });
+        sched.wait_all_done();
+        let _ = main.join();
+        let (path, failure) = sched.take_results();
+        if let Some(payload) = failure {
+            eprintln!("loom: failing schedule found after {iterations} execution(s)");
+            panic::resume_unwind(payload);
+        }
+        prefix = path;
+        if !advance(&mut prefix, max_preemptions) {
+            break;
+        }
+    }
+}
+
+/// Spawn a loom-managed thread inside a model.
+pub(crate) fn spawn_thread<F, T>(f: F) -> crate::thread::JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let sched = current_sched();
+    let tid = sched.register();
+    let result: Arc<OsMutex<Option<std::thread::Result<T>>>> = Arc::new(OsMutex::new(None));
+    let (s2, r2) = (Arc::clone(&sched), Arc::clone(&result));
+    std::thread::spawn(move || {
+        set_ctx(Arc::clone(&s2), tid);
+        // Wait for the baton before running any user code.
+        {
+            let mut st = s2.st.lock().unwrap();
+            while !st.abort && st.active != tid {
+                st = s2.cv.wait(st).unwrap();
+            }
+            if st.abort {
+                drop(st);
+                s2.fail(tid, Box::new(AbortToken));
+                return;
+            }
+        }
+        match panic::catch_unwind(AssertUnwindSafe(f)) {
+            Ok(v) => {
+                *r2.lock().unwrap() = Some(Ok(v));
+                s2.finish(tid);
+            }
+            Err(p) => {
+                if p.is::<AbortToken>() {
+                    s2.fail(tid, Box::new(AbortToken));
+                } else {
+                    *r2.lock().unwrap() = Some(Err(Box::new("thread panicked")));
+                    s2.fail(tid, p);
+                }
+            }
+        }
+    });
+    // Let the scheduler consider running the child right away.
+    yield_point();
+    crate::thread::JoinHandle { tid, result }
+}

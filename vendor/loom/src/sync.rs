@@ -1,0 +1,315 @@
+//! Model-checked stand-ins for `std::sync` types. Each operation is a
+//! scheduler decision point; blocking operations park the thread in the
+//! scheduler (so a waiter that can never be woken is reported as a
+//! deadlock, not spun forever). Poisoning is not modeled: a panicking
+//! thread aborts the whole execution, so `lock()` always returns `Ok`.
+
+pub use std::sync::Arc;
+use std::sync::LockResult;
+use std::sync::Mutex as OsMutex;
+use std::sync::MutexGuard as OsMutexGuard;
+use std::sync::RwLock as OsRwLock;
+use std::sync::RwLockReadGuard as OsRwLockReadGuard;
+use std::sync::RwLockWriteGuard as OsRwLockWriteGuard;
+
+use crate::rt;
+
+pub mod atomic;
+
+// ---------------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------------
+
+struct MutexState {
+    locked: bool,
+    waiters: Vec<usize>,
+}
+
+/// A mutex whose lock/unlock edges are schedule decision points.
+pub struct Mutex<T> {
+    st: OsMutex<MutexState>,
+    data: OsMutex<T>,
+}
+
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    inner: Option<OsMutexGuard<'a, T>>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(t: T) -> Mutex<T> {
+        Mutex { st: OsMutex::new(MutexState { locked: false, waiters: Vec::new() }), data: OsMutex::new(t) }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        rt::yield_point();
+        let me = rt::current_tid();
+        loop {
+            let acquired = {
+                let mut s = self.st.lock().unwrap();
+                if s.locked {
+                    s.waiters.push(me);
+                    false
+                } else {
+                    s.locked = true;
+                    true
+                }
+            };
+            if acquired {
+                let inner = self.data.lock().unwrap();
+                return Ok(MutexGuard { lock: self, inner: Some(inner) });
+            }
+            rt::block("mutex lock");
+        }
+    }
+
+    pub fn try_lock(&self) -> Result<MutexGuard<'_, T>, std::sync::TryLockError<MutexGuard<'_, T>>> {
+        rt::yield_point();
+        let mut s = self.st.lock().unwrap();
+        if s.locked {
+            Err(std::sync::TryLockError::WouldBlock)
+        } else {
+            s.locked = true;
+            drop(s);
+            let inner = self.data.lock().unwrap();
+            Ok(MutexGuard { lock: self, inner: Some(inner) })
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        Ok(self.data.into_inner().unwrap())
+    }
+
+    /// Release the logical lock and wake every waiter (they re-race;
+    /// the scheduler explores the acquisition orders).
+    fn raw_unlock(&self) {
+        let waiters = {
+            let mut s = self.st.lock().unwrap();
+            s.locked = false;
+            std::mem::take(&mut s.waiters)
+        };
+        for w in waiters {
+            rt::unblock(w);
+        }
+    }
+}
+
+impl<'a, T> MutexGuard<'a, T> {
+    /// Condvar support: release without dropping, returning the lock.
+    fn dismantle(mut self) -> &'a Mutex<T> {
+        self.inner.take();
+        let lock = self.lock;
+        std::mem::forget(self);
+        lock.raw_unlock();
+        lock
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        self.inner.take();
+        self.lock.raw_unlock();
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard still holds the data lock")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard still holds the data lock")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------------
+
+/// A condition variable with exact (non-spurious) wakeups: a thread
+/// parked in `wait` runs again only after a notify — so a lost wakeup
+/// shows up as a loom deadlock.
+pub struct Condvar {
+    st: OsMutex<Vec<usize>>,
+}
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        Condvar { st: OsMutex::new(Vec::new()) }
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let me = rt::current_tid();
+        // Register *before* releasing the mutex: the registration and the
+        // release are atomic with respect to decision points, matching
+        // the release-and-sleep atomicity of a real condvar.
+        self.st.lock().unwrap().push(me);
+        let lock = guard.dismantle();
+        rt::block("condvar wait");
+        lock.lock()
+    }
+
+    pub fn notify_one(&self) {
+        let woken = {
+            let mut s = self.st.lock().unwrap();
+            if s.is_empty() {
+                None
+            } else {
+                Some(s.remove(0))
+            }
+        };
+        if let Some(w) = woken {
+            rt::unblock(w);
+        }
+        rt::yield_point();
+    }
+
+    pub fn notify_all(&self) {
+        let woken = std::mem::take(&mut *self.st.lock().unwrap());
+        for w in woken {
+            rt::unblock(w);
+        }
+        rt::yield_point();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RwLock
+// ---------------------------------------------------------------------------
+
+struct RwState {
+    readers: usize,
+    writer: bool,
+    waiters: Vec<usize>,
+}
+
+/// A readers-writer lock whose acquire/release edges are decision points.
+pub struct RwLock<T> {
+    st: OsMutex<RwState>,
+    data: OsRwLock<T>,
+}
+
+pub struct RwLockReadGuard<'a, T> {
+    lock: &'a RwLock<T>,
+    inner: Option<OsRwLockReadGuard<'a, T>>,
+}
+
+pub struct RwLockWriteGuard<'a, T> {
+    lock: &'a RwLock<T>,
+    inner: Option<OsRwLockWriteGuard<'a, T>>,
+}
+
+impl<T> RwLock<T> {
+    pub fn new(t: T) -> RwLock<T> {
+        RwLock {
+            st: OsMutex::new(RwState { readers: 0, writer: false, waiters: Vec::new() }),
+            data: OsRwLock::new(t),
+        }
+    }
+
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        rt::yield_point();
+        let me = rt::current_tid();
+        loop {
+            let acquired = {
+                let mut s = self.st.lock().unwrap();
+                if s.writer {
+                    s.waiters.push(me);
+                    false
+                } else {
+                    s.readers += 1;
+                    true
+                }
+            };
+            if acquired {
+                let inner = self.data.read().unwrap();
+                return Ok(RwLockReadGuard { lock: self, inner: Some(inner) });
+            }
+            rt::block("rwlock read");
+        }
+    }
+
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        rt::yield_point();
+        let me = rt::current_tid();
+        loop {
+            let acquired = {
+                let mut s = self.st.lock().unwrap();
+                if s.writer || s.readers > 0 {
+                    s.waiters.push(me);
+                    false
+                } else {
+                    s.writer = true;
+                    true
+                }
+            };
+            if acquired {
+                let inner = self.data.write().unwrap();
+                return Ok(RwLockWriteGuard { lock: self, inner: Some(inner) });
+            }
+            rt::block("rwlock write");
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        Ok(self.data.into_inner().unwrap())
+    }
+
+}
+
+impl<T> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        self.inner.take();
+        let waiters = {
+            let mut s = self.lock.st.lock().unwrap();
+            s.readers -= 1;
+            if s.readers == 0 { std::mem::take(&mut s.waiters) } else { Vec::new() }
+        };
+        for w in waiters {
+            rt::unblock(w);
+        }
+    }
+}
+
+impl<T> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        self.inner.take();
+        let waiters = {
+            let mut s = self.lock.st.lock().unwrap();
+            s.writer = false;
+            std::mem::take(&mut s.waiters)
+        };
+        for w in waiters {
+            rt::unblock(w);
+        }
+    }
+}
+
+impl<T> std::ops::Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard still holds the data lock")
+    }
+}
+
+impl<T> std::ops::Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard still holds the data lock")
+    }
+}
+
+impl<T> std::ops::DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard still holds the data lock")
+    }
+}

@@ -1,0 +1,93 @@
+//! Model-checked atomics. Every access is a scheduler decision point,
+//! so all interleavings of atomic operations are explored — under
+//! **sequential consistency**: the vendored checker does not model
+//! Relaxed/Acquire/Release reordering (crates.io loom does). A model
+//! that passes here proves its interleaving logic, not its memory
+//! orderings; the TSan CI job covers the latter on real hardware.
+
+pub use std::sync::atomic::Ordering;
+
+use crate::rt;
+
+macro_rules! atomic {
+    ($name:ident, $os:ty, $ty:ty) => {
+        pub struct $name($os);
+
+        impl $name {
+            pub fn new(v: $ty) -> $name {
+                $name(<$os>::new(v))
+            }
+
+            pub fn load(&self, _order: Ordering) -> $ty {
+                rt::yield_point();
+                self.0.load(Ordering::SeqCst)
+            }
+
+            pub fn store(&self, v: $ty, _order: Ordering) {
+                rt::yield_point();
+                self.0.store(v, Ordering::SeqCst)
+            }
+
+            pub fn swap(&self, v: $ty, _order: Ordering) -> $ty {
+                rt::yield_point();
+                self.0.swap(v, Ordering::SeqCst)
+            }
+
+            pub fn compare_exchange(
+                &self,
+                current: $ty,
+                new: $ty,
+                _success: Ordering,
+                _failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                rt::yield_point();
+                self.0.compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+            }
+
+            pub fn into_inner(self) -> $ty {
+                self.0.into_inner()
+            }
+        }
+    };
+}
+
+atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+
+macro_rules! atomic_arith {
+    ($name:ident, $ty:ty) => {
+        impl $name {
+            pub fn fetch_add(&self, v: $ty, _order: Ordering) -> $ty {
+                rt::yield_point();
+                self.0.fetch_add(v, Ordering::SeqCst)
+            }
+
+            pub fn fetch_sub(&self, v: $ty, _order: Ordering) -> $ty {
+                rt::yield_point();
+                self.0.fetch_sub(v, Ordering::SeqCst)
+            }
+
+            pub fn fetch_max(&self, v: $ty, _order: Ordering) -> $ty {
+                rt::yield_point();
+                self.0.fetch_max(v, Ordering::SeqCst)
+            }
+
+            pub fn fetch_min(&self, v: $ty, _order: Ordering) -> $ty {
+                rt::yield_point();
+                self.0.fetch_min(v, Ordering::SeqCst)
+            }
+        }
+    };
+}
+
+atomic_arith!(AtomicU32, u32);
+atomic_arith!(AtomicU64, u64);
+atomic_arith!(AtomicUsize, usize);
+
+/// A fence is a decision point; ordering effects are SeqCst-collapsed.
+pub fn fence(_order: Ordering) {
+    rt::yield_point();
+    std::sync::atomic::fence(Ordering::SeqCst);
+}

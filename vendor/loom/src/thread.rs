@@ -1,0 +1,38 @@
+//! Model-checked thread spawn/join. Spawned threads are real OS
+//! threads serialized by the scheduler; `spawn` and `join` are decision
+//! points, and joining a thread that can never finish is reported as a
+//! deadlock.
+
+use std::sync::{Arc, Mutex};
+
+use crate::rt;
+
+pub struct JoinHandle<T> {
+    pub(crate) tid: usize,
+    pub(crate) result: Arc<Mutex<Option<std::thread::Result<T>>>>,
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        let sched = rt::current_sched();
+        let me = rt::current_tid();
+        sched.join_thread(me, self.tid);
+        self.result
+            .lock()
+            .unwrap()
+            .take()
+            .expect("joined thread finished without storing a result")
+    }
+}
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    rt::spawn_thread(f)
+}
+
+pub fn yield_now() {
+    rt::yield_point();
+}
