@@ -1,0 +1,153 @@
+//! f32-vs-int8 duel on the Fig. 4 ViT-FF layer geometry (768x3072 @ 90%
+//! sparse, 10% neurons ablated): the f32 condensed pair against the
+//! quantized condensed pair, plus a scalar-forced int8 lane so the JSON
+//! line shows what the `vpmaddwd` integer MACs buy over the integer
+//! oracle on each machine.
+//!
+//! Before any timing, every quantized output is checked against the f32
+//! condensed oracle under the documented per-row error budget
+//! (`QuantizedCondensed::row_error_bound`, docs/KERNELS.md) — a bench
+//! that got faster by drifting out of budget must fail loudly, not
+//! persist a flattering number. The final line is a machine-readable
+//! `{"bench":...}` summary persisted via `arena::persist_bench_summary`
+//! so CI tracks the int8 speedup and the storage ratio across machines.
+
+use srigl::bench::{bench, black_box, Measurement};
+use srigl::inference::{LayerBundle, LinearKernel, QuantizedLayer};
+use srigl::kernels::{self, KernelKind, Microkernel};
+use srigl::util::json::{arr, num, obj, s, Json};
+use std::time::Duration;
+
+fn main() {
+    let (n, d, sparsity, ablated) = (768usize, 3072usize, 0.9, 0.1);
+    let bundle = LayerBundle::synth(n, d, sparsity, ablated, 42);
+    let mut quant_scalar =
+        QuantizedLayer::new(&bundle.w, &bundle.mask, &bundle.bias).expect("u16-indexable width");
+    quant_scalar.mk = Microkernel::of(KernelKind::Scalar);
+
+    let kernels_under_test: Vec<(&str, &dyn LinearKernel)> = vec![
+        ("condensed", &bundle.condensed),
+        ("condensed-tiled", &bundle.condensed_tiled),
+        ("quantized[scalar]", &quant_scalar),
+        ("quantized", &bundle.quantized),
+        ("quantized-tiled", &bundle.quantized_tiled),
+    ];
+
+    let q = &bundle.quantized.q;
+    let na = q.n_active();
+    println!(
+        "quant_forward — {n}x{d} @ {:.0}% sparsity, {:.0}% ablated, dispatch {}",
+        sparsity * 100.0,
+        ablated * 100.0,
+        kernels::describe_selection()
+    );
+    println!(
+        "f32 condensed {} KiB -> int8 quantized {} KiB ({:.2}x smaller)",
+        bundle.condensed.storage_bytes() / 1024,
+        bundle.quantized.storage_bytes() / 1024,
+        bundle.condensed.storage_bytes() as f64 / bundle.quantized.storage_bytes() as f64
+    );
+    println!(
+        "{:>18} {:>6} {:>8} {:>12} {:>10} {:>8}",
+        "kernel", "batch", "threads", "median (us)", "GFLOP/s", "vs f32"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rng = srigl::util::rng::Rng::new(7);
+    // (batch=256, threads=1) medians for the headline comparison
+    let mut f32_tiled_256_us = 0.0f64;
+    let mut int8_tiled_256_us = 0.0f64;
+    for &batch in &[1usize, 8, 256] {
+        let x: Vec<f32> = (0..batch * d).map(|_| rng.normal_f32()).collect();
+
+        // Correctness gate before timing: every quantized lane must stay
+        // within the documented per-row budget of the f32 oracle.
+        let mut want = vec![0f32; batch * na];
+        bundle.condensed.forward(&x, batch, &mut want, 1);
+        for (name, kernel) in &kernels_under_test {
+            if !name.starts_with("quantized") {
+                continue;
+            }
+            let mut got = vec![0f32; batch * na];
+            kernel.forward(&x, batch, &mut got, 1);
+            for b in 0..batch {
+                let xmax = x[b * d..(b + 1) * d].iter().fold(0f32, |m, &v| m.max(v.abs()));
+                for r in 0..na {
+                    let budget = q.row_error_bound(r, xmax) * 1.01 + 1e-5;
+                    let err = (got[b * na + r] - want[b * na + r]).abs();
+                    assert!(
+                        err <= budget,
+                        "{name} batch {batch} row {r}: error {err} exceeds budget {budget}"
+                    );
+                }
+            }
+        }
+
+        for &threads in &[1usize, 4] {
+            // per-(batch, threads) f32 tiled baseline for the speedup column
+            let mut f32_us = 0.0f64;
+            for (name, kernel) in &kernels_under_test {
+                let mut out = vec![0f32; batch * kernel.out_width()];
+                let m: Measurement = bench(name, 5, Duration::from_millis(40), || {
+                    kernel.forward(black_box(&x), batch, &mut out, threads);
+                    black_box(&out);
+                });
+                let med_us = m.median_us();
+                // 2 MACs per stored weight per example — the MAC count is
+                // representation-independent, so int8 GFLOP/s are directly
+                // comparable to f32 (they are "effective" FLOPs)
+                let stored: usize = kernel.row_weights(n).iter().sum();
+                let gflops = 2.0 * stored as f64 * batch as f64 / m.median_s().max(1e-12) / 1e9;
+                if *name == "condensed-tiled" {
+                    f32_us = med_us;
+                    if batch == 256 && threads == 1 {
+                        f32_tiled_256_us = med_us;
+                    }
+                }
+                if *name == "quantized-tiled" && batch == 256 && threads == 1 {
+                    int8_tiled_256_us = med_us;
+                }
+                let speed = if f32_us > 0.0 && name.starts_with("quantized") {
+                    format!("{:.2}x", f32_us / med_us)
+                } else {
+                    "-".into()
+                };
+                println!(
+                    "{name:>18} {batch:>6} {threads:>8} {med_us:>12.1} {gflops:>10.2} {speed:>8}"
+                );
+                rows.push(obj(vec![
+                    ("kernel", s(name)),
+                    ("batch", num(batch as f64)),
+                    ("threads", num(threads as f64)),
+                    ("median_us", num(med_us)),
+                    ("gflops", num(gflops)),
+                ]));
+            }
+        }
+    }
+    if f32_tiled_256_us > 0.0 && int8_tiled_256_us > 0.0 {
+        println!(
+            "\nbatch-256 headline: quantized-tiled {:.2}x vs f32 condensed-tiled \
+             (outputs within the documented error budget)",
+            f32_tiled_256_us / int8_tiled_256_us
+        );
+    }
+    let summary = obj(vec![
+        ("bench", s("quant_forward")),
+        ("kernel", s(kernels::selected().name())),
+        ("tile", num(kernels::TILE as f64)),
+        ("n", num(n as f64)),
+        ("d", num(d as f64)),
+        ("sparsity", num(sparsity)),
+        ("ablated_frac", num(ablated)),
+        ("f32_bytes", num(bundle.condensed.storage_bytes() as f64)),
+        ("int8_bytes", num(bundle.quantized.storage_bytes() as f64)),
+        (
+            "int8_speedup_b256",
+            num(if int8_tiled_256_us > 0.0 { f32_tiled_256_us / int8_tiled_256_us } else { 0.0 }),
+        ),
+        ("rows", arr(rows)),
+    ]);
+    println!("{}", summary.to_string());
+    srigl::arena::persist_bench_summary("quant_forward", &summary);
+}

@@ -39,13 +39,18 @@ pub use replay::{replay, replay_wire, ReplayOutcome};
 pub use summary::{summarize, DuelSummary};
 pub use trace::{Scenario, Trace, TraceEvent, TraceSpec};
 
-use crate::inference::engine::EngineBuilder;
+use crate::inference::engine::{EngineBuilder, QuantMode};
 use crate::inference::SparseModel;
+use crate::kernels::KernelKind;
 
 /// Parse an engine-spec string like `"workers=4,adaptive=8,shards=2"`
 /// into an [`EngineBuilder`]. Keys: `workers`, `batch` (fixed), `adaptive`
 /// (cap), `shards`, `threads`, `queue`, `cache`, `egress`, `retry` (ms),
-/// `conns` (live-connection cap; 0 = unlimited).
+/// `conns` (live-connection cap; 0 = unlimited), plus two string-valued
+/// model-transform keys: `quant` (off|rows|tiled — int8-quantize the
+/// stack for this side) and `kernel` (scalar|portable|avx2 — force the
+/// microkernel kind), which is what lets one arena process duel f32
+/// against int8, or avx2 against scalar, on identical traffic.
 /// Unknown keys error with the known list — a typo must not silently
 /// bench the defaults.
 pub fn parse_engine_spec(spec: &str) -> Result<EngineBuilder> {
@@ -58,11 +63,26 @@ pub fn parse_engine_spec(spec: &str) -> Result<EngineBuilder> {
         let (key, val) = part
             .split_once('=')
             .with_context(|| format!("engine spec {part:?}: expected key=value"))?;
+        let (key, val) = (key.trim(), val.trim());
+        // string-valued keys first; everything else takes an integer
+        match key {
+            "quant" => {
+                b = b.quant(QuantMode::parse(val).with_context(|| format!("engine spec {part:?}"))?);
+                continue;
+            }
+            "kernel" => {
+                let kind = KernelKind::parse(val).with_context(|| {
+                    format!("engine spec {part:?}: unknown kernel (scalar|portable|avx2)")
+                })?;
+                b = b.kernel(Some(kind));
+                continue;
+            }
+            _ => {}
+        }
         let n: usize = val
-            .trim()
             .parse()
             .with_context(|| format!("engine spec {part:?}: value must be an integer"))?;
-        b = match key.trim() {
+        b = match key {
             "workers" => b.workers(n),
             "batch" => b.fixed_batch(n),
             "adaptive" => b.adaptive(n),
@@ -75,7 +95,7 @@ pub fn parse_engine_spec(spec: &str) -> Result<EngineBuilder> {
             "conns" => b.max_connections(n),
             other => bail!(
                 "engine spec: unknown key {other:?} (known: workers, batch, adaptive, \
-                 shards, threads, queue, cache, egress, retry, conns)"
+                 shards, threads, queue, cache, egress, retry, conns, quant, kernel)"
             ),
         };
     }
@@ -119,24 +139,29 @@ pub fn run_duel(
 ) -> Result<DuelSummary> {
     replay::validate(trace, a.1).context("side A")?;
     replay::validate(trace, b.1).context("side B")?;
+    // Each side's model transforms (quant=/kernel=) apply once up front,
+    // not per round — quantization is a build-time cost in production too,
+    // and the duel should score serving, not calibration.
+    let a_model = a.1.prepare_model(model).context("side A")?;
+    let b_model = b.1.prepare_model(model).context("side B")?;
     let rounds = cfg.rounds.max(1);
     let mut a_out = Vec::with_capacity(rounds);
     let mut b_out = Vec::with_capacity(rounds);
-    let mut run_side = |builder: &EngineBuilder| -> Result<ReplayOutcome> {
+    let mut run_side = |m: &Arc<SparseModel>, builder: &EngineBuilder| -> Result<ReplayOutcome> {
         if cfg.wire {
-            replay_wire(model, builder, trace, cfg.clients, cfg.max_retries)
+            replay_wire(m, builder, trace, cfg.clients, cfg.max_retries)
         } else {
-            replay(model, builder, trace)
+            replay(m, builder, trace)
         }
     };
     for round in 0..rounds {
         let (ra, rb) = if round % 2 == 0 {
-            let ra = run_side(a.1).with_context(|| format!("round {round}, side A"))?;
-            let rb = run_side(b.1).with_context(|| format!("round {round}, side B"))?;
+            let ra = run_side(&a_model, a.1).with_context(|| format!("round {round}, side A"))?;
+            let rb = run_side(&b_model, b.1).with_context(|| format!("round {round}, side B"))?;
             (ra, rb)
         } else {
-            let rb = run_side(b.1).with_context(|| format!("round {round}, side B"))?;
-            let ra = run_side(a.1).with_context(|| format!("round {round}, side A"))?;
+            let rb = run_side(&b_model, b.1).with_context(|| format!("round {round}, side B"))?;
+            let ra = run_side(&a_model, a.1).with_context(|| format!("round {round}, side A"))?;
             (ra, rb)
         };
         log(format!(
@@ -184,8 +209,21 @@ mod tests {
     }
 
     #[test]
+    fn engine_spec_parses_model_transform_keys() {
+        let b = parse_engine_spec("quant=tiled,kernel=scalar,workers=2").unwrap();
+        assert_eq!(b.quant, QuantMode::Tiled);
+        assert_eq!(b.kernel, Some(KernelKind::Scalar));
+        assert_eq!(b.workers, 2);
+        assert_eq!(parse_engine_spec("quant=rows").unwrap().quant, QuantMode::Rows);
+        assert_eq!(parse_engine_spec("quant=off").unwrap().quant, QuantMode::Off);
+        assert_eq!(parse_engine_spec("").unwrap().kernel, None, "default: auto selection");
+    }
+
+    #[test]
     fn engine_spec_rejects_garbage() {
-        for bad in ["wrkers=2", "workers", "workers=x", "batch=4,boop=1"] {
+        for bad in
+            ["wrkers=2", "workers", "workers=x", "batch=4,boop=1", "quant=fp4", "kernel=sse"]
+        {
             let err = parse_engine_spec(bad).unwrap_err();
             assert!(!format!("{err:#}").is_empty(), "{bad}");
         }

@@ -1065,6 +1065,43 @@ impl Engine for SwappableEngine {
 // EngineBuilder
 // ---------------------------------------------------------------------------
 
+/// Whether (and how) a serving stack is int8-quantized at build time —
+/// the `quant=` knob of the arena spec and the serving CLI. Quantization
+/// is a *model transform* ([`SparseModel::quantized`]), applied by
+/// [`EngineBuilder::prepare_model`] before the stack reaches an engine,
+/// so every execution strategy (replicated/scoped/persistent, swappable
+/// or not) serves the quantized weights identically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    /// Serve the stack's own (f32) representations unchanged.
+    Off,
+    /// Quantize every layer to the int8 row-gather driver
+    /// ([`crate::inference::QuantizedLayer`]).
+    Rows,
+    /// Quantize every layer to the int8 batch-tiled driver
+    /// ([`crate::inference::QuantizedTiledLayer`]).
+    Tiled,
+}
+
+impl QuantMode {
+    pub fn parse(s: &str) -> Result<QuantMode> {
+        match s {
+            "off" | "none" | "f32" => Ok(QuantMode::Off),
+            "rows" | "quantized" | "int8" => Ok(QuantMode::Rows),
+            "tiled" | "quantized-tiled" => Ok(QuantMode::Tiled),
+            other => bail!("unknown quant mode {other:?} (off|rows|tiled)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMode::Off => "off",
+            QuantMode::Rows => "rows",
+            QuantMode::Tiled => "tiled",
+        }
+    }
+}
+
 /// The single construction path for serving engines and the knobs every
 /// serving surface shares. `serve`/`serve_model`/`serve_target`
 /// ([`super::server`]), [`super::frontend::spawn`], the `serve-model` CLI,
@@ -1104,6 +1141,14 @@ pub struct EngineBuilder {
     /// frame before any reader thread is spawned (counted in the
     /// `connections_rejected` metric).
     pub max_connections: usize,
+    /// Int8 quantization applied to the stack by
+    /// [`EngineBuilder::prepare_model`] before engine construction.
+    pub quant: QuantMode,
+    /// Per-engine microkernel override ([`crate::kernels::KernelKind`]);
+    /// `None` serves on the process-wide auto selection. Set by the
+    /// arena's per-side `kernel=` key so f32-vs-int8 (or avx2-vs-scalar)
+    /// duels can share one process.
+    pub kernel: Option<crate::kernels::KernelKind>,
 }
 
 impl Default for EngineBuilder {
@@ -1118,6 +1163,8 @@ impl Default for EngineBuilder {
             threads: 1,
             retry_after_ms: 2,
             max_connections: 0,
+            quant: QuantMode::Off,
+            kernel: None,
         }
     }
 }
@@ -1208,6 +1255,42 @@ impl EngineBuilder {
     pub fn max_connections(mut self, n: usize) -> EngineBuilder {
         self.max_connections = n;
         self
+    }
+
+    /// Int8-quantize the stack at build time (see [`QuantMode`]).
+    pub fn quant(mut self, mode: QuantMode) -> EngineBuilder {
+        self.quant = mode;
+        self
+    }
+
+    /// Force a specific microkernel kind for this engine's stack
+    /// (`None` = the process-wide auto selection).
+    pub fn kernel(mut self, kind: Option<crate::kernels::KernelKind>) -> EngineBuilder {
+        self.kernel = kind;
+        self
+    }
+
+    /// Apply the builder's model transforms — int8 quantization
+    /// (`quant=`) then the microkernel re-stamp (`kernel=`) — returning
+    /// the stack engines should be built from. With both knobs at their
+    /// defaults this is a cheap `Arc` clone. Fails when a layer cannot be
+    /// quantized (no condensed structure / width over the u16 index) or
+    /// the forced kernel kind is not available on this CPU — both are
+    /// startup errors, never a serving panic.
+    pub fn prepare_model(&self, model: &Arc<SparseModel>) -> Result<Arc<SparseModel>> {
+        let mut out = Arc::clone(model);
+        match self.quant {
+            QuantMode::Off => {}
+            QuantMode::Rows => out = Arc::new(out.quantized(false)?),
+            QuantMode::Tiled => out = Arc::new(out.quantized(true)?),
+        }
+        if let Some(kind) = self.kernel {
+            if !kind.available() {
+                bail!("kernel={} is not available on this CPU", kind.name());
+            }
+            out = Arc::new(out.with_kernel(crate::kernels::Microkernel::of(kind))?);
+        }
+        Ok(out)
     }
 
     /// Upper bound on any batch the configured policy can produce — what
@@ -1529,6 +1612,56 @@ mod tests {
         assert_bits_eq(&run(&scoped, &x, 2), &m0.forward_vec(&x, 2, 1), "scoped epoch 0");
         assert_eq!(scoped.swap(ModelEpoch::new(1, Arc::clone(&m1))).unwrap(), 1);
         assert_bits_eq(&run(&scoped, &x, 2), &m1.forward_vec(&x, 2, 1), "scoped epoch 1");
+    }
+
+    #[test]
+    fn prepare_model_quantizes_and_restamps() {
+        let m = Arc::new(model3(Repr::Condensed));
+        // defaults: a cheap Arc clone, same stack
+        let same = EngineBuilder::new().prepare_model(&m).unwrap();
+        assert!(Arc::ptr_eq(&m, &same));
+        // quantized: int8 storage, same widths, bit-for-bit row-vs-tiled
+        let rows = EngineBuilder::new().quant(QuantMode::Rows).prepare_model(&m).unwrap();
+        let tiled = EngineBuilder::new().quant(QuantMode::Tiled).prepare_model(&m).unwrap();
+        assert_eq!(rows.in_width(), m.in_width());
+        assert_eq!(rows.out_width(), m.out_width());
+        assert!(rows.storage_bytes() < m.storage_bytes(), "int8 must shrink the stack");
+        assert!(rows.describe().contains("quantized"), "{}", rows.describe());
+        assert!(tiled.describe().contains("quantized-tiled"), "{}", tiled.describe());
+        let mut rng = Rng::new(6);
+        let x: Vec<f32> = (0..3 * 64).map(|_| rng.normal_f32()).collect();
+        assert_bits_eq(
+            &rows.forward_vec(&x, 3, 1),
+            &tiled.forward_vec(&x, 3, 1),
+            "quant row vs tiled drivers",
+        );
+        // kernel= re-stamp: scalar is always available, and on the int8
+        // path even a kind change keeps outputs bit-for-bit
+        let scalar = EngineBuilder::new()
+            .quant(QuantMode::Rows)
+            .kernel(Some(crate::kernels::KernelKind::Scalar))
+            .prepare_model(&m)
+            .unwrap();
+        assert_bits_eq(
+            &scalar.forward_vec(&x, 3, 1),
+            &rows.forward_vec(&x, 3, 1),
+            "int8 is kind-invariant",
+        );
+        // a dense stack has no quantized form: startup error, not a panic
+        let dense = Arc::new(model3(Repr::Dense));
+        assert!(EngineBuilder::new().quant(QuantMode::Rows).prepare_model(&dense).is_err());
+    }
+
+    #[test]
+    fn quant_mode_parses() {
+        assert_eq!(QuantMode::parse("off").unwrap(), QuantMode::Off);
+        assert_eq!(QuantMode::parse("rows").unwrap(), QuantMode::Rows);
+        assert_eq!(QuantMode::parse("int8").unwrap(), QuantMode::Rows);
+        assert_eq!(QuantMode::parse("tiled").unwrap(), QuantMode::Tiled);
+        assert!(QuantMode::parse("fp4").is_err());
+        for m in [QuantMode::Off, QuantMode::Rows, QuantMode::Tiled] {
+            assert_eq!(QuantMode::parse(m.name()).unwrap(), m);
+        }
     }
 
     #[test]

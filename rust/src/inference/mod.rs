@@ -14,6 +14,15 @@
 //!                         transposed once and every stored weight costs
 //!                         one contiguous 8-wide load + broadcast-MAC
 //!                         instead of `TILE` indexed loads.
+//! * [`QuantizedLayer`] / [`QuantizedTiledLayer`] — the int8 serving
+//!                         path (NNUE-style): 4-byte `(u16 idx, i8 q)`
+//!                         records with calibrated per-row scales,
+//!                         i32 accumulation, and a documented per-row
+//!                         error budget against the f32 oracle (see
+//!                         [`crate::sparsity::quantized`] and
+//!                         docs/KERNELS.md). Halves the weight stream of
+//!                         the f32 condensed forms; outputs are
+//!                         bit-for-bit identical across kernel kinds.
 //!
 //! The arithmetic inner loops live in [`crate::kernels`] (runtime-
 //! dispatched scalar / portable-SIMD / AVX2+FMA microkernels); each layer
@@ -33,15 +42,15 @@ pub mod server;
 pub mod shard;
 
 pub use engine::{
-    Engine, EngineBuilder, EpochScratch, KernelEngine, PersistentShardedEngine, ReplicatedEngine,
-    ScopedShardedEngine, ShardedEpochScratch, SwappableEngine, SwappableScratch,
+    Engine, EngineBuilder, EpochScratch, KernelEngine, PersistentShardedEngine, QuantMode,
+    ReplicatedEngine, ScopedShardedEngine, ShardedEpochScratch, SwappableEngine, SwappableScratch,
 };
 pub use frontend::{FrontendHandle, FrontendStats};
 pub use model::{Activation, LayerSpec, ModelEpoch, ModelLayer, Repr, Scratch, SparseModel};
 pub use shard::{ShardPlan, ShardPlanError, ShardedModel, ShardedScratch};
 
 use crate::kernels::{self, Microkernel};
-use crate::sparsity::{Condensed, CondensedError, CondensedTiled, Csr, Mask};
+use crate::sparsity::{Condensed, CondensedError, CondensedTiled, Csr, Mask, QuantizedCondensed};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -79,6 +88,22 @@ pub trait LinearKernel: Send + Sync {
     /// the compact forms and their CSR rows are empty, so balancing by
     /// these weights (not by neuron count) keeps shard compute even.
     fn row_weights(&self, full_width: usize) -> Vec<usize>;
+    /// The int8 quantized twin of this kernel (`tiled` selects the
+    /// batch-tiled variant), calibrated against this kernel's own f32
+    /// weights. `None` for representations without the constant-fan-in
+    /// condensed structure quantization relies on (dense/CSR/structured);
+    /// `Some(Err(..))` when the geometry cannot be quantized (input width
+    /// over the u16 index limit). The quantized forms return a
+    /// re-wrapped clone of themselves, so the transform is idempotent.
+    fn quantized(&self, _tiled: bool) -> Option<Result<Box<dyn LinearKernel>, CondensedError>> {
+        None
+    }
+    /// The same representation re-stamped onto a different microkernel
+    /// handle — the per-side `kernel=` override of the arena (a process
+    /// has one auto-selected kind; dueling scalar-vs-AVX2 inside that
+    /// process needs per-model stamps). Callers must only pass kinds
+    /// that are available on this CPU.
+    fn with_kernel(&self, mk: Microkernel) -> Box<dyn LinearKernel>;
 }
 
 // ---------------------------------------------------------------------------
@@ -135,6 +160,10 @@ impl LinearKernel for DenseLayer {
         assert_eq!(full_width, self.n);
         // dense stores (and computes) every row, ablated or not
         vec![self.d; self.n]
+    }
+
+    fn with_kernel(&self, mk: Microkernel) -> Box<dyn LinearKernel> {
+        Box::new(DenseLayer { n: self.n, d: self.d, w: self.w.clone(), bias: self.bias.clone(), mk })
     }
 
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
@@ -206,6 +235,10 @@ impl LinearKernel for CsrLayer {
             .windows(2)
             .map(|w| (w[1] - w[0]) as usize)
             .collect()
+    }
+
+    fn with_kernel(&self, mk: Microkernel) -> Box<dyn LinearKernel> {
+        Box::new(CsrLayer { csr: self.csr.clone(), bias: self.bias.clone(), mk })
     }
 
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
@@ -318,6 +351,18 @@ impl LinearKernel for StructuredLayer {
         w
     }
 
+    fn with_kernel(&self, mk: Microkernel) -> Box<dyn LinearKernel> {
+        Box::new(StructuredLayer {
+            n_active: self.n_active,
+            n_orig: self.n_orig,
+            d: self.d,
+            w: self.w.clone(),
+            bias: self.bias.clone(),
+            active: self.active.clone(),
+            mk,
+        })
+    }
+
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
         debug_assert_eq!(out.len(), batch * self.n_active);
         let mk = self.mk;
@@ -397,6 +442,21 @@ impl LinearKernel for CondensedLayer {
             w[a as usize] = self.c.k; // constant fan-in: k stored weights each
         }
         w
+    }
+
+    fn quantized(&self, tiled: bool) -> Option<Result<Box<dyn LinearKernel>, CondensedError>> {
+        Some(QuantizedCondensed::from_condensed(&self.c).map(|q| {
+            if tiled {
+                Box::new(QuantizedTiledLayer { q, bias: self.bias.clone(), mk: self.mk })
+                    as Box<dyn LinearKernel>
+            } else {
+                Box::new(QuantizedLayer { q, bias: self.bias.clone(), mk: self.mk })
+            }
+        }))
+    }
+
+    fn with_kernel(&self, mk: Microkernel) -> Box<dyn LinearKernel> {
+        Box::new(CondensedLayer { c: self.c.clone(), bias: self.bias.clone(), mk })
     }
 
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
@@ -494,6 +554,21 @@ impl LinearKernel for CondensedTiledLayer {
         w
     }
 
+    fn quantized(&self, tiled: bool) -> Option<Result<Box<dyn LinearKernel>, CondensedError>> {
+        Some(QuantizedCondensed::from_condensed(&self.t.to_condensed()).map(|q| {
+            if tiled {
+                Box::new(QuantizedTiledLayer { q, bias: self.bias.clone(), mk: self.mk })
+                    as Box<dyn LinearKernel>
+            } else {
+                Box::new(QuantizedLayer { q, bias: self.bias.clone(), mk: self.mk })
+            }
+        }))
+    }
+
+    fn with_kernel(&self, mk: Microkernel) -> Box<dyn LinearKernel> {
+        Box::new(CondensedTiledLayer { t: self.t.clone(), bias: self.bias.clone(), mk })
+    }
+
     fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
         kernels::tiled::forward_tiled(
             &self.t.pairs,
@@ -508,6 +583,235 @@ impl LinearKernel for CondensedTiledLayer {
             self.mk,
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized condensed (int8 weights, i32 accumulate, calibrated scales)
+// ---------------------------------------------------------------------------
+
+/// The int8 quantized condensed representation (row-gather driver):
+/// [`CondensedLayer`] semantics within the documented per-row error
+/// budget, on 4-byte `(u16 idx, i8 q)` records with least-squares
+/// calibrated per-row scales ([`crate::sparsity::quantized`]). The i32
+/// accumulation is exact, so — unlike the f32 family's ULP bound —
+/// outputs are bit-for-bit identical across kernel kinds, batch
+/// positions, thread counts, shard cuts, and engines.
+pub struct QuantizedLayer {
+    pub q: QuantizedCondensed,
+    pub bias: Vec<f32>, // packed to active neurons
+    /// Microkernel selection (inherited by slices; see [`crate::kernels`]).
+    pub mk: Microkernel,
+}
+
+impl QuantizedLayer {
+    /// Build from weights + constant-fan-in mask (same typed-error
+    /// contract as [`CondensedLayer::new`], plus
+    /// [`CondensedError::WidthTooLarge`] when `d` overflows the u16
+    /// index). `bias` is full-width; it is packed to active neurons.
+    pub fn new(w: &Tensor, mask: &Mask, bias: &[f32]) -> Result<QuantizedLayer, CondensedError> {
+        let q = QuantizedCondensed::from_masked(w, mask)?;
+        // Validate the index invariant once so the forward pass can
+        // gather without per-element bounds checks (same contract as the
+        // f32 condensed forms).
+        assert!(q.recs.iter().all(|p| (p.idx as usize) < q.d), "index out of range");
+        let pbias = q.active.iter().map(|&r| bias[r as usize]).collect();
+        Ok(QuantizedLayer { q, bias: pbias, mk: Microkernel::auto() })
+    }
+}
+
+impl LinearKernel for QuantizedLayer {
+    fn name(&self) -> &'static str {
+        "quantized"
+    }
+
+    fn out_width(&self) -> usize {
+        self.q.n_active()
+    }
+
+    fn in_width(&self) -> usize {
+        self.q.d
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.q.storage_bytes() + self.bias.len() * 4
+    }
+
+    fn active_rows(&self) -> Option<&[u32]> {
+        Some(&self.q.active)
+    }
+
+    fn slice_rows(&self, lo: usize, hi: usize) -> Box<dyn LinearKernel> {
+        assert!(lo <= hi && hi <= self.q.n_orig, "slice {lo}..{hi} out of 0..{}", self.q.n_orig);
+        Box::new(QuantizedLayer {
+            q: slice_quantized(&self.q, lo, hi),
+            bias: slice_packed(&self.q.active, &self.bias, lo, hi),
+            mk: self.mk,
+        })
+    }
+
+    fn row_weights(&self, full_width: usize) -> Vec<usize> {
+        assert_eq!(full_width, self.q.n_orig);
+        let mut w = vec![0usize; full_width];
+        for &a in &self.q.active {
+            w[a as usize] = self.q.k; // constant fan-in: k stored weights each
+        }
+        w
+    }
+
+    fn quantized(&self, tiled: bool) -> Option<Result<Box<dyn LinearKernel>, CondensedError>> {
+        // already quantized: re-wrap under the requested driver
+        Some(Ok(if tiled {
+            Box::new(QuantizedTiledLayer { q: self.q.clone(), bias: self.bias.clone(), mk: self.mk })
+        } else {
+            Box::new(QuantizedLayer { q: self.q.clone(), bias: self.bias.clone(), mk: self.mk })
+        }))
+    }
+
+    fn with_kernel(&self, mk: Microkernel) -> Box<dyn LinearKernel> {
+        Box::new(QuantizedLayer { q: self.q.clone(), bias: self.bias.clone(), mk })
+    }
+
+    fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
+        kernels::quant::forward_quant(
+            &self.q.recs,
+            self.q.k,
+            self.q.n_active(),
+            self.q.d,
+            &self.q.scales,
+            &self.bias,
+            x,
+            batch,
+            out,
+            threads,
+            self.mk,
+        );
+    }
+}
+
+/// The batch-tiled twin of [`QuantizedLayer`]: same stored records and
+/// scales, driven by the transposed-i8-tile kernel — `d x TILE` *bytes*
+/// of staging per tile (4x smaller than the f32 tile buffer), one 8-byte
+/// contiguous load + integer broadcast-MAC per stored weight at batch >=
+/// [`crate::kernels::TILE`]. Remainder rows reuse the row driver, which
+/// quantizes to the same integers — outputs stay bit-for-bit
+/// batch-position invariant.
+pub struct QuantizedTiledLayer {
+    pub q: QuantizedCondensed,
+    pub bias: Vec<f32>, // packed to active neurons
+    /// Microkernel selection (inherited by slices; see [`crate::kernels`]).
+    pub mk: Microkernel,
+}
+
+impl QuantizedTiledLayer {
+    /// Build from weights + constant-fan-in mask (same contract as
+    /// [`QuantizedLayer::new`]).
+    pub fn new(
+        w: &Tensor,
+        mask: &Mask,
+        bias: &[f32],
+    ) -> Result<QuantizedTiledLayer, CondensedError> {
+        let q = QuantizedCondensed::from_masked(w, mask)?;
+        assert!(q.recs.iter().all(|p| (p.idx as usize) < q.d), "index out of range");
+        let pbias = q.active.iter().map(|&r| bias[r as usize]).collect();
+        Ok(QuantizedTiledLayer { q, bias: pbias, mk: Microkernel::auto() })
+    }
+}
+
+impl LinearKernel for QuantizedTiledLayer {
+    fn name(&self) -> &'static str {
+        "quantized-tiled"
+    }
+
+    fn out_width(&self) -> usize {
+        self.q.n_active()
+    }
+
+    fn in_width(&self) -> usize {
+        self.q.d
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.q.storage_bytes() + self.bias.len() * 4
+    }
+
+    fn active_rows(&self) -> Option<&[u32]> {
+        Some(&self.q.active)
+    }
+
+    fn slice_rows(&self, lo: usize, hi: usize) -> Box<dyn LinearKernel> {
+        assert!(lo <= hi && hi <= self.q.n_orig, "slice {lo}..{hi} out of 0..{}", self.q.n_orig);
+        Box::new(QuantizedTiledLayer {
+            q: slice_quantized(&self.q, lo, hi),
+            bias: slice_packed(&self.q.active, &self.bias, lo, hi),
+            mk: self.mk,
+        })
+    }
+
+    fn row_weights(&self, full_width: usize) -> Vec<usize> {
+        assert_eq!(full_width, self.q.n_orig);
+        let mut w = vec![0usize; full_width];
+        for &a in &self.q.active {
+            w[a as usize] = self.q.k; // constant fan-in: k stored weights each
+        }
+        w
+    }
+
+    fn quantized(&self, tiled: bool) -> Option<Result<Box<dyn LinearKernel>, CondensedError>> {
+        // already quantized: re-wrap under the requested driver
+        Some(Ok(if tiled {
+            Box::new(QuantizedTiledLayer { q: self.q.clone(), bias: self.bias.clone(), mk: self.mk })
+        } else {
+            Box::new(QuantizedLayer { q: self.q.clone(), bias: self.bias.clone(), mk: self.mk })
+        }))
+    }
+
+    fn with_kernel(&self, mk: Microkernel) -> Box<dyn LinearKernel> {
+        Box::new(QuantizedTiledLayer { q: self.q.clone(), bias: self.bias.clone(), mk })
+    }
+
+    fn forward(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
+        kernels::quant::forward_quant_tiled(
+            &self.q.recs,
+            self.q.k,
+            self.q.n_active(),
+            self.q.d,
+            &self.q.scales,
+            &self.bias,
+            x,
+            batch,
+            out,
+            threads,
+            self.mk,
+        );
+    }
+}
+
+/// Slice the quantized storage to the full-logical-width neuron range
+/// `lo..hi` (shared by both quantized drivers): `active` is ascending,
+/// so the surviving rows are a contiguous run `p..q` of the packed
+/// arrays, and the per-row scale/budget side arrays slice with them.
+fn slice_quantized(src: &QuantizedCondensed, lo: usize, hi: usize) -> QuantizedCondensed {
+    let k = src.k;
+    let p = src.active.partition_point(|&a| (a as usize) < lo);
+    let q = src.active.partition_point(|&a| (a as usize) < hi);
+    QuantizedCondensed {
+        d: src.d,
+        n_orig: hi - lo,
+        k,
+        active: src.active[p..q].iter().map(|&a| a - lo as u32).collect(),
+        recs: src.recs[p * k..q * k].to_vec(),
+        scales: src.scales[p..q].to_vec(),
+        resid_l1: src.resid_l1[p..q].to_vec(),
+        qabs_l1: src.qabs_l1[p..q].to_vec(),
+    }
+}
+
+/// The `p..q` run of a packed (active-neurons-only) side array for the
+/// neuron range `lo..hi`.
+fn slice_packed(active: &[u32], packed: &[f32], lo: usize, hi: usize) -> Vec<f32> {
+    let p = active.partition_point(|&a| (a as usize) < lo);
+    let q = active.partition_point(|&a| (a as usize) < hi);
+    packed[p..q].to_vec()
 }
 
 // ---------------------------------------------------------------------------
@@ -528,6 +832,12 @@ pub struct LayerBundle {
     /// The batch-tiled twin of `condensed` (same weights, interleaved
     /// layout) — what the kernel benches race against it.
     pub condensed_tiled: CondensedTiledLayer,
+    /// The int8 quantization of `condensed` (row-gather driver) — close
+    /// to the f32 layers within its error budget, bit-for-bit only
+    /// against its own tiled twin.
+    pub quantized: QuantizedLayer,
+    /// The batch-tiled twin of `quantized` (same records and scales).
+    pub quantized_tiled: QuantizedTiledLayer,
     pub w: Tensor,
     pub mask: Mask,
     pub bias: Vec<f32>,
@@ -559,6 +869,10 @@ impl LayerBundle {
             CondensedLayer::new(&w, &mask, &bias).expect("synth masks have constant fan-in");
         let condensed_tiled =
             CondensedTiledLayer::new(&w, &mask, &bias).expect("synth masks have constant fan-in");
+        let quantized =
+            QuantizedLayer::new(&w, &mask, &bias).expect("synth layers fit the u16 index");
+        let quantized_tiled =
+            QuantizedTiledLayer::new(&w, &mask, &bias).expect("synth layers fit the u16 index");
         LayerBundle {
             dense,
             csr,
@@ -566,6 +880,8 @@ impl LayerBundle {
             structured,
             condensed,
             condensed_tiled,
+            quantized,
+            quantized_tiled,
             w,
             mask,
             bias,
@@ -579,7 +895,11 @@ impl LayerBundle {
 
     /// Every representation of the *same* matrix (CSR here is the
     /// constant-fan-in twin, not the unstructured baseline) — what the
-    /// equivalence/slicing suites iterate.
+    /// equivalence/slicing suites iterate. The quantized pair carries the
+    /// same matrix *within its error budget* — suites comparing outputs
+    /// across representations must compare within-kernel only (slice
+    /// partitions, batch-position invariance), which hold bit-for-bit for
+    /// every entry here.
     pub fn kernels_same_matrix(&self) -> Vec<&dyn LinearKernel> {
         vec![
             &self.dense,
@@ -587,6 +907,8 @@ impl LayerBundle {
             &self.structured,
             &self.condensed,
             &self.condensed_tiled,
+            &self.quantized,
+            &self.quantized_tiled,
         ]
     }
 }

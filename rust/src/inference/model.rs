@@ -35,9 +35,10 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::{
-    CondensedLayer, CondensedTiledLayer, CsrLayer, DenseLayer, LinearKernel, StructuredLayer,
+    CondensedLayer, CondensedTiledLayer, CsrLayer, DenseLayer, LinearKernel, QuantizedLayer,
+    QuantizedTiledLayer, StructuredLayer,
 };
-use crate::kernels;
+use crate::kernels::{self, Microkernel};
 use crate::runtime::manifest::StackEntry;
 use crate::sparsity::Mask;
 use crate::tensor::Tensor;
@@ -89,15 +90,25 @@ pub enum Repr {
     /// ([`CondensedTiledLayer`]) — fastest at batch >=
     /// [`crate::kernels::TILE`].
     CondensedTiled,
+    /// The int8 quantization of the condensed form ([`QuantizedLayer`]):
+    /// same function within the documented per-row error budget
+    /// (docs/KERNELS.md), half the weight-stream bytes.
+    Quantized,
+    /// The batch-tiled twin of the quantized form
+    /// ([`QuantizedTiledLayer`]) — bit-for-bit the same outputs as
+    /// [`Repr::Quantized`], faster at batch >= [`crate::kernels::TILE`].
+    QuantizedTiled,
 }
 
 impl Repr {
-    pub const ALL: [Repr; 5] = [
+    pub const ALL: [Repr; 7] = [
         Repr::Dense,
         Repr::Csr,
         Repr::Structured,
         Repr::Condensed,
         Repr::CondensedTiled,
+        Repr::Quantized,
+        Repr::QuantizedTiled,
     ];
 
     pub fn parse(s: &str) -> Result<Repr> {
@@ -107,8 +118,10 @@ impl Repr {
             "structured" => Ok(Repr::Structured),
             "condensed" => Ok(Repr::Condensed),
             "condensed-tiled" | "tiled" => Ok(Repr::CondensedTiled),
+            "quantized" | "quant" => Ok(Repr::Quantized),
+            "quantized-tiled" | "quant-tiled" => Ok(Repr::QuantizedTiled),
             other => anyhow::bail!(
-                "unknown repr {other:?} (dense|csr|structured|condensed|condensed-tiled)"
+                "unknown repr {other:?} (dense|csr|structured|condensed|condensed-tiled|quantized|quantized-tiled)"
             ),
         }
     }
@@ -120,6 +133,8 @@ impl Repr {
             Repr::Structured => "structured",
             Repr::Condensed => "condensed",
             Repr::CondensedTiled => "condensed-tiled",
+            Repr::Quantized => "quantized",
+            Repr::QuantizedTiled => "quantized-tiled",
         }
     }
 }
@@ -178,6 +193,16 @@ impl ModelLayer {
                 let a = l.t.active.clone();
                 (Box::new(l), Some(a))
             }
+            Repr::Quantized => {
+                let l = QuantizedLayer::new(&wm, mask, bias)?;
+                let a = l.q.active.clone();
+                (Box::new(l), Some(a))
+            }
+            Repr::QuantizedTiled => {
+                let l = QuantizedTiledLayer::new(&wm, mask, bias)?;
+                let a = l.q.active.clone();
+                (Box::new(l), Some(a))
+            }
         };
         // A compact form with no ablated rows is already full-width: skip
         // the per-request scatter and write the output buffer directly.
@@ -213,6 +238,40 @@ impl ModelLayer {
     /// [`crate::inference::shard::ShardPlan`] balances shards on.
     pub fn row_weights(&self) -> Vec<usize> {
         self.kernel.row_weights(self.full_width)
+    }
+
+    /// The int8 quantized twin of this layer (`tiled` selects the
+    /// batch-tiled driver), calibrated against this layer's own f32
+    /// weights; activation, logical width, and scatter ids are preserved.
+    /// Errors when the kernel's representation has no quantized form
+    /// (dense/CSR/structured) or its geometry cannot be quantized.
+    pub fn quantized(&self, tiled: bool) -> Result<ModelLayer> {
+        let kernel = match self.kernel.quantized(tiled) {
+            Some(q) => q?,
+            None => anyhow::bail!(
+                "repr {:?} has no int8 quantized form (quantization needs the condensed \
+                 constant-fan-in structure)",
+                self.kernel.name()
+            ),
+        };
+        Ok(ModelLayer {
+            kernel,
+            activation: self.activation,
+            active: self.active.clone(),
+            full_width: self.full_width,
+        })
+    }
+
+    /// The same layer re-stamped onto a different microkernel handle (the
+    /// arena's per-side `kernel=` override). Callers must only pass kinds
+    /// available on this CPU.
+    pub fn with_kernel(&self, mk: Microkernel) -> ModelLayer {
+        ModelLayer {
+            kernel: self.kernel.with_kernel(mk),
+            activation: self.activation,
+            active: self.active.clone(),
+            full_width: self.full_width,
+        }
     }
 
     /// Slice this layer to the contiguous logical output-neuron range —
@@ -375,6 +434,27 @@ impl SparseModel {
 
     pub fn storage_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.kernel.storage_bytes()).sum()
+    }
+
+    /// The int8 quantized twin of the whole stack (`tiled` selects the
+    /// batch-tiled driver per layer) — what the engine builder's
+    /// `quant=` mode and the arena's per-side spec build at startup.
+    /// Every layer must carry a condensed-structured representation.
+    pub fn quantized(&self, tiled: bool) -> Result<SparseModel> {
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for (i, l) in self.layers.iter().enumerate() {
+            layers.push(
+                l.quantized(tiled)
+                    .map_err(|e| e.context(format!("quantizing layer {i}")))?,
+            );
+        }
+        SparseModel::new(layers)
+    }
+
+    /// The same stack re-stamped onto a different microkernel handle (the
+    /// arena's per-side `kernel=` override).
+    pub fn with_kernel(&self, mk: Microkernel) -> Result<SparseModel> {
+        SparseModel::new(self.layers.iter().map(|l| l.with_kernel(mk)).collect())
     }
 
     /// Human-readable topology, e.g. `3072 -[condensed]-> 768(relu) -...`,

@@ -22,6 +22,7 @@ use std::arch::x86_64::*;
 
 use super::TILE;
 use crate::sparsity::condensed::IdxVal;
+use crate::sparsity::quantized::IdxQ;
 
 // The tile kernels identify one tile with one __m256.
 const _: () = assert!(TILE == 8, "avx2 tile kernels assume an 8-wide tile");
@@ -146,6 +147,120 @@ pub unsafe fn tile_mac(row: &[IdxVal], xt: &[f32], acc0: &mut [f32; TILE], acc1:
         }
         _mm256_storeu_ps(acc0.as_mut_ptr(), a0);
         _mm256_storeu_ps(acc1.as_mut_ptr(), a1);
+    }
+}
+
+/// Integer gather-MAC over the 4-byte `(u16 idx, i8 q, zero pad)`
+/// records of the quantized condensed layout. Eight records are one
+/// `__m256i` load; per 32-bit lane the index is `lane & 0xFFFF` and the
+/// weight is `(lane << 8) >> 24` (arithmetic shift sign-extends byte 2;
+/// byte 3 is the struct's explicit zero pad). Indexed activation loads
+/// via `vpgatherdd` from the i32 staging, products via `vpmaddwd`: both
+/// operands are in `[-127, 127]`, so their low i16 halves hold the true
+/// values — masking the activation's high half makes the madd's second
+/// pair-product zero and the result the **exact** `q * x` per lane.
+/// i32 adds are exact and associative (the constant-fan-in bound keeps
+/// `|acc| < 2³¹`), so this returns bit-identically what the scalar
+/// integer oracle returns — the quantized path's cross-kind agreement
+/// is exact, not ULP-bounded.
+///
+/// # Safety
+/// AVX2 must be available, and every `rec.idx as usize < xq.len()`
+/// (validated once at layer construction).
+#[target_feature(enable = "avx2")]
+pub unsafe fn row_mac_q(recs: &[IdxQ], xq: &[i32]) -> i32 {
+    // SAFETY: AVX2 present per the fn contract; the record-stream loads
+    // stay in bounds by the `i + 8 <= n` guard (8 records == 32 bytes ==
+    // one __m256i, size asserted in sparsity::quantized), and every
+    // gathered lane reads `xq[rec.idx]` with `rec.idx < xq.len()` per
+    // the fn contract.
+    unsafe {
+        let n = recs.len();
+        let m16 = _mm256_set1_epi32(0xFFFF);
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v = _mm256_loadu_si256(recs.as_ptr().add(i) as *const __m256i);
+            let idx = _mm256_and_si256(v, m16);
+            let q = _mm256_srai_epi32::<24>(_mm256_slli_epi32::<8>(v));
+            let xv = _mm256_i32gather_epi32::<4>(xq.as_ptr(), idx);
+            let prod = _mm256_madd_epi16(_mm256_and_si256(xv, m16), q);
+            acc = _mm256_add_epi32(acc, prod);
+            i += 8;
+        }
+        let mut s = hsum_i32(acc);
+        while i < n {
+            let p = recs.get_unchecked(i);
+            s += p.q as i32 * *xq.get_unchecked(p.idx as usize);
+            i += 1;
+        }
+        s
+    }
+}
+
+/// The quantized batch-tiled hot loop: for each record, load the 8
+/// contiguous i8 batch values of its column from the transposed i8
+/// staging (8 **bytes** per stored weight — a quarter of the f32 tile
+/// traffic), sign-extend with `vpmovsxbd`, multiply by the broadcast
+/// weight via `vpmaddwd` (exact — see [`row_mac_q`]), and add into the
+/// i32 lane accumulators. Dual chains for ILP; integer adds make the
+/// merged result equal the scalar oracle exactly, so chain shape is
+/// a pure perf choice here, unlike the f32 tile kernel where it is
+/// part of the bit-for-bit contract.
+///
+/// # Safety
+/// AVX2 must be available, and `xtq` must hold at least
+/// `(max idx + 1) * TILE` bytes.
+#[target_feature(enable = "avx2")]
+pub unsafe fn tile_mac_q(recs: &[IdxQ], xtq: &[i8], acc: &mut [i32; TILE]) {
+    // SAFETY: AVX2 present per the fn contract; each 8-byte column load
+    // at `idx * TILE` is in bounds because `xtq` holds
+    // `(max idx + 1) * TILE` bytes per the fn contract, and the
+    // accumulator is exactly TILE (== 8) i32 wide by its type.
+    unsafe {
+        let m16 = _mm256_set1_epi32(0xFFFF);
+        let mut a0 = _mm256_loadu_si256(acc.as_ptr() as *const __m256i);
+        let mut a1 = _mm256_setzero_si256();
+        let mut it = recs.chunks_exact(2);
+        for p in &mut it {
+            let x0 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                xtq.as_ptr().add(p[0].idx as usize * TILE) as *const __m128i,
+            ));
+            let q0 = _mm256_set1_epi32(p[0].q as i32);
+            a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(_mm256_and_si256(x0, m16), q0));
+            let x1 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                xtq.as_ptr().add(p[1].idx as usize * TILE) as *const __m128i,
+            ));
+            let q1 = _mm256_set1_epi32(p[1].q as i32);
+            a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(_mm256_and_si256(x1, m16), q1));
+        }
+        if let [p] = it.remainder() {
+            let x0 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                xtq.as_ptr().add(p.idx as usize * TILE) as *const __m128i,
+            ));
+            let q0 = _mm256_set1_epi32(p.q as i32);
+            a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(_mm256_and_si256(x0, m16), q0));
+        }
+        _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, _mm256_add_epi32(a0, a1));
+    }
+}
+
+/// Fixed-order i32 horizontal sum (exact — integer adds commute).
+///
+/// # Safety
+/// AVX2 must be available (inherited from every caller's contract).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_i32(v: __m256i) -> i32 {
+    // SAFETY: register-only lane arithmetic — the only precondition is
+    // AVX2 availability, which the fn contract inherits from its callers.
+    unsafe {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256::<1>(v);
+        let q = _mm_add_epi32(lo, hi);
+        let d = _mm_add_epi32(q, _mm_shuffle_epi32::<0x4E>(q));
+        let s = _mm_add_epi32(d, _mm_shuffle_epi32::<0x01>(d));
+        _mm_cvtsi128_si32(s)
     }
 }
 

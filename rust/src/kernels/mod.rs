@@ -39,6 +39,12 @@
 //!    as the full-tile lanes — see [`tiled`].
 //! 2. **Determinism within a kind** — no run-to-run or thread-count
 //!    variation; every reduction has a fixed association.
+//!
+//! The int8 quantized kernel family ([`quant`]) rides the same
+//! dispatch — scalar integer oracle / portable lanes / AVX2 integer
+//! MACs per [`KernelKind`] — with a *stronger* agreement guarantee:
+//! i32 accumulation is exact, so quantized outputs are bit-for-bit
+//! identical across kinds, not merely ULP-close.
 
 use std::sync::OnceLock;
 
@@ -52,6 +58,8 @@ pub mod portable;
 pub mod avx2;
 
 pub mod tiled;
+
+pub mod quant;
 
 /// Batch-tile width of the tiled condensed kernel: one AVX2 vector of
 /// f32, and the fixed width the portable path autovectorizes at. The

@@ -1,0 +1,560 @@
+//! Integer forward drivers for the int8 quantized condensed layers
+//! ([`crate::inference::QuantizedLayer`] /
+//! [`crate::inference::QuantizedTiledLayer`]) — the NNUE-style serving
+//! path: i8 weights, per-forward i8 activations, i32 accumulation, one
+//! shared f32 finalize.
+//!
+//! **Activation quantization** happens per *input row*, never per tile
+//! or per batch: `sx = max|x_row| / 127`, `qx_j = round(x_j * 127 /
+//! max|x_row|)`, so a row's integers are a pure function of that row —
+//! the quantized analogue of the batch-position-invariance rule every
+//! f32 kernel obeys. The gather path stages the integers as `i32` (what
+//! `vpgatherdd` reads); the tiled path stages the transposed tile as
+//! `i8` (`d x TILE` **bytes** — 4x smaller than the f32 tile buffer,
+//! which is where the bandwidth win at large batch comes from). Both
+//! stagings hold the *same integers*, so the two paths agree exactly.
+//!
+//! **Exactness across kinds** — stronger than the f32 family's ULP
+//! bound: i32 addition is associative and (by the constant-fan-in
+//! accumulator bound `|acc| <= k·127² < 2³¹`, see
+//! [`crate::sparsity::quantized`]) never overflows, so the scalar
+//! oracle, the portable lanes, and the AVX2 intrinsics produce the
+//! **identical accumulator**, and the single shared [`finalize`]
+//! expression makes every quantized output bit-for-bit identical across
+//! kernel kinds, batch positions, full-tile vs remainder, thread
+//! counts, shard cuts, and engines. Tests pin all of it.
+//!
+//! Staging buffers are thread-local and grown once per thread, matching
+//! [`super::tiled`]: serving-engine forwards (`threads == 1` on pool
+//! workers and shard teams) are allocation-free after warmup.
+
+use std::cell::RefCell;
+
+use super::{par_single_row, KernelKind, Microkernel, TILE};
+use crate::sparsity::quantized::{IdxQ, QMAX};
+use crate::util::threadpool::par_rows_mut;
+
+thread_local! {
+    /// Per-thread i32 staging of one quantized input row (gather path).
+    static XQ: RefCell<Vec<i32>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread i8 staging of one transposed, quantized input tile
+    /// (`d * TILE` bytes — the batch values of feature `j` live at
+    /// `xtq[j*TILE..]`, exactly the f32 tiled layout shrunk 4x).
+    static XTQ: RefCell<Vec<i8>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Quantize one value given the precomputed multiplier `inv = 127 /
+/// max|x_row|`. Shared by both stagings so the gather and tiled paths
+/// see the same integers. `round` (half away from zero) then clamp:
+/// f32 rounding can push `x * inv` a hair past 127, never past 127.5.
+#[inline]
+fn qz(v: f32, inv: f32) -> i32 {
+    (v * inv).round().clamp(-(QMAX as f32), QMAX as f32) as i32
+}
+
+/// Quantize one input row into the i32 staging buffer. Returns the
+/// activation scale `sx = max|x| / 127`; an all-zero row gets scale 0
+/// and all-zero integers (the forward then reproduces `bias` exactly).
+pub fn quantize_row_i32(x: &[f32], xq: &mut [i32]) -> f32 {
+    debug_assert_eq!(x.len(), xq.len());
+    let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if amax == 0.0 {
+        xq.fill(0);
+        return 0.0;
+    }
+    let inv = QMAX as f32 / amax;
+    for (o, &v) in xq.iter_mut().zip(x) {
+        *o = qz(v, inv);
+    }
+    amax / QMAX as f32
+}
+
+/// Transpose-and-quantize `TILE` input rows (`x.len() == TILE * d`) into
+/// the i8 staging buffer, one activation scale per batch lane. Lane `l`
+/// gets the same integers [`quantize_row_i32`] would give its row —
+/// that identity is what keeps full-tile and remainder outputs
+/// bit-for-bit equal.
+pub fn quantize_tile_i8(x: &[f32], d: usize, xtq: &mut [i8], sx: &mut [f32; TILE]) {
+    debug_assert_eq!(x.len(), TILE * d);
+    debug_assert!(xtq.len() >= d * TILE);
+    for l in 0..TILE {
+        let xrow = &x[l * d..(l + 1) * d];
+        let amax = xrow.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        if amax == 0.0 {
+            sx[l] = 0.0;
+            for j in 0..d {
+                xtq[j * TILE + l] = 0;
+            }
+            continue;
+        }
+        let inv = QMAX as f32 / amax;
+        for (j, &v) in xrow.iter().enumerate() {
+            xtq[j * TILE + l] = qz(v, inv) as i8;
+        }
+        sx[l] = amax / QMAX as f32;
+    }
+}
+
+/// The single shared dequantize epilogue: scale the exact i32
+/// accumulator by the (weight x activation) scale product and add the
+/// bias. Plain multiply-then-add (no FMA) in **every** kind — combined
+/// with the exact integer accumulation this is what makes quantized
+/// outputs bit-for-bit identical across kernel kinds and engines.
+#[inline]
+pub fn finalize(acc: i32, w_scale: f32, x_scale: f32, bias: f32) -> f32 {
+    (acc as f32) * (w_scale * x_scale) + bias
+}
+
+/// Integer gather-MAC over one row's interleaved records: `Σ q_i *
+/// xq[idx_i]`, exact in i32 for every kind (see module docs).
+///
+/// # Safety
+/// Every `rec.idx as usize` must be `< xq.len()` (validated once at
+/// layer construction); the Avx2 kind additionally requires detected
+/// AVX2 (guaranteed by the [`Microkernel`] dispatch invariant).
+#[inline]
+pub unsafe fn row_mac(recs: &[IdxQ], xq: &[i32], kind: KernelKind) -> i32 {
+    debug_assert!(recs.iter().all(|p| (p.idx as usize) < xq.len()));
+    match kind {
+        // SAFETY: each implementation carries this fn's exact contract,
+        // forwarded verbatim; the Avx2 arm is only constructible when
+        // AVX2 is runtime-detected (`KernelKind::available`).
+        KernelKind::Scalar => unsafe { row_mac_scalar(recs, xq) },
+        KernelKind::Portable => unsafe { row_mac_lanes(recs, xq) },
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => unsafe { super::avx2::row_mac_q(recs, xq) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelKind::Avx2 => unreachable!("avx2 is never selected on this architecture"),
+    }
+}
+
+/// Scalar integer oracle: one accumulator, record order.
+///
+/// # Safety
+/// Every `rec.idx as usize` must be `< xq.len()`.
+unsafe fn row_mac_scalar(recs: &[IdxQ], xq: &[i32]) -> i32 {
+    let mut acc = 0i32;
+    for p in recs {
+        // SAFETY: fn contract — every `rec.idx` is `< xq.len()`.
+        acc += p.q as i32 * unsafe { *xq.get_unchecked(p.idx as usize) };
+    }
+    acc
+}
+
+/// Portable 8-lane integer MAC: fixed-width `[i32; 8]` partial sums the
+/// autovectorizer can keep in one vector register; i32 addition is
+/// associative, so the result equals the scalar oracle exactly.
+///
+/// # Safety
+/// Every `rec.idx as usize` must be `< xq.len()`.
+unsafe fn row_mac_lanes(recs: &[IdxQ], xq: &[i32]) -> i32 {
+    let mut lanes = [0i32; 8];
+    let mut it = recs.chunks_exact(8);
+    for c in &mut it {
+        for l in 0..8 {
+            // SAFETY: fn contract — every `rec.idx` is `< xq.len()`.
+            lanes[l] += c[l].q as i32 * unsafe { *xq.get_unchecked(c[l].idx as usize) };
+        }
+    }
+    let mut acc: i32 = lanes.iter().sum();
+    for p in it.remainder() {
+        // SAFETY: fn contract — every `rec.idx` is `< xq.len()`.
+        acc += p.q as i32 * unsafe { *xq.get_unchecked(p.idx as usize) };
+    }
+    acc
+}
+
+/// Tile-lane dispatch of the integer broadcast-MAC: for each record,
+/// multiply its (broadcast) i8 weight into the 8 contiguous batch
+/// values of its column and add into the i32 lane accumulators.
+///
+/// # Safety
+/// Every `rec.idx as usize * TILE + TILE` must be `<= xtq.len()`; the
+/// Avx2 kind additionally requires detected AVX2 (guaranteed by the
+/// [`Microkernel`] dispatch invariant).
+#[inline]
+unsafe fn tile_mac_q(recs: &[IdxQ], xtq: &[i8], acc: &mut [i32; TILE], kind: KernelKind) {
+    match kind {
+        // SAFETY: each implementation carries this fn's exact contract,
+        // forwarded verbatim; the Avx2 arm is only constructible when
+        // AVX2 is runtime-detected (`KernelKind::available`).
+        KernelKind::Scalar => unsafe { tile_mac_scalar(recs, xtq, acc) },
+        KernelKind::Portable => unsafe { tile_mac_lanes(recs, xtq, acc) },
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => unsafe { super::avx2::tile_mac_q(recs, xtq, acc) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelKind::Avx2 => unreachable!("avx2 is never selected on this architecture"),
+    }
+}
+
+/// Scalar integer tile oracle: record order, one pass over the lanes.
+///
+/// # Safety
+/// Every `rec.idx as usize * TILE + TILE` must be `<= xtq.len()`.
+unsafe fn tile_mac_scalar(recs: &[IdxQ], xtq: &[i8], acc: &mut [i32; TILE]) {
+    for p in recs {
+        let j = p.idx as usize * TILE;
+        let q = p.q as i32;
+        for l in 0..TILE {
+            // SAFETY: fn contract — `idx * TILE + TILE <= xtq.len()`.
+            acc[l] += q * unsafe { *xtq.get_unchecked(j + l) } as i32;
+        }
+    }
+}
+
+/// Portable integer tile lanes: record pairs into two accumulator sets
+/// for instruction-level parallelism — integer adds, so the merged
+/// result equals the scalar oracle exactly.
+///
+/// # Safety
+/// Every `rec.idx as usize * TILE + TILE` must be `<= xtq.len()`.
+unsafe fn tile_mac_lanes(recs: &[IdxQ], xtq: &[i8], acc: &mut [i32; TILE]) {
+    let mut a1 = [0i32; TILE];
+    let mut it = recs.chunks_exact(2);
+    for p in &mut it {
+        let j0 = p[0].idx as usize * TILE;
+        let q0 = p[0].q as i32;
+        for l in 0..TILE {
+            // SAFETY: fn contract — `idx * TILE + TILE <= xtq.len()`.
+            acc[l] += q0 * unsafe { *xtq.get_unchecked(j0 + l) } as i32;
+        }
+        let j1 = p[1].idx as usize * TILE;
+        let q1 = p[1].q as i32;
+        for l in 0..TILE {
+            // SAFETY: fn contract — `idx * TILE + TILE <= xtq.len()`.
+            a1[l] += q1 * unsafe { *xtq.get_unchecked(j1 + l) } as i32;
+        }
+    }
+    if let [p] = it.remainder() {
+        let j = p.idx as usize * TILE;
+        let q = p.q as i32;
+        for l in 0..TILE {
+            // SAFETY: fn contract — `idx * TILE + TILE <= xtq.len()`.
+            acc[l] += q * unsafe { *xtq.get_unchecked(j + l) } as i32;
+        }
+    }
+    for l in 0..TILE {
+        acc[l] += a1[l];
+    }
+}
+
+/// Row-at-a-time quantized forward (the gather path): quantize each
+/// input row once into the thread-local i32 staging, then integer
+/// gather-MAC + [`finalize`] per output row. Layout contract matches
+/// [`super::tiled::forward_tiled`]: `recs` is `(n_active x k)`
+/// row-major, `scales`/`bias` are packed to active neurons, `out` is
+/// `(batch x n_active)` row-major. The caller (layer construction)
+/// validated `idx < d` for every record.
+#[allow(clippy::too_many_arguments)] // mirrors forward_tiled's driver signature
+pub fn forward_quant(
+    recs: &[IdxQ],
+    k: usize,
+    n_active: usize,
+    d: usize,
+    scales: &[f32],
+    bias: &[f32],
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+    threads: usize,
+    mk: Microkernel,
+) {
+    debug_assert_eq!(recs.len(), n_active * k);
+    debug_assert_eq!(scales.len(), n_active);
+    debug_assert_eq!(bias.len(), n_active);
+    debug_assert_eq!(x.len(), batch * d);
+    debug_assert_eq!(out.len(), batch * n_active);
+    if n_active == 0 || batch == 0 {
+        return;
+    }
+    let kind = mk.kind();
+    if batch == 1 {
+        // quantize once on the caller, split output columns across
+        // threads (the scoped workers only read the staged integers)
+        XQ.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            if buf.len() < d {
+                buf.resize(d, 0);
+            }
+            let sx = quantize_row_i32(x, &mut buf[..d]);
+            let xq: &[i32] = &buf[..d];
+            par_single_row(out, threads, |start, chunk| {
+                for (i, o) in chunk.iter_mut().enumerate() {
+                    let r = start + i;
+                    // SAFETY: idx < d == xq.len(), validated at layer
+                    // construction; Avx2 only when detected (dispatch).
+                    let acc = unsafe { row_mac(&recs[r * k..(r + 1) * k], xq, kind) };
+                    *o = finalize(acc, scales[r], sx, bias[r]);
+                }
+            });
+        });
+    } else {
+        par_rows_mut(out, n_active, threads, |b, orow| {
+            XQ.with(|cell| {
+                let mut buf = cell.borrow_mut();
+                if buf.len() < d {
+                    buf.resize(d, 0);
+                }
+                let sx = quantize_row_i32(&x[b * d..(b + 1) * d], &mut buf[..d]);
+                let xq: &[i32] = &buf[..d];
+                for (r, o) in orow.iter_mut().enumerate() {
+                    // SAFETY: idx < d == xq.len(), validated at layer
+                    // construction; Avx2 only when detected (dispatch).
+                    let acc = unsafe { row_mac(&recs[r * k..(r + 1) * k], xq, kind) };
+                    *o = finalize(acc, scales[r], sx, bias[r]);
+                }
+            });
+        });
+    }
+}
+
+/// Batch-tiled quantized forward: full tiles stage the transposed i8
+/// integers once and broadcast-MAC every record across the 8 batch
+/// lanes; the ragged remainder delegates to [`forward_quant`], whose
+/// per-row quantization produces the *same integers* as the tile
+/// staging — so remainder outputs are bit-for-bit identical to
+/// full-tile outputs (batch-position invariance, enforced by tests).
+/// Thread splits are tile-aligned, exactly like the f32 tiled driver.
+#[allow(clippy::too_many_arguments)] // mirrors forward_tiled's driver signature
+pub fn forward_quant_tiled(
+    recs: &[IdxQ],
+    k: usize,
+    n_active: usize,
+    d: usize,
+    scales: &[f32],
+    bias: &[f32],
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+    threads: usize,
+    mk: Microkernel,
+) {
+    debug_assert_eq!(recs.len(), n_active * k);
+    debug_assert_eq!(scales.len(), n_active);
+    debug_assert_eq!(bias.len(), n_active);
+    debug_assert_eq!(x.len(), batch * d);
+    debug_assert_eq!(out.len(), batch * n_active);
+    if n_active == 0 || batch == 0 {
+        return;
+    }
+    let kind = mk.kind();
+    let tiles = batch / TILE;
+    let rem_start = tiles * TILE;
+    if tiles > 0 {
+        let tile_out = &mut out[..tiles * TILE * n_active];
+        par_rows_mut(tile_out, TILE * n_active, threads, |t, orows| {
+            XTQ.with(|cell| {
+                let mut buf = cell.borrow_mut();
+                if buf.len() < d * TILE {
+                    buf.resize(d * TILE, 0);
+                }
+                let xtq = &mut buf[..d * TILE];
+                let mut sx = [0f32; TILE];
+                let t0 = t * TILE;
+                quantize_tile_i8(&x[t0 * d..(t0 + TILE) * d], d, xtq, &mut sx);
+                for r in 0..n_active {
+                    let mut acc = [0i32; TILE];
+                    // SAFETY: idx < d validated at layer construction, so
+                    // idx*TILE + TILE <= d*TILE == xtq.len(); Avx2 only
+                    // when detected (dispatch invariant).
+                    unsafe { tile_mac_q(&recs[r * k..(r + 1) * k], xtq, &mut acc, kind) };
+                    let (s, b) = (scales[r], bias[r]);
+                    for l in 0..TILE {
+                        orows[l * n_active + r] = finalize(acc[l], s, sx[l], b);
+                    }
+                }
+            });
+        });
+    }
+    if rem_start < batch {
+        let rem = batch - rem_start;
+        let out_rem = &mut out[rem_start * n_active..];
+        forward_quant(
+            recs,
+            k,
+            n_active,
+            d,
+            scales,
+            bias,
+            &x[rem_start * d..],
+            rem,
+            out_rem,
+            threads,
+            mk,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn available_kinds() -> Vec<KernelKind> {
+        KernelKind::ALL.iter().copied().filter(|k| k.available()).collect()
+    }
+
+    fn rand_recs(n: usize, k: usize, d: usize, seed: u64) -> (Vec<IdxQ>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let recs = (0..n * k)
+            .map(|_| IdxQ::new(rng.below(d) as u16, (rng.below(255) as i32 - 127) as i8))
+            .collect();
+        let scales = (0..n).map(|_| rng.uniform() as f32 * 0.02).collect();
+        let bias = (0..n).map(|_| rng.normal_f32() * 0.01).collect();
+        (recs, scales, bias)
+    }
+
+    #[test]
+    fn quantize_row_is_symmetric_and_bounded() {
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..100).map(|_| rng.normal_f32()).collect();
+        let mut xq = vec![0i32; 100];
+        let sx = quantize_row_i32(&x, &mut xq);
+        assert!(sx > 0.0);
+        let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        assert!((sx - amax / 127.0).abs() <= f32::EPSILON * amax);
+        for (&v, &q) in x.iter().zip(&xq) {
+            assert!((-127..=127).contains(&q), "q out of range: {q}");
+            assert!(
+                (v - sx * q as f32).abs() <= sx * 0.501 + 1e-7,
+                "dequantized gap beyond half a step: {v} vs {}",
+                sx * q as f32
+            );
+        }
+        // the extreme element saturates the range exactly
+        assert_eq!(xq.iter().map(|q| q.abs()).max(), Some(127));
+        // all-zero row: scale 0, all integers 0
+        let zeros = vec![0f32; 16];
+        let mut zq = vec![9i32; 16];
+        assert_eq!(quantize_row_i32(&zeros, &mut zq), 0.0);
+        assert!(zq.iter().all(|&q| q == 0));
+    }
+
+    #[test]
+    fn row_mac_kinds_agree_exactly() {
+        let (n, k, d) = (7, 29, 64);
+        let (recs, _, _) = rand_recs(n, k, d, 8);
+        let mut rng = Rng::new(9);
+        let xq: Vec<i32> = (0..d).map(|_| rng.below(255) as i32 - 127).collect();
+        for r in 0..n {
+            let row = &recs[r * k..(r + 1) * k];
+            // SAFETY: indices were drawn `< d == xq.len()`; only
+            // available kinds are exercised.
+            let want = unsafe { row_mac(row, &xq, KernelKind::Scalar) };
+            for kind in available_kinds() {
+                // SAFETY: as above.
+                let got = unsafe { row_mac(row, &xq, kind) };
+                assert_eq!(got, want, "{} row {r}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn tile_mac_kinds_agree_exactly_and_match_row_mac() {
+        let (n, k, d) = (5, 23, 48);
+        let (recs, _, _) = rand_recs(n, k, d, 12);
+        let mut rng = Rng::new(13);
+        // a transposed tile and the equivalent per-lane i32 rows
+        let xtq: Vec<i8> = (0..d * TILE).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let lanes: Vec<Vec<i32>> = (0..TILE)
+            .map(|l| (0..d).map(|j| xtq[j * TILE + l] as i32).collect())
+            .collect();
+        for r in 0..n {
+            let row = &recs[r * k..(r + 1) * k];
+            let mut want = [0i32; TILE];
+            // SAFETY: indices drawn `< d`, staging is `d * TILE` long.
+            unsafe { tile_mac_q(row, &xtq, &mut want, KernelKind::Scalar) };
+            for (l, lane) in lanes.iter().enumerate() {
+                // SAFETY: as above, per-lane view has length d.
+                let via_row = unsafe { row_mac(row, lane, KernelKind::Scalar) };
+                assert_eq!(want[l], via_row, "tile lane {l} vs row mac");
+            }
+            for kind in available_kinds() {
+                let mut got = [0i32; TILE];
+                // SAFETY: as above; only available kinds.
+                unsafe { tile_mac_q(row, &xtq, &mut got, kind) };
+                assert_eq!(got, want, "{} row {r}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn drivers_agree_bitwise_across_paths_and_kinds() {
+        let (n, k, d) = (11, 9, 40);
+        let (recs, scales, bias) = rand_recs(n, k, d, 21);
+        for &batch in &[1usize, 3, 7, 8, 9, 17] {
+            let mut rng = Rng::new(0x51 ^ batch as u64);
+            let x: Vec<f32> = (0..batch * d).map(|_| rng.normal_f32()).collect();
+            let mut want = vec![0f32; batch * n];
+            forward_quant(
+                &recs,
+                k,
+                n,
+                d,
+                &scales,
+                &bias,
+                &x,
+                batch,
+                &mut want,
+                1,
+                Microkernel::of(KernelKind::Scalar),
+            );
+            for kind in available_kinds() {
+                for threads in [1usize, 4] {
+                    let mk = Microkernel::of(kind);
+                    let mut row_out = vec![0f32; batch * n];
+                    forward_quant(&recs, k, n, d, &scales, &bias, &x, batch, &mut row_out, threads, mk);
+                    let mut tiled_out = vec![0f32; batch * n];
+                    forward_quant_tiled(
+                        &recs, k, n, d, &scales, &bias, &x, batch, &mut tiled_out, threads, mk,
+                    );
+                    for i in 0..batch * n {
+                        assert_eq!(
+                            row_out[i].to_bits(),
+                            want[i].to_bits(),
+                            "{} t{threads} b{batch} idx {i}: row vs scalar oracle",
+                            kind.name()
+                        );
+                        assert_eq!(
+                            tiled_out[i].to_bits(),
+                            want[i].to_bits(),
+                            "{} t{threads} b{batch} idx {i}: tiled vs scalar oracle",
+                            kind.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_input_row_reproduces_bias_exactly() {
+        let (n, k, d) = (6, 5, 24);
+        let (recs, scales, bias) = rand_recs(n, k, d, 30);
+        let x = vec![0f32; d];
+        let mut out = vec![9f32; n];
+        forward_quant(&recs, k, n, d, &scales, &bias, &x, 1, &mut out, 1, Microkernel::auto());
+        for r in 0..n {
+            assert_eq!(out[r].to_bits(), bias[r].to_bits(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn empty_geometries_are_noops() {
+        let mk = Microkernel::auto();
+        forward_quant(&[], 0, 0, 10, &[], &[], &[0.5; 10], 1, &mut [], 4, mk);
+        forward_quant_tiled(&[], 0, 0, 10, &[], &[], &[0.5; 10], 1, &mut [], 4, mk);
+        // k == 0 with active rows: bias passthrough on both drivers
+        let bias = vec![1.5f32, -2.0];
+        let scales = vec![0f32; 2];
+        let x = vec![0.25f32; 9 * 4];
+        for driver in [forward_quant, forward_quant_tiled] {
+            let mut out = vec![0f32; 2 * 9];
+            driver(&[], 0, 2, 4, &scales, &bias, &x, 9, &mut out, 2, mk);
+            for b in 0..9 {
+                assert_eq!(out[b * 2], 1.5);
+                assert_eq!(out[b * 2 + 1], -2.0);
+            }
+        }
+    }
+}

@@ -594,7 +594,13 @@ fn report_kernel_selection(model: &SparseModel, batch: usize, threads: usize) {
     for (i, layer) in model.layers().iter().enumerate() {
         let k = layer.kernel();
         let stored: usize = layer.row_weights().iter().sum();
+        // MAC count is representation-independent; *bytes per stored
+        // weight* is not (f32 condensed: 8 = value + index; int8
+        // quantized: 4 = one packed record) — take real storage from the
+        // kernel instead of assuming 4-byte weights, so the probe
+        // attributes int8 speedups to the halved weight stream.
         let flops = 2.0 * stored as f64 * batch as f64;
+        let bytes = k.storage_bytes();
         let x = vec![0.1f32; batch * k.in_width()];
         let mut out = vec![0f32; batch * k.out_width()];
         let m = bench("layer", 5, std::time::Duration::from_millis(4), || {
@@ -603,11 +609,14 @@ fn report_kernel_selection(model: &SparseModel, batch: usize, threads: usize) {
         log::info(
             "kernel",
             &format!(
-                "layer {i}: {:<15} {:>5}x{:<5} {:>9} stored weights, est {:>7.2} GFLOP/s @ batch {batch}",
+                "layer {i}: {:<15} {:>5}x{:<5} {:>9} stored weights ({:>6} KiB, {:.1} B/wt), \
+                 est {:>7.2} GFLOP/s @ batch {batch}",
                 k.name(),
                 k.out_width(),
                 k.in_width(),
                 stored,
+                bytes / 1024,
+                bytes as f64 / stored.max(1) as f64,
                 flops / m.median_s().max(1e-12) / 1e9
             ),
         );

@@ -60,17 +60,26 @@ pub fn register_model_facts(registry: &Registry, model: &SparseModel, batch: usi
             labels,
             k.out_width() as f64,
         );
+        registry.const_gauge(
+            "srigl_layer_storage_bytes",
+            "Bytes this layer's representation occupies — representation-aware (int8 \
+             quantized layers store 4-byte records where f32 condensed stores 8), not \
+             an assumed 4 bytes per weight.",
+            labels,
+            k.storage_bytes() as f64,
+        );
     }
 }
 
 /// The fact families [`register_model_facts`] owns — retracted wholesale
 /// on republication so a scrape never mixes layers of two epochs.
-const FACT_FAMILIES: [&str; 5] = [
+const FACT_FAMILIES: [&str; 6] = [
     "srigl_kernel_info",
     "srigl_engine_storage_bytes",
     "srigl_layer_stored_weights",
     "srigl_layer_est_gflops",
     "srigl_layer_out_width",
+    "srigl_layer_storage_bytes",
 ];
 
 /// Replace the fact gauges with ones describing `model` — called after a
@@ -130,6 +139,26 @@ mod tests {
             .as_f64()
             .unwrap();
         assert!(g > 0.0, "gflops must be positive, got {g}");
+        // per-layer storage is representation-aware: the int8 twin of the
+        // same stack must report strictly fewer bytes per layer
+        let f32_bytes = j
+            .get("srigl_layer_storage_bytes{layer=\"0\",repr=\"condensed\"}")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        let quant = model.quantized(false).unwrap();
+        let rq = Registry::new();
+        register_model_facts(&rq, &quant, 4, 1);
+        let jq = crate::obs::parse_exposition(&rq.render());
+        let int8_bytes = jq
+            .get("srigl_layer_storage_bytes{layer=\"0\",repr=\"quantized\"}")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(
+            int8_bytes < f32_bytes,
+            "int8 layer must report fewer bytes: {int8_bytes} vs {f32_bytes}"
+        );
     }
 
     #[test]

@@ -35,6 +35,9 @@ pub enum CondensedError {
     /// An active row's fan-in differs from the layer's constant fan-in —
     /// the invariant SRigL maintains and Algorithm 1 requires.
     FanInMismatch { row: usize, got: usize, expect: usize },
+    /// The layer's input width exceeds what a compact representation can
+    /// index (the quantized layout stores column indices as `u16`).
+    WidthTooLarge { d: usize, limit: usize },
 }
 
 impl std::fmt::Display for CondensedError {
@@ -48,6 +51,11 @@ impl std::fmt::Display for CondensedError {
                 "row {row}: fan-in {got} != constant {expect} \
                  (constant fan-in per layer is the invariant SRigL maintains; \
                  this mask cannot be condensed)"
+            ),
+            CondensedError::WidthTooLarge { d, limit } => write!(
+                f,
+                "input width {d} exceeds the representation's index limit {limit} \
+                 (the quantized condensed layout stores column indices as u16)"
             ),
         }
     }

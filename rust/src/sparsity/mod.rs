@@ -6,8 +6,10 @@ pub mod csr;
 pub mod distribution;
 pub mod mask;
 pub mod nm;
+pub mod quantized;
 
 pub use condensed::{Condensed, CondensedError, CondensedTiled, IdxVal};
+pub use quantized::{IdxQ, QuantizedCondensed, MAX_QUANT_WIDTH};
 pub use csr::Csr;
 pub use distribution::{achieved_sparsity, fan_in_targets, layer_densities, Distribution, LayerShape};
 pub use mask::Mask;

@@ -1,0 +1,420 @@
+//! The int8-quantized condensed representation (NNUE-style f32-train /
+//! quantized-serve split).
+//!
+//! Same geometry as [`Condensed`] — n_active rows x constant fan-in k,
+//! ascending in-row column indices, ablated rows dropped — but each
+//! stored weight is a 4-byte interleaved [`IdxQ`] record (`u16` column
+//! index + `i8` quantized weight + one zero pad byte) instead of the
+//! 8-byte f32 [`crate::sparsity::IdxVal`]: half the weight traffic on
+//! the memory-bandwidth-bound gather-MAC. Per active row a single f32
+//! scale maps quantized integers back to weight space.
+//!
+//! **Quantization + calibration.** Per row: `s0 = max|w| / 127`,
+//! `q_i = round(w_i / s0)` (symmetric, so `q_i` never hits -128 and
+//! `|q_i| <= 127`). The stored scale is then *calibrated* against the
+//! f32 oracle weights by least squares over the already-chosen integers:
+//! `s = Σ w_i·q_i / Σ q_i²` — the unique minimizer of `Σ (w_i - s·q_i)²`
+//! for fixed `q`, accumulated in f64 so construction is deterministic.
+//! Each term `w_i·q_i` is non-negative (`q_i` has the sign of `w_i`), so
+//! `s >= 0` always.
+//!
+//! **Accumulator range.** Constant fan-in makes the i32 accumulator
+//! statically boundable from k alone: with `|q| <= 127` and activations
+//! quantized to `|qx| <= 127`, `|acc| <= k·127² = 16129·k`. Since
+//! construction enforces `d <= 65536` (u16 indices) and `k <= d`,
+//! `|acc| <= ~1.06e9 < 2³¹` — overflow is impossible by construction,
+//! no saturation logic needed. See docs/KERNELS.md.
+//!
+//! **Error budget.** Alongside the scale, construction records two
+//! per-row diagnostics that bound the quantization error of any output
+//! without reference to the original weights:
+//! `resid_l1[r] = Σ |w_i - s·q_i|` and `qabs_l1[r] = Σ |s·q_i|`.
+//! For an input row with `X = max|x|` (so the activation scale is
+//! `sx = X/127` and `|x_j - sx·qx_j| <= sx/2`):
+//!
+//! ```text
+//! |y_f32 - y_int8| = |Σ (w_i - s·q_i)·x + Σ s·q_i·(x - sx·qx)|
+//!                 <= X·resid_l1[r] + (X/254)·qabs_l1[r]
+//! ```
+//!
+//! [`QuantizedCondensed::row_error_bound`] evaluates exactly that;
+//! `rust/tests/quant_equivalence.rs` pins every served output inside it.
+//!
+//! Construction returns the same typed [`CondensedError`] as the f32
+//! forms (plus [`CondensedError::WidthTooLarge`] when `d` overflows the
+//! u16 index).
+
+use crate::sparsity::condensed::{Condensed, CondensedError};
+use crate::sparsity::mask::Mask;
+use crate::tensor::Tensor;
+
+/// Largest input width a [`QuantizedCondensed`] layer can index: column
+/// indices are stored as `u16`, so `d` must not exceed 2^16. (Also what
+/// keeps the i32 accumulator bound `k·127² <= d·127²` under 2³¹.)
+pub const MAX_QUANT_WIDTH: usize = 1 << 16;
+
+/// Symmetric int8 range: quantized values live in `[-127, 127]` (the
+/// -128 corner is never produced, keeping negation and the accumulator
+/// bound symmetric).
+pub const QMAX: i32 = 127;
+
+/// One interleaved record of the quantized condensed layout: column
+/// index (`u16`), quantized weight (`i8`), and one explicit zero pad
+/// byte so the whole record is exactly one initialized 32-bit lane —
+/// the AVX2 kernel loads 8 records as a single `__m256i` and decodes
+/// index/weight with mask/shift ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(C)]
+pub struct IdxQ {
+    /// Column index into the input row.
+    pub idx: u16,
+    /// Quantized weight in `[-127, 127]`.
+    pub q: i8,
+    pad: u8,
+}
+
+// One record == one 32-bit lane (idx in bits 0..16, q in bits 16..24,
+// zero pad in 24..32): the AVX2 decode depends on this exact layout.
+const _: () = assert!(std::mem::size_of::<IdxQ>() == 4);
+const _: () = assert!(std::mem::align_of::<IdxQ>() <= 4);
+
+impl IdxQ {
+    /// Build a record (the pad byte is always zero).
+    pub fn new(idx: u16, q: i8) -> IdxQ {
+        IdxQ { idx, q, pad: 0 }
+    }
+}
+
+/// The int8 condensed layout: [`Condensed`] geometry, [`IdxQ`] records,
+/// calibrated per-row scales, and the per-row error-budget terms.
+/// Consumed by the integer kernels in [`crate::kernels::quant`]; the
+/// same stored layout serves both the row-gather and the batch-tiled
+/// drivers (tile width is a kernel property, not a storage one).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedCondensed {
+    /// Number of columns of the dense matrix (layer input features).
+    pub d: usize,
+    /// Number of rows of the dense matrix (layer width incl. ablated).
+    pub n_orig: usize,
+    /// Constant fan-in.
+    pub k: usize,
+    /// Surviving neuron ids, ascending; len = n_active.
+    pub active: Vec<u32>,
+    /// (n_active x k) interleaved (index, int8 weight) records,
+    /// row-major, indices ascending within each row.
+    pub recs: Vec<IdxQ>,
+    /// Per active row: calibrated dequantization scale (>= 0).
+    pub scales: Vec<f32>,
+    /// Per active row: `Σ |w_i - s·q_i|` — the weight-residual term of
+    /// the error budget.
+    pub resid_l1: Vec<f32>,
+    /// Per active row: `Σ |s·q_i|` — the activation-rounding term of
+    /// the error budget.
+    pub qabs_l1: Vec<f32>,
+}
+
+impl QuantizedCondensed {
+    /// Quantize and calibrate an f32 [`Condensed`] matrix. Errors with
+    /// [`CondensedError::WidthTooLarge`] when the input width overflows
+    /// the u16 column index.
+    pub fn from_condensed(c: &Condensed) -> Result<QuantizedCondensed, CondensedError> {
+        if c.d > MAX_QUANT_WIDTH {
+            return Err(CondensedError::WidthTooLarge { d: c.d, limit: MAX_QUANT_WIDTH });
+        }
+        let na = c.n_active();
+        let mut recs = Vec::with_capacity(na * c.k);
+        let mut scales = Vec::with_capacity(na);
+        let mut resid_l1 = Vec::with_capacity(na);
+        let mut qabs_l1 = Vec::with_capacity(na);
+        for r in 0..na {
+            let vals = &c.values[r * c.k..(r + 1) * c.k];
+            let idxs = &c.idx[r * c.k..(r + 1) * c.k];
+            let amax = vals.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let row0 = recs.len();
+            if amax == 0.0 {
+                // A row whose surviving weights are all exactly zero
+                // (mask-active but value 0): scale 0, all-zero integers —
+                // the forward reproduces `bias` exactly, like the oracle.
+                for &j in idxs {
+                    recs.push(IdxQ::new(j as u16, 0));
+                }
+                scales.push(0.0);
+                resid_l1.push(0.0);
+                qabs_l1.push(0.0);
+                continue;
+            }
+            // Initial symmetric step, then integers (f64 so construction
+            // rounds identically everywhere).
+            let s0 = amax as f64 / QMAX as f64;
+            let mut num = 0f64; // Σ w·q
+            let mut den = 0i64; // Σ q²  (exact in integers)
+            for (&v, &j) in vals.iter().zip(idxs) {
+                let q = (v as f64 / s0).round().clamp(-(QMAX as f64), QMAX as f64) as i32;
+                recs.push(IdxQ::new(j as u16, q as i8));
+                num += v as f64 * q as f64;
+                den += (q as i64) * (q as i64);
+            }
+            // Least-squares calibration of the scale for the chosen
+            // integers; den > 0 because amax > 0 puts at least one
+            // |q| = 127 in the row. Each w·q term is >= 0, so s >= 0.
+            let s = (num / den as f64) as f32;
+            let mut resid = 0f64;
+            let mut qabs = 0f64;
+            for (&v, rec) in vals.iter().zip(&recs[row0..]) {
+                let deq = s as f64 * rec.q as f64;
+                resid += (v as f64 - deq).abs();
+                qabs += deq.abs();
+            }
+            scales.push(s);
+            resid_l1.push(resid as f32);
+            qabs_l1.push(qabs as f32);
+        }
+        Ok(QuantizedCondensed {
+            d: c.d,
+            n_orig: c.n_orig,
+            k: c.k,
+            active: c.active.clone(),
+            recs,
+            scales,
+            resid_l1,
+            qabs_l1,
+        })
+    }
+
+    /// Build directly from a weight tensor and its constant-fan-in mask
+    /// (same contract as [`Condensed::from_masked`], then quantize).
+    pub fn from_masked(w: &Tensor, m: &Mask) -> Result<QuantizedCondensed, CondensedError> {
+        QuantizedCondensed::from_condensed(&Condensed::from_masked(w, m)?)
+    }
+
+    /// Surviving-neuron count.
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Storage bytes: 4-byte records + active list + the three per-row
+    /// f32 side arrays (scale, resid_l1, qabs_l1). At any realistic k
+    /// this is just under half the f32 condensed footprint.
+    pub fn storage_bytes(&self) -> usize {
+        self.recs.len() * std::mem::size_of::<IdxQ>()
+            + self.active.len() * 4
+            + (self.scales.len() + self.resid_l1.len() + self.qabs_l1.len()) * 4
+    }
+
+    /// Expand to the f32 [`Condensed`] matrix this quantization *round-
+    /// trips to* — values `s·q`, the dequantized twin the error budget
+    /// is measured against. Geometry (active list, indices, k) is
+    /// preserved exactly.
+    pub fn dequantize(&self) -> Condensed {
+        let mut values = Vec::with_capacity(self.recs.len());
+        let mut idx = Vec::with_capacity(self.recs.len());
+        for r in 0..self.n_active() {
+            let s = self.scales[r];
+            for rec in &self.recs[r * self.k..(r + 1) * self.k] {
+                idx.push(rec.idx as u32);
+                values.push(s * rec.q as f32);
+            }
+        }
+        Condensed {
+            d: self.d,
+            n_orig: self.n_orig,
+            k: self.k,
+            active: self.active.clone(),
+            values,
+            idx,
+        }
+    }
+
+    /// The documented per-row error budget for one output element given
+    /// the input row's max magnitude `x_absmax`:
+    /// `X·resid_l1[r] + (X/254)·qabs_l1[r]` (see the module docs for the
+    /// derivation). `r` indexes *active* rows. Pure f32 evaluation slop
+    /// (the i32→f32 accumulator cast, the finalize multiply) is not
+    /// included — callers asserting against it add a small relative
+    /// cushion.
+    pub fn row_error_bound(&self, r: usize, x_absmax: f32) -> f32 {
+        x_absmax * (self.resid_l1[r] + self.qabs_l1[r] / (2.0 * QMAX as f32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_layer(n: usize, d: usize, k: usize, seed: u64) -> (Tensor, Mask) {
+        let mut rng = Rng::new(seed);
+        let m = Mask::random_constant_fan_in(&[n, d], k, &mut rng);
+        let mut w = Tensor::normal(&[n, d], 1.0, &mut rng);
+        w.mul_assign(&m.t);
+        (w, m)
+    }
+
+    #[test]
+    fn geometry_matches_f32_condensed() {
+        let (w, m) = random_layer(16, 40, 7, 0);
+        let c = Condensed::from_masked(&w, &m).unwrap();
+        let q = QuantizedCondensed::from_masked(&w, &m).unwrap();
+        assert_eq!((q.d, q.n_orig, q.k), (c.d, c.n_orig, c.k));
+        assert_eq!(q.active, c.active);
+        assert_eq!(q.recs.len(), c.idx.len());
+        for (rec, &j) in q.recs.iter().zip(&c.idx) {
+            assert_eq!(rec.idx as u32, j);
+            assert!(rec.q >= -127, "symmetric range never produces -128");
+        }
+        assert_eq!(q.scales.len(), q.n_active());
+        // every row actually uses the full int8 range (max |q| == 127)
+        for r in 0..q.n_active() {
+            let m = q.recs[r * q.k..(r + 1) * q.k].iter().map(|p| (p.q as i32).abs()).max();
+            assert_eq!(m, Some(QMAX));
+        }
+    }
+
+    #[test]
+    fn calibrated_scale_is_least_squares_optimal() {
+        let (w, m) = random_layer(12, 64, 9, 3);
+        let c = Condensed::from_masked(&w, &m).unwrap();
+        let q = QuantizedCondensed::from_condensed(&c).unwrap();
+        for r in 0..q.n_active() {
+            let vals = &c.values[r * c.k..(r + 1) * c.k];
+            let qs: Vec<f64> =
+                q.recs[r * q.k..(r + 1) * q.k].iter().map(|p| p.q as f64).collect();
+            let sse = |s: f64| -> f64 {
+                vals.iter().zip(&qs).map(|(&v, &qi)| (v as f64 - s * qi).powi(2)).sum()
+            };
+            let s = q.scales[r] as f64;
+            let amax = vals.iter().fold(0f32, |a, &v| a.max(v.abs())) as f64;
+            let s0 = amax / 127.0;
+            // LSQ-calibrated never worse than the naive amax/127 step
+            assert!(sse(s) <= sse(s0) * (1.0 + 1e-9), "row {r}: {} vs {}", sse(s), sse(s0));
+            // and locally optimal (perturbing the scale does not help)
+            for ds in [0.999, 1.001] {
+                assert!(sse(s) <= sse(s * ds) * (1.0 + 1e-9), "row {r} not optimal");
+            }
+        }
+    }
+
+    #[test]
+    fn residual_within_half_step_bound() {
+        // |w - s0·q| <= s0/2 per weight by rounding; calibration only
+        // shrinks the L2 residual, and the recorded L1 residual stays
+        // within the naive half-step envelope with modest slack.
+        let (w, m) = random_layer(20, 128, 17, 5);
+        let c = Condensed::from_masked(&w, &m).unwrap();
+        let q = QuantizedCondensed::from_condensed(&c).unwrap();
+        for r in 0..q.n_active() {
+            let vals = &c.values[r * c.k..(r + 1) * c.k];
+            let amax = vals.iter().fold(0f32, |a, &v| a.max(v.abs()));
+            let naive = q.k as f32 * amax / 254.0;
+            assert!(
+                q.resid_l1[r] <= naive * 2.0 + 1e-6,
+                "row {r}: resid {} vs half-step envelope {}",
+                q.resid_l1[r],
+                naive
+            );
+            assert!(q.scales[r] >= 0.0, "calibrated scale must be non-negative");
+        }
+    }
+
+    #[test]
+    fn dequantized_twin_preserves_geometry_and_error() {
+        let (w, m) = random_layer(14, 30, 5, 4);
+        let c = Condensed::from_masked(&w, &m).unwrap();
+        let q = QuantizedCondensed::from_condensed(&c).unwrap();
+        let deq = q.dequantize();
+        assert_eq!(deq.to_mask().t.data, m.t.data, "mask survives the round-trip");
+        assert_eq!((deq.d, deq.n_orig, deq.k, &deq.active), (c.d, c.n_orig, c.k, &c.active));
+        // per-row L1 gap of the round-tripped values == recorded resid_l1
+        for r in 0..q.n_active() {
+            let gap: f32 = c.values[r * c.k..(r + 1) * c.k]
+                .iter()
+                .zip(&deq.values[r * c.k..(r + 1) * c.k])
+                .map(|(&a, &b)| (a - b).abs())
+                .sum();
+            assert!(
+                (gap - q.resid_l1[r]).abs() <= 1e-4 * (1.0 + gap),
+                "row {r}: {gap} vs {}",
+                q.resid_l1[r]
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_width_over_u16_with_typed_error() {
+        let c = Condensed {
+            d: MAX_QUANT_WIDTH + 1,
+            n_orig: 1,
+            k: 1,
+            active: vec![0],
+            values: vec![1.0],
+            idx: vec![MAX_QUANT_WIDTH as u32],
+        };
+        match QuantizedCondensed::from_condensed(&c) {
+            Err(CondensedError::WidthTooLarge { d, limit }) => {
+                assert_eq!((d, limit), (MAX_QUANT_WIDTH + 1, MAX_QUANT_WIDTH));
+            }
+            other => panic!("expected WidthTooLarge, got {other:?}"),
+        }
+        let e = QuantizedCondensed::from_condensed(&c).unwrap_err();
+        assert!(e.to_string().contains("u16"), "{e}");
+    }
+
+    #[test]
+    fn width_at_exact_limit_is_accepted() {
+        let c = Condensed {
+            d: MAX_QUANT_WIDTH,
+            n_orig: 1,
+            k: 1,
+            active: vec![0],
+            values: vec![0.5],
+            idx: vec![(MAX_QUANT_WIDTH - 1) as u32],
+        };
+        let q = QuantizedCondensed::from_condensed(&c).unwrap();
+        assert_eq!(q.recs[0].idx, (MAX_QUANT_WIDTH - 1) as u16);
+        assert_eq!(q.recs[0].q, 127);
+    }
+
+    #[test]
+    fn all_ablated_is_empty() {
+        let w = Tensor::zeros(&[6, 10]);
+        let m = Mask::from_tensor(Tensor::zeros(&[6, 10]));
+        let q = QuantizedCondensed::from_masked(&w, &m).unwrap();
+        assert_eq!(q.n_active(), 0);
+        assert_eq!(q.k, 0);
+        assert!(q.recs.is_empty() && q.scales.is_empty());
+        assert_eq!(q.storage_bytes(), 0);
+        assert_eq!(q.dequantize().to_dense().data, w.data);
+    }
+
+    #[test]
+    fn zero_valued_active_row_gets_zero_scale() {
+        // mask-active but value-zero weights: scale 0, q all 0, budget 0
+        let c = Condensed {
+            d: 8,
+            n_orig: 2,
+            k: 2,
+            active: vec![0, 1],
+            values: vec![0.0, 0.0, 1.0, -2.0],
+            idx: vec![0, 3, 1, 5],
+        };
+        let q = QuantizedCondensed::from_condensed(&c).unwrap();
+        assert_eq!(q.scales[0], 0.0);
+        assert_eq!((q.recs[0].q, q.recs[1].q), (0, 0));
+        assert_eq!(q.row_error_bound(0, 10.0), 0.0);
+        assert!(q.scales[1] > 0.0 && q.row_error_bound(1, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn storage_roughly_halves_f32_condensed() {
+        let (w, m) = random_layer(96, 512, 51, 6);
+        let c = Condensed::from_masked(&w, &m).unwrap();
+        let q = QuantizedCondensed::from_condensed(&c).unwrap();
+        assert_eq!(q.storage_bytes(), q.recs.len() * 4 + q.n_active() * 16);
+        assert!(
+            q.storage_bytes() * 3 < c.storage_bytes() * 2,
+            "quantized {} should be well under 2/3 of f32 {}",
+            q.storage_bytes(),
+            c.storage_bytes()
+        );
+    }
+}

@@ -8,9 +8,11 @@
 //! identical `shard_pass` layer walk, and slices copy weight rows
 //! verbatim. Pinned across:
 //!
-//! * all five representations (incl. the batch-tiled condensed form —
-//!   batch 256 exercises its full-tile path, 7 its remainder), uniform
-//!   and mixed per layer;
+//! * all representations (incl. the batch-tiled condensed form — batch
+//!   256 exercises its full-tile path, 7 its remainder — and the int8
+//!   quantized pair, whose exact i32 accumulation makes even the
+//!   row-vs-tiled driver pair bit-identical), uniform and mixed per
+//!   layer;
 //! * shard counts {1, 2, 3};
 //! * batch sizes {1, 7, 256};
 //! * intra-shard thread counts {1, 4};
@@ -100,7 +102,15 @@ fn engines_agree_all_reprs() {
 #[test]
 fn engines_agree_mixed_stack() {
     let model = stack(
-        &[Repr::Condensed, Repr::CondensedTiled, Repr::Csr, Repr::Structured, Repr::Dense],
+        &[
+            Repr::Condensed,
+            Repr::CondensedTiled,
+            Repr::Csr,
+            Repr::Structured,
+            Repr::Dense,
+            Repr::Quantized,
+            Repr::QuantizedTiled,
+        ],
         0.3,
         21,
     );
@@ -112,10 +122,45 @@ fn engines_agree_mixed_stack() {
 #[test]
 fn engines_agree_with_heavy_ablation() {
     // over half the neurons ablated: plans must absorb long zero-cost runs
-    for repr in [Repr::Condensed, Repr::CondensedTiled, Repr::Structured] {
+    for repr in [
+        Repr::Condensed,
+        Repr::CondensedTiled,
+        Repr::Structured,
+        Repr::Quantized,
+        Repr::QuantizedTiled,
+    ] {
         let model = stack(&[repr; 3], 0.6, 33);
         for &shards in &SHARDS {
             check_all_engines(&model, shards, &format!("{} ablated s{shards}", repr.name()));
+        }
+    }
+}
+
+/// Unique among repr pairs: the int8 row-gather and batch-tiled drivers
+/// compute **identical bits** (i32 accumulation is exact, both paths
+/// quantize inputs per row and share one finalize), so a whole stack built
+/// with `quantized` must equal the same stack built with
+/// `quantized-tiled` — across every engine, shard count, and batch size.
+#[test]
+fn quantized_row_and_tiled_drivers_agree_bitwise() {
+    let row = stack(&[Repr::Quantized; 3], 0.25, 7);
+    let tiled = stack(&[Repr::QuantizedTiled; 3], 0.25, 7);
+    for &shards in &SHARDS {
+        let scoped = ShardedModel::from_model(&tiled, shards).unwrap();
+        for &batch in &BATCHES {
+            let mut rng = Rng::new(0xE0 ^ batch as u64);
+            let x: Vec<f32> = (0..batch * row.in_width()).map(|_| rng.normal_f32()).collect();
+            let want = run_engine(&row, &x, batch, 1);
+            assert_bits_eq(
+                &run_engine(&tiled, &x, batch, 1),
+                &want,
+                &format!("quant row-vs-tiled b{batch}"),
+            );
+            assert_bits_eq(
+                &run_engine(&scoped, &x, batch, 2),
+                &want,
+                &format!("quant row-vs-tiled-sharded s{shards} b{batch}"),
+            );
         }
     }
 }

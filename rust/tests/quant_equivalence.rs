@@ -1,0 +1,286 @@
+//! Int8 quantized serving-path suite: the quantized condensed pair
+//! ([`srigl::inference::QuantizedLayer`] /
+//! [`srigl::inference::QuantizedTiledLayer`]) must
+//!
+//! * stay within the **documented per-row error budget** against the f32
+//!   condensed oracle (`QuantizedCondensed::row_error_bound`, derived in
+//!   docs/KERNELS.md) — across ragged batch sizes {1, 7, 8, 256}, thread
+//!   counts, and a heavy-ablation geometry;
+//! * be **bit-for-bit identical** between the row-gather and batch-tiled
+//!   drivers and across every available kernel kind (i32 accumulation is
+//!   exact, so unlike the f32 family there is no ULP allowance at all);
+//! * **round-trip** calibration: requantizing the dequantized twin
+//!   reproduces the integer records exactly;
+//! * degrade cleanly at the k=0 / all-ablated edge and compose into
+//!   whole-model quantized twins (`SparseModel::quantized` == a stack
+//!   built directly with `Repr::Quantized`).
+
+use srigl::inference::model::{Activation, LayerSpec, Repr, SparseModel};
+use srigl::inference::{LayerBundle, LinearKernel, QuantizedLayer, QuantizedTiledLayer};
+use srigl::kernels::{KernelKind, Microkernel};
+use srigl::sparsity::{Mask, QuantizedCondensed};
+use srigl::tensor::Tensor;
+use srigl::util::rng::Rng;
+
+/// Ragged batches around the tile width 8, plus the serving-scale batch
+/// the bench duels at.
+const BATCHES: [usize; 4] = [1, 7, 8, 256];
+
+/// (n, d, sparsity, ablated_frac, seed) — ordinary, tall-thin, and a
+/// heavy-ablation geometry (85% of neurons gone).
+const GEOMETRIES: [(usize, usize, f64, f64, u64); 3] =
+    [(64, 128, 0.9, 0.25, 1), (33, 77, 0.95, 0.1, 3), (40, 64, 0.9, 0.85, 4)];
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Per-element error budget check of `got` (quantized) against `want`
+/// (f32 condensed oracle). The documented bound covers weight residual +
+/// activation rounding; pure f32 *evaluation* slop (the i32->f32
+/// accumulator cast above 2^24, the finalize multiply) is excluded from
+/// the derivation, so the assertion adds a 1% relative cushion and a
+/// small absolute epsilon.
+fn assert_within_budget(
+    q: &QuantizedCondensed,
+    x: &[f32],
+    batch: usize,
+    got: &[f32],
+    want: &[f32],
+    ctx: &str,
+) {
+    let d = q.d;
+    let na = q.n_active();
+    assert_eq!(got.len(), batch * na, "{ctx}: output shape");
+    for b in 0..batch {
+        let xmax = x[b * d..(b + 1) * d].iter().fold(0f32, |m, &v| m.max(v.abs()));
+        for r in 0..na {
+            let bound = q.row_error_bound(r, xmax) * 1.01 + 1e-5;
+            let (g, w) = (got[b * na + r], want[b * na + r]);
+            assert!(
+                (g - w).abs() <= bound,
+                "{ctx}: batch row {b}, active row {r}: quantized {g} vs oracle {w} \
+                 (|diff| {} > budget {bound})",
+                (g - w).abs()
+            );
+        }
+    }
+}
+
+#[test]
+fn quantized_outputs_stay_within_documented_error_budget() {
+    for &(n, d, sparsity, ablated, seed) in &GEOMETRIES {
+        let bundle = LayerBundle::synth(n, d, sparsity, ablated, seed);
+        let q = &bundle.quantized.q;
+        let na = q.n_active();
+        for &batch in &BATCHES {
+            let mut rng = Rng::new(seed ^ 0xbad5eed);
+            let x: Vec<f32> = (0..batch * d).map(|_| rng.normal_f32()).collect();
+            let mut want = vec![0f32; batch * na];
+            bundle.condensed.forward(&x, batch, &mut want, 1);
+            for &threads in &[1usize, 4] {
+                let ctx = format!("n{n} d{d} abl{ablated} b{batch} t{threads}");
+                let mut got = vec![0f32; batch * na];
+                bundle.quantized.forward(&x, batch, &mut got, threads);
+                assert_within_budget(q, &x, batch, &got, &want, &format!("{ctx} rows"));
+                let mut got_t = vec![0f32; batch * na];
+                bundle.quantized_tiled.forward(&x, batch, &mut got_t, threads);
+                assert_within_budget(q, &x, batch, &got_t, &want, &format!("{ctx} tiled"));
+                // the two drivers share exact integer accumulation: no
+                // tolerance between them, ever
+                assert_eq!(bits(&got), bits(&got_t), "{ctx}: row vs tiled must be bit-for-bit");
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_is_bitwise_invariant_across_kernel_kinds() {
+    // The f32 family pins SIMD-vs-scalar to a ULP bound; the int8 family
+    // must be exactly equal: every kind computes the same i32
+    // accumulators and shares one finalize.
+    let (n, d, sparsity, ablated, seed) = GEOMETRIES[0];
+    let bundle = LayerBundle::synth(n, d, sparsity, ablated, seed);
+    let na = bundle.quantized.q.n_active();
+    let scalar = Microkernel::of(KernelKind::Scalar);
+    for &batch in &BATCHES {
+        let mut rng = Rng::new(0x51 ^ batch as u64);
+        let x: Vec<f32> = (0..batch * d).map(|_| rng.normal_f32()).collect();
+        for (label, layer) in [
+            ("quantized", &bundle.quantized as &dyn LinearKernel),
+            ("quantized-tiled", &bundle.quantized_tiled as &dyn LinearKernel),
+        ] {
+            let mut want = vec![0f32; batch * na];
+            layer.with_kernel(scalar).forward(&x, batch, &mut want, 1);
+            for kind in KernelKind::ALL {
+                if !kind.available() {
+                    continue;
+                }
+                for &threads in &[1usize, 4] {
+                    let mut got = vec![0f32; batch * na];
+                    layer.with_kernel(Microkernel::of(kind)).forward(&x, batch, &mut got, threads);
+                    assert_eq!(
+                        bits(&got),
+                        bits(&want),
+                        "{label} {} b{batch} t{threads} must match the scalar oracle exactly",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn calibration_round_trips_through_the_dequantized_twin() {
+    for &(n, d, sparsity, ablated, seed) in &GEOMETRIES {
+        let bundle = LayerBundle::synth(n, d, sparsity, ablated, seed);
+        let q = &bundle.quantized.q;
+        // quantize(dequantize(q)) reproduces the integer records exactly:
+        // the dequantized values s*q_i rescale to integers with error far
+        // below the rounding threshold
+        let twin = QuantizedCondensed::from_condensed(&q.dequantize()).unwrap();
+        assert_eq!(twin.recs, q.recs, "integer records must round-trip exactly");
+        assert_eq!(twin.active, q.active);
+        assert_eq!((twin.d, twin.n_orig, twin.k), (q.d, q.n_orig, q.k));
+        // the recalibrated scale may differ from the original only by f32
+        // rounding of identical least-squares sums
+        for r in 0..q.n_active() {
+            let (a, b) = (q.scales[r], twin.scales[r]);
+            assert!(
+                (a - b).abs() <= 1e-6 * a.abs().max(b.abs()),
+                "row {r}: scale {a} vs requantized {b}"
+            );
+        }
+        // and the twin's weight residual is (up to the same rounding) zero
+        for r in 0..twin.n_active() {
+            assert!(
+                twin.resid_l1[r] <= 1e-5 * (1.0 + twin.qabs_l1[r]),
+                "row {r}: requantizing exact multiples must leave ~no residual, got {}",
+                twin.resid_l1[r]
+            );
+        }
+    }
+}
+
+#[test]
+fn all_ablated_quantized_layer_forwards_empty() {
+    // k=0 edge: an all-ablated layer must construct and serve an empty
+    // forward through both quantized drivers, mirroring the f32 pair.
+    let (n, d) = (6usize, 10usize);
+    let w = Tensor::zeros(&[n, d]);
+    let m = Mask::from_tensor(Tensor::zeros(&[n, d]));
+    let bias = vec![1.0f32; n];
+    let layer = QuantizedLayer::new(&w, &m, &bias).unwrap();
+    let tiled = QuantizedTiledLayer::new(&w, &m, &bias).unwrap();
+    assert_eq!(LinearKernel::out_width(&layer), 0);
+    assert_eq!(LinearKernel::out_width(&tiled), 0);
+    for batch in [1usize, 3, 9] {
+        let x = vec![0.5f32; batch * d];
+        let mut out: Vec<f32> = vec![];
+        LinearKernel::forward(&layer, &x, batch, &mut out, 2);
+        assert!(out.is_empty());
+        LinearKernel::forward(&tiled, &x, batch, &mut out, 2);
+        assert!(out.is_empty());
+    }
+    assert_eq!(layer.q.storage_bytes(), 0);
+    assert_eq!(tiled.q.storage_bytes(), 0);
+}
+
+fn stack(repr: Repr, seed: u64) -> SparseModel {
+    let spec = |n, act| LayerSpec {
+        n,
+        repr,
+        sparsity: 0.9,
+        ablated_frac: 0.25,
+        activation: act,
+    };
+    SparseModel::synth(
+        64,
+        &[spec(48, Activation::Relu), spec(32, Activation::Relu), spec(16, Activation::Identity)],
+        seed,
+    )
+    .unwrap()
+}
+
+#[test]
+fn model_level_quantized_twin_matches_direct_construction() {
+    // `SparseModel::quantized` on a condensed stack must equal the stack
+    // built directly with Repr::Quantized from identical weights —
+    // quantization is deterministic, so bit-for-bit, for both drivers.
+    let f32_stack = stack(Repr::Condensed, 7);
+    for (tiled, repr) in [(false, Repr::Quantized), (true, Repr::QuantizedTiled)] {
+        let twin = f32_stack.quantized(tiled).unwrap();
+        let direct = stack(repr, 7);
+        assert!(twin.storage_bytes() < f32_stack.storage_bytes(), "int8 must shrink the stack");
+        assert_eq!(twin.storage_bytes(), direct.storage_bytes());
+        for batch in [1usize, 7, 8] {
+            let mut rng = Rng::new(0xD0 ^ batch as u64);
+            let x: Vec<f32> = (0..batch * 64).map(|_| rng.normal_f32()).collect();
+            assert_eq!(
+                bits(&twin.forward_vec(&x, batch, 1)),
+                bits(&direct.forward_vec(&x, batch, 1)),
+                "twin vs direct (tiled={tiled}) b{batch}"
+            );
+        }
+    }
+    // non-condensed stacks refuse with a typed startup error
+    assert!(stack(Repr::Dense, 7).quantized(false).is_err());
+    assert!(stack(Repr::Csr, 7).quantized(true).is_err());
+    // quantizing an already-quantized stack is idempotent
+    let q = f32_stack.quantized(false).unwrap();
+    let qq = q.quantized(false).unwrap();
+    let x: Vec<f32> = {
+        let mut rng = Rng::new(9);
+        (0..2 * 64).map(|_| rng.normal_f32()).collect()
+    };
+    assert_eq!(bits(&q.forward_vec(&x, 2, 1)), bits(&qq.forward_vec(&x, 2, 1)));
+}
+
+#[test]
+fn repr_parse_round_trips_quantized_names() {
+    for (s, repr) in [
+        ("quantized", Repr::Quantized),
+        ("quant", Repr::Quantized),
+        ("quantized-tiled", Repr::QuantizedTiled),
+        ("quant-tiled", Repr::QuantizedTiled),
+    ] {
+        assert_eq!(Repr::parse(s).unwrap(), repr);
+    }
+    assert_eq!(Repr::parse(Repr::Quantized.name()).unwrap(), Repr::Quantized);
+    assert_eq!(Repr::parse(Repr::QuantizedTiled.name()).unwrap(), Repr::QuantizedTiled);
+}
+
+#[test]
+fn quantized_layers_slice_and_describe_like_the_f32_pair() {
+    let (n, d) = (24usize, 32usize);
+    let bundle = LayerBundle::synth(n, d, 0.85, 0.3, 5);
+    let mut rng = Rng::new(5 ^ 0xc0de);
+    let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+    for (layer, name) in [
+        (&bundle.quantized as &dyn LinearKernel, "quantized"),
+        (&bundle.quantized_tiled as &dyn LinearKernel, "quantized-tiled"),
+    ] {
+        assert_eq!(layer.name(), name);
+        assert_eq!(layer.in_width(), d);
+        assert_eq!(layer.out_width(), bundle.condensed.out_width());
+        assert_eq!(layer.active_rows(), bundle.condensed.active_rows());
+        assert_eq!(layer.row_weights(n), bundle.condensed.row_weights(n));
+        assert!(
+            layer.storage_bytes() < bundle.condensed.storage_bytes(),
+            "{name}: int8 must store fewer bytes than the f32 condensed form"
+        );
+        // slicing partitions the output bit-for-bit: a shard cut through
+        // the original row space concatenates to the unsharded forward
+        let mut full = vec![0f32; layer.out_width()];
+        layer.forward(&x, 1, &mut full, 1);
+        let (lo, hi) = (layer.slice_rows(0, n / 2), layer.slice_rows(n / 2, n));
+        assert_eq!(lo.out_width() + hi.out_width(), layer.out_width(), "{name}");
+        let mut got = vec![0f32; lo.out_width()];
+        lo.forward(&x, 1, &mut got, 1);
+        let mut hi_out = vec![0f32; hi.out_width()];
+        hi.forward(&x, 1, &mut hi_out, 1);
+        got.extend_from_slice(&hi_out);
+        assert_eq!(bits(&got), bits(&full), "{name}: slices must partition exactly");
+    }
+}
